@@ -1,0 +1,66 @@
+//! Kernel micro-benchmarks: the three weight-format matvecs underneath
+//! Table IV, isolated from the model. Shows where the LUT-GEMM win comes
+//! from (bytes streamed, not flops).
+
+use gptqt::bench::Suite;
+use gptqt::kernels::{gemv_f32, Gemv};
+use gptqt::quant::fuse::FusedRow;
+use gptqt::quant::linear::{rtn_quantize, IntLayer};
+use gptqt::quant::pack::PackedBcLayer;
+use gptqt::tensor::Tensor;
+use gptqt::util::Rng;
+
+fn random_packed(rows: usize, cols: usize, planes: usize, rng: &mut Rng) -> PackedBcLayer {
+    let fused: Vec<FusedRow> = (0..rows)
+        .map(|_| FusedRow {
+            alphas: (0..planes).map(|p| 0.02 / (1 << p) as f32).collect(),
+            bias: 0.001,
+        })
+        .collect();
+    let patterns: Vec<Vec<u32>> = (0..rows)
+        .map(|_| (0..cols).map(|_| rng.below(1 << planes) as u32).collect())
+        .collect();
+    PackedBcLayer::pack(rows, cols, &fused, &patterns)
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut suite = Suite::new("weight-format matvec kernels");
+    for &(rows, cols) in &[(512usize, 512usize), (1024, 1024), (2048, 2048), (2048, 8192)] {
+        let w = Tensor::randn(rows, cols, 0.02, &mut rng);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0f32; rows];
+
+        let label = format!("{rows}x{cols}");
+        suite.run(&format!("gemv_f32      {label}"), 3, 30, || {
+            gemv_f32(&w, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+
+        let (q, grids) = rtn_quantize(&w, 2);
+        let il = IntLayer::encode(&q, &grids, 2);
+        suite.run(&format!("gemv_dequant2 {label}"), 3, 30, || {
+            il.gemv(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+
+        let packed = random_packed(rows, cols, 3, &mut rng);
+        suite.run(&format!("gemv_lut3     {label}"), 3, 30, || {
+            packed.gemv(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+
+        println!(
+            "  bytes/matvec: f32 {:.2} MB | int2 {:.2} MB | lut3 {:.2} MB",
+            (rows * cols * 4) as f64 / 1e6,
+            il.streamed_bytes() as f64 / 1e6,
+            packed.streamed_bytes() as f64 / 1e6,
+        );
+        if let Some(r) = suite.ratio(
+            &format!("gemv_f32      {label}"),
+            &format!("gemv_lut3     {label}"),
+        ) {
+            println!("  speedup lut3 vs f32 at {label}: {r:.2}x");
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Quantization pipeline cost: wall-clock per layer for each method
+//! (the paper quantizes OPT-66B on one A100 — the per-layer cost profile
+//! shows where GPTQT's search overhead sits relative to the GPTQ loop).
+
+use gptqt::bench::Suite;
+use gptqt::quant::gptq::accumulate_hessian;
+use gptqt::quant::{quantize_layer, Method, QuantConfig};
+use gptqt::tensor::Tensor;
+use gptqt::util::Rng;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let mut rng = Rng::new(3);
+    let (rows, d, tokens) = if fast { (64, 64, 128) } else { (192, 192, 384) };
+    let w = Tensor::randn(rows, d, 0.02, &mut rng);
+    let acts = Tensor::randn(tokens, d, 1.0, &mut rng);
+    let h = accumulate_hessian(&acts);
+    let iters = if fast { 3 } else { 5 };
+
+    let mut suite = Suite::new(&format!("quantize_layer cost ({rows}x{d}, {tokens} calib tokens)"));
+    for (method, bits) in [
+        (Method::Rtn, 3),
+        (Method::Gptq, 3),
+        (Method::GptqMinMse, 3),
+        (Method::Bcq, 3),
+        (Method::GptqBcq, 3),
+        (Method::Gptqt, 3),
+        (Method::Gptqt, 2),
+    ] {
+        let cfg = QuantConfig { explore_grid: 6, ..QuantConfig::with_bits(bits) };
+        suite.run(&format!("{:<14} {bits}-bit", method.name()), 1, iters, || {
+            let q = quantize_layer(&w, &h, method, &cfg).unwrap();
+            std::hint::black_box(q.stats.weight_mse);
+        });
+    }
+    // Hessian accumulation is the other big cost center
+    suite.run("hessian accumulate", 1, iters, || {
+        std::hint::black_box(accumulate_hessian(&acts).n);
+    });
+
+    if let Some(r) = suite.ratio("GPTQT          3-bit", "GPTQ           3-bit") {
+        println!("  GPTQT search overhead vs GPTQ: {r:.2}x");
+    }
+}

@@ -1,0 +1,47 @@
+//! Table IV end-to-end: per-token decode latency of the full model under
+//! the three weight formats, across the OPT ladder (trained weights not
+//! required — timing only). This is the bench that regenerates the
+//! paper's speed table; `gptqt exp table4` prints the same numbers with
+//! table formatting.
+
+use gptqt::eval::speed::{build_variant, measure_decode, SpeedVariant};
+use gptqt::model::{load_or_init, presets};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let ladder: Vec<&str> = if fast {
+        vec!["opt-nano", "opt-mini"]
+    } else {
+        vec!["opt-nano", "opt-mini", "opt-sm", "opt-md", "opt-lg"]
+    };
+    let gen_tokens = if fast { 8 } else { 24 };
+    println!("\n=== bench suite: Table IV — ms/token, batch 1 (gen {gen_tokens} tokens) ===");
+    println!(
+        "{:<12} {:>10} {:>14} {:>14} {:>14} {:>9}",
+        "model", "params", "full fp32", "GPTQ2 dequant", "GPTQT3 LUT", "speedup"
+    );
+    for name in ladder {
+        let (model, _) = load_or_init(name, "artifacts", 0).expect("preset");
+        let mut ms = Vec::new();
+        for variant in [
+            SpeedVariant::Full,
+            SpeedVariant::GptqInt { bits: 2 },
+            SpeedVariant::GptqtLut { bits: 3 },
+        ] {
+            let bm = build_variant(&model, variant, 0);
+            let r = measure_decode(&model.cfg, &bm, variant, 8, gen_tokens, 7);
+            ms.push(r.ms_per_token);
+        }
+        println!(
+            "{:<12} {:>10} {:>11.2} ms {:>11.2} ms {:>11.2} ms {:>8.2}x",
+            name,
+            presets::by_name(name)
+                .map(|c| gptqt::model::fmt_params(c.param_count()))
+                .unwrap_or_default(),
+            ms[0],
+            ms[1],
+            ms[2],
+            ms[0] / ms[2],
+        );
+    }
+}

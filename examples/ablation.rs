@@ -1,0 +1,56 @@
+//! Ablation playground: sweep GPTQT's two knobs — intermediate bits
+//! (Fig. 4) and scale re-exploration range (Table VI) — on one model and
+//! print the perplexity surface. A quick way to see *why* the paper picks
+//! 5-bit step 1 and range 1.
+//!
+//! ```sh
+//! cargo run --release --example ablation -- [model] [--fast]
+//! ```
+
+use gptqt::data::Dataset;
+use gptqt::eval::ppl::{calib_for, eval_for, eval_ppl, EvalConfig};
+use gptqt::model::load_or_init;
+use gptqt::model::quantize::quantize_model;
+use gptqt::quant::{Method, QuantConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let name = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .map(|s| s.as_str())
+        .unwrap_or("opt-micro");
+
+    let ecfg = if fast { EvalConfig::fast() } else { EvalConfig::default() };
+    let (model, trained) = load_or_init(name, "artifacts", 0)?;
+    println!("== GPTQT ablation surface on {name} (trained={trained}) ==");
+    let calib = calib_for(&ecfg, Dataset::WikiSyn);
+    let windows = eval_for(&ecfg, Dataset::WikiSyn);
+    println!("full fp32 ppl: {:.2}\n", eval_ppl(&model, &windows));
+
+    println!("step1 bits × explore range → 3-bit ppl");
+    print!("{:>11}", "");
+    for range in 0..=2u32 {
+        print!("{:>10}", format!("range {range}"));
+    }
+    println!();
+    for step1 in 4..=6u32 {
+        print!("{:>11}", format!("step1={step1}"));
+        for range in 0..=2u32 {
+            let qcfg = QuantConfig {
+                bits: 3,
+                step1_bits: step1,
+                explore_range: range,
+                explore_grid: if fast { 3 } else { 6 },
+                ..Default::default()
+            };
+            let qm = quantize_model(&model, &calib, Method::Gptqt, &qcfg, false)?;
+            let ppl = eval_ppl(&qm.model, &windows);
+            print!("{:>10.2}", ppl);
+        }
+        println!();
+    }
+    println!("\n(paper: step1 4–5 bits optimal — Fig. 4; range 1 helps, Table VI)");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile package: JAX model + Pallas kernels + AOT."""

@@ -1,0 +1,138 @@
+"""AOT lowering: JAX model functions → HLO *text* artifacts for the rust
+PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts per model:
+
+* ``<name>.logits.hlo.txt``  — ``(weights…, tokens i32[T]) → (logits f32[T,V],)``
+* ``<name>.decode.hlo.txt``  — ``(weights…, k f32[L,S,D], v f32[L,S,D],
+  token i32[], pos i32[]) → (logits f32[V], k', v')``
+
+Weight arguments are positional in ``ModelConfig.weight_order`` — the ABI
+shared with ``rust/src/model/config.rs``.
+
+Usage::
+
+    python -m compile.aot [--models opt-nano,opt-mini] [--seq 128]
+                          [--kv-len 64] [--pallas] [--out-dir ../artifacts]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import by_name
+from .model import decode_step, prefill_logits
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_specs(cfg, weights_shapes):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in weights_shapes]
+
+
+def shapes_for(cfg):
+    """Shapes of every weight in ABI order."""
+    d = cfg.d_model
+    shapes = []
+    for name in cfg.weight_order():
+        if name == "tok_emb":
+            shapes.append((cfg.vocab, d))
+        elif name == "pos_emb":
+            shapes.append((cfg.max_seq, d))
+        elif ".ln" in name or name.startswith("final_ln"):
+            shapes.append((1, d))
+        else:
+            i, rest = name.split(".", 1)
+            for lname, rows, cols in cfg.block_linears(int(i[1:])):
+                if lname == name:
+                    shapes.append((rows, cols))
+                    break
+            else:
+                raise KeyError(name)
+    return shapes
+
+
+def lower_logits(cfg, seq, use_pallas):
+    wshapes = shapes_for(cfg)
+
+    def fn(*args):
+        weights = dict(zip(cfg.weight_order(), args[:-1]))
+        tokens = args[-1]
+        return (prefill_logits(cfg, weights, tokens, use_pallas=use_pallas),)
+
+    specs = weight_specs(cfg, wshapes) + [jax.ShapeDtypeStruct((seq,), jnp.int32)]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_decode(cfg, kv_len):
+    wshapes = shapes_for(cfg)
+    d = cfg.d_model
+
+    def fn(*args):
+        nw = len(wshapes)
+        weights = dict(zip(cfg.weight_order(), args[:nw]))
+        k, v, token, pos = args[nw : nw + 4]
+        return decode_step(cfg, weights, k, v, token, pos)
+
+    specs = (
+        weight_specs(cfg, wshapes)
+        + [
+            jax.ShapeDtypeStruct((cfg.layers, kv_len, d), jnp.float32),
+            jax.ShapeDtypeStruct((cfg.layers, kv_len, d), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+        ]
+    )
+    return jax.jit(fn).lower(*specs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="opt-nano,opt-mini")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--kv-len", type=int, default=64)
+    ap.add_argument(
+        "--pallas",
+        action="store_true",
+        help="route logits-artifact linears through the Pallas tiled matmul",
+    )
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name in [n.strip() for n in args.models.split(",") if n.strip()]:
+        cfg = by_name(name)
+        for kind, lowered in [
+            ("logits", lower_logits(cfg, args.seq, args.pallas)),
+            ("decode", lower_decode(cfg, args.kv_len)),
+        ]:
+            text = to_hlo_text(lowered)
+            path = out_dir / f"{name}.{kind}.hlo.txt"
+            path.write_text(text)
+            print(f"[aot] wrote {path} ({len(text)} chars)")
+        # metadata the rust runtime reads to know artifact shapes
+        meta = out_dir / f"{name}.meta.txt"
+        meta.write_text(
+            f"model={name}\nseq={args.seq}\nkv_len={args.kv_len}\n"
+            f"pallas={int(args.pallas)}\nweights={len(cfg.weight_order())}\n"
+        )
+        print(f"[aot] wrote {meta}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+"""Model configurations — the Python mirror of ``rust/src/model/config.rs``.
+
+The two sides MUST stay in lockstep: preset dimensions, weight names, and
+``weight_order`` (the positional argument order of every AOT artifact).
+A divergence here shows up as shape errors (best case) or silent numeric
+garbage (worst case) when rust feeds the HLO executables.
+"""
+
+from dataclasses import dataclass
+
+VOCAB = 2048
+MAX_SEQ = 256
+
+OPT, LLAMA, BLOOM = "opt", "llama", "bloom"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    d_model: int
+    layers: int
+    heads: int
+    d_ff: int
+    vocab: int = VOCAB
+    max_seq: int = MAX_SEQ
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.heads
+
+    def block_linears(self, i: int):
+        d, ff = self.d_model, self.d_ff
+        out = [
+            (f"L{i}.attn.q", d, d),
+            (f"L{i}.attn.k", d, d),
+            (f"L{i}.attn.v", d, d),
+            (f"L{i}.attn.o", d, d),
+        ]
+        if self.family == LLAMA:
+            out += [
+                (f"L{i}.ff.gate", ff, d),
+                (f"L{i}.ff.up", ff, d),
+                (f"L{i}.ff.down", d, ff),
+            ]
+        else:
+            out += [
+                (f"L{i}.ff.up", ff, d),
+                (f"L{i}.ff.down", d, ff),
+            ]
+        return out
+
+    def weight_order(self):
+        """Canonical weight argument order (== rust weight_order())."""
+        order = ["tok_emb"]
+        if self.family == OPT:
+            order.append("pos_emb")
+        for i in range(self.layers):
+            order.append(f"L{i}.ln1.w")
+            if self.family != LLAMA:
+                order.append(f"L{i}.ln1.b")
+            order += [name for name, _, _ in self.block_linears(i)[:4]]
+            order.append(f"L{i}.ln2.w")
+            if self.family != LLAMA:
+                order.append(f"L{i}.ln2.b")
+            order += [name for name, _, _ in self.block_linears(i)[4:]]
+        order.append("final_ln.w")
+        if self.family != LLAMA:
+            order.append("final_ln.b")
+        return order
+
+    def param_count(self) -> int:
+        d, ff = self.d_model, self.d_ff
+        emb = self.vocab * d + (self.max_seq * d if self.family == OPT else 0)
+        attn = 4 * d * d
+        ffn = 3 * d * ff if self.family == LLAMA else 2 * d * ff
+        norms = (2 if self.family == LLAMA else 4) * d * self.layers + 2 * d
+        return emb + self.layers * (attn + ffn) + norms
+
+
+PRESETS = [
+    ModelConfig("opt-nano", OPT, 64, 2, 2, 256),
+    ModelConfig("opt-micro", OPT, 96, 3, 3, 384),
+    ModelConfig("opt-mini", OPT, 128, 4, 4, 512),
+    ModelConfig("opt-sm", OPT, 192, 6, 6, 768),
+    ModelConfig("opt-md", OPT, 256, 8, 8, 1024),
+    ModelConfig("opt-lg", OPT, 384, 10, 8, 1536),
+    ModelConfig("opt-xl", OPT, 512, 12, 8, 2048),
+    ModelConfig("llama-sm", LLAMA, 192, 6, 6, 512),
+    ModelConfig("llama-md", LLAMA, 256, 8, 8, 688),
+    ModelConfig("bloom-nano", BLOOM, 64, 2, 2, 256),
+    ModelConfig("bloom-mini", BLOOM, 128, 4, 4, 512),
+    ModelConfig("bloom-sm", BLOOM, 192, 6, 6, 768),
+    ModelConfig("bloom-md", BLOOM, 256, 8, 8, 1024),
+]
+
+
+def by_name(name: str) -> ModelConfig:
+    for cfg in PRESETS:
+        if cfg.name == name:
+            return cfg
+    raise KeyError(f"unknown preset {name!r}")
+
+
+# Default training schedule for `make artifacts` on a single CPU core:
+# (steps, batch, seq). Larger ladder entries are timing-only (Table IV)
+# and keep random init — documented in DESIGN.md §2.
+TRAIN_SCHEDULE = {
+    "opt-nano": (400, 8, 96),
+    "opt-micro": (300, 8, 96),
+    "opt-mini": (250, 8, 96),
+    "opt-sm": (160, 8, 96),
+    "opt-md": (100, 8, 96),
+    "llama-sm": (160, 8, 96),
+    "llama-md": (100, 8, 96),
+    "bloom-nano": (350, 8, 96),
+    "bloom-mini": (250, 8, 96),
+    "bloom-sm": (140, 8, 96),
+    "bloom-md": (100, 8, 96),
+}

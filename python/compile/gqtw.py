@@ -1,0 +1,60 @@
+"""GQTW weight container — Python writer/reader matching
+``rust/src/model/weights.rs`` byte-for-byte.
+
+Layout (little-endian)::
+
+    magic   [8]  b"GQTW0001"
+    count   u32
+    repeat count times:
+      name_len u32, name [name_len] utf-8
+      rows u32, cols u32
+      data rows*cols f32
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GQTW0001"
+
+
+def save(path, tensors):
+    """Write an ordered ``{name: 2-D float32 array}`` mapping."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr, dtype=np.float32)
+            if arr.ndim == 1:
+                arr = arr.reshape(1, -1)
+            if arr.ndim != 2:
+                raise ValueError(f"{name}: GQTW stores 2-D tensors, got {arr.shape}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", arr.shape[0], arr.shape[1]))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load(path):
+    """Read a GQTW file into an ordered ``{name: float32 array}`` dict."""
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:8] != MAGIC:
+        raise ValueError(f"bad GQTW magic in {path}")
+    off = 8
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + name_len].decode("utf-8")
+        off += name_len
+        rows, cols = struct.unpack_from("<II", data, off)
+        off += 8
+        n = rows * cols
+        arr = np.frombuffer(data, dtype="<f4", count=n, offset=off).reshape(rows, cols)
+        off += n * 4
+        out[name] = arr.copy()
+    return out

@@ -1,0 +1,7 @@
+"""L1 — Pallas kernels (build-time; interpret=True for CPU PJRT).
+
+* ``matmul``       — tiled matmul (model linears)
+* ``lut_gemm``     — fused binary-coding matvec (GPTQT inference)
+* ``dequant_gemm`` — int-dequant matvec (GPTQ inference)
+* ``ref``          — pure-jnp oracles for all of the above
+"""

@@ -1,0 +1,47 @@
+"""Pallas dequant-GEMM kernel — the GPTQ inference matvec: linearly
+quantized integer codes are dequantized tile-by-tile in VMEM and
+contracted on the MXU (`w = scale·(q + qz)`, then `w @ x`).
+
+This is the baseline GPTQT races against in Table IV: same HBM traffic
+class (int codes), but it must materialize fp weights before the
+contraction, where the binary-coding kernel goes straight from sign bits
+to partial sums.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_gemv_kernel(x_ref, codes_ref, scale_ref, qz_ref, o_ref):
+    x = x_ref[...]
+    w = scale_ref[...][:, None] * (codes_ref[...].astype(jnp.float32) + qz_ref[...][:, None])
+    o_ref[...] = w @ x
+
+
+@functools.partial(jax.jit, static_argnames=("tr",))
+def dequant_gemv(codes, scale, qz, x, tr=64):
+    """``y = Ŵ·x`` with on-the-fly dequantization.
+
+    codes (rows × cols) int32, scale/qz (rows,) f32, x (cols,) f32.
+    """
+    rows, cols = codes.shape
+    while rows % tr != 0:
+        tr -= 1
+    tr = max(tr, 1)
+    grid = (rows // tr,)
+    return pl.pallas_call(
+        _dequant_gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+            pl.BlockSpec((tr,), lambda i: (i,)),
+            pl.BlockSpec((tr,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tr,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(x, codes, scale, qz)

@@ -1,0 +1,58 @@
+"""Tiled Pallas matmul kernel — the linear-layer contraction used by the
+AOT model variants (L1 called from L2).
+
+TPU mapping (DESIGN.md §8): the grid walks (row-tile × out-tile) blocks;
+BlockSpec stages an (TM × K) activation panel and an (TN × K) weight panel
+into VMEM per step and the contraction feeds the MXU as a
+``jnp.dot(a, b.T)``. ``interpret=True`` everywhere in this repo — the CPU
+PJRT plugin cannot execute Mosaic custom-calls; the lowering is the same
+HLO the rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_nt_kernel(x_ref, w_ref, o_ref):
+    # One (TM × TN) output tile: full-K panels are VMEM-resident.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...].T)
+
+
+def _pick_tile(n, target):
+    """Largest divisor of n that is ≤ target (keeps tiles even, avoids
+    padding logic; model dims here are powers of two)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def matmul_nt(x, w, tm=64, tn=128):
+    """``x (T×K) @ w (N×K)ᵀ`` via a grid of Pallas tiles."""
+    t, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} vs {w.shape}"
+    tm = _pick_tile(t, tm)
+    tn = _pick_tile(n, tn)
+    grid = (t // tm, n // tn)
+    return pl.pallas_call(
+        _matmul_nt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_bytes(tm, tn, k, dtype_bytes=4):
+    """VMEM footprint estimate of one grid step (for DESIGN.md §Perf):
+    activation panel + weight panel + output tile."""
+    return dtype_bytes * (tm * k + tn * k + tm * tn)

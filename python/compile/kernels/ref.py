@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package is asserted allclose against these functions
+by ``python/tests/test_kernels.py`` (including hypothesis shape sweeps).
+The rust CPU kernels implement the same contracts (see
+``rust/src/kernels``), so these oracles pin down the semantics for the
+whole three-layer stack.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_nt_ref(x, w):
+    """``x (T×k) @ w (r×k)ᵀ`` — the linear-layer contraction (weights
+    stored (out × in), matching the rust/Tensor layout)."""
+    return jnp.dot(x, w.T)
+
+
+def dequant_gemv_ref(codes, scale, qz, x):
+    """GPTQ dequant matvec.
+
+    codes: int32 (rows × cols) quantized weights,
+    scale/qz: f32 (rows,) per-row dequant params (``w = scale·(q + qz)``),
+    x: f32 (cols,).
+    """
+    w = scale[:, None] * (codes.astype(jnp.float32) + qz[:, None])
+    return w @ x
+
+
+def unpack_signs_ref(words, cols):
+    """Unpack bit-packed sign planes to ±1.
+
+    words: int32 (rows × planes × W) with bit k of word j covering column
+    ``32·j + k``; returns f32 (rows × planes × cols) in {−1, +1}.
+    """
+    rows, planes, nwords = words.shape
+    shifts = jnp.arange(32, dtype=words.dtype)
+    bits = (words[..., None] >> shifts[None, None, None, :]) & 1
+    bits = bits.reshape(rows, planes, nwords * 32)[..., :cols]
+    return bits.astype(jnp.float32) * 2.0 - 1.0
+
+
+def lut_gemv_ref(alphas, bias, words, x):
+    """Fused binary-coding (LUT-GEMM) matvec — the GPTQT inference op.
+
+    ``y[r] = Σ_p alphas[r,p]·(Σ_c sign[r,p,c]·x[c]) + bias[r]·Σ_c x[c]``
+
+    alphas: f32 (rows × planes), bias: f32 (rows,),
+    words: int32 (rows × planes × W) packed signs, x: f32 (cols,).
+    """
+    cols = x.shape[0]
+    signs = unpack_signs_ref(words, cols)  # rows × planes × cols
+    partial = jnp.einsum("rpc,c->rp", signs, x)
+    return jnp.sum(alphas * partial, axis=1) + bias * jnp.sum(x)
+
+
+def pack_signs_np(signs):
+    """numpy helper: pack a ±1 (rows × planes × cols) array into int32
+    words (rows × planes × ceil(cols/32)). Inverse of unpack_signs_ref."""
+    signs = np.asarray(signs)
+    rows, planes, cols = signs.shape
+    nwords = (cols + 31) // 32
+    bits = (signs > 0).astype(np.uint64)
+    padded = np.zeros((rows, planes, nwords * 32), dtype=np.uint64)
+    padded[..., :cols] = bits
+    padded = padded.reshape(rows, planes, nwords, 32)
+    shifts = np.arange(32, dtype=np.uint64)
+    words = (padded << shifts).sum(axis=-1).astype(np.uint32)
+    return words.view(np.int32) if words.dtype != np.int32 else words

@@ -1,0 +1,211 @@
+"""L2 — the JAX model: decoder-only transformer in three families
+(OPT/Llama/Bloom-like), numerically identical to the rust reference
+forward (``rust/src/model/forward.rs``): same GELU tanh approximation,
+same RoPE pairing, same ALiBi slopes, same ε = 1e-5.
+
+Weights travel as a ``{name: array}`` dict ordered by
+``configs.ModelConfig.weight_order`` — the positional ABI of the AOT
+artifacts. ``use_pallas=True`` routes the linear-layer contractions
+through the Pallas tiled matmul (L1 lowering into the same HLO).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import BLOOM, LLAMA, OPT, ModelConfig
+from .kernels import matmul as pallas_matmul
+
+LN_EPS = 1e-5
+
+
+def linear(x, w, use_pallas=False):
+    """``x (… × in) @ w (out × in)ᵀ``."""
+    if use_pallas and x.ndim == 2:
+        return pallas_matmul.matmul_nt(x, w)
+    return jnp.dot(x, w.T)
+
+
+def layernorm(x, w, b):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + LN_EPS) * w + b
+
+
+def rmsnorm(x, w):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + LN_EPS) * w
+
+
+def norm(cfg, weights, prefix, x):
+    if cfg.family == LLAMA:
+        return rmsnorm(x, weights[f"{prefix}.w"][0])
+    return layernorm(x, weights[f"{prefix}.w"][0], weights[f"{prefix}.b"][0])
+
+
+def rope(x, positions):
+    """Rotary embedding. x: (T × H × dh), positions: (T,) int32.
+    Pairing convention (x[2i], x[2i+1]) — matches rust `rope`."""
+    t, h, dh = x.shape
+    half = dh // 2
+    inv_freq = 10000.0 ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / dh)
+    angles = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]  # T × half
+    sin = jnp.sin(angles)[:, None, :]
+    cos = jnp.cos(angles)[:, None, :]
+    even = x[..., 0::2]
+    odd = x[..., 1::2]
+    r_even = even * cos - odd * sin
+    r_odd = even * sin + odd * cos
+    return jnp.stack([r_even, r_odd], axis=-1).reshape(t, h, dh)
+
+
+def alibi_slopes(heads):
+    return 2.0 ** (-8.0 * (jnp.arange(heads, dtype=jnp.float32) + 1.0) / heads)
+
+
+def block(cfg: ModelConfig, weights, i, x, positions, use_pallas=False):
+    """One transformer block over a (T × d) window."""
+    t = x.shape[0]
+    heads, dh = cfg.heads, cfg.head_dim
+    h = norm(cfg, weights, f"L{i}.ln1", x)
+    q = linear(h, weights[f"L{i}.attn.q"], use_pallas).reshape(t, heads, dh)
+    k = linear(h, weights[f"L{i}.attn.k"], use_pallas).reshape(t, heads, dh)
+    v = linear(h, weights[f"L{i}.attn.v"], use_pallas).reshape(t, heads, dh)
+    if cfg.family == LLAMA:
+        q = rope(q, positions)
+        k = rope(k, positions)
+    scores = jnp.einsum("thd,shd->hts", q, k) / np.sqrt(dh)
+    if cfg.family == BLOOM:
+        rel = (positions[None, :] - positions[:, None]).astype(jnp.float32)  # j − i
+        scores = scores + alibi_slopes(heads)[:, None, None] * rel[None, :, :]
+    causal = positions[None, :] <= positions[:, None]  # (i, j): j ≤ i
+    scores = jnp.where(causal[None, :, :], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hts,shd->thd", probs, v).reshape(t, heads * dh)
+    x = x + linear(ctx, weights[f"L{i}.attn.o"], use_pallas)
+
+    h2 = norm(cfg, weights, f"L{i}.ln2", x)
+    if cfg.family == LLAMA:
+        gate = linear(h2, weights[f"L{i}.ff.gate"], use_pallas)
+        up = linear(h2, weights[f"L{i}.ff.up"], use_pallas)
+        act = jax.nn.silu(gate) * up
+    else:
+        up = linear(h2, weights[f"L{i}.ff.up"], use_pallas)
+        act = jax.nn.gelu(up)  # approximate=True (tanh) — matches rust
+    return x + linear(act, weights[f"L{i}.ff.down"], use_pallas)
+
+
+def embed(cfg: ModelConfig, weights, tokens, positions):
+    x = weights["tok_emb"][tokens]
+    if cfg.family == OPT:
+        x = x + weights["pos_emb"][positions]
+    return x
+
+
+def prefill_logits(cfg: ModelConfig, weights, tokens, use_pallas=False):
+    """Full-window logits (T × vocab) — the perplexity/prefill artifact."""
+    t = tokens.shape[0]
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = embed(cfg, weights, tokens, positions)
+    for i in range(cfg.layers):
+        x = block(cfg, weights, i, x, positions, use_pallas)
+    xf = norm(cfg, weights, "final_ln", x)
+    return linear(xf, weights["tok_emb"], use_pallas)
+
+
+def decode_step(cfg: ModelConfig, weights, k_cache, v_cache, token, pos):
+    """Single-token decode with stacked KV caches.
+
+    k_cache/v_cache: (L × S × d) f32; token: () int32; pos: () int32.
+    Returns (logits (vocab,), k_cache', v_cache').
+    """
+    heads, dh, d = cfg.heads, cfg.head_dim, cfg.d_model
+    s = k_cache.shape[1]
+    x = weights["tok_emb"][token]
+    if cfg.family == OPT:
+        x = x + weights["pos_emb"][pos]
+    span = jnp.arange(s, dtype=jnp.int32)
+    mask = span <= pos
+    for i in range(cfg.layers):
+        h = norm(cfg, weights, f"L{i}.ln1", x)
+        q = jnp.dot(h, weights[f"L{i}.attn.q"].T).reshape(heads, dh)
+        k = jnp.dot(h, weights[f"L{i}.attn.k"].T).reshape(heads, dh)
+        v = jnp.dot(h, weights[f"L{i}.attn.v"].T).reshape(heads, dh)
+        if cfg.family == LLAMA:
+            q = rope(q[None], pos[None])[0]
+            k = rope(k[None], pos[None])[0]
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.reshape(1, 1, d), (i, pos, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.reshape(1, 1, d), (i, pos, 0)
+        )
+        kc = k_cache[i].reshape(s, heads, dh)
+        vc = v_cache[i].reshape(s, heads, dh)
+        scores = jnp.einsum("hd,shd->hs", q, kc) / np.sqrt(dh)
+        if cfg.family == BLOOM:
+            rel = (span - pos).astype(jnp.float32)
+            scores = scores + alibi_slopes(heads)[:, None] * rel[None, :]
+        scores = jnp.where(mask[None, :], scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("hs,shd->hd", probs, vc).reshape(d)
+        x = x + jnp.dot(ctx, weights[f"L{i}.attn.o"].T)
+
+        h2 = norm(cfg, weights, f"L{i}.ln2", x)
+        if cfg.family == LLAMA:
+            act = jax.nn.silu(jnp.dot(h2, weights[f"L{i}.ff.gate"].T)) * jnp.dot(
+                h2, weights[f"L{i}.ff.up"].T
+            )
+        else:
+            act = jax.nn.gelu(jnp.dot(h2, weights[f"L{i}.ff.up"].T))
+        x = x + jnp.dot(act, weights[f"L{i}.ff.down"].T)
+    xf = norm(cfg, weights, "final_ln", x)
+    logits = jnp.dot(xf, weights["tok_emb"].T)
+    return logits, k_cache, v_cache
+
+
+def batched_nll(cfg: ModelConfig, weights, batch):
+    """Mean next-token cross-entropy over a (B × T+1) token batch."""
+
+    def one(tokens):
+        logits = prefill_logits(cfg, weights, tokens[:-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, tokens[1:, None], axis=-1))
+
+    return jnp.mean(jax.vmap(one)(batch))
+
+
+def init_weights(cfg: ModelConfig, seed=0):
+    """GPT-2-style init, mirroring rust `init::random_weights` semantics
+    (not bitwise — training overwrites everything anyway)."""
+    rng = np.random.default_rng(seed)
+    sigma = 0.02
+    resid = sigma / np.sqrt(2 * cfg.layers)
+    w = {}
+    d = cfg.d_model
+    w["tok_emb"] = rng.normal(0, sigma, (cfg.vocab, d)).astype(np.float32)
+    if cfg.family == OPT:
+        w["pos_emb"] = rng.normal(0, sigma, (cfg.max_seq, d)).astype(np.float32)
+    for i in range(cfg.layers):
+        w[f"L{i}.ln1.w"] = np.ones((1, d), np.float32)
+        if cfg.family != LLAMA:
+            w[f"L{i}.ln1.b"] = np.zeros((1, d), np.float32)
+        w[f"L{i}.ln2.w"] = np.ones((1, d), np.float32)
+        if cfg.family != LLAMA:
+            w[f"L{i}.ln2.b"] = np.zeros((1, d), np.float32)
+        for name, rows, cols in cfg.block_linears(i):
+            s = resid if name.endswith((".o", ".down")) else sigma
+            w[name] = rng.normal(0, s, (rows, cols)).astype(np.float32)
+    w["final_ln.w"] = np.ones((1, d), np.float32)
+    if cfg.family != LLAMA:
+        w["final_ln.b"] = np.zeros((1, d), np.float32)
+    return {k: jnp.asarray(v) for k, v in w.items()}
+
+
+def ordered_weights(cfg: ModelConfig, weights):
+    """Weights as a positional list in artifact ABI order."""
+    return [weights[name] for name in cfg.weight_order()]
+
+
+def weights_from_ordered(cfg: ModelConfig, arrays):
+    return dict(zip(cfg.weight_order(), arrays))

@@ -1,0 +1,135 @@
+"""Build-time training: fit each model preset on the rust-generated
+synthetic corpus (`gptqt gen-corpus` → ``artifacts/corpus-wiki-syn-
+train.bin``), log the loss curve, and save GQTW weights for the rust
+runtime.
+
+This replaces the paper's HuggingFace checkpoints (unavailable offline,
+DESIGN.md §2): the quantization experiments need *trained* weights with
+real activation statistics, not random init.
+
+Usage::
+
+    python -m compile.train [--models opt-nano,opt-mini] [--steps-scale 1.0]
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gqtw
+from .configs import PRESETS, TRAIN_SCHEDULE, by_name
+from .model import batched_nll, init_weights
+
+
+def load_corpus(path):
+    toks = np.fromfile(path, dtype="<u4")
+    if len(toks) < 10_000:
+        raise SystemExit(f"corpus {path} too small ({len(toks)} tokens) — run `gptqt gen-corpus`")
+    return toks.astype(np.int32)
+
+
+def sample_batch(rng, corpus, batch, seq):
+    starts = rng.integers(0, len(corpus) - seq - 1, size=batch)
+    return np.stack([corpus[s : s + seq + 1] for s in starts])
+
+
+def adam_init(weights):
+    zeros = {k: jnp.zeros_like(v) for k, v in weights.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in zeros.items()}
+
+
+def train_one(cfg, corpus, steps, batch, seq, lr=3e-3, seed=0, log=print):
+    weights = init_weights(cfg, seed)
+    m, v = adam_init(weights)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    warmup = max(1, steps // 10)
+
+    loss_grad = jax.jit(jax.value_and_grad(lambda w, b: batched_nll(cfg, w, b)))
+
+    @jax.jit
+    def update(weights, m, v, grads, lr_t, t):
+        new_w, new_m, new_v = {}, {}, {}
+        for k in weights:
+            g = grads[k]
+            mk = b1 * m[k] + (1 - b1) * g
+            vk = b2 * v[k] + (1 - b2) * g * g
+            mhat = mk / (1 - b1**t)
+            vhat = vk / (1 - b2**t)
+            new_w[k] = weights[k] - lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            new_m[k], new_v[k] = mk, vk
+        return new_w, new_m, new_v
+
+    rng = np.random.default_rng(seed + 1)
+    curve = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        if step <= warmup:
+            lr_t = lr * step / warmup
+        else:
+            p = (step - warmup) / max(1, steps - warmup)
+            lr_t = lr * (0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * p)))
+        batch_tokens = jnp.asarray(sample_batch(rng, corpus, batch, seq))
+        loss, grads = loss_grad(weights, batch_tokens)
+        weights, m, v = update(weights, m, v, grads, jnp.float32(lr_t), jnp.float32(step))
+        curve.append(float(loss))
+        if step % 10 == 0 or step == 1:
+            log(
+                f"  {cfg.name} step {step:4d}/{steps} loss {float(loss):.4f} "
+                f"lr {lr_t:.2e} ({time.time() - t0:.0f}s)"
+            )
+    return weights, curve
+
+
+def heldout_ppl(cfg, weights, corpus, windows=6, seq=96, seed=123):
+    rng = np.random.default_rng(seed)
+    nll = 0.0
+    for _ in range(windows):
+        batch_tokens = jnp.asarray(sample_batch(rng, corpus, 1, seq))
+        nll += float(batched_nll(cfg, weights, batch_tokens))
+    return float(np.exp(nll / windows))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default=",".join(TRAIN_SCHEDULE.keys()))
+    ap.add_argument("--steps-scale", type=float, default=1.0)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    art = Path(args.artifacts)
+    art.mkdir(parents=True, exist_ok=True)
+    corpus = load_corpus(art / "corpus-wiki-syn-train.bin")
+    # hold out the tail for ppl sanity (rust evaluates on its own stream)
+    split = int(len(corpus) * 0.95)
+    train_c, held = corpus[:split], corpus[split:]
+
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    for name in names:
+        cfg = by_name(name)
+        steps, batch, seq = TRAIN_SCHEDULE.get(name, (150, 8, 96))
+        steps = max(20, int(steps * args.steps_scale))
+        out = art / f"{name}.gqtw"
+        if out.exists():
+            print(f"[train] {name}: {out} exists, skipping")
+            continue
+        print(f"[train] {name}: {steps} steps batch {batch} seq {seq}")
+        weights, curve = train_one(cfg, train_c, steps, batch, seq, seed=args.seed)
+        ppl = heldout_ppl(cfg, weights, held)
+        print(f"[train] {name}: final loss {curve[-1]:.4f}, held-out ppl {ppl:.2f}")
+        gqtw.save(out, {k: np.asarray(weights[k]) for k in cfg.weight_order()})
+        with open(art / f"train-log-{name}.txt", "w") as f:
+            f.write(f"# {name} steps={steps} batch={batch} seq={seq}\n")
+            f.write(f"# final_loss={curve[-1]:.5f} heldout_ppl={ppl:.3f}\n")
+            for i, loss_v in enumerate(curve, 1):
+                f.write(f"{i}\t{loss_v:.5f}\n")
+        print(f"[train] {name}: saved {out}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

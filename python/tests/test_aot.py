@@ -1,0 +1,68 @@
+"""AOT lowering smoke tests: the HLO text must be produced, parse-able in
+spirit (non-empty ENTRY, right arg count) and stable in ABI order."""
+
+import re
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import lower_decode, lower_logits, shapes_for, to_hlo_text
+from compile.configs import ModelConfig, OPT
+
+
+def micro_cfg():
+    return ModelConfig("aot-test", OPT, 32, 2, 2, 64, vocab=64, max_seq=32)
+
+
+def test_shapes_for_matches_weight_order():
+    cfg = micro_cfg()
+    shapes = shapes_for(cfg)
+    order = cfg.weight_order()
+    assert len(shapes) == len(order)
+    # spot checks
+    assert shapes[order.index("tok_emb")] == (64, 32)
+    assert shapes[order.index("L0.attn.q")] == (32, 32)
+    assert shapes[order.index("L1.ff.up")] == (64, 32)
+
+
+def entry_param_count(text):
+    """Number of parameters of the ENTRY computation (fusion bodies also
+    declare parameters, so a global regex over-counts)."""
+    entry = text[text.index("ENTRY") :]
+    ids = set()
+    for line in entry.splitlines():
+        m = re.search(r"parameter\((\d+)\)", line)
+        if m:
+            ids.add(int(m.group(1)))
+    return len(ids)
+
+
+def test_logits_lowering_produces_hlo_text():
+    cfg = micro_cfg()
+    text = to_hlo_text(lower_logits(cfg, seq=16, use_pallas=False))
+    assert "ENTRY" in text
+    assert "f32[16,64]" in text  # logits shape appears
+    # one parameter per weight + tokens
+    assert entry_param_count(text) == len(cfg.weight_order()) + 1
+
+
+def test_decode_lowering_produces_hlo_text():
+    cfg = micro_cfg()
+    text = to_hlo_text(lower_decode(cfg, kv_len=8))
+    assert "ENTRY" in text
+    assert entry_param_count(text) == len(cfg.weight_order()) + 4  # + k, v, token, pos
+
+
+def test_pallas_lowering_also_produces_hlo_text():
+    cfg = micro_cfg()
+    text = to_hlo_text(lower_logits(cfg, seq=16, use_pallas=True))
+    assert "ENTRY" in text
+    # interpret=True must NOT leave TPU custom-calls behind
+    assert "tpu_custom_call" not in text
+
+
+def test_lowering_is_deterministic():
+    cfg = micro_cfg()
+    a = to_hlo_text(lower_logits(cfg, seq=8, use_pallas=False))
+    b = to_hlo_text(lower_logits(cfg, seq=8, use_pallas=False))
+    assert a == b

@@ -1,0 +1,130 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Deliberately criterion-flavoured: warmup, fixed-count measurement,
+//! median + MAD (robust to scheduler noise on the single shared core),
+//! and one-line reports. `cargo bench` runs the `benches/*.rs` binaries
+//! (`harness = false`), each of which drives this module.
+
+use crate::util::time::fmt_secs;
+use crate::util::Stopwatch;
+
+/// One benchmark's statistics (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (±{} MAD, min {}, n={})",
+            self.name,
+            fmt_secs(self.median_ns / 1e9),
+            fmt_secs(self.mad_ns / 1e9),
+            fmt_secs(self.min_ns / 1e9),
+            self.iters,
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` runs; returns robust stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = dev[dev.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        mad_ns: mad,
+        mean_ns: mean,
+        min_ns: samples[0],
+    }
+}
+
+/// A collection of results printed as a suite.
+#[derive(Default)]
+pub struct Suite {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Suite {
+        println!("\n=== bench suite: {title} ===");
+        Suite { title: title.to_string(), results: Vec::new() }
+    }
+
+    /// Run + record + print one benchmark.
+    pub fn run<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) -> &BenchResult {
+        let r = bench(name, warmup, iters, f);
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Ratio of two recorded results' medians (`a / b`).
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|r| r.name == a)?;
+        let fb = self.results.iter().find(|r| r.name == b)?;
+        Some(fa.median_ns / fb.median_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench("spin", 2, 20, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+        assert_eq!(r.iters, 20);
+    }
+
+    #[test]
+    fn suite_ratio() {
+        let mut s = Suite::new("test");
+        s.run("fast", 1, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        s.run("slow", 1, 10, || {
+            let mut v = 0u64;
+            for i in 0..20_000 {
+                v = v.wrapping_mul(31).wrapping_add(i);
+            }
+            std::hint::black_box(v);
+        });
+        let ratio = s.ratio("slow", "fast").unwrap();
+        assert!(ratio > 1.0, "slow/fast ratio {ratio}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Hand-rolled CLI (no `clap` offline). Subcommands:
+//!
+//! ```text
+//! gptqt quantize  --model <name> --method <rtn|gptq|bcq|gptqt> --bits <2|3|4> ...
+//! gptqt serve     --model <name> [--quant gptqt3] [--requests N] ...
+//! gptqt ppl       --model <name> --dataset <wiki-syn|ptb-syn> ...
+//! gptqt exp       <table1|table2|table3|table4|table5|table6|fig4|all>
+//! gptqt help
+//! ```
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positional values plus `--key value` / `--flag` pairs.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv tail. `--key value` pairs become options unless the
+    /// next token also starts with `--`, in which case `--key` is a flag.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    args.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+const HELP: &str = "\
+gptqt — GPTQT: Quantize Large Language Models Twice (reproduction)
+
+USAGE:
+    gptqt <COMMAND> [OPTIONS]
+
+COMMANDS:
+    quantize   Quantize a model's weights with a chosen method
+               --model <name>           model preset (see `gptqt models`)
+               --method <m>             rtn|gptq|gptq-minmse|bcq|gptq-bcq|gptqt
+               --bits <n>               final bit-width (default 3)
+               --step1-bits <n>         GPTQT intermediate bits (default 5)
+               --explore-range <n>      GPTQT scale re-exploration range (default 1)
+               --seed <n>               rng seed (default 0)
+    ppl        Evaluate perplexity of a (quantized) model
+               --model <name> --dataset <wiki-syn|ptb-syn> --method <m> --bits <n>
+    serve      Run the serving coordinator on AOT artifacts
+               --model <name> --quant <fp32|gptq2|gptqt3> --requests <n>
+               --max-batch <n> --prompt-len <n> --gen-len <n>
+    exp        Reproduce a paper experiment:
+               table1|table2|table3|table4|table5|table6|fig4|all
+    gen-corpus Write synthetic training corpora to artifacts/ (build step
+               consumed by python/compile/train.py)
+               --out-dir <dir> --tokens <n> --seed <n>
+    models     List model presets
+    help       Show this message
+
+Artifacts are expected under ./artifacts (run `make artifacts` first).
+";
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    if argv.is_empty() {
+        print!("{HELP}");
+        return 2;
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "models" => {
+            for preset in crate::model::presets::all() {
+                println!(
+                    "{:<14} layers={:<2} d={:<4} heads={:<2} params≈{}",
+                    preset.name,
+                    preset.layers,
+                    preset.d_model,
+                    preset.heads,
+                    crate::model::fmt_params(preset.param_count())
+                );
+            }
+            Ok(())
+        }
+        "quantize" => crate::eval::cmd::quantize(&args),
+        "ppl" => crate::eval::cmd::ppl(&args),
+        "serve" => crate::eval::cmd::serve(&args),
+        "exp" => crate::eval::cmd::experiment(&args),
+        "gen-corpus" => crate::eval::cmd::gen_corpus(&args),
+        other => {
+            eprintln!("unknown command `{other}`; see `gptqt help`");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_options_and_flags() {
+        let a = Args::parse(&sv(&["table1", "--bits", "3", "--fast", "--model=opt-sm"]));
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.get("bits"), Some("3"));
+        assert_eq!(a.get("model"), Some("opt-sm"));
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_usize("bits", 0), 3);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = Args::parse(&sv(&["--verbose", "--seed", "42"]));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_u64("seed", 0), 42);
+    }
+
+    #[test]
+    fn help_exits_ok() {
+        assert_eq!(run(&sv(&["help"])), 0);
+    }
+
+    #[test]
+    fn unknown_command_exits_2() {
+        assert_eq!(run(&sv(&["frobnicate"])), 2);
+    }
+}

@@ -1,0 +1,107 @@
+//! Run-configuration loading: a tiny `key = value` config format (no
+//! serde/toml offline) used by the launcher for experiment presets.
+//!
+//! Format: one `key = value` per line, `#` comments, sections as
+//! `key.subkey`. Values: strings, integers, floats, booleans.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed config: flat dotted-key map.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = HashMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("config line {} has no `=`: {raw:?}", ln + 1);
+            };
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("config line {} has empty key", ln + 1);
+            }
+            values.insert(key.to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_config() {
+        let c = Config::parse(
+            "# experiment preset\n\
+             model = opt-md\n\
+             quant.bits = 3     # final bits\n\
+             quant.step1_bits=5\n\
+             serve.batch = 8\n\
+             fast = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("model"), Some("opt-md"));
+        assert_eq!(c.get_usize("quant.bits", 0), 3);
+        assert_eq!(c.get_usize("quant.step1_bits", 0), 5);
+        assert!(c.get_bool("fast", false));
+        assert_eq!(c.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::parse("= novalue").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = Config::parse("\n# only comments\n\n").unwrap();
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,337 @@
+//! The serving engine: scheduling loop over admitted sequences, driving
+//! either the CPU decode backends (quantized or dense) or the PJRT
+//! executables, with paged-KV admission and full metrics.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::kv_pool::PagedKvManager;
+use super::metrics::Metrics;
+use super::queue::{RequestQueue, SubmitError};
+use super::request::{FinishReason, Request, Response};
+use super::sampler::Sampler;
+use super::EngineConfig;
+use crate::model::{BackendModel, KvCache};
+use crate::runtime::{CompiledModel, DeviceKv};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What executes the model math.
+pub enum EngineBackend {
+    /// Pure-rust decode path (dense / gptq-dequant / gptqt-lut kernels).
+    Cpu(BackendModel),
+    /// AOT-compiled XLA executables on the PJRT CPU device.
+    Pjrt(CompiledModel),
+}
+
+enum SeqCache {
+    Cpu(KvCache),
+    Pjrt(DeviceKv),
+}
+
+impl EngineBackend {
+    fn capacity(&self) -> usize {
+        match self {
+            EngineBackend::Cpu(m) => m.cfg.max_seq,
+            EngineBackend::Pjrt(m) => m.meta.kv_len,
+        }
+    }
+
+    fn new_cache(&self) -> Result<SeqCache> {
+        Ok(match self {
+            EngineBackend::Cpu(m) => SeqCache::Cpu(KvCache::new(&m.cfg)),
+            EngineBackend::Pjrt(m) => SeqCache::Pjrt(m.new_kv()?),
+        })
+    }
+
+    fn decode(&self, token: u32, cache: &mut SeqCache) -> Result<Vec<f32>> {
+        match (self, cache) {
+            (EngineBackend::Cpu(m), SeqCache::Cpu(c)) => Ok(m.decode_step(token, c)),
+            (EngineBackend::Pjrt(m), SeqCache::Pjrt(c)) => m.decode(c, token),
+            _ => unreachable!("cache/backend mismatch"),
+        }
+    }
+
+    /// Human label (which Table-IV row this engine realizes).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineBackend::Cpu(m) => m.backend_label(),
+            EngineBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+struct Running {
+    req: Request,
+    sampler: Sampler,
+    cache: SeqCache,
+    /// next prompt index to feed (== prompt.len() once prefilled)
+    prompt_idx: usize,
+    generated: Vec<u32>,
+    prefill_started: Option<Instant>,
+}
+
+/// The engine. Single-threaded scheduling loop (`step`) over a
+/// thread-safe submission queue — a worker thread can own the engine
+/// while any number of producers submit.
+pub struct Engine {
+    backend: EngineBackend,
+    pub cfg: EngineConfig,
+    batcher: Batcher,
+    pub queue: Arc<RequestQueue>,
+    running: Vec<Running>,
+    kv: PagedKvManager,
+    pub metrics: Metrics,
+    /// prompt tokens fed per sequence per tick
+    prefill_chunk: usize,
+}
+
+impl Engine {
+    pub fn new(backend: EngineBackend, cfg: EngineConfig) -> Engine {
+        let queue = Arc::new(RequestQueue::new(cfg.max_queue));
+        let kv = PagedKvManager::new(cfg.total_blocks, cfg.block_size);
+        let batcher = Batcher::new(BatcherConfig {
+            max_batch: cfg.max_batch,
+            prefill_token_budget: cfg.block_size * cfg.max_batch * 4,
+        });
+        Engine {
+            backend,
+            cfg,
+            batcher,
+            queue,
+            running: Vec::new(),
+            kv,
+            metrics: Metrics::new(),
+            prefill_chunk: 16,
+        }
+    }
+
+    /// Validate + enqueue a request.
+    pub fn submit(&mut self, req: Request) -> Result<(), SubmitError> {
+        if req.prompt.is_empty() || req.max_tokens() > self.backend.capacity() {
+            self.metrics.rejected += 1;
+            return Err(SubmitError::Full); // semantic: cannot ever be served
+        }
+        self.queue.push(req)
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.running.is_empty() || !self.queue.is_empty()
+    }
+
+    /// One scheduling tick: admit, advance every running sequence by one
+    /// unit (a prefill chunk or one decoded token), retire finished ones.
+    pub fn step(&mut self) -> Result<Vec<Response>> {
+        // ---- admission -------------------------------------------------
+        for req in self.batcher.admit(&self.queue, self.running.len(), &mut self.kv) {
+            self.metrics.record_queue(req.arrived.elapsed());
+            let cache = self.backend.new_cache()?;
+            self.running.push(Running {
+                sampler: Sampler::new(req.sampling),
+                cache,
+                prompt_idx: 0,
+                generated: Vec::new(),
+                prefill_started: Some(Instant::now()),
+                req,
+            });
+        }
+
+        // ---- advance ---------------------------------------------------
+        let mut finished: Vec<usize> = Vec::new();
+        for (idx, run) in self.running.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            if run.prompt_idx < run.req.prompt.len() {
+                // prefill a chunk
+                let end = (run.prompt_idx + self.prefill_chunk).min(run.req.prompt.len());
+                let mut logits = Vec::new();
+                for i in run.prompt_idx..end {
+                    logits = self.backend.decode(run.req.prompt[i], &mut run.cache)?;
+                }
+                run.prompt_idx = end;
+                if run.prompt_idx == run.req.prompt.len() {
+                    // prompt complete → first token
+                    let tok = run.sampler.sample(&logits);
+                    run.generated.push(tok);
+                    self.kv.append_token(run.req.id);
+                    self.metrics.record_ttft(run.req.arrived.elapsed());
+                    self.metrics.record_token(t0.elapsed());
+                }
+            } else {
+                let last = *run.generated.last().expect("at least one generated token");
+                let logits = self.backend.decode(last, &mut run.cache)?;
+                let tok = run.sampler.sample(&logits);
+                run.generated.push(tok);
+                self.kv.append_token(run.req.id);
+                self.metrics.record_token(t0.elapsed());
+            }
+
+            // ---- finish checks ------------------------------------
+            if run.prompt_idx == run.req.prompt.len() {
+                let hit_eos = run.generated.last() == Some(&self.cfg.eos_token);
+                let hit_len = run.generated.len() >= run.req.max_new_tokens;
+                if hit_eos || hit_len {
+                    finished.push(idx);
+                }
+            }
+        }
+
+        // ---- retire ----------------------------------------------------
+        let mut responses = Vec::new();
+        for idx in finished.into_iter().rev() {
+            let run = self.running.swap_remove(idx);
+            self.kv.release(run.req.id);
+            let e2e = run.req.arrived.elapsed();
+            self.metrics.record_done(e2e, run.req.prompt.len());
+            let finish = if run.generated.last() == Some(&self.cfg.eos_token) {
+                FinishReason::Eos
+            } else {
+                FinishReason::Length
+            };
+            responses.push(Response {
+                id: run.req.id,
+                tokens: run.generated,
+                finish,
+                queue_secs: run
+                    .prefill_started
+                    .map(|t| t.duration_since(run.req.arrived).as_secs_f64())
+                    .unwrap_or(0.0),
+                ttft_secs: 0.0, // per-request ttft folded into metrics
+                e2e_secs: e2e.as_secs_f64(),
+            });
+        }
+        Ok(responses)
+    }
+
+    /// Drain everything currently queued/running (offline batch mode).
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while self.has_work() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// KV-pool consistency (exposed for tests and debug assertions).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.kv.check_invariants()
+    }
+
+    pub fn backend(&self) -> &EngineBackend {
+        &self.backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplingParams;
+    use crate::model::init::random_weights;
+    use crate::model::{presets, Model};
+
+    fn cpu_engine(max_batch: usize) -> Engine {
+        let mut cfg = presets::by_name("opt-nano").unwrap();
+        cfg.vocab = 64;
+        cfg.max_seq = 48;
+        let model = Model::new(cfg.clone(), random_weights(&cfg, 42));
+        let backend = EngineBackend::Cpu(BackendModel::dense(&model));
+        Engine::new(
+            backend,
+            EngineConfig { max_batch, total_blocks: 64, block_size: 8, ..Default::default() },
+        )
+    }
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
+        Request::new(id, (0..prompt_len as u32).map(|i| 3 + i % 60).collect(), gen)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let mut e = cpu_engine(4);
+        e.submit(req(1, 5, 6)).unwrap();
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 1);
+        assert!(out[0].tokens.len() <= 6 && !out[0].tokens.is_empty());
+        assert!(e.check_invariants().is_ok());
+        assert_eq!(e.metrics.completed, 1);
+    }
+
+    #[test]
+    fn serves_many_requests_batched() {
+        let mut e = cpu_engine(3);
+        for id in 0..9 {
+            e.submit(req(id, 4 + (id as usize % 5), 5)).unwrap();
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 9);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..9).collect::<Vec<_>>());
+        assert!(e.check_invariants().is_ok());
+        assert_eq!(e.metrics.completed, 9);
+        assert!(e.metrics.generated_tokens > 0);
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic() {
+        let run = || {
+            let mut e = cpu_engine(2);
+            e.submit(req(1, 6, 8)).unwrap();
+            e.run_to_completion().unwrap().remove(0).tokens
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn sampled_generation_is_seed_deterministic() {
+        let run = |seed| {
+            let mut e = cpu_engine(2);
+            e.submit(req(1, 6, 8).with_sampling(SamplingParams::TopK {
+                k: 8,
+                temperature: 1.0,
+                seed,
+            }))
+            .unwrap();
+            e.run_to_completion().unwrap().remove(0).tokens
+        };
+        assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn rejects_oversized_requests() {
+        let mut e = cpu_engine(2);
+        // capacity is 48 tokens; this wants 100
+        assert!(e.submit(req(1, 50, 50)).is_err());
+        assert_eq!(e.metrics.rejected, 1);
+        assert!(e.submit(Request::new(2, vec![], 5)).is_err());
+    }
+
+    #[test]
+    fn kv_pressure_defers_but_completes_all() {
+        let mut e = cpu_engine(8);
+        // tiny pool: only ~2 requests' worst case fit at once
+        e.kv = PagedKvManager::new(6, 8);
+        for id in 0..6 {
+            e.submit(req(id, 8, 8)).unwrap();
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 6);
+        assert!(e.check_invariants().is_ok());
+    }
+
+    #[test]
+    fn long_prompts_prefill_in_chunks() {
+        let mut e = cpu_engine(2);
+        e.prefill_chunk = 4;
+        e.submit(req(1, 20, 3)).unwrap();
+        let mut steps = 0;
+        let mut responses = Vec::new();
+        while e.has_work() {
+            responses.extend(e.step().unwrap());
+            steps += 1;
+            assert!(steps < 100, "engine stuck");
+        }
+        // 20 prompt tokens / 4 per tick = 5 prefill ticks + ≥2 decode
+        assert!(steps >= 7, "only {steps} steps");
+        assert_eq!(responses.len(), 1);
+    }
+}

@@ -1,0 +1,257 @@
+//! Paged KV-cache manager — vLLM-style block accounting.
+//!
+//! The pool owns `total_blocks` fixed-size blocks; a sequence holds a
+//! block table and grows it one block at a time as it decodes. Admission
+//! control asks [`PagedKvManager::can_admit`] with the request's worst-
+//! case token need so a decoding batch can never deadlock on blocks.
+//!
+//! Invariants (property-tested below):
+//! * a block is owned by at most one sequence at a time,
+//! * `free + Σ allocated == total`,
+//! * freeing a sequence returns exactly its blocks.
+
+use std::collections::HashMap;
+
+/// Handle of an admitted sequence.
+pub type SeqId = u64;
+
+/// Block-granular KV accounting.
+pub struct PagedKvManager {
+    block_size: usize,
+    free: Vec<u32>,
+    tables: HashMap<SeqId, Vec<u32>>,
+    /// tokens currently stored per sequence
+    lens: HashMap<SeqId, usize>,
+    /// worst-case block commitment per sequence (admission guarantee)
+    commits: HashMap<SeqId, usize>,
+    committed: usize,
+    total: usize,
+}
+
+impl PagedKvManager {
+    pub fn new(total_blocks: usize, block_size: usize) -> PagedKvManager {
+        assert!(block_size > 0);
+        PagedKvManager {
+            block_size,
+            free: (0..total_blocks as u32).rev().collect(),
+            tables: HashMap::new(),
+            lens: HashMap::new(),
+            commits: HashMap::new(),
+            committed: 0,
+            total: total_blocks,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Worst-case admission check for a request needing `max_tokens` —
+    /// against *committed* blocks (every running sequence's worst case),
+    /// so an admitted batch can always decode to completion.
+    pub fn can_admit(&self, max_tokens: usize) -> bool {
+        self.committed + self.blocks_for(max_tokens.max(1)) <= self.total
+    }
+
+    /// Admit a sequence, committing its worst case and reserving blocks
+    /// for its prompt immediately. Returns false (no side effects) if the
+    /// worst case doesn't fit.
+    pub fn admit(&mut self, seq: SeqId, prompt_tokens: usize, max_tokens: usize) -> bool {
+        assert!(!self.tables.contains_key(&seq), "seq {seq} already admitted");
+        if !self.can_admit(max_tokens) {
+            return false;
+        }
+        let worst = self.blocks_for(max_tokens.max(1));
+        let need = self.blocks_for(prompt_tokens.max(1)).min(worst);
+        let blocks: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.committed += worst;
+        self.commits.insert(seq, worst);
+        self.tables.insert(seq, blocks);
+        self.lens.insert(seq, prompt_tokens);
+        true
+    }
+
+    /// Account one generated token; allocates a new block on boundary.
+    /// Returns false when the sequence would exceed its admission-time
+    /// commitment (the engine's length guard failed) — never on pool
+    /// exhaustion, which commitment accounting makes impossible.
+    pub fn append_token(&mut self, seq: SeqId) -> bool {
+        let len = self.lens.get_mut(&seq).expect("unknown seq");
+        let need = (*len + 1).div_ceil(self.block_size);
+        if need > self.commits[&seq] {
+            return false;
+        }
+        let table = self.tables.get_mut(&seq).unwrap();
+        while table.len() < need {
+            let b = self.free.pop().expect("commitment guarantees a free block");
+            table.push(b);
+        }
+        *len += 1;
+        true
+    }
+
+    /// Release all blocks (and the worst-case commitment) of a sequence.
+    pub fn release(&mut self, seq: SeqId) {
+        if let Some(blocks) = self.tables.remove(&seq) {
+            self.free.extend(blocks);
+        }
+        if let Some(worst) = self.commits.remove(&seq) {
+            self.committed -= worst;
+        }
+        self.lens.remove(&seq);
+    }
+
+    /// Current block table of a sequence (for debugging / metrics).
+    pub fn table(&self, seq: SeqId) -> Option<&[u32]> {
+        self.tables.get(&seq).map(|v| v.as_slice())
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Consistency check: every block owned exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for &b in &self.free {
+            if !seen.insert(b) {
+                return Err(format!("block {b} duplicated in free list"));
+            }
+        }
+        for (seq, table) in &self.tables {
+            for &b in table {
+                if !seen.insert(b) {
+                    return Err(format!("block {b} double-owned (seq {seq})"));
+                }
+            }
+        }
+        if seen.len() != self.total {
+            return Err(format!("{} blocks tracked, expected {}", seen.len(), self.total));
+        }
+        let committed: usize = self.commits.values().sum();
+        if committed != self.committed {
+            return Err(format!(
+                "commitment drift: {} recorded vs {} summed",
+                self.committed, committed
+            ));
+        }
+        if self.used_blocks() > self.committed {
+            return Err(format!(
+                "allocated {} blocks beyond commitment {}",
+                self.used_blocks(),
+                self.committed
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn admit_reserves_prompt_blocks() {
+        let mut m = PagedKvManager::new(10, 16);
+        assert!(m.admit(1, 33, 64)); // 33 tokens → 3 blocks
+        assert_eq!(m.used_blocks(), 3);
+        assert_eq!(m.table(1).unwrap().len(), 3);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_respects_worst_case_commitment() {
+        let mut m = PagedKvManager::new(4, 16);
+        assert!(m.admit(1, 16, 48)); // commits 3 blocks, holds 1
+        // commitment 3 + worst 4 > 4 → reject even though blocks are free
+        assert!(!m.admit(2, 8, 64));
+        // 3 + 2 > 4 → still rejected (worst case must be guaranteed)
+        assert!(!m.admit(3, 8, 32));
+        // 3 + 1 = 4 fits
+        assert!(m.admit(4, 8, 16));
+        m.check_invariants().unwrap();
+        // seq 1 can decode to its full worst case even with 4 admitted
+        for _ in 0..32 {
+            assert!(m.append_token(1));
+        }
+        assert!(!m.append_token(1)); // beyond commitment → rejected
+    }
+
+    #[test]
+    fn append_allocates_on_boundary() {
+        let mut m = PagedKvManager::new(8, 4);
+        assert!(m.admit(1, 4, 12));
+        assert_eq!(m.table(1).unwrap().len(), 1);
+        assert!(m.append_token(1)); // token 5 → second block
+        assert_eq!(m.table(1).unwrap().len(), 2);
+        for _ in 0..3 {
+            assert!(m.append_token(1));
+        }
+        assert_eq!(m.table(1).unwrap().len(), 2); // tokens 6..8 fit
+        assert!(m.append_token(1)); // token 9 → third block
+        assert_eq!(m.table(1).unwrap().len(), 3);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_returns_blocks() {
+        let mut m = PagedKvManager::new(6, 8);
+        assert!(m.admit(1, 24, 24));
+        assert!(m.admit(2, 16, 16));
+        assert_eq!(m.free_blocks(), 1);
+        m.release(1);
+        assert_eq!(m.free_blocks(), 4);
+        m.release(2);
+        assert_eq!(m.free_blocks(), 6);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_random_workload_never_double_owns() {
+        let mut rng = Rng::new(808);
+        let mut m = PagedKvManager::new(32, 4);
+        let mut live: Vec<SeqId> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..2000 {
+            match rng.below(10) {
+                0..=3 => {
+                    let prompt = rng.range(1, 20);
+                    let max = prompt + rng.range(0, 20);
+                    if m.admit(next_id, prompt, max) {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                4..=7 if !live.is_empty() => {
+                    let idx = rng.range(0, live.len());
+                    let _ = m.append_token(live[idx]);
+                }
+                _ if !live.is_empty() => {
+                    let idx = rng.range(0, live.len());
+                    let seq = live.swap_remove(idx);
+                    m.release(seq);
+                }
+                _ => {}
+            }
+            m.check_invariants().unwrap();
+        }
+        for seq in live {
+            m.release(seq);
+        }
+        assert_eq!(m.free_blocks(), 32);
+        m.check_invariants().unwrap();
+    }
+}

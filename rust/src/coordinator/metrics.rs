@@ -1,0 +1,95 @@
+//! Serving metrics: latency histograms + throughput counters.
+
+use crate::util::{Histogram, Stopwatch};
+use std::time::Duration;
+
+/// Aggregated engine metrics (single-writer: the engine loop).
+#[derive(Default)]
+pub struct Metrics {
+    pub queue_time: Histogram,
+    pub ttft: Histogram,
+    pub per_token: Histogram,
+    pub e2e: Histogram,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    wall: Option<Stopwatch>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { wall: Some(Stopwatch::start()), ..Default::default() }
+    }
+
+    pub fn record_queue(&mut self, d: Duration) {
+        self.queue_time.record(d);
+    }
+
+    pub fn record_ttft(&mut self, d: Duration) {
+        self.ttft.record(d);
+    }
+
+    pub fn record_token(&mut self, d: Duration) {
+        self.per_token.record(d);
+        self.generated_tokens += 1;
+    }
+
+    pub fn record_done(&mut self, e2e: Duration, prompt_tokens: usize) {
+        self.e2e.record(e2e);
+        self.prompt_tokens += prompt_tokens as u64;
+        self.completed += 1;
+    }
+
+    /// Generated tokens per wall-clock second since engine start.
+    pub fn throughput(&self) -> f64 {
+        match &self.wall {
+            Some(sw) if sw.elapsed_secs() > 0.0 => {
+                self.generated_tokens as f64 / sw.elapsed_secs()
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Multi-line human report.
+    pub fn report(&self) -> String {
+        format!(
+            "completed={} rejected={} prompt_toks={} gen_toks={} throughput={:.1} tok/s\n\
+             queue   : {}\n\
+             ttft    : {}\n\
+             per-tok : {}\n\
+             e2e     : {}",
+            self.completed,
+            self.rejected,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.throughput(),
+            self.queue_time.summary(),
+            self.ttft.summary(),
+            self.per_token.summary(),
+            self.e2e.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut m = Metrics::new();
+        m.record_queue(Duration::from_millis(1));
+        m.record_ttft(Duration::from_millis(10));
+        for _ in 0..5 {
+            m.record_token(Duration::from_millis(2));
+        }
+        m.record_done(Duration::from_millis(20), 7);
+        assert_eq!(m.generated_tokens, 5);
+        assert_eq!(m.prompt_tokens, 7);
+        assert_eq!(m.completed, 1);
+        let r = m.report();
+        assert!(r.contains("completed=1"));
+        assert!(r.contains("per-tok"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Serving coordinator — the L3 runtime system around the quantized
+//! model: request queue, continuous batcher, paged KV-cache manager,
+//! sampler, metrics, and the engine loop driving either the CPU decode
+//! backends (`full` / `gptq-dequant` / `gptqt-lut`) or the PJRT
+//! executables.
+//!
+//! Shape: a miniature vLLM-style router/engine. The paper measures
+//! per-token generation latency under low-concurrency serving (§III-E);
+//! this module is the system that measurement runs in, plus the
+//! admission/batching machinery a deployment needs around it.
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_pool;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod sampler;
+
+pub use engine::{Engine, EngineBackend};
+pub use kv_pool::PagedKvManager;
+pub use metrics::Metrics;
+pub use queue::RequestQueue;
+pub use request::{Request, Response, SamplingParams};
+
+/// Engine configuration knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Max sequences decoded concurrently.
+    pub max_batch: usize,
+    /// KV block size in tokens (paged allocator granularity).
+    pub block_size: usize,
+    /// Total KV blocks in the pool (bounds admitted tokens).
+    pub total_blocks: usize,
+    /// Max queued requests before `submit` rejects.
+    pub max_queue: usize,
+    /// Stop token (EOS).
+    pub eos_token: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 8,
+            block_size: 16,
+            total_blocks: 256,
+            max_queue: 1024,
+            eos_token: crate::data::vocab::EOS,
+        }
+    }
+}

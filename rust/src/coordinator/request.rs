@@ -1,0 +1,116 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+/// How to pick the next token from the logits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplingParams {
+    /// Argmax.
+    Greedy,
+    /// Top-k sampling at a temperature, seeded for reproducibility.
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams::Greedy
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    /// Lower value = served earlier within the same admission wave.
+    pub priority: u8,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: SamplingParams::Greedy,
+            priority: 0,
+            arrived: Instant::now(),
+        }
+    }
+
+    pub fn with_sampling(mut self, s: SamplingParams) -> Request {
+        self.sampling = s;
+        self
+    }
+
+    pub fn with_priority(mut self, p: u8) -> Request {
+        self.priority = p;
+        self
+    }
+
+    /// Total tokens this request may occupy in the KV cache.
+    pub fn max_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit the EOS token.
+    Eos,
+    /// Exhausted `max_new_tokens`.
+    Length,
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Seconds spent queued before prefill started.
+    pub queue_secs: f64,
+    /// Time to first generated token (from arrival).
+    pub ttft_secs: f64,
+    /// Total end-to-end seconds.
+    pub e2e_secs: f64,
+}
+
+impl Response {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.e2e_secs > 0.0 {
+            self.tokens.len() as f64 / self.e2e_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_budget() {
+        let r = Request::new(1, vec![1, 2, 3], 10);
+        assert_eq!(r.max_tokens(), 13);
+        assert_eq!(r.sampling, SamplingParams::Greedy);
+    }
+
+    #[test]
+    fn response_throughput() {
+        let r = Response {
+            id: 1,
+            tokens: vec![1; 20],
+            finish: FinishReason::Length,
+            queue_secs: 0.0,
+            ttft_secs: 0.1,
+            e2e_secs: 2.0,
+        };
+        assert!((r.tokens_per_sec() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,103 @@
+//! Next-token sampling.
+
+use super::request::SamplingParams;
+use crate::util::Rng;
+
+/// Sampler state per sequence (owns the RNG stream for reproducibility).
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Sampler {
+        let seed = match params {
+            SamplingParams::Greedy => 0,
+            SamplingParams::TopK { seed, .. } => seed,
+        };
+        Sampler { params, rng: Rng::new(seed) }
+    }
+
+    /// Pick the next token id from raw logits.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        match self.params {
+            SamplingParams::Greedy => argmax(logits),
+            SamplingParams::TopK { k, temperature, .. } => {
+                self.top_k(logits, k.max(1), temperature.max(1e-4))
+            }
+        }
+    }
+
+    fn top_k(&mut self, logits: &[f32], k: usize, temperature: f32) -> u32 {
+        let k = k.min(logits.len());
+        // indices of the k largest logits
+        let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+        });
+        let top = &idx[..k];
+        let max = top
+            .iter()
+            .map(|&i| logits[i as usize])
+            .fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> = top
+            .iter()
+            .map(|&i| (((logits[i as usize] - max) / temperature) as f64).exp())
+            .collect();
+        top[self.rng.weighted(&weights)]
+    }
+}
+
+/// Argmax with deterministic tie-breaking (lowest index).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::new(SamplingParams::Greedy);
+        assert_eq!(s.sample(&[0.1, 3.0, -2.0, 3.0]), 1); // tie → lowest index
+    }
+
+    #[test]
+    fn top_k_only_samples_top_k() {
+        let mut s = Sampler::new(SamplingParams::TopK { k: 2, temperature: 1.0, seed: 1 });
+        let logits = [10.0, 9.0, -50.0, -50.0];
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 0 || t == 1, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn top_k_is_seed_deterministic() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let run = |seed| {
+            let mut s = Sampler::new(SamplingParams::TopK { k: 8, temperature: 0.9, seed });
+            (0..50).map(|_| s.sample(&logits)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut s = Sampler::new(SamplingParams::TopK { k: 4, temperature: 1e-4, seed: 3 });
+        let logits = [1.0, 5.0, 4.9, 2.0];
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Synthetic corpora + calibration sampling.
+//!
+//! The paper evaluates on WikiText2 and PTB — unavailable offline, so we
+//! substitute two synthetic corpora with deliberately *different* token
+//! statistics (see DESIGN.md §2):
+//!
+//! * [`Dataset::WikiSyn`] — order-2 Markov chain over a 2048-word
+//!   Zipf-weighted vocabulary, long "sentences" (mirrors WikiText2's
+//!   heavier-tailed, higher-entropy prose).
+//! * [`Dataset::PtbSyn`] — order-1 chain over a smaller effective
+//!   vocabulary with short sentences (mirrors PTB's clipped newswire).
+//!
+//! Both are deterministic functions of a seed, so every experiment
+//! (python training, rust calibration, rust evaluation) sees the same
+//! data without shipping datasets.
+
+pub mod corpus;
+pub mod vocab;
+
+pub use corpus::{CorpusGenerator, Dataset};
+
+use crate::util::Rng;
+
+/// A contiguous slice of tokens used for calibration or evaluation.
+#[derive(Debug, Clone)]
+pub struct TokenSlice {
+    pub tokens: Vec<u32>,
+}
+
+/// Calibration sampler: `n_slices` random windows of `slice_len` tokens,
+/// the shape of the paper's "128 random slices of 2048 tokens" (§III-A),
+/// scaled by config.
+pub fn calibration_slices(
+    stream: &[u32],
+    n_slices: usize,
+    slice_len: usize,
+    seed: u64,
+) -> Vec<TokenSlice> {
+    assert!(
+        stream.len() > slice_len,
+        "stream too short: {} <= {}",
+        stream.len(),
+        slice_len
+    );
+    let mut rng = Rng::new(seed ^ 0xCA11_B0B5);
+    (0..n_slices)
+        .map(|_| {
+            let start = rng.range(0, stream.len() - slice_len);
+            TokenSlice { tokens: stream[start..start + slice_len].to_vec() }
+        })
+        .collect()
+}
+
+/// Non-overlapping evaluation windows covering the stream prefix —
+/// the perplexity protocol walks these in order.
+pub fn eval_windows(stream: &[u32], window: usize, max_windows: usize) -> Vec<TokenSlice> {
+    stream
+        .chunks_exact(window)
+        .take(max_windows)
+        .map(|c| TokenSlice { tokens: c.to_vec() })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_slices_shapes() {
+        let stream: Vec<u32> = (0..10_000).map(|i| i % 97).collect();
+        let slices = calibration_slices(&stream, 16, 128, 7);
+        assert_eq!(slices.len(), 16);
+        assert!(slices.iter().all(|s| s.tokens.len() == 128));
+    }
+
+    #[test]
+    fn calibration_is_deterministic() {
+        let stream: Vec<u32> = (0..5_000).map(|i| (i * 31) % 211).collect();
+        let a = calibration_slices(&stream, 4, 64, 42);
+        let b = calibration_slices(&stream, 4, 64, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn eval_windows_non_overlapping() {
+        let stream: Vec<u32> = (0..1000).collect();
+        let ws = eval_windows(&stream, 100, 5);
+        assert_eq!(ws.len(), 5);
+        assert_eq!(ws[0].tokens[0], 0);
+        assert_eq!(ws[1].tokens[0], 100);
+        assert_eq!(ws[4].tokens[99], 499);
+    }
+}

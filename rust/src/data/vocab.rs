@@ -1,0 +1,134 @@
+//! Synthetic vocabulary: deterministic syllable-built words with a
+//! reserved control-token block, plus a whitespace tokenizer over it.
+//!
+//! Serving examples want human-readable prompts/continuations; the
+//! vocabulary maps token ids to pronounceable words (`"toka"`, `"rimo"`,
+//! …) generated from the seed, so `detokenize(tokenize(s)) == s` for any
+//! in-vocabulary string.
+
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Reserved ids.
+pub const BOS: u32 = 0;
+pub const EOS: u32 = 1;
+pub const UNK: u32 = 2;
+/// First ordinary word id.
+pub const FIRST_WORD: u32 = 3;
+
+const ONSETS: &[&str] = &[
+    "b", "d", "f", "g", "h", "j", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "br", "dr",
+    "gr", "kr", "pl", "st", "tr", "sk",
+];
+const NUCLEI: &[&str] = &["a", "e", "i", "o", "u", "ai", "ei", "ou"];
+
+/// A fixed-size synthetic vocabulary.
+#[derive(Clone)]
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Vocab {
+    /// Build a vocabulary of `size` tokens (including the 3 reserved).
+    /// Words are unique, deterministic for a seed.
+    pub fn new(size: usize, seed: u64) -> Vocab {
+        assert!(size > FIRST_WORD as usize + 1, "vocab too small");
+        let mut rng = Rng::new(seed ^ 0x0CAB_1E57);
+        let mut words: Vec<String> = vec!["<bos>".into(), "<eos>".into(), "<unk>".into()];
+        let mut index = HashMap::new();
+        for (i, w) in words.iter().enumerate() {
+            index.insert(w.clone(), i as u32);
+        }
+        while words.len() < size {
+            let syllables = 1 + rng.below(3) as usize;
+            let mut w = String::new();
+            for _ in 0..=syllables {
+                w.push_str(ONSETS[rng.range(0, ONSETS.len())]);
+                w.push_str(NUCLEI[rng.range(0, NUCLEI.len())]);
+            }
+            if !index.contains_key(&w) {
+                index.insert(w.clone(), words.len() as u32);
+                words.push(w);
+            }
+        }
+        Vocab { words, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Word for a token id (`<unk>` if out of range).
+    pub fn word(&self, id: u32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Token id for a word (UNK when unknown).
+    pub fn id(&self, word: &str) -> u32 {
+        self.index.get(word).copied().unwrap_or(UNK)
+    }
+
+    /// Whitespace tokenize.
+    pub fn tokenize(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    /// Join token ids back into text.
+    pub fn detokenize(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| self.word(t))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_unique() {
+        let a = Vocab::new(512, 1);
+        let b = Vocab::new(512, 1);
+        assert_eq!(a.len(), 512);
+        for i in 0..512u32 {
+            assert_eq!(a.word(i), b.word(i));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..512u32 {
+            assert!(seen.insert(a.word(i).to_string()), "dup word {}", a.word(i));
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let v = Vocab::new(256, 3);
+        let text = format!("{} {} {}", v.word(10), v.word(77), v.word(200));
+        let toks = v.tokenize(&text);
+        assert_eq!(toks, vec![10, 77, 200]);
+        assert_eq!(v.detokenize(&toks), text);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = Vocab::new(128, 9);
+        assert_eq!(v.id("zzzzzzzzzzz"), UNK);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Vocab::new(128, 1);
+        let b = Vocab::new(128, 2);
+        let same = (FIRST_WORD..128).filter(|&i| a.word(i) == b.word(i)).count();
+        assert!(same < 30, "vocabularies suspiciously similar: {same}");
+    }
+}

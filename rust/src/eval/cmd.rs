@@ -1,0 +1,288 @@
+//! CLI command implementations (`gptqt quantize|ppl|serve|exp|gen-corpus`).
+
+use super::ppl::{calib_for, eval_for, eval_ppl, EvalConfig};
+use super::tables::{self, ExpConfig};
+use crate::cli::Args;
+use crate::coordinator::{Engine, EngineBackend, EngineConfig, Request, SamplingParams};
+use crate::data::{CorpusGenerator, Dataset};
+use crate::model::quantize::quantize_model;
+use crate::model::{load_or_init, presets, BackendModel};
+use crate::quant::{Method, QuantConfig};
+use anyhow::{bail, Context, Result};
+
+fn qcfg_from(a: &Args) -> QuantConfig {
+    QuantConfig {
+        bits: a.get_usize("bits", 3) as u32,
+        step1_bits: a.get_usize("step1-bits", 5) as u32,
+        explore_range: a.get_usize("explore-range", 1) as u32,
+        explore_grid: a.get_usize("explore-grid", 6),
+        ..Default::default()
+    }
+}
+
+fn eval_cfg_from(a: &Args) -> EvalConfig {
+    let mut e = if a.has_flag("fast") { EvalConfig::fast() } else { EvalConfig::default() };
+    e.calib_slices = a.get_usize("calib-slices", e.calib_slices);
+    e.calib_len = a.get_usize("calib-len", e.calib_len);
+    e.eval_windows = a.get_usize("eval-windows", e.eval_windows);
+    e.eval_len = a.get_usize("eval-len", e.eval_len);
+    e.seed = a.get_u64("seed", 0);
+    e
+}
+
+/// `gptqt quantize --model <name> --method <m> --bits <n>`
+pub fn quantize(a: &Args) -> Result<()> {
+    let name = a.get_or("model", "opt-mini");
+    let method = Method::parse(a.get_or("method", "gptqt"))
+        .context("bad --method (rtn|gptq|gptq-minmse|bcq|gptq-bcq|gptqt)")?;
+    let qcfg = qcfg_from(a);
+    let ecfg = eval_cfg_from(a);
+    let (model, trained) = load_or_init(name, a.get_or("artifacts", "artifacts"), ecfg.seed)?;
+    eprintln!(
+        "quantizing {name} ({} params, trained={trained}) with {} at {} bits",
+        crate::model::fmt_params(model.cfg.param_count()),
+        method.name(),
+        qcfg.bits
+    );
+    let calib = calib_for(&ecfg, Dataset::WikiSyn);
+    let qm = quantize_model(&model, &calib, method, &qcfg, true)?;
+    let total_mse: f64 = qm.stats.iter().map(|(_, s)| s.weight_mse).sum::<f64>()
+        / qm.stats.len().max(1) as f64;
+    let total_err: f64 = qm.stats.iter().map(|(_, s)| s.output_err).sum();
+    println!(
+        "quantized {} layers in {:.2}s  mean weight MSE {:.3e}  Σ output err {:.3e}",
+        qm.stats.len(),
+        qm.seconds,
+        total_mse,
+        total_err
+    );
+    if let Some(out) = a.get("out") {
+        qm.model.weights.save(out)?;
+        println!("wrote dequantized weights to {out}");
+    }
+    Ok(())
+}
+
+/// `gptqt ppl --model <name> --dataset <wiki-syn|ptb-syn> --method <m>`
+pub fn ppl(a: &Args) -> Result<()> {
+    let name = a.get_or("model", "opt-mini");
+    let dataset = Dataset::parse(a.get_or("dataset", "wiki-syn")).context("bad --dataset")?;
+    let method = Method::parse(a.get_or("method", "full")).context("bad --method")?;
+    let qcfg = qcfg_from(a);
+    let ecfg = eval_cfg_from(a);
+    let (model, trained) = load_or_init(name, a.get_or("artifacts", "artifacts"), ecfg.seed)?;
+    if !trained {
+        eprintln!("WARNING: no trained artifact for {name}; using random init");
+    }
+    let windows = eval_for(&ecfg, dataset);
+    let ppl = if method == Method::Full {
+        eval_ppl(&model, &windows)
+    } else {
+        let calib = calib_for(&ecfg, dataset);
+        let qm = quantize_model(&model, &calib, method, &qcfg, false)?;
+        eval_ppl(&qm.model, &windows)
+    };
+    println!(
+        "{name} {} {}bit on {}: ppl {}",
+        method.name(),
+        if method == Method::Full { 16 } else { qcfg.bits },
+        dataset.name(),
+        super::fmt_ppl(ppl)
+    );
+    Ok(())
+}
+
+/// `gptqt serve --model <name> --quant <fp32|gptq2|gptqt3|gptqt2>
+///              [--backend cpu|pjrt] --requests <n> ...`
+pub fn serve(a: &Args) -> Result<()> {
+    let name = a.get_or("model", "opt-mini");
+    let quant = a.get_or("quant", "gptqt3");
+    let n_requests = a.get_usize("requests", 16);
+    let prompt_len = a.get_usize("prompt-len", 12);
+    let gen_len = a.get_usize("gen-len", 24);
+    let max_batch = a.get_usize("max-batch", 4);
+    let backend_kind = a.get_or("backend", "cpu");
+    let artifacts = a.get_or("artifacts", "artifacts");
+    let ecfg = eval_cfg_from(a);
+
+    let (model, trained) = load_or_init(name, artifacts, ecfg.seed)?;
+    if !trained {
+        eprintln!("WARNING: serving a random-init {name} (run `make artifacts`)");
+    }
+
+    // --- build the quantized (or full) model --------------------------
+    let (served, label): (crate::model::Model, String) = match quant {
+        "fp32" | "full" => (
+            crate::model::Model::new(model.cfg.clone(), model.weights.clone()),
+            "full fp32".into(),
+        ),
+        q => {
+            let (method, bits) = match q {
+                "gptq2" => (Method::Gptq, 2),
+                "gptq3" => (Method::Gptq, 3),
+                "gptqt2" => (Method::Gptqt, 2),
+                "gptqt3" => (Method::Gptqt, 3),
+                other => bail!("bad --quant {other} (fp32|gptq2|gptq3|gptqt2|gptqt3)"),
+            };
+            let qcfg = QuantConfig::with_bits(bits);
+            let calib = calib_for(&ecfg, Dataset::WikiSyn);
+            eprintln!("quantizing {name} with {} {bits}-bit for serving …", method.name());
+            let qm = quantize_model(&model, &calib, method, &qcfg, false)?;
+            // CPU backend consumes packed/int layers for the real hot path
+            if backend_kind == "cpu" {
+                let bm = BackendModel::quantized(&model, qm.layers);
+                return serve_with_engine(
+                    a,
+                    EngineBackend::Cpu(bm),
+                    &model.cfg,
+                    n_requests,
+                    prompt_len,
+                    gen_len,
+                    max_batch,
+                    &format!("{} {bits}-bit (cpu)", method.name()),
+                );
+            }
+            (qm.model, format!("{} {bits}-bit", method.name()))
+        }
+    };
+
+    match backend_kind {
+        "cpu" => {
+            let bm = BackendModel::dense(&served);
+            serve_with_engine(
+                a,
+                EngineBackend::Cpu(bm),
+                &served.cfg,
+                n_requests,
+                prompt_len,
+                gen_len,
+                max_batch,
+                &format!("{label} (cpu)"),
+            )
+        }
+        "pjrt" => {
+            if !crate::runtime::artifacts_present(artifacts, name) {
+                bail!("no HLO artifacts for {name} under {artifacts}; run `make artifacts`");
+            }
+            let rt = crate::runtime::Runtime::cpu()?;
+            eprintln!("PJRT platform: {}", rt.platform());
+            let compiled = rt.load_model(artifacts, &served)?;
+            serve_with_engine(
+                a,
+                EngineBackend::Pjrt(compiled),
+                &served.cfg,
+                n_requests,
+                prompt_len,
+                gen_len,
+                max_batch,
+                &format!("{label} (pjrt)"),
+            )
+        }
+        other => bail!("bad --backend {other} (cpu|pjrt)"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_with_engine(
+    a: &Args,
+    backend: EngineBackend,
+    cfg: &crate::model::ModelConfig,
+    n_requests: usize,
+    prompt_len: usize,
+    gen_len: usize,
+    max_batch: usize,
+    label: &str,
+) -> Result<()> {
+    let seed = a.get_u64("seed", 0);
+    let (gen, vocab) = CorpusGenerator::with_vocab(Dataset::WikiSyn, cfg.vocab, seed);
+    let stream = gen.generate(n_requests * prompt_len * 4 + 64, 9);
+    let mut engine = Engine::new(
+        backend,
+        EngineConfig { max_batch, ..Default::default() },
+    );
+    eprintln!("serving {n_requests} requests on {} [{label}]", cfg.name);
+    let mut rng = crate::util::Rng::new(seed);
+    for id in 0..n_requests as u64 {
+        let start = rng.range(0, stream.len() - prompt_len);
+        let prompt = stream[start..start + prompt_len].to_vec();
+        let sampling = if a.has_flag("greedy") {
+            SamplingParams::Greedy
+        } else {
+            SamplingParams::TopK { k: 16, temperature: 0.9, seed: seed ^ id }
+        };
+        engine
+            .submit(Request::new(id, prompt, gen_len).with_sampling(sampling))
+            .map_err(|e| anyhow::anyhow!("submit {id}: {e:?}"))?;
+    }
+    let responses = engine.run_to_completion()?;
+    engine
+        .check_invariants()
+        .map_err(|e| anyhow::anyhow!("KV invariant violated: {e}"))?;
+    println!("--- engine metrics [{label}] ---");
+    println!("{}", engine.metrics.report());
+    if let Some(r) = responses.first() {
+        println!(
+            "sample continuation (req {}): {}",
+            r.id,
+            vocab.detokenize(&r.tokens)
+        );
+    }
+    anyhow::ensure!(responses.len() == n_requests, "lost responses");
+    Ok(())
+}
+
+/// `gptqt exp <table1|table2|table3|table4|table5|table6|fig4|all>`
+pub fn experiment(a: &Args) -> Result<()> {
+    let which = a
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let cfg = ExpConfig {
+        eval: eval_cfg_from(a),
+        artifacts_dir: a.get_or("artifacts", "artifacts").to_string(),
+        fast: a.has_flag("fast"),
+        seed: a.get_u64("seed", 0),
+    };
+    let run = |name: &str| -> Result<()> {
+        eprintln!("=== {name} ===");
+        match name {
+            "table1" => tables::table1(&cfg).map(|_| ()),
+            "table2" => tables::table2(&cfg).map(|_| ()),
+            "table3" => tables::table3(&cfg).map(|_| ()),
+            "table4" => tables::table4(&cfg).map(|_| ()),
+            "table5" => tables::table5(&cfg).map(|_| ()),
+            "table6" => tables::table6(&cfg).map(|_| ()),
+            "fig4" => tables::fig4(&cfg).map(|_| ()),
+            other => bail!("unknown experiment `{other}`"),
+        }
+    };
+    if which == "all" {
+        for name in ["table1", "table2", "table3", "table4", "table5", "table6", "fig4"] {
+            run(name)?;
+        }
+        Ok(())
+    } else {
+        run(which)
+    }
+}
+
+/// `gptqt gen-corpus --out-dir artifacts --tokens N --seed S`
+pub fn gen_corpus(a: &Args) -> Result<()> {
+    let out_dir = a.get_or("out-dir", "artifacts");
+    let tokens = a.get_usize("tokens", 1_500_000);
+    let seed = a.get_u64("seed", 0);
+    std::fs::create_dir_all(out_dir)?;
+    for ds in [Dataset::WikiSyn, Dataset::PtbSyn] {
+        let gen = CorpusGenerator::new(ds, presets::VOCAB, seed);
+        let train = gen.generate(tokens, 0);
+        let path = format!("{out_dir}/corpus-{}-train.bin", ds.name());
+        let mut bytes = Vec::with_capacity(train.len() * 4);
+        for t in &train {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        std::fs::write(&path, bytes)?;
+        eprintln!("wrote {} tokens to {path}", train.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Evaluation + experiment drivers: perplexity protocol, the paper's
+//! Tables I–VI and Fig. 4, and the CLI command implementations.
+
+pub mod cmd;
+pub mod ppl;
+pub mod speed;
+pub mod tables;
+
+pub use ppl::{eval_ppl, EvalConfig};
+
+/// Where experiment outputs are written (one text file per experiment,
+/// same rows that are printed).
+pub const RESULTS_DIR: &str = "results";
+
+/// Append a result blob to `results/<name>.txt` (creating the dir), and
+/// echo it to stdout. `GPTQT_RESULTS_DIR` overrides the directory (tests
+/// point it at a scratch dir so smoke runs don't clobber real results).
+pub fn emit_result(name: &str, body: &str) -> anyhow::Result<()> {
+    println!("{body}");
+    let dir = std::env::var("GPTQT_RESULTS_DIR").unwrap_or_else(|_| RESULTS_DIR.to_string());
+    std::fs::create_dir_all(&dir)?;
+    let path = format!("{dir}/{name}.txt");
+    std::fs::write(&path, body)?;
+    eprintln!("[results] wrote {path}");
+    Ok(())
+}
+
+/// Render an aligned text table: header row + data rows.
+pub fn render_table(title: &str, header: &[String], rows: &[Vec<String>]) -> String {
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = format!("## {title}\n{}\n", fmt_row(header));
+    let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+    out.push_str(&"-".repeat(total));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format a perplexity like the paper (large collapses as `1.3e3`).
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() {
+        "inf".into()
+    } else if p >= 1000.0 {
+        format!("{:.1e}", p)
+    } else if p >= 100.0 {
+        format!("{:.1}", p)
+    } else {
+        format!("{:.2}", p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "demo",
+            &["method".into(), "3bit".into()],
+            &[vec!["GPTQT".into(), "10.15".into()], vec!["RTN".into(), "6.1e3".into()]],
+        );
+        assert!(t.contains("## demo"));
+        assert!(t.contains("GPTQT"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines.len() >= 4);
+    }
+
+    #[test]
+    fn ppl_formatting_matches_paper_style() {
+        assert_eq!(fmt_ppl(9.34), "9.34");
+        assert_eq!(fmt_ppl(139.9), "139.9");
+        assert_eq!(fmt_ppl(6100.0), "6.1e3");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+}

@@ -1,0 +1,175 @@
+//! Token-generation speed measurement (Table IV).
+//!
+//! Protocol mirrors §III-E: generate a fixed number of tokens at batch 1
+//! and report mean seconds/token. The three contenders are the three
+//! weight formats on the same architecture:
+//!
+//! * `full`   — dense f32 ([`DenseGemv`]),
+//! * `GPTQ 2` — int codes + on-the-fly dequant ([`IntLayer`]),
+//! * `GPTQT 3`— fused binary coding via LUT-GEMM ([`PackedBcLayer`]).
+//!
+//! Weight *values* are irrelevant for timing, so quantized forms are
+//! synthesized directly (RTN codes / random sign patterns) — this keeps
+//! the big timing-only ladder entries (opt-lg/xl) cheap to set up.
+
+use crate::kernels::Gemv;
+use crate::model::{BackendModel, KvCache, Model, ModelConfig};
+use crate::quant::fuse::FusedRow;
+use crate::quant::linear::{rtn_quantize, IntLayer};
+use crate::quant::pack::PackedBcLayer;
+use crate::quant::QuantizedLayer;
+use crate::util::{Rng, Stopwatch};
+use std::collections::HashMap;
+
+/// Which weight format to time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpeedVariant {
+    Full,
+    GptqInt { bits: u32 },
+    GptqtLut { bits: u32 },
+}
+
+impl SpeedVariant {
+    pub fn label(&self) -> String {
+        match self {
+            SpeedVariant::Full => "full (fp32)".into(),
+            SpeedVariant::GptqInt { bits } => format!("GPTQ {bits}-bit dequant"),
+            SpeedVariant::GptqtLut { bits } => format!("GPTQT {bits}-bit LUT"),
+        }
+    }
+}
+
+/// Build a backend model of the requested variant with synthesized
+/// quantized layers (values arbitrary, formats faithful).
+pub fn build_variant(model: &Model, variant: SpeedVariant, seed: u64) -> BackendModel {
+    match variant {
+        SpeedVariant::Full => BackendModel::dense(model),
+        SpeedVariant::GptqInt { bits } => {
+            let mut layers = HashMap::new();
+            for (name, _, _) in model.cfg.all_linears() {
+                let w = model.weights.expect(&name);
+                let (q, grids) = rtn_quantize(w, bits);
+                let il = IntLayer::encode(&q, &grids, bits);
+                layers.insert(
+                    name,
+                    QuantizedLayer {
+                        dequant: q,
+                        packed: None,
+                        int_weights: Some(il),
+                        stats: Default::default(),
+                    },
+                );
+            }
+            BackendModel::quantized(model, layers)
+        }
+        SpeedVariant::GptqtLut { bits } => {
+            let mut rng = Rng::new(seed);
+            let mut layers = HashMap::new();
+            for (name, rows, cols) in model.cfg.all_linears() {
+                let planes = bits as usize;
+                let fused: Vec<FusedRow> = (0..rows)
+                    .map(|_| FusedRow {
+                        alphas: (0..planes).map(|p| 0.02 / (1 << p) as f32).collect(),
+                        bias: 0.0,
+                    })
+                    .collect();
+                let patterns: Vec<Vec<u32>> = (0..rows)
+                    .map(|_| (0..cols).map(|_| rng.below(1 << planes) as u32).collect())
+                    .collect();
+                let packed = PackedBcLayer::pack(rows, cols, &fused, &patterns);
+                layers.insert(
+                    name,
+                    QuantizedLayer {
+                        dequant: packed.dequant(),
+                        packed: Some(packed),
+                        int_weights: None,
+                        stats: Default::default(),
+                    },
+                );
+            }
+            BackendModel::quantized(model, layers)
+        }
+    }
+}
+
+/// Timing result for one (model, variant) pair.
+#[derive(Debug, Clone)]
+pub struct SpeedResult {
+    pub model: String,
+    pub variant: SpeedVariant,
+    pub ms_per_token: f64,
+    pub tokens: usize,
+    pub streamed_mb_per_token: f64,
+}
+
+/// Measure mean per-token decode latency: prompt of `prompt_len`, then
+/// `gen_tokens` timed decode steps (prompt excluded from timing).
+pub fn measure_decode(
+    cfg: &ModelConfig,
+    bm: &BackendModel,
+    variant: SpeedVariant,
+    prompt_len: usize,
+    gen_tokens: usize,
+    seed: u64,
+) -> SpeedResult {
+    let mut rng = Rng::new(seed);
+    let mut cache = KvCache::new(cfg);
+    let mut last = 3u32;
+    for _ in 0..prompt_len {
+        let tok = 3 + rng.below((cfg.vocab - 3) as u64) as u32;
+        bm.decode_step(tok, &mut cache);
+        last = tok;
+    }
+    let sw = Stopwatch::start();
+    for _ in 0..gen_tokens {
+        let logits = bm.decode_step(last, &mut cache);
+        last = crate::coordinator::sampler::argmax(&logits);
+    }
+    let secs = sw.elapsed_secs();
+    SpeedResult {
+        model: cfg.name.to_string(),
+        variant,
+        ms_per_token: secs * 1e3 / gen_tokens as f64,
+        tokens: gen_tokens,
+        streamed_mb_per_token: bm.streamed_bytes_per_token() as f64 / 1e6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::random_weights;
+    use crate::model::presets;
+
+    fn tiny_model() -> Model {
+        let mut cfg = presets::by_name("opt-nano").unwrap();
+        cfg.vocab = 64;
+        cfg.max_seq = 32;
+        Model::new(cfg.clone(), random_weights(&cfg, 9))
+    }
+
+    #[test]
+    fn variants_build_and_run() {
+        let m = tiny_model();
+        for v in [
+            SpeedVariant::Full,
+            SpeedVariant::GptqInt { bits: 2 },
+            SpeedVariant::GptqtLut { bits: 3 },
+        ] {
+            let bm = build_variant(&m, v, 1);
+            let r = measure_decode(&m.cfg, &bm, v, 4, 4, 2);
+            assert!(r.ms_per_token > 0.0, "{v:?}");
+            assert_eq!(r.tokens, 4);
+        }
+    }
+
+    #[test]
+    fn quantized_variants_stream_less() {
+        let m = tiny_model();
+        let full = build_variant(&m, SpeedVariant::Full, 1);
+        let int2 = build_variant(&m, SpeedVariant::GptqInt { bits: 2 }, 1);
+        let lut3 = build_variant(&m, SpeedVariant::GptqtLut { bits: 3 }, 1);
+        assert!(int2.streamed_bytes_per_token() < full.streamed_bytes_per_token());
+        assert!(lut3.streamed_bytes_per_token() < full.streamed_bytes_per_token() / 4);
+    }
+}

@@ -1,0 +1,211 @@
+//! LUT-GEMM binary-coding matvec — the GPTQT inference path (paper §II-D
+//! and [13], Park et al.).
+//!
+//! For a fused binary-coded row `W[r,c] = Σ_p α[r,p]·b[r,p,c] + β[r]`
+//! (`b ∈ {±1}`):
+//!
+//! ```text
+//! y[r] = Σ_p α[r,p]·(Σ_c b[r,p,c]·x_c) + β[r]·Σ_c x_c
+//! ```
+//!
+//! The inner signed sums share massive structure across rows and planes:
+//! within a group of 8 columns only 256 sign patterns exist, so one
+//! 256-entry table of partial sums (`lut[pattern] = Σ_k ±x[8g+k]`) built
+//! per group in 256 adds serves every (row, plane) via a single byte
+//! lookup. That is LUT-GEMM's shared-memory table, landed in L1 cache:
+//!
+//! * ops: `cols/8 · (256 + rows·planes)` adds  vs  `rows·cols` mul-adds,
+//! * bytes: `rows·cols·planes/8`  vs  `4·rows·cols` — the ~10× traffic
+//!   cut that wins the bandwidth-bound decode regime.
+//!
+//! The LUT is built by gray-code-free DP: `lut[p] = lut[p \ lowbit] +
+//! 2·x[lowbit]`, starting from `lut[0] = −Σ_k x_k`.
+
+use crate::quant::pack::{PackedBcLayer, GROUP};
+
+/// Groups processed per accumulator pass. The `(rows × planes)` f32
+/// accumulator array is the dominant memory stream (it is re-walked per
+/// group); blocking GBLOCK groups per pass cuts that traffic GBLOCK× at
+/// the cost of GBLOCK L1-resident LUTs (8 KiB) — see EXPERIMENTS.md §Perf.
+const GBLOCK: usize = 8;
+
+/// `y = Ŵ·x` over the packed binary-coded layer.
+pub fn gemv_lut(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), layer.cols);
+    assert_eq!(y.len(), layer.rows);
+    let rows = layer.rows;
+    let planes = layer.planes;
+    let sum_x: f32 = x.iter().sum();
+
+    // signed-sum accumulators per (row, plane)
+    let mut acc = vec![0.0f32; rows * planes];
+    let mut luts = [[0.0f32; 1 << GROUP]; GBLOCK];
+    let slots = rows * planes;
+
+    for gb in (0..layer.groups).step_by(GBLOCK) {
+        let gn = GBLOCK.min(layer.groups - gb);
+        for (g, lut) in luts.iter_mut().enumerate().take(gn) {
+            let base = (gb + g) * GROUP;
+            // group activations (zero-padded tail)
+            let mut xg = [0.0f32; GROUP];
+            for k in 0..GROUP.min(layer.cols - base) {
+                xg[k] = x[base + k];
+            }
+            build_lut(&xg, lut);
+        }
+        let codes = &layer.codes[gb * slots..(gb + gn) * slots];
+        if gn == GBLOCK {
+            // hot path: unrolled over the group block, one acc pass
+            for (i, slot) in acc.iter_mut().enumerate() {
+                let mut s = *slot;
+                s += luts[0][codes[i] as usize];
+                s += luts[1][codes[slots + i] as usize];
+                s += luts[2][codes[2 * slots + i] as usize];
+                s += luts[3][codes[3 * slots + i] as usize];
+                s += luts[4][codes[4 * slots + i] as usize];
+                s += luts[5][codes[5 * slots + i] as usize];
+                s += luts[6][codes[6 * slots + i] as usize];
+                s += luts[7][codes[7 * slots + i] as usize];
+                *slot = s;
+            }
+        } else {
+            for (i, slot) in acc.iter_mut().enumerate() {
+                let mut s = *slot;
+                for (g, lut) in luts.iter().enumerate().take(gn) {
+                    s += lut[codes[g * slots + i] as usize];
+                }
+                *slot = s;
+            }
+        }
+    }
+
+    for r in 0..rows {
+        let mut v = layer.bias[r] * sum_x;
+        let arow = &layer.alphas[r * planes..(r + 1) * planes];
+        let crow = &acc[r * planes..(r + 1) * planes];
+        for (a, s) in arow.iter().zip(crow) {
+            v += a * s;
+        }
+        y[r] = v;
+    }
+}
+
+/// Fill `lut[pattern] = Σ_k sign_k(pattern)·xg[k]` for all 256 patterns
+/// in 256 adds (DP over the lowest set bit).
+#[inline]
+pub fn build_lut(xg: &[f32; GROUP], lut: &mut [f32; 1 << GROUP]) {
+    let mut neg = 0.0f32;
+    for &v in xg.iter() {
+        neg -= v;
+    }
+    lut[0] = neg;
+    for p in 1usize..(1 << GROUP) {
+        let low = p.trailing_zeros() as usize;
+        lut[p] = lut[p & (p - 1)] + 2.0 * xg[low];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemv_f32;
+    use crate::quant::fuse::FusedRow;
+    use crate::quant::pack::PackedBcLayer;
+    use crate::util::Rng;
+
+    fn random_packed(rows: usize, cols: usize, planes: usize, seed: u64) -> PackedBcLayer {
+        let mut rng = Rng::new(seed);
+        let fused: Vec<FusedRow> = (0..rows)
+            .map(|_| FusedRow {
+                alphas: (0..planes).map(|_| rng.next_f32() + 0.1).collect(),
+                bias: rng.normal_f32() * 0.1,
+            })
+            .collect();
+        let patterns: Vec<Vec<u32>> = (0..rows)
+            .map(|_| (0..cols).map(|_| rng.below(1 << planes) as u32).collect())
+            .collect();
+        PackedBcLayer::pack(rows, cols, &fused, &patterns)
+    }
+
+    #[test]
+    fn lut_dp_matches_bruteforce() {
+        let mut rng = Rng::new(321);
+        let mut xg = [0.0f32; GROUP];
+        for v in xg.iter_mut() {
+            *v = rng.normal_f32();
+        }
+        let mut lut = [0.0f32; 256];
+        build_lut(&xg, &mut lut);
+        for p in 0..256usize {
+            let mut expect = 0.0f32;
+            for (k, &v) in xg.iter().enumerate() {
+                expect += if p >> k & 1 == 1 { v } else { -v };
+            }
+            assert!((lut[p] - expect).abs() < 1e-4, "pattern {p}: {} vs {expect}", lut[p]);
+        }
+    }
+
+    #[test]
+    fn matches_dense_on_dequantized_weights() {
+        let mut rng = Rng::new(322);
+        for (rows, cols, planes) in [(4, 8, 2), (16, 40, 3), (64, 130, 3), (32, 256, 2)] {
+            let layer = random_packed(rows, cols, planes, rows as u64 * 1000 + cols as u64);
+            let dense = layer.dequant();
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32()).collect();
+            let mut y = vec![0.0; rows];
+            gemv_lut(&layer, &x, &mut y);
+            let mut y_ref = vec![0.0; rows];
+            gemv_f32(&dense, &x, &mut y_ref);
+            for (r, (a, b)) in y.iter().zip(&y_ref).enumerate() {
+                let tol = 2e-4 * (cols as f32).sqrt() * (1.0 + b.abs());
+                assert!(
+                    (a - b).abs() < tol,
+                    "({rows}x{cols}x{planes}) row {r}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_tail_columns_are_correct() {
+        // cols not a multiple of 8 exercises the zero-padded group
+        let layer = random_packed(8, 13, 2, 99);
+        let dense = layer.dequant();
+        let mut rng = Rng::new(323);
+        let x: Vec<f32> = (0..13).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0; 8];
+        gemv_lut(&layer, &x, &mut y);
+        let y_ref = {
+            let mut t = vec![0.0; 8];
+            gemv_f32(&dense, &x, &mut t);
+            t
+        };
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gptqt_pipeline_layer_runs_through_lut() {
+        // full integration: quantize a layer with GPTQT, gemv via LUT,
+        // compare against dense gemv on the dequantized weights
+        use crate::quant::{quantize_layer, Method, QuantConfig};
+        use crate::tensor::Tensor;
+        let mut rng = Rng::new(324);
+        let d = 64;
+        let w = Tensor::randn(16, d, 1.0, &mut rng);
+        let acts = Tensor::randn(128, d, 1.0, &mut rng);
+        let h = crate::quant::gptq::accumulate_hessian(&acts);
+        let cfg = QuantConfig { explore_grid: 4, ..QuantConfig::with_bits(3) };
+        let q = quantize_layer(&w, &h, Method::Gptqt, &cfg).unwrap();
+        let packed = q.packed.unwrap();
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0; 16];
+        gemv_lut(&packed, &x, &mut y);
+        let mut y_ref = vec![0.0; 16];
+        gemv_f32(&q.dequant, &x, &mut y_ref);
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Serving hot-path kernels — the CPU realization of the three weight
+//! formats the paper races in Table IV:
+//!
+//! | format                | kernel         | paper row      |
+//! |-----------------------|----------------|----------------|
+//! | dense f32             | [`gemv_f32`]   | `full` (fp16)  |
+//! | packed int + dequant  | [`gemv_dequant`]| `GPTQ`        |
+//! | fused binary coding   | [`gemv_lut`]   | `GPTQT` (LUT-GEMM) |
+//!
+//! All three implement [`Gemv`], so the decode loop and the speed
+//! benchmarks swap formats without touching the model code. In the
+//! bandwidth-bound single-token decode regime the ranking is decided by
+//! bytes streamed per output element: 4 B (f32) vs ~`bits/8` B (packed)
+//! — the same asymmetry that gives the paper its 30B-scale speedups.
+
+pub mod gemv_dequant;
+pub mod gemv_lut;
+
+use crate::quant::linear::IntLayer;
+use crate::quant::pack::PackedBcLayer;
+use crate::tensor::Tensor;
+
+/// A matrix–vector product backend: `y = W·x` for one weight format.
+pub trait Gemv: Send + Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// `y` must have length `rows()`, `x` length `cols()`.
+    fn gemv(&self, x: &[f32], y: &mut [f32]);
+    /// Bytes this layer streams from memory per matvec — the quantity
+    /// that dominates decode latency (Table IV's bandwidth story).
+    fn streamed_bytes(&self) -> usize;
+    /// Human label for benches.
+    fn label(&self) -> &'static str;
+}
+
+/// Dense f32 weights (the `full` baseline).
+pub struct DenseGemv {
+    pub w: Tensor,
+}
+
+impl DenseGemv {
+    pub fn new(w: Tensor) -> Self {
+        DenseGemv { w }
+    }
+}
+
+impl Gemv for DenseGemv {
+    fn rows(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.w.cols()
+    }
+
+    fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        gemv_f32(&self.w, x, y);
+    }
+
+    fn streamed_bytes(&self) -> usize {
+        self.w.len() * 4
+    }
+
+    fn label(&self) -> &'static str {
+        "full"
+    }
+}
+
+/// Dense f32 matvec (unrolled dot per row).
+pub fn gemv_f32(w: &Tensor, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.cols());
+    assert_eq!(y.len(), w.rows());
+    for (r, yr) in y.iter_mut().enumerate() {
+        *yr = crate::tensor::ops::dot(w.row(r), x);
+    }
+}
+
+impl Gemv for IntLayer {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        gemv_dequant::gemv_dequant(self, x, y);
+    }
+
+    fn streamed_bytes(&self) -> usize {
+        self.packed_bytes()
+    }
+
+    fn label(&self) -> &'static str {
+        "gptq-dequant"
+    }
+}
+
+impl Gemv for PackedBcLayer {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        gemv_lut::gemv_lut(self, x, y);
+    }
+
+    fn streamed_bytes(&self) -> usize {
+        self.packed_bytes()
+    }
+
+    fn label(&self) -> &'static str {
+        "gptqt-lut"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_gemv_matches_tensor_gemv() {
+        let mut rng = Rng::new(301);
+        let w = Tensor::randn(37, 53, 1.0, &mut rng);
+        let x: Vec<f32> = (0..53).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0; 37];
+        gemv_f32(&w, &x, &mut y);
+        let y_ref = w.gemv(&x);
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn streamed_bytes_ordering() {
+        // packed 3-bit must stream ~10× less than f32
+        let mut rng = Rng::new(302);
+        let w = Tensor::randn(64, 256, 1.0, &mut rng);
+        let dense = DenseGemv::new(w.clone());
+        let (q, grids) = crate::quant::linear::rtn_quantize(&w, 3);
+        let il = IntLayer::encode(&q, &grids, 3);
+        assert!(il.streamed_bytes() * 2 < dense.streamed_bytes());
+    }
+}

@@ -1,0 +1,47 @@
+//! # gptqt — Quantize Large Language Models Twice
+//!
+//! A full-stack reproduction of **“GPTQT: Quantize Large Language Models
+//! Twice to Push the Efficiency”** (Guo, Lang, Ren — IEEE ICCIS 2024):
+//! a post-training quantization method that (1) linearly quantizes LLM
+//! weights to an intermediate high bit-width inside the GPTQ
+//! error-compensation loop, (2) re-encodes the integer grid into a
+//! lower-bit **binary coding** (`Σ αᵢ bᵢ + c`, `bᵢ ∈ {±1}`) chosen by
+//! output-error grid search with a re-explored scale factor, and (3) fuses
+//! both steps into a single pure binary coding at inference, enabling
+//! LUT-GEMM-style matmuls.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`): the binary-coded
+//!   matmul and the dequant matmul, authored at build time, validated
+//!   against pure-jnp oracles, lowered into the model HLO.
+//! * **L2 — JAX model** (`python/compile/model.py`): decoder-only
+//!   transformer variants (OPT-like, Llama-like, Bloom-like) AOT-lowered
+//!   to HLO *text* artifacts.
+//! * **L3 — this crate**: the runtime system. Quantization library
+//!   ([`quant`]), CPU hot-path kernels ([`kernels`]), PJRT runtime
+//!   ([`runtime`]), serving coordinator ([`coordinator`]), synthetic data
+//!   ([`data`]), model/weight substrate ([`model`]), evaluation and
+//!   experiment drivers ([`eval`]), and a micro-bench harness ([`bench`]).
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + trained weights once; the `gptqt` binary is
+//! self-contained afterwards.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod kernels;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Tensor;

@@ -1,0 +1,7 @@
+//! `gptqt` binary — CLI entrypoint for the quantization pipeline, the
+//! serving coordinator, and the experiment drivers. See `gptqt help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(gptqt::cli::run(&args));
+}

@@ -1,0 +1,266 @@
+//! Model configurations: three decoder-only transformer families
+//! mirroring the paper's evaluation models (OPT, Llama2, Bloom), scaled
+//! to run on this testbed (see DESIGN.md §2 for the substitution).
+
+/// Architectural family — each reproduces the distinguishing features the
+/// paper's results react to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// OPT-like: LayerNorm, learned absolute positions, GELU FFN.
+    Opt,
+    /// Llama-like: RMSNorm, RoPE, SwiGLU gated FFN (the paper notes GPTQ
+    /// and BCQ struggle specifically on this family).
+    Llama,
+    /// Bloom-like: LayerNorm, ALiBi attention bias, GELU FFN.
+    Bloom,
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Opt => "opt",
+            Family::Llama => "llama",
+            Family::Bloom => "bloom",
+        }
+    }
+}
+
+/// A concrete model configuration.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub family: Family,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Approximate parameter count (embeddings + blocks).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        let emb = self.vocab * d
+            + if self.family == Family::Opt { self.max_seq * d } else { 0 };
+        let attn = 4 * d * d;
+        let ffn = match self.family {
+            Family::Llama => 3 * d * ff,
+            _ => 2 * d * ff,
+        };
+        let norms = match self.family {
+            Family::Llama => 2 * d,
+            _ => 4 * d,
+        } * self.layers
+            + 2 * d;
+        emb + self.layers * (attn + ffn) + norms
+    }
+
+    /// Names of the quantizable linear layers in block `i`, with their
+    /// (rows, cols) shapes. Order matters: it is the GPTQ processing
+    /// order within a block.
+    pub fn block_linears(&self, i: usize) -> Vec<(String, usize, usize)> {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        let mut v = vec![
+            (format!("L{i}.attn.q"), d, d),
+            (format!("L{i}.attn.k"), d, d),
+            (format!("L{i}.attn.v"), d, d),
+            (format!("L{i}.attn.o"), d, d),
+        ];
+        match self.family {
+            Family::Llama => {
+                v.push((format!("L{i}.ff.gate"), ff, d));
+                v.push((format!("L{i}.ff.up"), ff, d));
+                v.push((format!("L{i}.ff.down"), d, ff));
+            }
+            _ => {
+                v.push((format!("L{i}.ff.up"), ff, d));
+                v.push((format!("L{i}.ff.down"), d, ff));
+            }
+        }
+        v
+    }
+
+    /// All quantizable linears across the model.
+    pub fn all_linears(&self) -> Vec<(String, usize, usize)> {
+        (0..self.layers).flat_map(|i| self.block_linears(i)).collect()
+    }
+
+    /// Canonical weight argument order for the AOT artifacts. MUST match
+    /// `weight_order()` in `python/compile/model.py`: the HLO executables
+    /// take weights positionally in exactly this order.
+    pub fn weight_order(&self) -> Vec<String> {
+        let mut v = vec!["tok_emb".to_string()];
+        if self.family == Family::Opt {
+            v.push("pos_emb".into());
+        }
+        for i in 0..self.layers {
+            v.push(format!("L{i}.ln1.w"));
+            if self.family != Family::Llama {
+                v.push(format!("L{i}.ln1.b"));
+            }
+            for (name, _, _) in self.block_linears(i).into_iter().take(4) {
+                v.push(name);
+            }
+            v.push(format!("L{i}.ln2.w"));
+            if self.family != Family::Llama {
+                v.push(format!("L{i}.ln2.b"));
+            }
+            for (name, _, _) in self.block_linears(i).into_iter().skip(4) {
+                v.push(name);
+            }
+        }
+        v.push("final_ln.w".into());
+        if self.family != Family::Llama {
+            v.push("final_ln.b".into());
+        }
+        v
+    }
+}
+
+/// Model presets.
+pub mod presets {
+    use super::*;
+
+    /// Shared synthetic vocabulary size (matches the data generators).
+    pub const VOCAB: usize = 2048;
+    /// Maximum sequence length supported by the artifacts.
+    pub const MAX_SEQ: usize = 256;
+
+    macro_rules! preset {
+        ($name:literal, $family:expr, $d:expr, $layers:expr, $heads:expr, $ff:expr) => {
+            ModelConfig {
+                name: $name,
+                family: $family,
+                vocab: VOCAB,
+                d_model: $d,
+                layers: $layers,
+                heads: $heads,
+                d_ff: $ff,
+                max_seq: MAX_SEQ,
+            }
+        };
+    }
+
+    /// The OPT-like ladder — the analogue of the paper's 125M→66B sweep
+    /// (Table I/III/IV). Sizes are chosen so the biggest still quantizes
+    /// and evaluates in seconds on CPU while spanning ~100× in params.
+    pub fn opt_ladder() -> Vec<ModelConfig> {
+        vec![
+            preset!("opt-nano", Family::Opt, 64, 2, 2, 256),
+            preset!("opt-micro", Family::Opt, 96, 3, 3, 384),
+            preset!("opt-mini", Family::Opt, 128, 4, 4, 512),
+            preset!("opt-sm", Family::Opt, 192, 6, 6, 768),
+            preset!("opt-md", Family::Opt, 256, 8, 8, 1024),
+            preset!("opt-lg", Family::Opt, 384, 10, 8, 1536),
+            preset!("opt-xl", Family::Opt, 512, 12, 8, 2048),
+        ]
+    }
+
+    /// Llama-like pair (Table II left).
+    pub fn llama_ladder() -> Vec<ModelConfig> {
+        vec![
+            preset!("llama-sm", Family::Llama, 192, 6, 6, 512),
+            preset!("llama-md", Family::Llama, 256, 8, 8, 688),
+        ]
+    }
+
+    /// Bloom-like ladder (Table II right).
+    pub fn bloom_ladder() -> Vec<ModelConfig> {
+        vec![
+            preset!("bloom-nano", Family::Bloom, 64, 2, 2, 256),
+            preset!("bloom-mini", Family::Bloom, 128, 4, 4, 512),
+            preset!("bloom-sm", Family::Bloom, 192, 6, 6, 768),
+            preset!("bloom-md", Family::Bloom, 256, 8, 8, 1024),
+        ]
+    }
+
+    /// Every preset.
+    pub fn all() -> Vec<ModelConfig> {
+        let mut v = opt_ladder();
+        v.extend(llama_ladder());
+        v.extend(bloom_ladder());
+        v
+    }
+
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        all().into_iter().find(|c| c.name == name)
+    }
+}
+
+/// Human-format a parameter count (`1.2M`, `340K`, …).
+pub fn fmt_params(n: usize) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.1}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.0}K", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_monotone_in_params() {
+        let ladder = presets::opt_ladder();
+        for pair in ladder.windows(2) {
+            assert!(
+                pair[0].param_count() < pair[1].param_count(),
+                "{} !< {}",
+                pair[0].name,
+                pair[1].name
+            );
+        }
+        // ~100× span
+        let first = ladder.first().unwrap().param_count();
+        let last = ladder.last().unwrap().param_count();
+        assert!(last > first * 50, "span too small: {first}..{last}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for c in presets::all() {
+            assert_eq!(presets::by_name(c.name).unwrap().name, c.name);
+        }
+        assert!(presets::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn head_dims_divide() {
+        for c in presets::all() {
+            assert_eq!(c.d_model % c.heads, 0, "{}", c.name);
+            assert!(c.head_dim() % 2 == 0, "{} head_dim must be even for RoPE", c.name);
+        }
+    }
+
+    #[test]
+    fn llama_has_gate() {
+        let c = presets::by_name("llama-sm").unwrap();
+        let names: Vec<String> = c.block_linears(0).into_iter().map(|(n, _, _)| n).collect();
+        assert!(names.iter().any(|n| n.contains("gate")));
+        let o = presets::by_name("opt-mini").unwrap();
+        let names: Vec<String> = o.block_linears(0).into_iter().map(|(n, _, _)| n).collect();
+        assert!(!names.iter().any(|n| n.contains("gate")));
+    }
+
+    #[test]
+    fn fmt_params_units() {
+        assert_eq!(fmt_params(950), "950");
+        assert_eq!(fmt_params(1_500), "2K");
+        assert_eq!(fmt_params(2_300_000), "2.3M");
+        assert_eq!(fmt_params(1_200_000_000), "1.2B");
+    }
+}

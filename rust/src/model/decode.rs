@@ -1,0 +1,393 @@
+//! Single-token decode path with KV cache — the serving hot loop.
+//!
+//! Every linear layer is a [`Gemv`] backend, so the same loop executes
+//! the dense f32 model (`full`), the GPTQ int+dequant model, or the GPTQT
+//! fused binary-coded model — Table IV's three contenders — with
+//! identical math and different memory traffic.
+
+use super::config::{Family, ModelConfig};
+use super::forward::{alibi_slopes, gelu, silu, softmax, LN_EPS};
+use super::weights::WeightStore;
+use super::Model;
+use crate::kernels::{DenseGemv, Gemv};
+use crate::quant::QuantizedLayer;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Per-sequence attention cache: one (max_seq × d_model) K and V buffer
+/// per layer, head-major like the forward pass.
+pub struct KvCache {
+    pub k: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub len: usize,
+    max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            k: (0..cfg.layers).map(|_| Tensor::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            v: (0..cfg.layers).map(|_| Tensor::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            len: 0,
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes held by this cache (capacity, not fill level).
+    pub fn bytes(&self) -> usize {
+        self.k.iter().chain(&self.v).map(|t| t.len() * 4).sum()
+    }
+}
+
+/// A model whose linears are pluggable compute backends.
+pub struct BackendModel {
+    pub cfg: ModelConfig,
+    /// Norm + embedding parameters (never quantized).
+    pub weights: WeightStore,
+    linears: HashMap<String, Box<dyn Gemv>>,
+}
+
+impl BackendModel {
+    /// Dense f32 backends straight from a [`Model`] (the `full` row).
+    pub fn dense(model: &Model) -> BackendModel {
+        let mut linears: HashMap<String, Box<dyn Gemv>> = HashMap::new();
+        for (name, _, _) in model.cfg.all_linears() {
+            linears.insert(
+                name.clone(),
+                Box::new(DenseGemv::new(model.weights.expect(&name).clone())),
+            );
+        }
+        BackendModel { cfg: model.cfg.clone(), weights: model.weights.clone(), linears }
+    }
+
+    /// Backends from quantized layers: packed binary coding if present
+    /// (GPTQT/BCQ → LUT-GEMM), else int weights (GPTQ → dequant), else
+    /// the dense dequantized tensor.
+    pub fn quantized(model: &Model, mut layers: HashMap<String, QuantizedLayer>) -> BackendModel {
+        let mut linears: HashMap<String, Box<dyn Gemv>> = HashMap::new();
+        for (name, _, _) in model.cfg.all_linears() {
+            let backend: Box<dyn Gemv> = match layers.remove(&name) {
+                Some(q) => {
+                    if let Some(packed) = q.packed {
+                        Box::new(packed)
+                    } else if let Some(int) = q.int_weights {
+                        Box::new(int)
+                    } else {
+                        Box::new(DenseGemv::new(q.dequant))
+                    }
+                }
+                None => Box::new(DenseGemv::new(model.weights.expect(&name).clone())),
+            };
+            linears.insert(name, backend);
+        }
+        BackendModel { cfg: model.cfg.clone(), weights: model.weights.clone(), linears }
+    }
+
+    fn gemv(&self, name: &str, x: &[f32]) -> Vec<f32> {
+        let b = self
+            .linears
+            .get(name)
+            .unwrap_or_else(|| panic!("no backend for {name}"));
+        let mut y = vec![0.0f32; b.rows()];
+        b.gemv(x, &mut y);
+        y
+    }
+
+    /// Total weight bytes streamed per decoded token — the bandwidth
+    /// model behind Table IV (embeddings excluded: shared by all rows).
+    pub fn streamed_bytes_per_token(&self) -> usize {
+        self.linears.values().map(|b| b.streamed_bytes()).sum()
+    }
+
+    /// Label of the dominant backend (for reports).
+    pub fn backend_label(&self) -> &'static str {
+        self.linears
+            .values()
+            .next()
+            .map(|b| b.label())
+            .unwrap_or("empty")
+    }
+
+    fn norm(&self, prefix: &str, x: &[f32]) -> Vec<f32> {
+        let d = x.len();
+        let w = self.weights.expect(&format!("{prefix}.w"));
+        match self.cfg.family {
+            Family::Llama => {
+                let ms = x.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+                let inv = 1.0 / (ms + LN_EPS).sqrt();
+                x.iter().zip(w.data()).map(|(&v, &wi)| v * inv * wi).collect()
+            }
+            _ => {
+                let b = self.weights.expect(&format!("{prefix}.b"));
+                let mean = x.iter().sum::<f32>() / d as f32;
+                let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+                let inv = 1.0 / (var + LN_EPS).sqrt();
+                x.iter()
+                    .zip(w.data().iter().zip(b.data()))
+                    .map(|(&v, (&wi, &bi))| (v - mean) * inv * wi + bi)
+                    .collect()
+            }
+        }
+    }
+
+    /// Embed a single token at absolute position `pos`.
+    pub fn embed_one(&self, token: u32, pos: usize) -> Vec<f32> {
+        let tok = self.weights.expect("tok_emb");
+        let mut x = tok.row(token as usize % self.cfg.vocab).to_vec();
+        if self.cfg.family == Family::Opt {
+            let pemb = self.weights.expect("pos_emb");
+            for (v, &p) in x.iter_mut().zip(pemb.row(pos % self.cfg.max_seq)) {
+                *v += p;
+            }
+        }
+        x
+    }
+
+    /// Run one decode step: consume `token` at position `cache.len`,
+    /// append K/V, return the next-token logits.
+    pub fn decode_step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let pos = cache.len;
+        assert!(pos < cfg.max_seq, "KV cache full");
+        let heads = cfg.heads;
+        let dh = cfg.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let slopes = if cfg.family == Family::Bloom {
+            alibi_slopes(heads)
+        } else {
+            vec![0.0; heads]
+        };
+
+        let mut x = self.embed_one(token, pos);
+        for i in 0..cfg.layers {
+            let h = self.norm(&format!("L{i}.ln1"), &x);
+            let mut q = self.gemv(&format!("L{i}.attn.q"), &h);
+            let mut k = self.gemv(&format!("L{i}.attn.k"), &h);
+            let v = self.gemv(&format!("L{i}.attn.v"), &h);
+            if cfg.family == Family::Llama {
+                rope_vec(&mut q, heads, pos);
+                rope_vec(&mut k, heads, pos);
+            }
+            cache.k[i].row_mut(pos).copy_from_slice(&k);
+            cache.v[i].row_mut(pos).copy_from_slice(&v);
+
+            let mut ctx = vec![0.0f32; cfg.d_model];
+            let mut scores = vec![0.0f32; pos + 1];
+            for head in 0..heads {
+                let base = head * dh;
+                let qh = &q[base..base + dh];
+                for (j, s) in scores.iter_mut().enumerate() {
+                    let krow = &cache.k[i].row(j)[base..base + dh];
+                    let mut dot = 0.0f32;
+                    for (a, b) in qh.iter().zip(krow) {
+                        dot += a * b;
+                    }
+                    *s = dot * scale + slopes[head] * (j as f32 - pos as f32);
+                }
+                softmax(&mut scores);
+                let out = &mut ctx[base..base + dh];
+                for (j, &p) in scores.iter().enumerate() {
+                    let vrow = &cache.v[i].row(j)[base..base + dh];
+                    for (o, &vv) in out.iter_mut().zip(vrow) {
+                        *o += p * vv;
+                    }
+                }
+            }
+            let attn = self.gemv(&format!("L{i}.attn.o"), &ctx);
+            for (xv, &a) in x.iter_mut().zip(&attn) {
+                *xv += a;
+            }
+
+            let h2 = self.norm(&format!("L{i}.ln2"), &x);
+            let ff = match cfg.family {
+                Family::Llama => {
+                    let gate = self.gemv(&format!("L{i}.ff.gate"), &h2);
+                    let up = self.gemv(&format!("L{i}.ff.up"), &h2);
+                    let act: Vec<f32> =
+                        gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
+                    self.gemv(&format!("L{i}.ff.down"), &act)
+                }
+                _ => {
+                    let up = self.gemv(&format!("L{i}.ff.up"), &h2);
+                    let act: Vec<f32> = up.iter().map(|&u| gelu(u)).collect();
+                    self.gemv(&format!("L{i}.ff.down"), &act)
+                }
+            };
+            for (xv, &f) in x.iter_mut().zip(&ff) {
+                *xv += f;
+            }
+        }
+        cache.len = pos + 1;
+
+        let xf = self.norm("final_ln", &x);
+        // tied-embedding logits (fp32 — the paper keeps the head in fp16)
+        let tok = self.weights.expect("tok_emb");
+        let mut logits = vec![0.0f32; cfg.vocab];
+        crate::kernels::gemv_f32(tok, &xf, &mut logits);
+        logits
+    }
+
+    /// Prefill a prompt (sequential decode steps), returning the logits
+    /// after the last prompt token.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        let mut logits = Vec::new();
+        for &t in tokens {
+            logits = self.decode_step(t, cache);
+        }
+        logits
+    }
+}
+
+/// RoPE on a single d_model vector at absolute position `pos`.
+pub fn rope_vec(x: &mut [f32], heads: usize, pos: usize) {
+    let d = x.len();
+    let dh = d / heads;
+    let half = dh / 2;
+    let posf = pos as f32;
+    for h in 0..heads {
+        let base = h * dh;
+        for i in 0..half {
+            let theta = posf * 10000f32.powf(-2.0 * i as f32 / dh as f32);
+            let (sin, cos) = theta.sin_cos();
+            let a = x[base + 2 * i];
+            let b = x[base + 2 * i + 1];
+            x[base + 2 * i] = a * cos - b * sin;
+            x[base + 2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::random_weights;
+    use crate::model::presets;
+
+    fn tiny(family: Family) -> Model {
+        let mut cfg = presets::by_name("opt-nano").unwrap();
+        cfg.family = family;
+        cfg.vocab = 64;
+        cfg.max_seq = 32;
+        Model::new(cfg.clone(), random_weights(&cfg, 21))
+    }
+
+    #[test]
+    fn decode_matches_full_forward_all_families() {
+        for fam in [Family::Opt, Family::Llama, Family::Bloom] {
+            let m = tiny(fam);
+            let bm = BackendModel::dense(&m);
+            let tokens: Vec<u32> = vec![3, 9, 27, 44, 5, 13, 60, 2];
+            // full-sequence reference
+            let full = m.forward(&tokens);
+            // incremental decode
+            let mut cache = KvCache::new(&m.cfg);
+            let mut last = Vec::new();
+            for &t in &tokens {
+                last = bm.decode_step(t, &mut cache);
+            }
+            let t_last = tokens.len() - 1;
+            for c in 0..m.cfg.vocab {
+                assert!(
+                    (full.get(t_last, c) - last[c]).abs() < 1e-3,
+                    "{fam:?} logit {c}: {} vs {}",
+                    full.get(t_last, c),
+                    last[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_equals_stepwise() {
+        let m = tiny(Family::Opt);
+        let bm = BackendModel::dense(&m);
+        let tokens: Vec<u32> = vec![1, 2, 3, 4, 5];
+        let mut c1 = KvCache::new(&m.cfg);
+        let l1 = bm.prefill(&tokens, &mut c1);
+        let mut c2 = KvCache::new(&m.cfg);
+        let mut l2 = Vec::new();
+        for &t in &tokens {
+            l2 = bm.decode_step(t, &mut c2);
+        }
+        assert_eq!(c1.len, c2.len);
+        for (a, b) in l1.iter().zip(&l2) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn quantized_backend_runs_and_stays_close() {
+        use crate::quant::{quantize_layer, Method, QuantConfig};
+        let m = tiny(Family::Opt);
+        // quantize every linear against a synthetic Hessian
+        let mut rng = crate::util::Rng::new(77);
+        let mut layers = HashMap::new();
+        for (name, _rows, cols) in m.cfg.all_linears() {
+            let acts = Tensor::randn(4 * cols, cols, 1.0, &mut rng);
+            let h = crate::quant::gptq::accumulate_hessian(&acts);
+            let cfg = QuantConfig { explore_grid: 2, ..QuantConfig::with_bits(4) };
+            let q = quantize_layer(m.weights.expect(&name), &h, Method::Gptqt, &cfg).unwrap();
+            layers.insert(name, q);
+        }
+        let bm_q = BackendModel::quantized(&m, layers);
+        let bm_f = BackendModel::dense(&m);
+        assert!(bm_q.streamed_bytes_per_token() * 4 < bm_f.streamed_bytes_per_token());
+
+        let mut cq = KvCache::new(&m.cfg);
+        let mut cf = KvCache::new(&m.cfg);
+        let tokens = [7u32, 13, 2, 41];
+        let (mut lq, mut lf) = (Vec::new(), Vec::new());
+        for &t in &tokens {
+            lq = bm_q.decode_step(t, &mut cq);
+            lf = bm_f.decode_step(t, &mut cf);
+        }
+        assert!(lq.iter().all(|v| v.is_finite()));
+        // 4-bit quantization on a tiny model: logits close but not equal
+        let max_diff = lq
+            .iter()
+            .zip(&lf)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff > 0.0, "quantization must change something");
+        assert!(max_diff < 1.0, "logits diverged: {max_diff}");
+    }
+
+    #[test]
+    fn cache_overflow_panics() {
+        let m = tiny(Family::Opt);
+        let bm = BackendModel::dense(&m);
+        let mut cache = KvCache::new(&m.cfg);
+        for i in 0..m.cfg.max_seq {
+            bm.decode_step((i % 64) as u32, &mut cache);
+        }
+        assert_eq!(cache.remaining(), 0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            bm.decode_step(0, &mut cache);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn rope_vec_matches_matrix_rope() {
+        let mut rng = crate::util::Rng::new(501);
+        let mut mat = Tensor::randn(4, 16, 1.0, &mut rng);
+        let orig = mat.clone();
+        super::super::forward::rope(&mut mat, 2, 5);
+        for t in 0..4 {
+            let mut v = orig.row(t).to_vec();
+            rope_vec(&mut v, 2, 5 + t);
+            for (a, b) in v.iter().zip(mat.row(t)) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! Reference f32 forward pass for all three model families.
+//!
+//! This path exists for three jobs:
+//! 1. **Calibration** — `block_forward` exposes per-linear input hooks so
+//!    the quantization driver can accumulate GPTQ Hessians block by block
+//!    (activations flow through the *already quantized* earlier blocks,
+//!    exactly like the GPTQ reference implementation).
+//! 2. **Perplexity evaluation** — the Tables I/II/III ladders run through
+//!    `nll_window`.
+//! 3. **Numerics oracle** — integration tests check the AOT-compiled XLA
+//!    executables (Layer 2) against this implementation.
+//!
+//! Every op matches the JAX model in `python/compile/model.py` exactly
+//! (same GELU tanh approximation, same RoPE pairing, same ALiBi slopes,
+//! same ε) so HLO-vs-rust diffs stay at f32 round-off level.
+
+use super::config::{Family, ModelConfig};
+use super::weights::WeightStore;
+use crate::tensor::Tensor;
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// tanh-approximated GELU (jax.nn.gelu's default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// SiLU (swish) — Llama's gate activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Row-wise LayerNorm with weight+bias.
+pub fn layernorm(x: &Tensor, w: &[f32], b: &[f32]) -> Tensor {
+    let d = x.cols();
+    assert_eq!(w.len(), d);
+    assert_eq!(b.len(), d);
+    let mut out = x.clone();
+    for r in 0..x.rows() {
+        let row = out.row_mut(r);
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * w[i] + b[i];
+        }
+    }
+    out
+}
+
+/// Row-wise RMSNorm with weight.
+pub fn rmsnorm(x: &Tensor, w: &[f32]) -> Tensor {
+    let d = x.cols();
+    assert_eq!(w.len(), d);
+    let mut out = x.clone();
+    for r in 0..x.rows() {
+        let row = out.row_mut(r);
+        let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + LN_EPS).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = *v * inv * w[i];
+        }
+    }
+    out
+}
+
+/// In-place numerically stable softmax over a slice.
+pub fn softmax(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Apply rotary position embedding in place to a (T × d_model) tensor
+/// laid out head-major, starting at absolute position `start_pos`.
+/// Pairing convention: `(x[2i], x[2i+1])` within each head.
+pub fn rope(x: &mut Tensor, heads: usize, start_pos: usize) {
+    let d = x.cols();
+    let dh = d / heads;
+    let half = dh / 2;
+    for t in 0..x.rows() {
+        let pos = (start_pos + t) as f32;
+        let row = x.row_mut(t);
+        for h in 0..heads {
+            let base = h * dh;
+            for i in 0..half {
+                let theta = pos * 10000f32.powf(-2.0 * i as f32 / dh as f32);
+                let (sin, cos) = theta.sin_cos();
+                let a = row[base + 2 * i];
+                let b = row[base + 2 * i + 1];
+                row[base + 2 * i] = a * cos - b * sin;
+                row[base + 2 * i + 1] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+/// ALiBi head slopes `m_h = 2^(−8(h+1)/H)` (Bloom).
+pub fn alibi_slopes(heads: usize) -> Vec<f32> {
+    (0..heads)
+        .map(|h| 2f32.powf(-8.0 * (h as f32 + 1.0) / heads as f32))
+        .collect()
+}
+
+/// Hook invoked with the input matrix of each quantizable linear layer.
+pub type LinearHook<'a> = &'a mut dyn FnMut(&str, &Tensor);
+
+/// A model = config + weights, with the reference forward pass.
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub weights: WeightStore,
+}
+
+impl Model {
+    pub fn new(cfg: ModelConfig, weights: WeightStore) -> Model {
+        Model { cfg, weights }
+    }
+
+    fn linear(&self, name: &str, x: &Tensor, hook: &mut Option<LinearHook>) -> Tensor {
+        if let Some(h) = hook.as_mut() {
+            h(name, x);
+        }
+        x.matmul_nt(self.weights.expect(name))
+    }
+
+    /// Token + position embedding for a window starting at `start_pos`.
+    pub fn embed(&self, tokens: &[u32], start_pos: usize) -> Tensor {
+        let d = self.cfg.d_model;
+        let tok = self.weights.expect("tok_emb");
+        let mut x = Tensor::zeros(tokens.len(), d);
+        for (t, &id) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(tok.row(id as usize % self.cfg.vocab));
+        }
+        if self.cfg.family == Family::Opt {
+            let pos = self.weights.expect("pos_emb");
+            for t in 0..tokens.len() {
+                let p = (start_pos + t) % self.cfg.max_seq;
+                for (v, &pv) in x.row_mut(t).iter_mut().zip(pos.row(p)) {
+                    *v += pv;
+                }
+            }
+        }
+        x
+    }
+
+    fn norm1(&self, i: usize, x: &Tensor) -> Tensor {
+        match self.cfg.family {
+            Family::Llama => rmsnorm(x, self.weights.expect(&format!("L{i}.ln1.w")).data()),
+            _ => layernorm(
+                x,
+                self.weights.expect(&format!("L{i}.ln1.w")).data(),
+                self.weights.expect(&format!("L{i}.ln1.b")).data(),
+            ),
+        }
+    }
+
+    fn norm2(&self, i: usize, x: &Tensor) -> Tensor {
+        match self.cfg.family {
+            Family::Llama => rmsnorm(x, self.weights.expect(&format!("L{i}.ln2.w")).data()),
+            _ => layernorm(
+                x,
+                self.weights.expect(&format!("L{i}.ln2.w")).data(),
+                self.weights.expect(&format!("L{i}.ln2.b")).data(),
+            ),
+        }
+    }
+
+    /// Multi-head causal self-attention over a full window (training-style
+    /// square attention, batch 1).
+    fn attention(&self, i: usize, h: &Tensor, start_pos: usize, hook: &mut Option<LinearHook>) -> Tensor {
+        let cfg = &self.cfg;
+        let (tlen, d) = h.shape();
+        let heads = cfg.heads;
+        let dh = cfg.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let mut hk = |name: String, x: &Tensor| {
+            if let Some(cb) = hook.as_mut() {
+                cb(&name, x);
+            }
+        };
+        hk(format!("L{i}.attn.q"), h);
+        hk(format!("L{i}.attn.k"), h);
+        hk(format!("L{i}.attn.v"), h);
+        let mut q = h.matmul_nt(self.weights.expect(&format!("L{i}.attn.q")));
+        let mut k = h.matmul_nt(self.weights.expect(&format!("L{i}.attn.k")));
+        let v = h.matmul_nt(self.weights.expect(&format!("L{i}.attn.v")));
+
+        if cfg.family == Family::Llama {
+            rope(&mut q, heads, start_pos);
+            rope(&mut k, heads, start_pos);
+        }
+        let slopes = if cfg.family == Family::Bloom {
+            alibi_slopes(heads)
+        } else {
+            vec![0.0; heads]
+        };
+
+        let mut ctx = Tensor::zeros(tlen, d);
+        let mut scores = vec![0.0f32; tlen];
+        for head in 0..heads {
+            let base = head * dh;
+            let slope = slopes[head];
+            for t in 0..tlen {
+                let qrow = &q.row(t)[base..base + dh];
+                for (j, s) in scores[..=t].iter_mut().enumerate() {
+                    let krow = &k.row(j)[base..base + dh];
+                    let mut dot = 0.0f32;
+                    for (a, b) in qrow.iter().zip(krow) {
+                        dot += a * b;
+                    }
+                    // ALiBi bias: slope·(j − i) ≤ 0 for the past
+                    *s = dot * scale + slope * (j as f32 - t as f32);
+                }
+                softmax(&mut scores[..=t]);
+                let out = &mut ctx.row_mut(t)[base..base + dh];
+                for (j, &p) in scores[..=t].iter().enumerate() {
+                    let vrow = &v.row(j)[base..base + dh];
+                    for (o, &vv) in out.iter_mut().zip(vrow) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+        hk(format!("L{i}.attn.o"), &ctx);
+        ctx.matmul_nt(self.weights.expect(&format!("L{i}.attn.o")))
+    }
+
+    /// One transformer block: `x + attn(norm1(x))`, then `+ ffn(norm2(·))`.
+    pub fn block_forward(
+        &self,
+        i: usize,
+        x: &Tensor,
+        start_pos: usize,
+        mut hook: Option<LinearHook>,
+    ) -> Tensor {
+        let h = self.norm1(i, x);
+        let attn = self.attention(i, &h, start_pos, &mut hook);
+        let x1 = x.add(&attn);
+
+        let h2 = self.norm2(i, &x1);
+        let ff = match self.cfg.family {
+            Family::Llama => {
+                let gate = self.linear(&format!("L{i}.ff.gate"), &h2, &mut hook);
+                let up = self.linear(&format!("L{i}.ff.up"), &h2, &mut hook);
+                let mut act = gate;
+                for (g, &u) in act.data_mut().iter_mut().zip(up.data()) {
+                    *g = silu(*g) * u;
+                }
+                self.linear(&format!("L{i}.ff.down"), &act, &mut hook)
+            }
+            _ => {
+                let up = self.linear(&format!("L{i}.ff.up"), &h2, &mut hook);
+                let act = up.map(gelu);
+                self.linear(&format!("L{i}.ff.down"), &act, &mut hook)
+            }
+        };
+        x1.add(&ff)
+    }
+
+    /// Final norm + tied-embedding logits.
+    pub fn logits(&self, x: &Tensor) -> Tensor {
+        let xf = match self.cfg.family {
+            Family::Llama => rmsnorm(x, self.weights.expect("final_ln.w").data()),
+            _ => layernorm(
+                x,
+                self.weights.expect("final_ln.w").data(),
+                self.weights.expect("final_ln.b").data(),
+            ),
+        };
+        xf.matmul_nt(self.weights.expect("tok_emb"))
+    }
+
+    /// Full forward over a token window → (T × vocab) logits.
+    pub fn forward(&self, tokens: &[u32]) -> Tensor {
+        self.forward_hooked(tokens, None)
+    }
+
+    /// Forward with per-linear input hooks (calibration).
+    pub fn forward_hooked(&self, tokens: &[u32], mut hook: Option<LinearHook>) -> Tensor {
+        let mut x = self.embed(tokens, 0);
+        for i in 0..self.cfg.layers {
+            // reborrow the hook for each block
+            let reborrowed: Option<LinearHook> = match hook {
+                Some(ref mut h) => Some(&mut **h),
+                None => None,
+            };
+            x = self.block_forward(i, &x, 0, reborrowed);
+        }
+        self.logits(&x)
+    }
+
+    /// Sum of next-token negative log-likelihoods over a window plus the
+    /// number of predictions (for perplexity: `exp(Σnll / Σcount)`).
+    pub fn nll_window(&self, tokens: &[u32]) -> (f64, usize) {
+        if tokens.len() < 2 {
+            return (0.0, 0);
+        }
+        let logits = self.forward(tokens);
+        nll_from_logits(&logits, tokens)
+    }
+}
+
+/// Compute `(Σ nll, count)` of teacher-forced next-token predictions from
+/// a (T × vocab) logits matrix.
+pub fn nll_from_logits(logits: &Tensor, tokens: &[u32]) -> (f64, usize) {
+    let vocab = logits.cols();
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for t in 0..tokens.len() - 1 {
+        let target = tokens[t + 1] as usize;
+        debug_assert!(target < vocab);
+        let row = logits.row(t);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let sum_exp: f64 = row.iter().map(|&v| ((v as f64) - max).exp()).sum();
+        let log_p = (row[target] as f64 - max) - sum_exp.ln();
+        total -= log_p;
+        count += 1;
+    }
+    (total, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::random_weights;
+    use crate::model::presets;
+    use crate::util::Rng;
+
+    fn tiny(family: Family) -> Model {
+        let mut cfg = presets::by_name("opt-nano").unwrap();
+        cfg.family = family;
+        cfg.vocab = 64;
+        cfg.max_seq = 32;
+        let w = random_weights(&cfg, 11);
+        Model::new(cfg, w)
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        assert!(gelu(10.0) > 9.99);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0, 2.0, 3.0, -100.0];
+        softmax(&mut v);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let x = Tensor::from_slice(1, 4, &[1.0, 2.0, 3.0, 4.0]);
+        let out = layernorm(&x, &[1.0; 4], &[0.0; 4]);
+        let mean: f32 = out.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = out.row(0).iter().map(|&v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_identity() {
+        let mut rng = Rng::new(500);
+        let mut x = Tensor::randn(3, 16, 1.0, &mut rng);
+        let orig = x.clone();
+        rope(&mut x, 2, 0);
+        // position 0 rotates by angle 0 → identity
+        for (a, b) in x.row(0).iter().zip(orig.row(0)) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // rotations preserve pairwise norms
+        for t in 0..3 {
+            let n1: f32 = x.row(t).iter().map(|v| v * v).sum();
+            let n0: f32 = orig.row(t).iter().map(|v| v * v).sum();
+            assert!((n1 - n0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn alibi_slopes_decay() {
+        let s = alibi_slopes(4);
+        assert_eq!(s.len(), 4);
+        for w in s.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert!((s[3] - 2f32.powf(-8.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn forward_shapes_all_families() {
+        for fam in [Family::Opt, Family::Llama, Family::Bloom] {
+            let m = tiny(fam);
+            let tokens: Vec<u32> = (0..10).map(|i| i % 64).collect();
+            let logits = m.forward(&tokens);
+            assert_eq!(logits.shape(), (10, 64), "{fam:?}");
+            assert!(logits.data().iter().all(|v| v.is_finite()), "{fam:?}");
+        }
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_affect_past() {
+        for fam in [Family::Opt, Family::Llama, Family::Bloom] {
+            let m = tiny(fam);
+            let a: Vec<u32> = vec![5, 6, 7, 8, 9, 10];
+            let mut b = a.clone();
+            b[5] = 63; // change the last token only
+            let la = m.forward(&a);
+            let lb = m.forward(&b);
+            for t in 0..5 {
+                for c in 0..64 {
+                    assert!(
+                        (la.get(t, c) - lb.get(t, c)).abs() < 1e-5,
+                        "{fam:?} leaked future info at t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hooks_fire_for_every_linear() {
+        let m = tiny(Family::Llama);
+        let mut seen = std::collections::HashSet::new();
+        let tokens: Vec<u32> = (0..8).collect();
+        let mut hook = |name: &str, x: &Tensor| {
+            assert_eq!(x.rows(), 8);
+            seen.insert(name.to_string());
+        };
+        m.forward_hooked(&tokens, Some(&mut hook));
+        for (name, _, _) in m.cfg.all_linears() {
+            assert!(seen.contains(&name), "hook missed {name}");
+        }
+    }
+
+    #[test]
+    fn nll_is_positive_and_finite() {
+        let m = tiny(Family::Opt);
+        let tokens: Vec<u32> = (0..16).map(|i| (i * 7) % 64).collect();
+        let (nll, count) = m.nll_window(&tokens);
+        assert_eq!(count, 15);
+        assert!(nll > 0.0 && nll.is_finite());
+        // random-init model ≈ uniform: nll/count ≈ ln(64)
+        let per_tok = nll / count as f64;
+        assert!(per_tok < 64f64.ln() * 3.0, "per-token nll absurd: {per_tok}");
+    }
+
+    #[test]
+    fn block_forward_composes_to_forward() {
+        let m = tiny(Family::Opt);
+        let tokens: Vec<u32> = (0..12).collect();
+        let mut x = m.embed(&tokens, 0);
+        for i in 0..m.cfg.layers {
+            x = m.block_forward(i, &x, 0, None);
+        }
+        let manual = m.logits(&x);
+        let auto = m.forward(&tokens);
+        assert!(manual.max_abs_diff(&auto) < 1e-6);
+    }
+}

@@ -1,0 +1,102 @@
+//! Weight initialization — the fallback when no trained GQTW artifact is
+//! present (unit tests, quick experiments). Scaled-normal init in the
+//! GPT-2 style: `σ = 0.02`, residual projections scaled by `1/√(2L)`.
+
+use super::config::{Family, ModelConfig};
+use super::weights::WeightStore;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Build a randomly initialized weight store for a config.
+pub fn random_weights(cfg: &ModelConfig, seed: u64) -> WeightStore {
+    let mut rng = Rng::new(seed ^ 0x11A7_57A7);
+    let d = cfg.d_model;
+    let sigma = 0.02f32;
+    let resid_sigma = sigma / ((2 * cfg.layers) as f32).sqrt();
+    let mut w = WeightStore::new();
+
+    w.insert("tok_emb", Tensor::randn(cfg.vocab, d, sigma, &mut rng));
+    if cfg.family == Family::Opt {
+        w.insert("pos_emb", Tensor::randn(cfg.max_seq, d, sigma, &mut rng));
+    }
+    for i in 0..cfg.layers {
+        w.insert(format!("L{i}.ln1.w"), ones(1, d));
+        if cfg.family != Family::Llama {
+            w.insert(format!("L{i}.ln1.b"), Tensor::zeros(1, d));
+        }
+        w.insert(format!("L{i}.ln2.w"), ones(1, d));
+        if cfg.family != Family::Llama {
+            w.insert(format!("L{i}.ln2.b"), Tensor::zeros(1, d));
+        }
+        for (name, rows, cols) in cfg.block_linears(i) {
+            // residual-writing projections (attn.o, ff.down) get the
+            // depth-scaled init
+            let s = if name.ends_with(".o") || name.ends_with(".down") {
+                resid_sigma
+            } else {
+                sigma
+            };
+            w.insert(name, Tensor::randn(rows, cols, s, &mut rng));
+        }
+    }
+    w.insert("final_ln.w", ones(1, d));
+    if cfg.family != Family::Llama {
+        w.insert("final_ln.b", Tensor::zeros(1, d));
+    }
+    w
+}
+
+fn ones(rows: usize, cols: usize) -> Tensor {
+    Tensor::from_vec(rows, cols, vec![1.0; rows * cols])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets;
+
+    #[test]
+    fn covers_all_linears_and_norms() {
+        for name in ["opt-nano", "llama-sm", "bloom-nano"] {
+            let cfg = presets::by_name(name).unwrap();
+            let w = random_weights(&cfg, 1);
+            for (lname, rows, cols) in cfg.all_linears() {
+                let t = w.get(&lname).unwrap_or_else(|| panic!("{name}: missing {lname}"));
+                assert_eq!(t.shape(), (rows, cols), "{name}:{lname}");
+            }
+            assert!(w.contains("tok_emb"));
+            assert_eq!(w.contains("pos_emb"), cfg.family == Family::Opt);
+        }
+    }
+
+    #[test]
+    fn weight_order_covers_exactly_the_store() {
+        for name in ["opt-nano", "llama-sm", "bloom-nano"] {
+            let cfg = presets::by_name(name).unwrap();
+            let w = random_weights(&cfg, 2);
+            let order = cfg.weight_order();
+            assert_eq!(order.len(), w.len(), "{name}: order/store size mismatch");
+            for o in &order {
+                assert!(w.contains(o), "{name}: order names missing tensor {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = presets::by_name("opt-nano").unwrap();
+        let a = random_weights(&cfg, 7);
+        let b = random_weights(&cfg, 7);
+        assert_eq!(a.get("L0.attn.q"), b.get("L0.attn.q"));
+    }
+
+    #[test]
+    fn param_count_close_to_config_estimate() {
+        let cfg = presets::by_name("opt-mini").unwrap();
+        let w = random_weights(&cfg, 3);
+        let actual = w.param_count();
+        let estimate = cfg.param_count();
+        let ratio = actual as f64 / estimate as f64;
+        assert!((0.9..1.1).contains(&ratio), "{actual} vs {estimate}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Model substrate: transformer configs (OPT/Llama/Bloom-like families),
+//! the GQTW weight container, random init, the reference f32 forward pass
+//! and the backend-pluggable decode path.
+//!
+//! The paper's HuggingFace checkpoints are unavailable offline; models
+//! here are trained in-repo by `python/compile/train.py` on the synthetic
+//! corpora and saved as `artifacts/<name>.gqtw` (DESIGN.md §2).
+
+pub mod config;
+pub mod decode;
+pub mod forward;
+pub mod init;
+pub mod quantize;
+pub mod weights;
+
+pub use config::{fmt_params, presets, Family, ModelConfig};
+pub use decode::{BackendModel, KvCache};
+pub use forward::Model;
+pub use weights::WeightStore;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Load a preset model's trained weights from `artifacts/`, falling back
+/// to deterministic random init when the artifact is absent (tests,
+/// smoke runs). Returns the model and whether trained weights were found.
+pub fn load_or_init(name: &str, artifacts_dir: impl AsRef<Path>, seed: u64) -> Result<(Model, bool)> {
+    let cfg = presets::by_name(name).with_context(|| format!("unknown model preset `{name}`"))?;
+    let path = artifacts_dir.as_ref().join(format!("{name}.gqtw"));
+    if path.exists() {
+        let weights = WeightStore::load(&path)?;
+        // sanity: every expected tensor present
+        for (lname, rows, cols) in cfg.all_linears() {
+            let t = weights
+                .get(&lname)
+                .with_context(|| format!("{}: missing {lname}", path.display()))?;
+            anyhow::ensure!(
+                t.shape() == (rows, cols),
+                "{lname}: artifact shape {:?} != config {:?}",
+                t.shape(),
+                (rows, cols)
+            );
+        }
+        Ok((Model::new(cfg, weights), true))
+    } else {
+        let weights = init::random_weights(&cfg, seed);
+        Ok((Model::new(cfg, weights), false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_or_init_falls_back() {
+        let (m, trained) = load_or_init("opt-nano", "/nonexistent-dir", 1).unwrap();
+        assert!(!trained);
+        assert_eq!(m.cfg.name, "opt-nano");
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(load_or_init("opt-1t", "/tmp", 1).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_artifact() {
+        let dir = std::env::temp_dir().join("gptqt_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = presets::by_name("opt-nano").unwrap();
+        let w = init::random_weights(&cfg, 5);
+        w.save(dir.join("opt-nano.gqtw")).unwrap();
+        let (m, trained) = load_or_init("opt-nano", &dir, 0).unwrap();
+        assert!(trained);
+        assert_eq!(m.weights.get("tok_emb"), w.get("tok_emb"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,242 @@
+//! Block-sequential model quantization driver.
+//!
+//! Mirrors the GPTQ reference flow: blocks are quantized in order, and
+//! each block's calibration activations flow through the *already
+//! quantized* earlier blocks (two passes per block — one to accumulate
+//! Hessians, one to propagate activations with the new weights).
+//!
+//! Linears sharing an input (q/k/v; gate/up) share one Hessian
+//! accumulation — a 2–3× calibration saving with identical results.
+
+use super::forward::Model;
+use super::ModelConfig;
+use crate::data::TokenSlice;
+use crate::quant::{quantize_layer, LayerStats, Method, QuantConfig, QuantizedLayer};
+use crate::tensor::linalg::MatF64;
+use crate::tensor::Tensor;
+use crate::util::{pool, Stopwatch};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+
+/// Map a linear layer name to its Hessian-sharing key.
+fn hessian_key(name: &str) -> String {
+    if let Some(stripped) = name.strip_suffix(".attn.k").or_else(|| name.strip_suffix(".attn.v")) {
+        return format!("{stripped}.attn.q");
+    }
+    if let Some(stripped) = name.strip_suffix(".ff.up") {
+        // llama: gate/up share input; opt/bloom: up is its own key
+        return format!("{stripped}.ff.up"); // canonical — gate aliases here
+    }
+    if let Some(stripped) = name.strip_suffix(".ff.gate") {
+        return format!("{stripped}.ff.up");
+    }
+    name.to_string()
+}
+
+/// Streamed Hessian accumulation `H += 2·XᵀX`, rows parallel.
+fn accumulate_into(h: &mut MatF64, acts: &Tensor) {
+    let d = acts.cols();
+    assert_eq!(h.n, d);
+    let h_ptr = HPtr(h.data.as_mut_ptr());
+    pool::global().scope_chunks(d, |range| {
+        let h_ptr = &h_ptr;
+        for i in range {
+            // Safety: disjoint H rows per chunk.
+            let hrow = unsafe { std::slice::from_raw_parts_mut(h_ptr.0.add(i * d), d) };
+            for t in 0..acts.rows() {
+                let x = acts.row(t);
+                let xi = 2.0 * x[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                for (j, &xj) in x.iter().enumerate() {
+                    hrow[j] += xi * xj as f64;
+                }
+            }
+        }
+    });
+}
+
+struct HPtr(*mut f64);
+unsafe impl Sync for HPtr {}
+unsafe impl Send for HPtr {}
+
+/// Result of quantizing a whole model.
+pub struct QuantizedModel {
+    /// Model with every linear replaced by its dequantized weights.
+    pub model: Model,
+    /// Per-linear packed/int forms for the hot-path backends.
+    pub layers: HashMap<String, QuantizedLayer>,
+    /// Per-linear diagnostics in processing order.
+    pub stats: Vec<(String, LayerStats)>,
+    /// Wall-clock seconds for the full pipeline.
+    pub seconds: f64,
+}
+
+/// Quantize `model` with `method` against calibration token slices.
+pub fn quantize_model(
+    model: &Model,
+    calib: &[TokenSlice],
+    method: Method,
+    qcfg: &QuantConfig,
+    verbose: bool,
+) -> Result<QuantizedModel> {
+    let sw = Stopwatch::start();
+    let cfg: ModelConfig = model.cfg.clone();
+    let mut work = Model::new(cfg.clone(), model.weights.clone());
+
+    // per-slice activations entering the current block
+    let mut xs: Vec<Tensor> = calib.iter().map(|s| work.embed(&s.tokens, 0)).collect();
+
+    let mut all_layers = HashMap::new();
+    let mut all_stats = Vec::new();
+
+    for block in 0..cfg.layers {
+        // -- pass 1: Hessians for this block's linears ------------------
+        let mut hessians: HashMap<String, MatF64> = HashMap::new();
+        for x in &xs {
+            let mut seen: HashSet<String> = HashSet::new();
+            let mut hook = |name: &str, acts: &Tensor| {
+                let key = hessian_key(name);
+                if !seen.insert(key.clone()) {
+                    return; // q/k/v (or gate/up) already accumulated
+                }
+                let h = hessians
+                    .entry(key)
+                    .or_insert_with(|| MatF64::zeros(acts.cols()));
+                accumulate_into(h, acts);
+            };
+            // outputs discarded: weights are still unquantized here
+            let _ = work.block_forward(block, x, 0, Some(&mut hook));
+        }
+
+        // -- quantize each linear in the block --------------------------
+        for (name, _rows, _cols) in cfg.block_linears(block) {
+            let key = hessian_key(&name);
+            let hessian = hessians
+                .get(&key)
+                .unwrap_or_else(|| panic!("no hessian for {name} (key {key})"));
+            let w = work.weights.expect(&name).clone();
+            let q = quantize_layer(&w, hessian, method, qcfg)?;
+            if verbose {
+                eprintln!(
+                    "  [{}] {name}: mse={:.3e} out_err={:.3e} ({:.2}s)",
+                    method.name(),
+                    q.stats.weight_mse,
+                    q.stats.output_err,
+                    q.stats.seconds
+                );
+            }
+            work.weights.insert(name.clone(), q.dequant.clone());
+            all_stats.push((name.clone(), q.stats.clone()));
+            all_layers.insert(name, q);
+        }
+
+        // -- pass 2: propagate activations through quantized block ------
+        for x in xs.iter_mut() {
+            *x = work.block_forward(block, x, 0, None);
+        }
+    }
+
+    Ok(QuantizedModel {
+        model: work,
+        layers: all_layers,
+        stats: all_stats,
+        seconds: sw.elapsed_secs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{calibration_slices, CorpusGenerator, Dataset};
+    use crate::model::init::random_weights;
+    use crate::model::presets;
+
+    fn tiny_setup() -> (Model, Vec<TokenSlice>) {
+        let mut cfg = presets::by_name("opt-nano").unwrap();
+        cfg.vocab = 128;
+        cfg.max_seq = 32;
+        let model = Model::new(cfg.clone(), random_weights(&cfg, 33));
+        let gen = CorpusGenerator::new(Dataset::WikiSyn, 128, 3);
+        let stream = gen.generate(2000, 0);
+        let calib = calibration_slices(&stream, 4, 24, 5);
+        (model, calib)
+    }
+
+    #[test]
+    fn hessian_key_sharing() {
+        assert_eq!(hessian_key("L3.attn.k"), "L3.attn.q");
+        assert_eq!(hessian_key("L3.attn.v"), "L3.attn.q");
+        assert_eq!(hessian_key("L3.attn.q"), "L3.attn.q");
+        assert_eq!(hessian_key("L0.ff.gate"), "L0.ff.up");
+        assert_eq!(hessian_key("L0.ff.up"), "L0.ff.up");
+        assert_eq!(hessian_key("L0.ff.down"), "L0.ff.down");
+        assert_eq!(hessian_key("L1.attn.o"), "L1.attn.o");
+    }
+
+    #[test]
+    fn accumulate_into_matches_fresh() {
+        let mut rng = crate::util::Rng::new(600);
+        let acts = Tensor::randn(20, 12, 1.0, &mut rng);
+        let fresh = crate::quant::gptq::accumulate_hessian(&acts);
+        let mut inc = MatF64::zeros(12);
+        accumulate_into(&mut inc, &acts);
+        assert!(fresh.max_abs_diff(&inc) < 1e-9);
+    }
+
+    #[test]
+    fn quantize_model_end_to_end_gptqt() {
+        let (model, calib) = tiny_setup();
+        let qcfg = QuantConfig { explore_grid: 2, ..QuantConfig::with_bits(3) };
+        let qm = quantize_model(&model, &calib, Method::Gptqt, &qcfg, false).unwrap();
+        // every linear replaced, packed form present
+        for (name, _, _) in model.cfg.all_linears() {
+            assert!(qm.layers.contains_key(&name), "missing {name}");
+            assert!(qm.layers[&name].packed.is_some(), "{name} not packed");
+            assert_ne!(
+                qm.model.weights.expect(&name),
+                model.weights.expect(&name),
+                "{name} unchanged"
+            );
+        }
+        // quantized model still produces finite logits
+        let tokens: Vec<u32> = (0..16).map(|i| i % 128).collect();
+        let logits = qm.model.forward(&tokens);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantized_ppl_ordering_gptqt_vs_rtn_2bit() {
+        // the paper's core claim, miniaturized: at very low bits GPTQT
+        // degrades perplexity less than RTN on the same model+data
+        let (model, calib) = tiny_setup();
+        let gen = CorpusGenerator::new(Dataset::WikiSyn, 128, 3);
+        let eval_stream = gen.generate(600, 99);
+        let windows = crate::data::eval_windows(&eval_stream, 24, 4);
+
+        let ppl = |m: &Model| {
+            let (mut nll, mut n) = (0.0, 0usize);
+            for w in &windows {
+                let (s, c) = m.nll_window(&w.tokens);
+                nll += s;
+                n += c;
+            }
+            (nll / n as f64).exp()
+        };
+
+        let qcfg = QuantConfig { explore_grid: 4, ..QuantConfig::with_bits(2) };
+        let qm_t = quantize_model(&model, &calib, Method::Gptqt, &qcfg, false).unwrap();
+        let qm_r = quantize_model(&model, &calib, Method::Rtn, &qcfg, false).unwrap();
+        let (p_full, p_t, p_r) = (ppl(&model), ppl(&qm_t.model), ppl(&qm_r.model));
+        assert!(p_t.is_finite() && p_r.is_finite());
+        // quantization shouldn't *meaningfully* improve the model it was
+        // calibrated on (tiny eval windows leave room for noise-level
+        // improvement, hence the 5 % tolerance)
+        assert!(p_full <= p_t * 1.05, "full {p_full} ≫ quantized {p_t}?");
+        assert!(
+            p_t < p_r,
+            "GPTQT ppl {p_t} should beat RTN ppl {p_r} (full {p_full})"
+        );
+    }
+}

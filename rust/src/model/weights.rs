@@ -1,0 +1,215 @@
+//! GQTW — the repo's weight container format (no serde/safetensors
+//! offline, so we carry our own tiny, versioned binary format, written by
+//! `python/compile/gqtw.py` at train time and read here at run time).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   [8]  b"GQTW0001"
+//! count   u32
+//! repeat count times:
+//!   name_len u32, name [name_len] utf-8
+//!   rows u32, cols u32
+//!   data rows*cols f32
+//! ```
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"GQTW0001";
+
+/// A named collection of tensors.
+#[derive(Clone, Default)]
+pub struct WeightStore {
+    tensors: HashMap<String, Tensor>,
+    /// insertion order, for deterministic serialization
+    order: Vec<String>,
+}
+
+impl WeightStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        if !self.tensors.contains_key(&name) {
+            self.order.push(name.clone());
+        }
+        self.tensors.insert(name, t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    /// Get or panic with a helpful message — model code paths use this
+    /// because a missing tensor is a build error, not a runtime condition.
+    pub fn expect(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("weight `{name}` missing from store (have {})", self.len()))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.order.iter().map(|s| s.as_str())
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+
+    /// Serialize to GQTW bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.order.len() as u32).to_le_bytes());
+        for name in &self.order {
+            let t = &self.tensors[name];
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(t.rows() as u32).to_le_bytes());
+            out.extend_from_slice(&(t.cols() as u32).to_le_bytes());
+            for &v in t.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse GQTW bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<WeightStore> {
+        let mut cur = bytes;
+        let mut read_exact = |n: usize| -> Result<&[u8]> {
+            if cur.len() < n {
+                bail!("truncated GQTW file");
+            }
+            let (head, tail) = cur.split_at(n);
+            cur = tail;
+            Ok(head)
+        };
+        let magic = read_exact(8)?;
+        if magic != MAGIC {
+            bail!("bad GQTW magic: {magic:?}");
+        }
+        let count = u32::from_le_bytes(read_exact(4)?.try_into().unwrap()) as usize;
+        let mut store = WeightStore::new();
+        for _ in 0..count {
+            let name_len = u32::from_le_bytes(read_exact(4)?.try_into().unwrap()) as usize;
+            if name_len > 4096 {
+                bail!("implausible name length {name_len}");
+            }
+            let name = std::str::from_utf8(read_exact(name_len)?)
+                .context("weight name not utf-8")?
+                .to_string();
+            let rows = u32::from_le_bytes(read_exact(4)?.try_into().unwrap()) as usize;
+            let cols = u32::from_le_bytes(read_exact(4)?.try_into().unwrap()) as usize;
+            let n = rows
+                .checked_mul(cols)
+                .context("tensor size overflow")?;
+            let raw = read_exact(n * 4)?;
+            let mut data = Vec::with_capacity(n);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            store.insert(name, Tensor::from_vec(rows, cols, data));
+        }
+        Ok(store)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightStore> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let mut rng = Rng::new(401);
+        let mut s = WeightStore::new();
+        s.insert("a", Tensor::randn(3, 5, 1.0, &mut rng));
+        s.insert("b.c/d", Tensor::randn(7, 2, 0.5, &mut rng));
+        s.insert("empty", Tensor::zeros(0, 4));
+        let bytes = s.to_bytes();
+        let back = WeightStore::from_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.get("a").unwrap(), s.get("a").unwrap());
+        assert_eq!(back.get("b.c/d").unwrap(), s.get("b.c/d").unwrap());
+        assert_eq!(back.get("empty").unwrap().shape(), (0, 4));
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let mut rng = Rng::new(402);
+        let mut s = WeightStore::new();
+        s.insert("w", Tensor::randn(16, 16, 1.0, &mut rng));
+        let path = std::env::temp_dir().join("gqtw_test.bin");
+        s.save(&path).unwrap();
+        let back = WeightStore::load(&path).unwrap();
+        assert_eq!(back.get("w").unwrap(), s.get("w").unwrap());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(WeightStore::from_bytes(b"not a weight file").is_err());
+        assert!(WeightStore::from_bytes(b"GQTW0001").is_err()); // truncated count
+        let mut bad = MAGIC.to_vec();
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd name len
+        assert!(WeightStore::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn insertion_order_is_preserved() {
+        let mut s = WeightStore::new();
+        s.insert("z", Tensor::zeros(1, 1));
+        s.insert("a", Tensor::zeros(1, 1));
+        s.insert("m", Tensor::zeros(1, 1));
+        let names: Vec<&str> = s.names().collect();
+        assert_eq!(names, vec!["z", "a", "m"]);
+        let back = WeightStore::from_bytes(&s.to_bytes()).unwrap();
+        let names2: Vec<&str> = back.names().collect();
+        assert_eq!(names2, vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn overwrite_keeps_single_entry() {
+        let mut s = WeightStore::new();
+        s.insert("w", Tensor::zeros(1, 1));
+        s.insert("w", Tensor::zeros(2, 2));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get("w").unwrap().shape(), (2, 2));
+    }
+}

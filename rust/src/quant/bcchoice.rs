@@ -1,0 +1,262 @@
+//! BCchoice enumeration — every m-bit binary-coding codebook embeddable
+//! in the n-bit linear-quantization integer grid (paper §II-B Eq. 6 and
+//! the tree construction of Fig. 3).
+//!
+//! The n-bit integer grid `{0, …, 2ⁿ−1}` *is* a binary coding
+//! (paper Eq. 9): `v = c₀ + Σᵢ ±hᵢ` with `c₀ = (2ⁿ−1)/2` and bit weights
+//! `hᵢ = 2^{i-1}` (`0.5, 1, 2, …`). An m-bit sub-coding is obtained by
+//! assigning each of the n original bits to one of:
+//!
+//! * one of the m new groups — the group's α̂ is the *sum* of its bit
+//!   weights (Fig. 3: merging tree levels, e.g. `α̂₂ = 2⁰ + 2¹`),
+//! * "fixed +" or "fixed −" — the bit is frozen, shifting the center
+//!   (Fig. 3: selecting a subtree).
+//!
+//! Every resulting level `ĉ ± α̂₁ ± … ± α̂ₘ` lands on the original grid by
+//! construction, which is exactly the paper's `BCchoice` (e.g. n=3, m=2,
+//! fixing nothing ⇒ impossible; fixing bit 1 ⇒ `{0,1,6,7}`-style sets).
+//! Enumerating all assignments with non-empty groups and deduplicating by
+//! level set yields the complete search space — small enough for the
+//! paper's "sequential trial of each possibility" when m ≤ 4.
+
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One candidate binary-coding codebook in integer-grid units.
+#[derive(Debug, Clone)]
+pub struct BcCodebook {
+    /// Intermediate (step-1) bit count n.
+    pub n_bits: u32,
+    /// Final bit count m (< n).
+    pub m_bits: u32,
+    /// Group weights α̂ⱼ in grid units (e.g. `[0.5, 3.0]`), one per bit.
+    pub group_alphas: Vec<f32>,
+    /// Center ĉ in grid units (e.g. `3.5`).
+    pub center: f32,
+    /// The 2^m levels, ascending. Each is an integer grid value (stored
+    /// as f32; exact — magnitudes ≤ 2ⁿ).
+    pub levels: Vec<f32>,
+    /// `patterns[k]` = sign pattern (bit j set ⇒ +α̂ⱼ) producing
+    /// `levels[k]`.
+    pub patterns: Vec<u32>,
+}
+
+impl BcCodebook {
+    /// Level value for a sign pattern.
+    pub fn decode(&self, pattern: u32) -> f32 {
+        let mut v = self.center;
+        for (j, &a) in self.group_alphas.iter().enumerate() {
+            v += if pattern >> j & 1 == 1 { a } else { -a };
+        }
+        v
+    }
+
+    /// Nearest-level index for an integer-grid coordinate.
+    pub fn snap_index(&self, x: f32) -> usize {
+        let ls = &self.levels;
+        let mut lo = 0usize;
+        let mut hi = ls.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if ls[mid] < x {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo == 0 {
+            0
+        } else if lo == ls.len() {
+            ls.len() - 1
+        } else if (x - ls[lo - 1]) <= (ls[lo] - x) {
+            lo - 1
+        } else {
+            lo
+        }
+    }
+}
+
+/// Enumerate all distinct m-bit binary-coding codebooks within an n-bit
+/// grid. Cached per `(n, m)` — the set is shared by every row of every
+/// layer.
+pub fn enumerate(n_bits: u32, m_bits: u32) -> Arc<Vec<BcCodebook>> {
+    static CACHE: Lazy<Mutex<HashMap<(u32, u32), Arc<Vec<BcCodebook>>>>> =
+        Lazy::new(|| Mutex::new(HashMap::new()));
+    if let Some(hit) = CACHE.lock().unwrap().get(&(n_bits, m_bits)) {
+        return Arc::clone(hit);
+    }
+    let result = Arc::new(enumerate_uncached(n_bits, m_bits));
+    CACHE
+        .lock()
+        .unwrap()
+        .insert((n_bits, m_bits), Arc::clone(&result));
+    result
+}
+
+fn enumerate_uncached(n_bits: u32, m_bits: u32) -> Vec<BcCodebook> {
+    assert!(m_bits >= 1 && m_bits < n_bits, "need 1 ≤ m < n (got m={m_bits}, n={n_bits})");
+    assert!(n_bits <= 8, "n > 8 bits explodes the search; paper uses ≤ 6");
+    let n = n_bits as usize;
+    let m = m_bits as usize;
+    let targets = m + 2; // m groups, fix+, fix−
+    let total = (targets as u64).pow(n as u32);
+
+    // Doubled-integer arithmetic keeps everything exact: doubled bit
+    // weight of original bit i is 2^i; doubled base center is 2ⁿ−1.
+    let mut seen: HashMap<Vec<i32>, ()> = HashMap::new();
+    let mut out = Vec::new();
+
+    for code in 0..total {
+        // decode base-(m+2) assignment
+        let mut assign = [0usize; 8];
+        let mut c = code;
+        for a in assign.iter_mut().take(n) {
+            *a = (c % targets as u64) as usize;
+            c /= targets as u64;
+        }
+        // group weights (doubled) and center shift (doubled)
+        let mut ga = vec![0i64; m];
+        let mut center2: i64 = (1i64 << n) - 1;
+        let mut groups_ok = true;
+        for (i, &a) in assign.iter().take(n).enumerate() {
+            let w2 = 1i64 << i;
+            if a < m {
+                ga[a] += w2;
+            } else if a == m {
+                center2 += w2;
+            } else {
+                center2 -= w2;
+            }
+        }
+        for &g in &ga {
+            if g == 0 {
+                groups_ok = false;
+                break;
+            }
+        }
+        if !groups_ok {
+            continue;
+        }
+
+        // levels (doubled) for all 2^m sign patterns
+        let mut lv: Vec<(i64, u32)> = (0..(1u32 << m))
+            .map(|pat| {
+                let mut v = center2;
+                for (j, &g) in ga.iter().enumerate() {
+                    v += if pat >> j & 1 == 1 { g } else { -g };
+                }
+                (v, pat)
+            })
+            .collect();
+        lv.sort_unstable();
+        let key: Vec<i32> = lv.iter().map(|&(v, _)| v as i32).collect();
+        if seen.contains_key(&key) {
+            continue;
+        }
+        seen.insert(key, ());
+
+        // doubled levels are even and inside the doubled grid [0, 2(2ⁿ−1)]
+        debug_assert!(lv
+            .iter()
+            .all(|&(v, _)| v % 2 == 0 && v >= 0 && v <= 2 * ((1i64 << n) - 1)));
+        out.push(BcCodebook {
+            n_bits,
+            m_bits,
+            group_alphas: ga.iter().map(|&g| g as f32 / 2.0).collect(),
+            center: center2 as f32 / 2.0,
+            levels: lv.iter().map(|&(v, _)| v as f32 / 2.0).collect(),
+            patterns: lv.iter().map(|&(_, p)| p).collect(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_is_enumerated() {
+        // n=3, m=2: the paper's example BCchoice {0, 1, 6, 7}
+        // (α̂₁ = 0.5, α̂₂ = 3, center 3.5 — Eq. 10).
+        let cbs = enumerate(3, 2);
+        let found = cbs.iter().any(|cb| cb.levels == vec![0.0, 1.0, 6.0, 7.0]);
+        assert!(found, "missing the paper's {{0,1,6,7}} codebook");
+    }
+
+    #[test]
+    fn all_levels_on_grid_and_sorted() {
+        for (n, m) in [(3u32, 2u32), (4, 2), (4, 3), (5, 2), (5, 3), (6, 3)] {
+            let cbs = enumerate(n, m);
+            assert!(!cbs.is_empty(), "(n={n}, m={m}) empty");
+            let max = (1u32 << n) as f32 - 1.0;
+            for cb in cbs.iter() {
+                assert_eq!(cb.levels.len(), 1 << m);
+                for win in cb.levels.windows(2) {
+                    assert!(win[0] < win[1], "levels not strictly ascending");
+                }
+                for &l in &cb.levels {
+                    assert!(l >= 0.0 && l <= max, "level {l} outside grid (n={n})");
+                    assert_eq!(l.fract(), 0.0, "level {l} not an integer");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn patterns_decode_to_levels() {
+        let cbs = enumerate(5, 3);
+        for cb in cbs.iter().take(50) {
+            for (k, &pat) in cb.patterns.iter().enumerate() {
+                assert!(
+                    (cb.decode(pat) - cb.levels[k]).abs() < 1e-6,
+                    "pattern {pat} decodes wrong"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_grid_is_a_codebook_when_m_covers() {
+        // n=3, m=2 cannot cover all 8 values; but the coarsest uniform
+        // sub-grids (e.g. {0,2,4,6} via α̂ = {1, 2} center 3) must exist.
+        let cbs = enumerate(3, 2);
+        assert!(cbs.iter().any(|cb| cb.levels == vec![0.0, 2.0, 4.0, 6.0]));
+        // and the "linear-quantization-like" uniform 4-level spread
+        assert!(cbs.iter().any(|cb| cb.levels == vec![0.0, 2.0, 5.0, 7.0])
+            || cbs.iter().any(|cb| cb.levels == vec![1.0, 3.0, 4.0, 6.0]));
+    }
+
+    #[test]
+    fn snap_index_nearest() {
+        let cbs = enumerate(3, 2);
+        let cb = cbs
+            .iter()
+            .find(|cb| cb.levels == vec![0.0, 1.0, 6.0, 7.0])
+            .unwrap();
+        assert_eq!(cb.snap_index(2.0), 1); // paper Eq. 6: 2 → 1
+        assert_eq!(cb.snap_index(3.0), 1); // 3 → 1
+        assert_eq!(cb.snap_index(5.0), 2); // 5 → 6
+        assert_eq!(cb.snap_index(6.4), 2);
+        assert_eq!(cb.snap_index(-3.0), 0);
+        assert_eq!(cb.snap_index(9.0), 3);
+    }
+
+    #[test]
+    fn counts_are_reasonable() {
+        // sanity: enumeration should be in the hundreds–thousands, not
+        // millions (the paper's "limited options ⇒ sequential trial").
+        let c52 = enumerate(5, 2).len();
+        let c53 = enumerate(5, 3).len();
+        assert!(c52 > 20 && c52 < 20_000, "5→2: {c52}");
+        assert!(c53 > 50 && c53 < 50_000, "5→3: {c53}");
+    }
+
+    #[test]
+    fn cache_returns_same_arc() {
+        let a = enumerate(4, 2);
+        let b = enumerate(4, 2);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,242 @@
+//! BCQ — binary-coding quantization (paper §II-A, Eq. 3–4; Kwon et al.
+//! 2021, reproduced here as a baseline).
+//!
+//! A row of weights is approximated as `w ≈ Σᵢ αᵢ bᵢ` with `bᵢ ∈ {±1}ᵈ`
+//! and per-row floats `αᵢ`. Fitting is the classic two-phase recipe:
+//!
+//! 1. **Greedy** (Eq. 3): `bᵢ = sign(rᵢ₋₁)`, `αᵢ = rᵢ₋₁ᵀbᵢ / d`, residual
+//!    peeling.
+//! 2. **Alternating least squares** (Eq. 4): given the sign matrix `B`,
+//!    solve `α = (BᵀB)⁻¹Bᵀw`; given `α`, re-assign each weight to the
+//!    nearest representable level; iterate.
+//!
+//! BCQ minimizes *weight* MSE — exactly the objective the paper shows
+//! overfits under GPTQ's compensation loop (Table V's GPTQ+BCQ row).
+
+use super::SortedLevels;
+use crate::tensor::linalg::{spd_inverse, MatF64};
+
+/// A fitted per-row binary coding `w ≈ Σ αᵢ bᵢ` (no offset term — BCQ is
+/// symmetric around zero, one of its weaknesses on shifted weight rows).
+#[derive(Debug, Clone)]
+pub struct BcqRow {
+    /// One α per bit, `α₁` fitted first (largest magnitude residual).
+    pub alphas: Vec<f32>,
+}
+
+impl BcqRow {
+    /// All `2^m` representable levels `Σ ±αᵢ`, ascending.
+    pub fn level_set(&self) -> SortedLevels {
+        SortedLevels::new(enumerate_levels(&self.alphas, 0.0))
+    }
+
+    /// Sign pattern (bit per α, 1 ⇒ +1) of the level nearest to `w`.
+    pub fn encode(&self, w: f32) -> u32 {
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        for pattern in 0..(1u32 << self.alphas.len()) {
+            let v = self.decode(pattern);
+            let d = (v - w).abs();
+            if d < best_d {
+                best_d = d;
+                best = pattern;
+            }
+        }
+        best
+    }
+
+    /// Level value of a sign pattern.
+    #[inline]
+    pub fn decode(&self, pattern: u32) -> f32 {
+        let mut v = 0.0f32;
+        for (i, &a) in self.alphas.iter().enumerate() {
+            v += if pattern >> i & 1 == 1 { a } else { -a };
+        }
+        v
+    }
+}
+
+/// All `Σ ±αᵢ + c` values.
+pub fn enumerate_levels(alphas: &[f32], c: f32) -> Vec<f32> {
+    let m = alphas.len();
+    (0..(1u32 << m))
+        .map(|pattern| {
+            let mut v = c;
+            for (i, &a) in alphas.iter().enumerate() {
+                v += if pattern >> i & 1 == 1 { a } else { -a };
+            }
+            v
+        })
+        .collect()
+}
+
+/// Greedy residual fit (Eq. 3).
+pub fn greedy_fit(row: &[f32], bits: u32) -> BcqRow {
+    let d = row.len().max(1);
+    let mut residual: Vec<f32> = row.to_vec();
+    let mut alphas = Vec::with_capacity(bits as usize);
+    for _ in 0..bits {
+        // b = sign(r); alpha = rᵀb/d = mean(|r|)
+        let alpha = residual.iter().map(|r| r.abs()).sum::<f32>() / d as f32;
+        for r in residual.iter_mut() {
+            *r -= alpha * r.signum();
+        }
+        alphas.push(alpha);
+    }
+    BcqRow { alphas }
+}
+
+/// Greedy + alternating LSQ refinement (Eq. 4). `iters` alternations;
+/// stops early when the assignment stabilizes.
+pub fn bcq_fit(row: &[f32], bits: u32, iters: usize) -> BcqRow {
+    let mut fit = greedy_fit(row, bits);
+    if row.is_empty() {
+        return fit;
+    }
+    let m = bits as usize;
+    let mut assignment: Vec<u32> = row.iter().map(|&w| fit.encode(w)).collect();
+    let mut best = fit.clone();
+    let mut best_mse = fit_mse(row, &fit);
+    for _ in 0..iters {
+        // --- α step: solve (BᵀB) α = Bᵀ w  (m×m, SPD after damping) ---
+        let mut btb = MatF64::zeros(m);
+        let mut btw = vec![0.0f64; m];
+        for (&w, &pat) in row.iter().zip(&assignment) {
+            let signs: Vec<f64> = (0..m)
+                .map(|i| if pat >> i & 1 == 1 { 1.0 } else { -1.0 })
+                .collect();
+            for i in 0..m {
+                btw[i] += signs[i] * w as f64;
+                for j in 0..m {
+                    btb.data[i * m + j] += signs[i] * signs[j];
+                }
+            }
+        }
+        for i in 0..m {
+            btb.data[i * m + i] += 1e-9 * row.len() as f64; // damp ties
+        }
+        let Ok(inv) = spd_inverse(&btb) else { break };
+        let mut new_alphas = vec![0.0f32; m];
+        for i in 0..m {
+            let mut s = 0.0;
+            for j in 0..m {
+                s += inv.data[i * m + j] * btw[j];
+            }
+            new_alphas[i] = s.abs() as f32; // sign folds into b
+        }
+        fit.alphas = new_alphas;
+        let mse = fit_mse(row, &fit);
+        if mse < best_mse {
+            best_mse = mse;
+            best = fit.clone();
+        }
+        // --- b step: re-assign to nearest level ---
+        let new_assignment: Vec<u32> = row.iter().map(|&w| fit.encode(w)).collect();
+        if new_assignment == assignment {
+            break;
+        }
+        assignment = new_assignment;
+    }
+    best
+}
+
+/// Weight-MSE of a fit against its row (the objective BCQ minimizes).
+pub fn fit_mse(row: &[f32], fit: &BcqRow) -> f64 {
+    let cb = fit.level_set();
+    row.iter()
+        .map(|&w| {
+            let d = (w - crate::quant::RowCodebook::snap(&cb, w)) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / row.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::RowCodebook;
+    use crate::util::Rng;
+
+    #[test]
+    fn greedy_one_bit_is_mean_abs() {
+        let row = [1.0f32, -2.0, 3.0, -4.0];
+        let fit = greedy_fit(&row, 1);
+        assert!((fit.alphas[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_encode_consistent() {
+        let fit = BcqRow { alphas: vec![0.5, 2.0] };
+        for pat in 0..4u32 {
+            let v = fit.decode(pat);
+            assert_eq!(fit.encode(v), pat, "pattern {pat} value {v}");
+        }
+    }
+
+    #[test]
+    fn level_set_size() {
+        let fit = BcqRow { alphas: vec![1.0, 2.0, 4.0] };
+        assert_eq!(fit.level_set().as_slice().len(), 8);
+    }
+
+    #[test]
+    fn alternating_improves_or_matches_greedy() {
+        let mut rng = Rng::new(41);
+        for _ in 0..20 {
+            let row: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+            let g = greedy_fit(&row, 3);
+            let a = bcq_fit(&row, 3, 10);
+            assert!(
+                fit_mse(&row, &a) <= fit_mse(&row, &g) + 1e-6,
+                "alt {} > greedy {}",
+                fit_mse(&row, &a),
+                fit_mse(&row, &g)
+            );
+        }
+    }
+
+    #[test]
+    fn exact_two_level_row_is_recovered() {
+        // row drawn exactly from {±1.5}: 1-bit BCQ should be lossless
+        let row = [1.5f32, -1.5, 1.5, 1.5, -1.5, -1.5, 1.5, -1.5];
+        let fit = bcq_fit(&row, 1, 10);
+        assert!(fit_mse(&row, &fit) < 1e-10);
+    }
+
+    #[test]
+    fn exact_four_level_row_is_recovered() {
+        // levels {±a2 ±a1} with a1=0.5, a2=2.0
+        let levels = [-2.5f32, -1.5, 1.5, 2.5];
+        let mut rng = Rng::new(42);
+        let row: Vec<f32> = (0..256).map(|_| levels[rng.range(0, 4)]).collect();
+        let fit = bcq_fit(&row, 2, 20);
+        assert!(fit_mse(&row, &fit) < 1e-6, "mse={}", fit_mse(&row, &fit));
+    }
+
+    #[test]
+    fn snap_produces_representable_values() {
+        let mut rng = Rng::new(43);
+        let row: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let fit = bcq_fit(&row, 3, 5);
+        let cb = fit.level_set();
+        let levels = cb.levels();
+        for &w in &row {
+            let s = cb.snap(w);
+            assert!(levels.iter().any(|&l| (l - s).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn shifted_rows_hurt_bcq() {
+        // BCQ is symmetric around 0: a strongly shifted row must quantize
+        // worse than the same row centered. (This asymmetry weakness is
+        // part of why BCQ collapses in the paper's tables.)
+        let mut rng = Rng::new(44);
+        let centered: Vec<f32> = (0..256).map(|_| rng.normal_f32() * 0.1).collect();
+        let shifted: Vec<f32> = centered.iter().map(|&w| w + 10.0).collect();
+        let fc = bcq_fit(&centered, 2, 10);
+        let fs = bcq_fit(&shifted, 2, 10);
+        assert!(fit_mse(&shifted, &fs) > fit_mse(&centered, &fc));
+    }
+}

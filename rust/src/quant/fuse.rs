@@ -1,0 +1,161 @@
+//! Fusion of the two quantization steps into a single pure binary coding
+//! (paper §II-D, Eq. 8–11).
+//!
+//! Linear quantization is a special binary coding (Eq. 8–9): the n-bit
+//! integer grid is `Σᵢ 2^{i-1}bᵢ + (2ⁿ−1)/2`. GPTQT's step 2 picks an
+//! m-bit sub-coding of that grid (α̂ in integer units, center ĉ), so the
+//! composition *with the dequantization* `w = Ŝ·v + Z` collapses into
+//!
+//! ```text
+//! W_q = Σ_j (Ŝ·α̂_j) b̂_j + (Ŝ·ĉ + Z)            (Eq. 11)
+//! ```
+//!
+//! — no intermediate integer state survives at inference, which is what
+//! lets the LUT-GEMM kernels run directly on sign bits.
+
+use super::bcchoice::BcCodebook;
+use super::gptqt::GptqtRow;
+
+/// A fused per-row binary coding: `w(pattern) = Σ_j alphas[j]·(±1) + bias`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedRow {
+    /// Real-valued α̂ per bit (ascending bit index = codebook group order).
+    pub alphas: Vec<f32>,
+    /// Real-valued offset (absorbs `Ŝ·ĉ + Z`).
+    pub bias: f32,
+}
+
+impl FusedRow {
+    /// Fuse a GPTQT row result (Eq. 11).
+    pub fn from_gptqt(row: &GptqtRow) -> FusedRow {
+        FusedRow {
+            alphas: row.codebook.group_alphas.iter().map(|&a| a * row.scale).collect(),
+            bias: row.zero + row.scale * row.codebook.center,
+        }
+    }
+
+    /// Fuse an arbitrary (scale, zero, codebook) triple.
+    pub fn from_parts(scale: f32, zero: f32, cb: &BcCodebook) -> FusedRow {
+        FusedRow {
+            alphas: cb.group_alphas.iter().map(|&a| a * scale).collect(),
+            bias: zero + scale * cb.center,
+        }
+    }
+
+    /// Express a plain n-bit *linear* grid as a binary coding (Eq. 8–9):
+    /// `α_i = 2^{i-1}·S`, bias = `S·(2ⁿ−1)/2 + Z`.
+    pub fn from_linear(scale: f32, zero: f32, bits: u32) -> FusedRow {
+        let alphas = (0..bits).map(|i| scale * 2f32.powi(i as i32 - 1)).collect();
+        let bias = zero + scale * ((1u64 << bits) - 1) as f32 / 2.0;
+        FusedRow { alphas, bias }
+    }
+
+    /// Dequantized value of a sign pattern (bit j set ⇒ +α̂_j).
+    #[inline]
+    pub fn decode(&self, pattern: u32) -> f32 {
+        let mut v = self.bias;
+        for (j, &a) in self.alphas.iter().enumerate() {
+            v += if pattern >> j & 1 == 1 { a } else { -a };
+        }
+        v
+    }
+
+    /// All representable values, ascending.
+    pub fn levels(&self) -> Vec<f32> {
+        let mut out: Vec<f32> = (0..(1u32 << self.alphas.len()))
+            .map(|p| self.decode(p))
+            .collect();
+        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out
+    }
+
+    /// Number of bits (planes).
+    pub fn planes(&self) -> usize {
+        self.alphas.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bcchoice;
+    use crate::quant::gptqt::{search_row, SearchParams};
+    use crate::quant::linear::UniformGrid;
+    use crate::quant::RowCodebook;
+    use crate::util::Rng;
+
+    #[test]
+    fn linear_grid_as_binary_coding_matches_eq9() {
+        // 3-bit grid {0..7}, S=1, Z=0 ⇒ α = (0.5, 1, 2), bias 3.5 (Eq. 9)
+        let f = FusedRow::from_linear(1.0, 0.0, 3);
+        assert_eq!(f.alphas, vec![0.5, 1.0, 2.0]);
+        assert_eq!(f.bias, 3.5);
+        let mut lv = f.levels();
+        lv.iter_mut().for_each(|v| *v = v.round());
+        assert_eq!(lv, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn linear_fusion_equals_grid_levels_for_any_scale() {
+        let g = UniformGrid::from_range(-1.3, 0.9, 3);
+        let f = FusedRow::from_linear(g.scale, g.scale * g.qz, 3);
+        let grid_levels = RowCodebook::levels(&g);
+        let fused_levels = f.levels();
+        for (a, b) in grid_levels.iter().zip(&fused_levels) {
+            assert!((a - b).abs() < 1e-5, "grid {a} vs fused {b}");
+        }
+    }
+
+    #[test]
+    fn paper_worked_example_eq10_eq11() {
+        // n=3 grid, BCchoice {0,1,6,7}: α̂₁=0.5, α̂₂=3, center 3.5 (Eq. 10).
+        // With S and qbias folded in (Eq. 11): α̂₁=0.5S, α̂₂=3S, bias 3.5S+Z.
+        let cbs = bcchoice::enumerate(3, 2);
+        let cb = cbs.iter().find(|cb| cb.levels == vec![0.0, 1.0, 6.0, 7.0]).unwrap();
+        let (s, z) = (0.25f32, -0.8f32);
+        let f = FusedRow::from_parts(s, z, cb);
+        let mut expect: Vec<f32> = [0.0f32, 1.0, 6.0, 7.0].iter().map(|&v| z + s * v).collect();
+        expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let got = f.levels();
+        for (a, b) in expect.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!((f.bias - (3.5 * s + z)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fused_gptqt_row_is_exact() {
+        // Property (DESIGN §6): for every searched row, the fused binary
+        // coding represents *identical* values to the two-step composition.
+        let mut rng = Rng::new(100);
+        for seed in 0..5u64 {
+            let row: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+            let hdiag: Vec<f64> = (0..128).map(|_| 0.5 + rng.next_f64()).collect();
+            let p = SearchParams {
+                step1_bits: 5,
+                final_bits: 3,
+                explore_range: 1,
+                explore_grid: 4,
+            };
+            let r = search_row(&row, &hdiag, &p);
+            let f = FusedRow::from_gptqt(&r);
+            // per-pattern equality
+            for pat in 0..8u32 {
+                let two_step = r.decode(pat);
+                let fused = f.decode(pat);
+                assert!(
+                    (two_step - fused).abs() <= 1e-5 * two_step.abs().max(1.0),
+                    "seed {seed} pattern {pat}: {two_step} vs {fused}"
+                );
+            }
+            let _ = seed;
+        }
+    }
+
+    #[test]
+    fn decode_pattern_count() {
+        let f = FusedRow { alphas: vec![1.0, 2.0], bias: 0.0 };
+        assert_eq!(f.levels(), vec![-3.0, -1.0, 1.0, 3.0]);
+        assert_eq!(f.planes(), 2);
+    }
+}

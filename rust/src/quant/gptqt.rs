@@ -1,0 +1,409 @@
+//! GPTQT — the paper's method (§II-B/C): quantize twice, progressively.
+//!
+//! Per weight row:
+//!
+//! 1. **Step 1** — linear quantization to `step1_bits` (n) with scale `S`
+//!    and offset anchored to the row's range (Eq. 5 step 1).
+//! 2. **Step 2** — re-encode the n-bit integer grid into an m-bit binary
+//!    coding: pick the `BCchoice` codebook ([`super::bcchoice`]) that
+//!    minimizes the *output* error of the layer (Eq. 5 step 2) — scored
+//!    with the diagonal-Hessian-weighted proxy `Σ_c H_cc e_c²`, the
+//!    second-order objective GPTQ itself optimizes columnwise.
+//! 3. **Re-exploration** (Eq. 7) — the scale is re-searched over
+//!    `Ŝ ∈ (span/(2^{n+r}−1), span/(2^{n−r}−1))` because step 2 punches
+//!    non-uniform gaps into the integer axis; the step-1-optimal S is no
+//!    longer optimal ("stretching the spring", Fig. 2).
+//!
+//! The winning `(Ŝ, BCchoice)` pair per row becomes (a) the row codebook
+//! driving the GPTQ compensation loop and (b), through [`super::fuse`],
+//! a single pure binary coding `Σ α̂ᵢb̂ᵢ + ĉ` for the LUT-GEMM hot path
+//! (Eq. 8–11).
+//!
+//! ### Scoring trick
+//!
+//! For a fixed `Ŝ`, every weight has a continuous grid coordinate
+//! `x = (w − Z)/Ŝ`; step 1 rounds it to `v = round(x)` and step 2 snaps
+//! `v` to the codebook. Grouping weights by `v` and pre-accumulating
+//! `(H₀, H₁, H₂) = Σ h, Σ h·r, Σ h·r²` with `r = x − v` per grid cell
+//! turns the error of *any* codebook into a `O(2ⁿ)` scan:
+//!
+//! ```text
+//! err(cb) = Ŝ² Σ_v [ H₂(v) + 2δ(v)H₁(v) + δ(v)²H₀(v) ],  δ(v) = v − snap_cb(v)
+//! ```
+//!
+//! which makes the exhaustive BCchoice × Ŝ grid search (the paper's
+//! "sequential trial of each possibility") cheap.
+
+use super::bcchoice::{self, BcCodebook};
+use super::{RowCodebook, SortedLevels};
+use std::sync::Arc;
+
+/// The per-row result of the GPTQT parameter search.
+#[derive(Debug, Clone)]
+pub struct GptqtRow {
+    /// Re-explored scaling factor Ŝ (Eq. 7).
+    pub scale: f32,
+    /// Real-valued grid origin: `w ≈ Z + Ŝ·(grid coordinate)`.
+    pub zero: f32,
+    /// Winning BCchoice codebook (integer-grid units).
+    pub codebook: Arc<BcCodebook>,
+    /// Diagonal-weighted output error of the winner.
+    pub err: f64,
+    /// Number of (Ŝ, codebook) candidates evaluated.
+    pub candidates: usize,
+}
+
+impl GptqtRow {
+    /// The row's dequantized level set — the codebook the GPTQ loop snaps
+    /// against.
+    pub fn level_set(&self) -> SortedLevels {
+        SortedLevels::new(
+            self.codebook
+                .levels
+                .iter()
+                .map(|&v| self.zero + self.scale * v)
+                .collect(),
+        )
+    }
+
+    /// Integer-grid coordinate after step 1 (round, then clamp — Eq. 5).
+    #[inline]
+    fn step1(&self, w: f32) -> f32 {
+        let max = ((1u64 << self.codebook.n_bits) - 1) as f32;
+        ((w - self.zero) / self.scale).round().clamp(0.0, max)
+    }
+
+    /// Sign pattern of the level `w` quantizes to (for packing). Follows
+    /// the paper's two-step semantics: round to the intermediate grid
+    /// (step 1), then map to the BCchoice level (step 2).
+    pub fn encode(&self, w: f32) -> u32 {
+        self.codebook.patterns[self.codebook.snap_index(self.step1(w))]
+    }
+
+    /// Dequantized value of a sign pattern.
+    pub fn decode(&self, pattern: u32) -> f32 {
+        self.zero + self.scale * self.codebook.decode(pattern)
+    }
+}
+
+/// Search configuration distilled from [`super::QuantConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct SearchParams {
+    /// Step-1 intermediate bits n.
+    pub step1_bits: u32,
+    /// Final bits m.
+    pub final_bits: u32,
+    /// Re-exploration range r in bits (0 disables, Table VI).
+    pub explore_range: u32,
+    /// Grid points across the Ŝ interval (≥ 1).
+    pub explore_grid: usize,
+}
+
+impl SearchParams {
+    pub fn from_config(cfg: &super::QuantConfig) -> SearchParams {
+        SearchParams {
+            step1_bits: cfg.step1_bits,
+            final_bits: cfg.bits,
+            explore_range: cfg.explore_range,
+            explore_grid: cfg.explore_grid.max(1),
+        }
+    }
+
+    /// Candidate scale factors per Eq. 7: the base scale
+    /// `S = span/(2ⁿ−1)` plus `explore_grid` points spanning
+    /// `(span/(2^{n+r}−1), span/(2^{n−r}−1))`.
+    pub fn scale_candidates(&self, span: f32) -> Vec<f32> {
+        let n = self.step1_bits;
+        let base = span / ((1u64 << n) - 1) as f32;
+        if self.explore_range == 0 {
+            return vec![base];
+        }
+        let r = self.explore_range.min(n - self.final_bits.min(n - 1)).max(1);
+        // guard: n − r must stay ≥ 1 bit
+        let r = r.min(n - 1);
+        let s_lo = span / ((1u64 << (n + r)) - 1) as f32; // compressed axis
+        let s_hi = span / ((1u64 << (n - r)) - 1) as f32; // stretched axis
+        let mut out = Vec::with_capacity(self.explore_grid + 1);
+        out.push(base);
+        // geometric spacing matches the bit-exponent structure of Eq. 7
+        let ratio = (s_hi / s_lo).max(1.0 + 1e-6);
+        for k in 0..self.explore_grid {
+            let t = (k as f32 + 0.5) / self.explore_grid as f32;
+            out.push(s_lo * ratio.powf(t));
+        }
+        out
+    }
+}
+
+/// Per-grid-cell accumulators for the scoring trick.
+struct CellStats {
+    h0: Vec<f64>,
+    h1: Vec<f64>,
+    h2: Vec<f64>,
+}
+
+impl CellStats {
+    fn accumulate(row: &[f32], hdiag: &[f64], scale: f32, zero: f32, cells: usize) -> CellStats {
+        let mut h0 = vec![0.0f64; cells];
+        let mut h1 = vec![0.0f64; cells];
+        let mut h2 = vec![0.0f64; cells];
+        let max = (cells - 1) as f32;
+        for (&w, &h) in row.iter().zip(hdiag) {
+            // residual is measured from the *unclamped* coordinate:
+            // clamping before differencing would hide the error of
+            // compressed scales whose grid no longer covers the row.
+            let x = (w - zero) / scale;
+            let v = x.round().clamp(0.0, max);
+            let r = (x - v) as f64;
+            let vi = v as usize;
+            h0[vi] += h;
+            h1[vi] += h * r;
+            h2[vi] += h * r * r;
+        }
+        CellStats { h0, h1, h2 }
+    }
+
+    /// Diagonal-weighted error of a codebook over these cells (in units
+    /// of `Ŝ²` — multiply by `scale²` for the absolute value).
+    #[inline]
+    fn score(&self, cb: &BcCodebook) -> f64 {
+        let mut err = 0.0f64;
+        let mut next_level = 0usize;
+        let levels = &cb.levels;
+        for v in 0..self.h0.len() {
+            if self.h0[v] == 0.0 && self.h2[v] == 0.0 {
+                continue;
+            }
+            let vf = v as f32;
+            // advance the two-pointer to the nearest level for cell v;
+            // strict `<` matches `BcCodebook::snap_index` (ties go low) —
+            // the cross term `2δH₁` is sign-sensitive, so the tie rule
+            // must be identical to the actual snapping path.
+            while next_level + 1 < levels.len()
+                && (levels[next_level + 1] - vf).abs() < (vf - levels[next_level]).abs()
+            {
+                next_level += 1;
+            }
+            let delta = (vf - levels[next_level]) as f64;
+            err += self.h2[v] + 2.0 * delta * self.h1[v] + delta * delta * self.h0[v];
+        }
+        err
+    }
+}
+
+/// Run the full GPTQT per-row parameter search (Eq. 5–7): over scale
+/// candidates × all BCchoice codebooks, minimizing the diagonal-Hessian-
+/// weighted output error. `hdiag` is the diagonal of the (dampened)
+/// GPTQ Hessian for this layer.
+pub fn search_row(row: &[f32], hdiag: &[f64], params: &SearchParams) -> GptqtRow {
+    assert_eq!(row.len(), hdiag.len());
+    let codebooks = bcchoice::enumerate(params.step1_bits, params.final_bits);
+    let cells = 1usize << params.step1_bits;
+
+    let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &w in row {
+        mn = mn.min(w);
+        mx = mx.max(w);
+    }
+    if !mn.is_finite() || mx - mn < 1e-12 {
+        // degenerate row: constant weights — any codebook works
+        let cb = Arc::new(codebooks[0].clone());
+        let zero = if mn.is_finite() { mn - cb.levels[0] } else { 0.0 };
+        return GptqtRow { scale: 1e-6, zero, codebook: cb, err: 0.0, candidates: 0 };
+    }
+    let span = mx - mn;
+    let mid = 0.5 * (mn + mx);
+
+    let mut best: Option<(f64, f32, f32, usize)> = None; // (err, scale, zero, cb index)
+    let mut evaluated = 0usize;
+    for scale in params.scale_candidates(span) {
+        // Anchor the stretched/compressed axis at the row midpoint
+        // (Fig. 2: the spring stretches symmetrically).
+        let zero = mid - scale * (cells - 1) as f32 * 0.5;
+        let stats = CellStats::accumulate(row, hdiag, scale, zero, cells);
+        let s2 = (scale as f64) * (scale as f64);
+        for (ci, cb) in codebooks.iter().enumerate() {
+            let err = stats.score(cb) * s2;
+            evaluated += 1;
+            if best.is_none() || err < best.unwrap().0 {
+                best = Some((err, scale, zero, ci));
+            }
+        }
+    }
+    let (err, scale, zero, ci) = best.unwrap();
+    GptqtRow {
+        scale,
+        zero,
+        codebook: Arc::new(codebooks[ci].clone()),
+        err,
+        candidates: evaluated,
+    }
+}
+
+/// The GPTQ+BCQ ablation row (Table V): fit BCQ on the raw row and use its
+/// level set as the GPTQ codebook — the overfitting construction.
+pub fn bcq_row_codebook(row: &[f32], bits: u32, iters: usize) -> SortedLevels {
+    super::bcq::bcq_fit(row, bits, iters).level_set()
+}
+
+impl RowCodebook for GptqtRow {
+    /// Two-step snap exactly as scored: round to the intermediate n-bit
+    /// grid (step 1), then map to the nearest BCchoice level (step 2).
+    fn snap(&self, w: f32) -> f32 {
+        let v = self.step1(w);
+        self.zero + self.scale * self.codebook.levels[self.codebook.snap_index(v)]
+    }
+
+    fn levels(&self) -> Vec<f32> {
+        self.codebook
+            .levels
+            .iter()
+            .map(|&v| self.zero + self.scale * v)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn params(n: u32, m: u32, range: u32) -> SearchParams {
+        SearchParams { step1_bits: n, final_bits: m, explore_range: range, explore_grid: 8 }
+    }
+
+    fn random_row(d: usize, seed: u64) -> (Vec<f32>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let hdiag: Vec<f64> = (0..d).map(|_| 0.5 + rng.next_f64()).collect();
+        (row, hdiag)
+    }
+
+    #[test]
+    fn scale_candidates_respect_eq7() {
+        let p = params(5, 3, 1);
+        let span = 2.0f32;
+        let cands = p.scale_candidates(span);
+        let lo = span / (2f32.powi(6) - 1.0);
+        let hi = span / (2f32.powi(4) - 1.0);
+        assert!(cands.len() > 1);
+        for &s in &cands[1..] {
+            assert!(s >= lo * 0.999 && s <= hi * 1.001, "scale {s} outside Eq.7 range");
+        }
+        // base scale present
+        let base = span / 31.0;
+        assert!(cands.iter().any(|&s| (s - base).abs() < 1e-7));
+    }
+
+    #[test]
+    fn range_zero_means_single_scale() {
+        let p = params(5, 3, 0);
+        assert_eq!(p.scale_candidates(1.0).len(), 1);
+    }
+
+    #[test]
+    fn snap_lands_on_levels() {
+        let (row, hdiag) = random_row(256, 61);
+        let r = search_row(&row, &hdiag, &params(5, 3, 1));
+        let levels = r.levels();
+        for &w in row.iter().take(64) {
+            let s = r.snap(w);
+            assert!(levels.iter().any(|&l| (l - s).abs() < 1e-5));
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let (row, hdiag) = random_row(128, 62);
+        let r = search_row(&row, &hdiag, &params(5, 2, 1));
+        for &w in row.iter().take(32) {
+            let pat = r.encode(w);
+            let v = r.decode(pat);
+            assert!((v - r.snap(w)).abs() < 1e-5, "decode(encode) != snap");
+        }
+    }
+
+    #[test]
+    fn reexploration_never_hurts() {
+        // with re-exploration the search space is a superset ⇒ err ≤
+        for seed in [63u64, 64, 65, 66] {
+            let (row, hdiag) = random_row(256, seed);
+            let e0 = search_row(&row, &hdiag, &params(5, 3, 0)).err;
+            let e1 = search_row(&row, &hdiag, &params(5, 3, 1)).err;
+            assert!(e1 <= e0 + 1e-12, "seed {seed}: e1={e1} > e0={e0}");
+        }
+    }
+
+    #[test]
+    fn gptqt_beats_plain_grid_snap_on_weighted_error() {
+        // GPTQT's searched codebook should beat the naive m-bit min/max
+        // linear grid on the weighted objective it optimizes.
+        use crate::quant::linear::UniformGrid;
+        for seed in [70u64, 71, 72] {
+            let (row, hdiag) = random_row(512, seed);
+            let r = search_row(&row, &hdiag, &params(5, 3, 1));
+            let grid = UniformGrid::from_minmax(&row, 3);
+            let mut grid_err = 0.0f64;
+            for (&w, &h) in row.iter().zip(&hdiag) {
+                let e = (w - grid.snap(w)) as f64;
+                grid_err += h * e * e;
+            }
+            // measure GPTQT error directly (not the proxy) for fairness
+            let mut gt_err = 0.0f64;
+            for (&w, &h) in row.iter().zip(&hdiag) {
+                let e = (w - r.snap(w)) as f64;
+                gt_err += h * e * e;
+            }
+            assert!(
+                gt_err <= grid_err * 1.05,
+                "seed {seed}: gptqt {gt_err} vs grid {grid_err}"
+            );
+        }
+    }
+
+    #[test]
+    fn proxy_error_matches_direct_error() {
+        // the bucketed (H0,H1,H2) score must equal the directly computed
+        // diagonal-weighted error of the winning quantizer
+        let (row, hdiag) = random_row(128, 80);
+        let r = search_row(&row, &hdiag, &params(4, 2, 1));
+        let mut direct = 0.0f64;
+        for (&w, &h) in row.iter().zip(&hdiag) {
+            // two-step snap exactly as scored: round-to-grid then codebook
+            let x = (w - r.zero) / r.scale;
+            let v = x.round().clamp(0.0, 15.0);
+            let snapped = r.codebook.levels[r.codebook.snap_index(v)];
+            let e = ((x - snapped) * r.scale) as f64;
+            direct += h * e * e;
+        }
+        assert!(
+            (direct - r.err).abs() <= 1e-6 * direct.max(1.0),
+            "direct {direct} vs proxy {}",
+            r.err
+        );
+    }
+
+    #[test]
+    fn constant_row_degenerates_gracefully() {
+        let row = vec![0.7f32; 64];
+        let hdiag = vec![1.0f64; 64];
+        let r = search_row(&row, &hdiag, &params(5, 3, 1));
+        assert!(r.snap(0.7).is_finite());
+    }
+
+    #[test]
+    fn heavy_hessian_columns_dominate_choice() {
+        // put huge Hessian weight on a few outlier coordinates: the
+        // chosen codebook must represent them well.
+        let mut rng = Rng::new(90);
+        let mut row: Vec<f32> = (0..256).map(|_| rng.normal_f32() * 0.1).collect();
+        let mut hdiag = vec![1.0f64; 256];
+        row[0] = 3.0;
+        row[1] = -3.0;
+        hdiag[0] = 1e4;
+        hdiag[1] = 1e4;
+        let r = search_row(&row, &hdiag, &params(5, 3, 1));
+        assert!((r.snap(3.0) - 3.0).abs() < 0.25, "outlier badly quantized: {}", r.snap(3.0));
+        assert!((r.snap(-3.0) + 3.0).abs() < 0.25);
+    }
+}

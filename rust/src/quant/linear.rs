@@ -1,0 +1,295 @@
+//! Linear (uniform) quantization: RTN, per-row asymmetric grids, and the
+//! min-MSE clip-range search used by the `GPTQ(min MSE)` baseline
+//! (paper Table V).
+//!
+//! Convention (matching the paper's Eq. 5): a weight is stored as
+//! `W_int = round(W/S) − qz` clamped to `[0, 2ᵇ−1]` and dequantized as
+//! `Ŵ = S·(W_int + qz)` — i.e. an asymmetric grid with real-valued zero
+//! offset `Z = S·qz` aligned to the row minimum.
+
+use super::RowCodebook;
+use crate::tensor::Tensor;
+
+/// Per-row uniform quantization grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UniformGrid {
+    /// Scaling factor `S` (grid pitch).
+    pub scale: f32,
+    /// Zero offset in *integer* units: `Ŵ = S·(q + qz)`.
+    pub qz: f32,
+    /// Number of representable levels (`2ᵇ`).
+    pub levels: u32,
+}
+
+impl UniformGrid {
+    /// Min/max grid over a row of weights (the RTN / vanilla-GPTQ choice:
+    /// `S = (Wmax − Wmin)/(2ᵇ − 1)`, zero at `Wmin`).
+    pub fn from_minmax(row: &[f32], bits: u32) -> UniformGrid {
+        let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &w in row {
+            mn = mn.min(w);
+            mx = mx.max(w);
+        }
+        if !mn.is_finite() || !mx.is_finite() {
+            (mn, mx) = (0.0, 0.0);
+        }
+        Self::from_range(mn, mx, bits)
+    }
+
+    /// Grid spanning `[lo, hi]` with `2ᵇ` levels.
+    pub fn from_range(lo: f32, hi: f32, bits: u32) -> UniformGrid {
+        let levels = 1u32 << bits;
+        let span = (hi - lo).max(1e-12);
+        let scale = span / (levels - 1) as f32;
+        UniformGrid { scale, qz: lo / scale, levels }
+    }
+
+    /// Integer code for a weight (clamped).
+    #[inline]
+    pub fn encode(&self, w: f32) -> u32 {
+        let q = (w / self.scale - self.qz).round();
+        q.clamp(0.0, (self.levels - 1) as f32) as u32
+    }
+
+    /// Dequantize an integer code.
+    #[inline]
+    pub fn decode(&self, q: u32) -> f32 {
+        self.scale * (q as f32 + self.qz)
+    }
+
+    /// Continuous (pre-round) grid coordinate of a weight. Used by the
+    /// GPTQT candidate scoring (residual within a grid cell).
+    #[inline]
+    pub fn coord(&self, w: f32) -> f32 {
+        w / self.scale - self.qz
+    }
+}
+
+impl RowCodebook for UniformGrid {
+    #[inline]
+    fn snap(&self, w: f32) -> f32 {
+        self.decode(self.encode(w))
+    }
+
+    fn levels(&self) -> Vec<f32> {
+        (0..self.levels).map(|q| self.decode(q)).collect()
+    }
+}
+
+/// Grid-search the clip range to minimize the *weight* MSE — the
+/// `GPTQ(min MSE)` baseline the paper shows **overfits** (Table V).
+///
+/// Shrinks the max-abs range symmetrically through `grid` steps and keeps
+/// the best; mirrors the common "clipped linear quantization" recipe.
+pub fn min_mse_grid(row: &[f32], bits: u32, grid: usize) -> UniformGrid {
+    let base = UniformGrid::from_minmax(row, bits);
+    let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &w in row {
+        mn = mn.min(w);
+        mx = mx.max(w);
+    }
+    if !mn.is_finite() || mx - mn < 1e-12 {
+        return base;
+    }
+    // Shrink the low and high clip points independently (outliers are
+    // usually one-sided), each over `grid` steps down to 60 % of the span.
+    let steps = (grid as f32).sqrt().ceil() as usize;
+    let mut best = base;
+    let mut best_err = row_mse(row, &base);
+    let span = mx - mn;
+    for lo_step in 0..=steps {
+        let lo = mn + span * 0.4 * lo_step as f32 / steps.max(1) as f32;
+        for hi_step in 0..=steps {
+            if lo_step == 0 && hi_step == 0 {
+                continue; // base already scored
+            }
+            let hi = mx - span * 0.4 * hi_step as f32 / steps.max(1) as f32;
+            if hi - lo < span * 0.1 {
+                continue;
+            }
+            let g = UniformGrid::from_range(lo, hi, bits);
+            let err = row_mse(row, &g);
+            if err < best_err {
+                best_err = err;
+                best = g;
+            }
+        }
+    }
+    best
+}
+
+fn row_mse(row: &[f32], g: &UniformGrid) -> f64 {
+    row.iter()
+        .map(|&w| {
+            let d = (w - g.snap(w)) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Round-to-nearest quantization of a full matrix (no compensation):
+/// the `RTN` rows of Tables I–III.
+pub fn rtn_quantize(w: &Tensor, bits: u32) -> (Tensor, Vec<UniformGrid>) {
+    let mut out = w.clone();
+    let mut grids = Vec::with_capacity(w.rows());
+    for r in 0..w.rows() {
+        let grid = UniformGrid::from_minmax(w.row(r), bits);
+        for v in out.row_mut(r) {
+            *v = grid.snap(*v);
+        }
+        grids.push(grid);
+    }
+    (out, grids)
+}
+
+/// Integer-form storage of a linearly quantized layer — what the
+/// `gemv_dequant` hot path streams (per-row scale/zero + codes).
+#[derive(Clone)]
+pub struct IntLayer {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    /// Per-row `(scale, qz)`.
+    pub row_params: Vec<(f32, f32)>,
+    /// Row-major integer codes (one byte each; ≤ 4 bits used).
+    pub codes: Vec<u8>,
+}
+
+impl IntLayer {
+    /// Encode a dequantized matrix given its per-row grids. Every entry of
+    /// `w` must already be a representable grid level (i.e. the output of
+    /// the quantizer); encoding is exact in that case.
+    pub fn encode(w: &Tensor, grids: &[UniformGrid], bits: u32) -> IntLayer {
+        assert_eq!(w.rows(), grids.len());
+        let mut codes = Vec::with_capacity(w.len());
+        let mut row_params = Vec::with_capacity(w.rows());
+        for r in 0..w.rows() {
+            let g = &grids[r];
+            row_params.push((g.scale, g.qz));
+            for &v in w.row(r) {
+                codes.push(g.encode(v) as u8);
+            }
+        }
+        IntLayer { rows: w.rows(), cols: w.cols(), bits, row_params, codes }
+    }
+
+    /// Dense dequantized view (for testing / fallback).
+    pub fn dequant(&self) -> Tensor {
+        let mut t = Tensor::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (s, qz) = self.row_params[r];
+            let row = t.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = s * (self.codes[r * self.cols + c] as f32 + qz);
+            }
+        }
+        t
+    }
+
+    /// Storage bytes of the packed form this layer models
+    /// (codes at `bits` bits + per-row params) — used for the memory
+    /// accounting in the speed experiments.
+    pub fn packed_bytes(&self) -> usize {
+        (self.rows * self.cols * self.bits as usize).div_ceil(8) + self.rows * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn grid_encode_decode_roundtrip() {
+        let g = UniformGrid::from_range(-1.0, 1.0, 3);
+        for q in 0..8u32 {
+            assert_eq!(g.encode(g.decode(q)), q);
+        }
+        // endpoints are representable
+        assert!((g.snap(-1.0) + 1.0).abs() < 1e-6);
+        assert!((g.snap(1.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn snap_is_idempotent_and_nearest() {
+        let mut rng = Rng::new(31);
+        let g = UniformGrid::from_range(-2.0, 3.0, 4);
+        let levels = RowCodebook::levels(&g);
+        for _ in 0..500 {
+            let w = rng.next_f32() * 6.0 - 3.0;
+            let s = g.snap(w);
+            assert_eq!(g.snap(s), s, "idempotent");
+            let nearest = levels
+                .iter()
+                .cloned()
+                .min_by(|a, b| (a - w).abs().partial_cmp(&(b - w).abs()).unwrap())
+                .unwrap();
+            assert!((s - nearest).abs() < 1e-5, "w={w} snap={s} nearest={nearest}");
+        }
+    }
+
+    #[test]
+    fn constant_row_does_not_blow_up() {
+        let g = UniformGrid::from_minmax(&[0.5; 16], 3);
+        assert!(g.scale > 0.0);
+        assert!((g.snap(0.5) - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rtn_reduces_to_levels() {
+        let mut rng = Rng::new(32);
+        let w = Tensor::randn(4, 64, 1.0, &mut rng);
+        let (q, grids) = rtn_quantize(&w, 3);
+        for r in 0..4 {
+            let levels = RowCodebook::levels(&grids[r]);
+            for &v in q.row(r) {
+                assert!(levels.iter().any(|&l| (l - v).abs() < 1e-5));
+            }
+        }
+        // 3-bit error is bounded by half a grid pitch
+        for r in 0..4 {
+            let g = &grids[r];
+            for (a, b) in w.row(r).iter().zip(q.row(r)) {
+                assert!((a - b).abs() <= g.scale * 0.5 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn min_mse_never_worse_than_minmax() {
+        let mut rng = Rng::new(33);
+        for _ in 0..10 {
+            let row: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+            let base = UniformGrid::from_minmax(&row, 3);
+            let tuned = min_mse_grid(&row, 3, 16);
+            assert!(row_mse(&row, &tuned) <= row_mse(&row, &base) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn min_mse_clips_outliers() {
+        // a moderate one-sided outlier over many weights: clipping it
+        // costs one large error but sharpens the grid for everyone else
+        let mut row = vec![0.0f32; 1024];
+        let mut rng = Rng::new(34);
+        for v in row.iter_mut() {
+            *v = rng.normal_f32() * 0.1;
+        }
+        row[0] = 5.0;
+        let base = UniformGrid::from_minmax(&row, 3);
+        let tuned = min_mse_grid(&row, 3, 64);
+        assert!(tuned.scale < base.scale);
+        assert!(row_mse(&row, &tuned) < row_mse(&row, &base));
+    }
+
+    #[test]
+    fn int_layer_roundtrip() {
+        let mut rng = Rng::new(35);
+        let w = Tensor::randn(6, 40, 1.0, &mut rng);
+        let (q, grids) = rtn_quantize(&w, 3);
+        let il = IntLayer::encode(&q, &grids, 3);
+        let back = il.dequant();
+        assert!(q.max_abs_diff(&back) < 1e-5);
+        assert!(il.packed_bytes() < 6 * 40 * 4);
+    }
+}

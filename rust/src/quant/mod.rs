@@ -1,0 +1,277 @@
+//! Quantization library: the paper's contribution (GPTQT) and every
+//! baseline it compares against.
+//!
+//! | method        | module      | paper section |
+//! |---------------|-------------|---------------|
+//! | RTN           | [`linear`]  | Table I       |
+//! | GPTQ (linear) | [`gptq`]    | §II-A, Eq 1–2 |
+//! | GPTQ min-MSE  | [`linear`]  | Table V       |
+//! | BCQ           | [`bcq`]     | §II-A, Eq 3–4 |
+//! | GPTQ+BCQ      | [`gptq`]+[`bcq`] | Table V  |
+//! | **GPTQT**     | [`gptqt`]   | §II-B/C/D, Eq 5–11 |
+//!
+//! The pipeline quantizes one linear layer at a time: per-row parameters
+//! are fixed up front (scale / codebook), then the GPTQ column loop snaps
+//! each column and compensates the not-yet-quantized columns through
+//! `H⁻¹` (Eq. 2). GPTQT's per-row parameter search (intermediate-bit
+//! linear scale, re-explored `Ŝ`, and the binary-coding codebook choice)
+//! happens in [`gptqt`], and [`fuse`] collapses the two steps into the
+//! pure binary coding that [`crate::kernels::gemv_lut`] executes.
+
+pub mod bcchoice;
+pub mod bcq;
+pub mod fuse;
+pub mod gptq;
+pub mod gptqt;
+pub mod linear;
+pub mod pack;
+pub mod pipeline;
+
+pub use pipeline::quantize_layer;
+
+use crate::tensor::Tensor;
+
+/// Which quantization method to run (CLI / experiment-driver facing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// fp32/fp16 passthrough (the "full" rows of the tables).
+    Full,
+    /// Round-to-nearest linear quantization, no compensation.
+    Rtn,
+    /// GPTQ with plain linear (min/max) per-row params.
+    Gptq,
+    /// GPTQ whose clip range is grid-searched to minimize weight MSE
+    /// (the overfitting baseline of Table V).
+    GptqMinMse,
+    /// Binary-coding quantization, greedy + alternating LSQ, no GPTQ loop.
+    Bcq,
+    /// BCQ codebooks plugged into the GPTQ loop (Table V's GPTQ+BCQ).
+    GptqBcq,
+    /// The paper's method: quantize twice + re-explored scale + fusion.
+    Gptqt,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "full" | "fp16" | "fp32" => Method::Full,
+            "rtn" => Method::Rtn,
+            "gptq" => Method::Gptq,
+            "gptq-minmse" | "minmse" => Method::GptqMinMse,
+            "bcq" => Method::Bcq,
+            "gptq-bcq" | "gptq+bcq" => Method::GptqBcq,
+            "gptqt" => Method::Gptqt,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Full => "full",
+            Method::Rtn => "RTN",
+            Method::Gptq => "GPTQ",
+            Method::GptqMinMse => "GPTQ(minMSE)",
+            Method::Bcq => "BCQ",
+            Method::GptqBcq => "GPTQ+BCQ",
+            Method::Gptqt => "GPTQT",
+        }
+    }
+}
+
+/// Knobs shared by the per-layer quantizers.
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    /// Final bit-width of the stored weights (2, 3 or 4).
+    pub bits: u32,
+    /// GPTQT step-1 intermediate bit-width (paper: 4–5 optimal, Fig. 4).
+    pub step1_bits: u32,
+    /// GPTQT scale re-exploration range in bits around `step1_bits`
+    /// (paper Table VI: 0 = off, 1 = n−1..n+1, 2 = n−2..n+2).
+    pub explore_range: u32,
+    /// Grid points per explored bit interval for `Ŝ` (Eq. 7).
+    pub explore_grid: usize,
+    /// GPTQ Hessian dampening fraction λ (of mean diagonal).
+    pub damp: f64,
+    /// BCQ alternating-optimization iterations (Eq. 4).
+    pub bcq_iters: usize,
+    /// Quantize this many columns per GPTQ block before a bulk update.
+    pub block_size: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            bits: 3,
+            step1_bits: 5,
+            explore_range: 1,
+            explore_grid: 8,
+            damp: 0.01,
+            bcq_iters: 10,
+            block_size: 64,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn with_bits(bits: u32) -> Self {
+        QuantConfig { bits, ..Default::default() }
+    }
+}
+
+/// Everything a quantized linear layer needs at inference time.
+///
+/// `dequant` is the dense fp32 view (fed to the XLA executables — exactly
+/// equal to what the fused binary coding represents); `packed` is the
+/// fused binary-coded form consumed by the LUT-GEMM hot path (present for
+/// binary-coding methods), `int_weights` the linear-quantized form used by
+/// the dequant hot path (present for linear methods).
+pub struct QuantizedLayer {
+    pub dequant: Tensor,
+    pub packed: Option<pack::PackedBcLayer>,
+    pub int_weights: Option<linear::IntLayer>,
+    pub stats: LayerStats,
+}
+
+/// Per-layer quantization diagnostics.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStats {
+    /// Mean squared weight error after quantization.
+    pub weight_mse: f64,
+    /// Diagonal-Hessian-weighted output-error proxy `Σ hᵢ eᵢ²`.
+    pub output_err: f64,
+    /// Seconds spent quantizing the layer.
+    pub seconds: f64,
+    /// Codebook/scale search candidates evaluated (GPTQT).
+    pub candidates: usize,
+}
+
+/// A per-row quantization codebook: maps a real weight to the nearest
+/// representable dequantized value. Implementations: uniform grids
+/// (linear/RTN) and sorted non-uniform level sets (BCQ/GPTQT).
+pub trait RowCodebook: Send + Sync {
+    /// Nearest representable value.
+    fn snap(&self, w: f32) -> f32;
+    /// All representable levels (ascending) — used by packing & tests.
+    fn levels(&self) -> Vec<f32>;
+}
+
+/// A sorted, non-uniform level set (BCQ / GPTQT codebooks realized as
+/// dequantized values). `snap` is a branchless-ish binary search — this
+/// sits inside the GPTQ column loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SortedLevels {
+    levels: Vec<f32>,
+}
+
+impl SortedLevels {
+    /// Build from arbitrary level values (sorted + deduped internally).
+    pub fn new(mut levels: Vec<f32>) -> SortedLevels {
+        assert!(!levels.is_empty(), "empty codebook");
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        SortedLevels { levels }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.levels
+    }
+
+    /// Index of the nearest level.
+    #[inline]
+    pub fn snap_index(&self, w: f32) -> usize {
+        let ls = &self.levels;
+        match ls.binary_search_by(|l| l.partial_cmp(&w).unwrap()) {
+            Ok(i) => i,
+            Err(i) => {
+                if i == 0 {
+                    0
+                } else if i == ls.len() {
+                    ls.len() - 1
+                } else if (w - ls[i - 1]) <= (ls[i] - w) {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        }
+    }
+}
+
+impl RowCodebook for SortedLevels {
+    #[inline]
+    fn snap(&self, w: f32) -> f32 {
+        self.levels[self.snap_index(w)]
+    }
+
+    fn levels(&self) -> Vec<f32> {
+        self.levels.clone()
+    }
+}
+
+/// Quantize `w` (rows × cols, modified in place to the *dequantized*
+/// result) with a per-row codebook under the GPTQ compensation loop.
+/// Re-exported convenience over [`gptq::gptq_quantize`].
+pub fn snap_tensor(w: &Tensor, codebooks: &[Box<dyn RowCodebook>]) -> Tensor {
+    assert_eq!(w.rows(), codebooks.len());
+    let mut out = w.clone();
+    for r in 0..w.rows() {
+        let cb = &codebooks[r];
+        for v in out.row_mut(r) {
+            *v = cb.snap(*v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("rtn", Method::Rtn),
+            ("gptq", Method::Gptq),
+            ("gptq-minmse", Method::GptqMinMse),
+            ("bcq", Method::Bcq),
+            ("gptq+bcq", Method::GptqBcq),
+            ("gptqt", Method::Gptqt),
+            ("full", Method::Full),
+        ] {
+            assert_eq!(Method::parse(s), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = QuantConfig::default();
+        assert_eq!(c.bits, 3);
+        assert!(c.step1_bits > c.bits);
+        assert!(c.damp > 0.0);
+    }
+
+    #[test]
+    fn sorted_levels_snap_nearest() {
+        let cb = SortedLevels::new(vec![3.0, -1.0, 0.0, 7.5]);
+        assert_eq!(cb.snap(-5.0), -1.0);
+        assert_eq!(cb.snap(-0.4), 0.0);
+        assert_eq!(cb.snap(1.4), 0.0);
+        assert_eq!(cb.snap(1.6), 3.0);
+        assert_eq!(cb.snap(100.0), 7.5);
+        assert_eq!(cb.snap(3.0), 3.0);
+    }
+
+    #[test]
+    fn sorted_levels_midpoint_ties_go_down() {
+        let cb = SortedLevels::new(vec![0.0, 2.0]);
+        assert_eq!(cb.snap(1.0), 0.0);
+    }
+
+    #[test]
+    fn sorted_levels_dedup() {
+        let cb = SortedLevels::new(vec![1.0, 1.0, 2.0]);
+        assert_eq!(cb.as_slice(), &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Per-layer quantization dispatch: one entry point covering the paper's
+//! method and every baseline, returning dense + packed/int forms plus
+//! diagnostics.
+
+use super::fuse::FusedRow;
+use super::gptq::{gptq_quantize, weighted_output_err};
+use super::gptqt::{search_row, SearchParams};
+use super::linear::{min_mse_grid, rtn_quantize, IntLayer, UniformGrid};
+use super::pack::PackedBcLayer;
+use super::{bcq, LayerStats, Method, QuantConfig, QuantizedLayer, RowCodebook};
+use crate::tensor::linalg::MatF64;
+use crate::tensor::Tensor;
+use crate::util::{pool, Stopwatch};
+use anyhow::Result;
+
+/// Quantize one linear layer (`w`: rows × d) against its calibration
+/// Hessian (`H = 2XXᵀ`, d × d). Returns the dequantized weights, the
+/// packed form for the matching hot path, and stats.
+pub fn quantize_layer(
+    w: &Tensor,
+    hessian: &MatF64,
+    method: Method,
+    cfg: &QuantConfig,
+) -> Result<QuantizedLayer> {
+    let sw = Stopwatch::start();
+    let orig = w;
+    let mut stats = LayerStats::default();
+
+    let out = match method {
+        Method::Full => QuantizedLayer {
+            dequant: w.clone(),
+            packed: None,
+            int_weights: None,
+            stats: LayerStats::default(),
+        },
+        Method::Rtn => {
+            let (dq, grids) = rtn_quantize(w, cfg.bits);
+            let int_weights = IntLayer::encode(&dq, &grids, cfg.bits);
+            QuantizedLayer { dequant: dq, packed: None, int_weights: Some(int_weights), stats: stats.clone() }
+        }
+        Method::Gptq | Method::GptqMinMse => {
+            let grids: Vec<UniformGrid> = pool::global().map(w.rows(), |r| {
+                if method == Method::Gptq {
+                    UniformGrid::from_minmax(w.row(r), cfg.bits)
+                } else {
+                    min_mse_grid(w.row(r), cfg.bits, 32)
+                }
+            });
+            let codebooks: Vec<Box<dyn RowCodebook>> = grids
+                .iter()
+                .map(|g| Box::new(*g) as Box<dyn RowCodebook>)
+                .collect();
+            let mut dq = w.clone();
+            gptq_quantize(&mut dq, hessian, &codebooks, cfg)?;
+            let int_weights = IntLayer::encode(&dq, &grids, cfg.bits);
+            QuantizedLayer { dequant: dq, packed: None, int_weights: Some(int_weights), stats: stats.clone() }
+        }
+        Method::Bcq => {
+            // BCQ fits and snaps directly — no compensation loop (the
+            // original BCQ recipe; paper Eq. 3–4).
+            let fits: Vec<bcq::BcqRow> =
+                pool::global().map(w.rows(), |r| bcq::bcq_fit(w.row(r), cfg.bits, cfg.bcq_iters));
+            let mut dq = w.clone();
+            let mut patterns = vec![Vec::with_capacity(w.cols()); w.rows()];
+            for r in 0..w.rows() {
+                let fit = &fits[r];
+                let cb = fit.level_set();
+                let pats = &mut patterns[r];
+                for v in dq.row_mut(r) {
+                    *v = cb.snap(*v);
+                    pats.push(fit.encode(*v));
+                }
+            }
+            let fused: Vec<FusedRow> = fits
+                .iter()
+                .map(|f| FusedRow { alphas: f.alphas.clone(), bias: 0.0 })
+                .collect();
+            let packed = PackedBcLayer::pack(w.rows(), w.cols(), &fused, &patterns);
+            QuantizedLayer { dequant: dq, packed: Some(packed), int_weights: None, stats: stats.clone() }
+        }
+        Method::GptqBcq => {
+            // Table V's overfitting construction: weight-MSE-optimal BCQ
+            // codebooks frozen from the *original* weights, then used
+            // inside the GPTQ loop (where the weights they were fitted to
+            // keep moving).
+            let fits: Vec<bcq::BcqRow> =
+                pool::global().map(w.rows(), |r| bcq::bcq_fit(w.row(r), cfg.bits, cfg.bcq_iters));
+            let codebooks: Vec<Box<dyn RowCodebook>> = fits
+                .iter()
+                .map(|f| Box::new(f.level_set()) as Box<dyn RowCodebook>)
+                .collect();
+            let mut dq = w.clone();
+            gptq_quantize(&mut dq, hessian, &codebooks, cfg)?;
+            let mut patterns = vec![Vec::with_capacity(w.cols()); w.rows()];
+            for r in 0..w.rows() {
+                let pats = &mut patterns[r];
+                for &v in dq.row(r) {
+                    pats.push(fits[r].encode(v));
+                }
+            }
+            let fused: Vec<FusedRow> = fits
+                .iter()
+                .map(|f| FusedRow { alphas: f.alphas.clone(), bias: 0.0 })
+                .collect();
+            let packed = PackedBcLayer::pack(w.rows(), w.cols(), &fused, &patterns);
+            QuantizedLayer { dequant: dq, packed: Some(packed), int_weights: None, stats: stats.clone() }
+        }
+        Method::Gptqt => {
+            // The paper's method: per-row (Ŝ, BCchoice) search on the
+            // original weights + Hessian diagonal, then the GPTQ loop,
+            // then fusion into pure binary coding.
+            let sp = SearchParams::from_config(cfg);
+            let hdiag: Vec<f64> = (0..hessian.n).map(|i| hessian.get(i, i)).collect();
+            let rows: Vec<super::gptqt::GptqtRow> =
+                pool::global().map(w.rows(), |r| search_row(w.row(r), &hdiag, &sp));
+            stats.candidates = rows.iter().map(|r| r.candidates).sum();
+            let codebooks: Vec<Box<dyn RowCodebook>> = rows
+                .iter()
+                .map(|r| Box::new(r.clone()) as Box<dyn RowCodebook>)
+                .collect();
+            let mut dq = w.clone();
+            gptq_quantize(&mut dq, hessian, &codebooks, cfg)?;
+            let mut patterns = vec![Vec::with_capacity(w.cols()); w.rows()];
+            for r in 0..w.rows() {
+                let pats = &mut patterns[r];
+                for &v in dq.row(r) {
+                    pats.push(rows[r].encode(v));
+                }
+            }
+            let fused: Vec<FusedRow> = rows.iter().map(FusedRow::from_gptqt).collect();
+            let packed = PackedBcLayer::pack(w.rows(), w.cols(), &fused, &patterns);
+            QuantizedLayer { dequant: dq, packed: Some(packed), int_weights: None, stats: stats.clone() }
+        }
+    };
+
+    let mut out = out;
+    out.stats.weight_mse = orig.mse(&out.dequant);
+    out.stats.output_err = weighted_output_err(orig, &out.dequant, hessian);
+    out.stats.seconds = sw.elapsed_secs();
+    out.stats.candidates = stats.candidates;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::accumulate_hessian;
+    use crate::util::Rng;
+
+    fn setup(d: usize, rows: usize, seed: u64) -> (Tensor, MatF64) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(rows, d, 1.0, &mut rng);
+        let base = Tensor::randn(3 * d, d, 1.0, &mut rng);
+        let mixer = Tensor::randn(d, d, 0.3, &mut rng).add(&Tensor::eye(d));
+        let acts = base.matmul(&mixer);
+        (w, accumulate_hessian(&acts))
+    }
+
+    #[test]
+    fn every_method_runs_and_is_finite() {
+        let (w, h) = setup(32, 8, 201);
+        let cfg = QuantConfig { bits: 3, step1_bits: 5, explore_grid: 4, ..Default::default() };
+        for m in [
+            Method::Full,
+            Method::Rtn,
+            Method::Gptq,
+            Method::GptqMinMse,
+            Method::Bcq,
+            Method::GptqBcq,
+            Method::Gptqt,
+        ] {
+            let q = quantize_layer(&w, &h, m, &cfg).unwrap();
+            assert!(q.dequant.data().iter().all(|v| v.is_finite()), "{m:?} produced NaN");
+            assert_eq!(q.dequant.shape(), w.shape());
+            if m == Method::Full {
+                assert_eq!(q.stats.weight_mse, 0.0);
+            } else {
+                assert!(q.stats.weight_mse > 0.0, "{m:?} should not be lossless");
+            }
+        }
+    }
+
+    #[test]
+    fn gptqt_packed_matches_dequant_exactly() {
+        let (w, h) = setup(48, 6, 202);
+        let cfg = QuantConfig { explore_grid: 4, ..QuantConfig::with_bits(3) };
+        let q = quantize_layer(&w, &h, Method::Gptqt, &cfg).unwrap();
+        let packed = q.packed.expect("gptqt must pack");
+        let dq2 = packed.dequant();
+        assert!(
+            q.dequant.max_abs_diff(&dq2) < 1e-4,
+            "fusion property violated: {}",
+            q.dequant.max_abs_diff(&dq2)
+        );
+    }
+
+    #[test]
+    fn gptq_int_weights_match_dequant() {
+        let (w, h) = setup(32, 5, 203);
+        let q = quantize_layer(&w, &h, Method::Gptq, &QuantConfig::with_bits(3)).unwrap();
+        let il = q.int_weights.expect("gptq stores int weights");
+        assert!(q.dequant.max_abs_diff(&il.dequant()) < 1e-5);
+    }
+
+    #[test]
+    fn gptqt_beats_rtn_on_output_error() {
+        let (w, h) = setup(64, 16, 204);
+        let cfg = QuantConfig { explore_grid: 6, ..QuantConfig::with_bits(3) };
+        let rtn = quantize_layer(&w, &h, Method::Rtn, &cfg).unwrap();
+        let gptqt = quantize_layer(&w, &h, Method::Gptqt, &cfg).unwrap();
+        assert!(
+            gptqt.stats.output_err < rtn.stats.output_err,
+            "gptqt {} !< rtn {}",
+            gptqt.stats.output_err,
+            rtn.stats.output_err
+        );
+    }
+
+    #[test]
+    fn two_bit_gptqt_survives_where_bcq_collapses() {
+        // The paper's 2-bit story (Table I bottom): BCQ collapses, GPTQT
+        // stays bounded. Proxy: output error ratio.
+        let (w, h) = setup(64, 16, 205);
+        let cfg = QuantConfig { explore_grid: 6, ..QuantConfig::with_bits(2) };
+        let bcq = quantize_layer(&w, &h, Method::Bcq, &cfg).unwrap();
+        let gptqt = quantize_layer(&w, &h, Method::Gptqt, &cfg).unwrap();
+        assert!(
+            gptqt.stats.output_err < bcq.stats.output_err,
+            "gptqt {} !< bcq {}",
+            gptqt.stats.output_err,
+            bcq.stats.output_err
+        );
+    }
+}

@@ -1,0 +1,242 @@
+//! A compiled model: executables + device-resident weights + KV buffers.
+
+use super::Runtime;
+use crate::model::Model;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Metadata written by `python -m compile.aot` next to the HLO files.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub seq: usize,
+    pub kv_len: usize,
+    pub pallas: bool,
+    pub weights: usize,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let mut map = std::collections::HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                map.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| {
+            map.get(k)
+                .with_context(|| format!("meta missing key `{k}`"))
+                .cloned()
+        };
+        Ok(ArtifactMeta {
+            model: get("model")?,
+            seq: get("seq")?.parse()?,
+            kv_len: get("kv_len")?.parse()?,
+            pallas: get("pallas")? == "1",
+            weights: get("weights")?.parse()?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Device-resident KV caches for one sequence (round-trip between decode
+/// steps as buffers — never copied to host).
+pub struct DeviceKv {
+    pub k: xla::PjRtBuffer,
+    pub v: xla::PjRtBuffer,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+/// A model compiled onto the PJRT device with weights uploaded once.
+pub struct CompiledModel {
+    pub meta: ArtifactMeta,
+    logits_exec: xla::PjRtLoadedExecutable,
+    decode_exec: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    client: xla::PjRtClient,
+    layers: usize,
+    d_model: usize,
+    vocab: usize,
+}
+
+impl CompiledModel {
+    pub fn load(rt: &Runtime, dir: &Path, model: &Model) -> Result<CompiledModel> {
+        let name = model.cfg.name;
+        let meta = ArtifactMeta::load(&dir.join(format!("{name}.meta.txt")))?;
+        if meta.weights != model.cfg.weight_order().len() {
+            bail!(
+                "artifact ABI mismatch: meta says {} weights, config has {}",
+                meta.weights,
+                model.cfg.weight_order().len()
+            );
+        }
+        let logits_exec = rt.compile_artifact(super::artifact_path(dir, name, "logits"))?;
+        let decode_exec = rt.compile_artifact(super::artifact_path(dir, name, "decode"))?;
+
+        // upload weights once, in ABI order
+        let mut weight_bufs = Vec::new();
+        for wname in model.cfg.weight_order() {
+            let t = model.weights.expect(&wname);
+            let buf = rt
+                .client
+                .buffer_from_host_buffer(t.data(), &[t.rows(), t.cols()], None)
+                .with_context(|| format!("upload {wname}"))?;
+            weight_bufs.push(buf);
+        }
+        Ok(CompiledModel {
+            meta,
+            logits_exec,
+            decode_exec,
+            weight_bufs,
+            client: rt.client.clone(),
+            layers: model.cfg.layers,
+            d_model: model.cfg.d_model,
+            vocab: model.cfg.vocab,
+        })
+    }
+
+    /// Replace the device weights (e.g. after quantization) — same ABI.
+    pub fn upload_weights(&mut self, model: &Model) -> Result<()> {
+        let mut bufs = Vec::new();
+        for wname in model.cfg.weight_order() {
+            let t = model.weights.expect(&wname);
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer(t.data(), &[t.rows(), t.cols()], None)?,
+            );
+        }
+        self.weight_bufs = bufs;
+        Ok(())
+    }
+
+    /// Fresh device KV cache.
+    pub fn new_kv(&self) -> Result<DeviceKv> {
+        let zeros = vec![0.0f32; self.layers * self.meta.kv_len * self.d_model];
+        let dims = [self.layers, self.meta.kv_len, self.d_model];
+        Ok(DeviceKv {
+            k: self.client.buffer_from_host_buffer(&zeros, &dims, None)?,
+            v: self.client.buffer_from_host_buffer(&zeros, &dims, None)?,
+            len: 0,
+            capacity: self.meta.kv_len,
+        })
+    }
+
+    /// Unwrap an execute result that may come back as one tuple buffer or
+    /// as N separate buffers, into N literals.
+    fn untuple(outputs: Vec<Vec<xla::PjRtBuffer>>, n: usize) -> Result<Vec<xla::Literal>> {
+        let mut outs = outputs.into_iter().next().context("no output device")?;
+        if outs.len() == 1 {
+            // may be a 1-tuple (return_tuple=True lowering) — peel it
+            let lit = outs.remove(0).to_literal_sync()?;
+            let parts = if lit.shape()?.is_tuple() { lit.to_tuple()? } else { vec![lit] };
+            if parts.len() == n {
+                return Ok(parts);
+            }
+            bail!("expected {n} outputs, got {}", parts.len());
+        }
+        if outs.len() == n {
+            return outs.iter().map(|b| Ok(b.to_literal_sync()?)).collect();
+        }
+        bail!("expected {n} outputs, got {}", outs.len());
+    }
+
+    /// Full-window logits: `tokens.len()` must equal `meta.seq`.
+    pub fn logits(&self, tokens: &[u32]) -> Result<Tensor> {
+        if tokens.len() != self.meta.seq {
+            bail!("logits artifact takes exactly {} tokens, got {}", self.meta.seq, tokens.len());
+        }
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&toks, &[toks.len()], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        let outputs = self.logits_exec.execute_b(&args)?;
+        let lit = Self::untuple(outputs, 1)?.remove(0);
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::from_vec(self.meta.seq, self.vocab, data))
+    }
+
+    /// One decode step: consumes `token` at `kv.len`, returns next-token
+    /// logits; KV buffers stay on device.
+    pub fn decode(&self, kv: &mut DeviceKv, token: u32) -> Result<Vec<f32>> {
+        if kv.len >= kv.capacity {
+            bail!("device KV cache full ({} tokens)", kv.capacity);
+        }
+        let tok = self
+            .client
+            .buffer_from_host_buffer(&[token as i32], &[], None)?;
+        let pos = self
+            .client
+            .buffer_from_host_buffer(&[kv.len as i32], &[], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&kv.k);
+        args.push(&kv.v);
+        args.push(&tok);
+        args.push(&pos);
+        let mut outs = self
+            .decode_exec
+            .execute_b(&args)?
+            .into_iter()
+            .next()
+            .context("no output device")?;
+        if outs.len() == 3 {
+            // buffers stay on device: swap KV in place
+            let logits = outs[0].to_literal_sync()?.to_vec::<f32>()?;
+            kv.v = outs.remove(2);
+            kv.k = outs.remove(1);
+            kv.len += 1;
+            Ok(logits)
+        } else if outs.len() == 1 {
+            // tuple output: must round-trip via literal
+            let lit = outs.remove(0).to_literal_sync()?;
+            let parts = lit.to_tuple()?;
+            anyhow::ensure!(parts.len() == 3, "decode expected 3 outputs");
+            let mut it = parts.into_iter();
+            let logits = it.next().unwrap().to_vec::<f32>()?;
+            let k = it.next().unwrap();
+            let v = it.next().unwrap();
+            let dims = [self.layers, self.meta.kv_len, self.d_model];
+            kv.k = self
+                .client
+                .buffer_from_host_buffer(&k.to_vec::<f32>()?, &dims, None)?;
+            kv.v = self
+                .client
+                .buffer_from_host_buffer(&v.to_vec::<f32>()?, &dims, None)?;
+            kv.len += 1;
+            Ok(logits)
+        } else {
+            bail!("decode returned {} buffers", outs.len());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let m = ArtifactMeta::parse(
+            "model=opt-nano\nseq=128\nkv_len=64\npallas=1\nweights=24\n",
+        )
+        .unwrap();
+        assert_eq!(m.model, "opt-nano");
+        assert_eq!(m.seq, 128);
+        assert_eq!(m.kv_len, 64);
+        assert!(m.pallas);
+        assert_eq!(m.weights, 24);
+    }
+
+    #[test]
+    fn meta_rejects_missing_keys() {
+        assert!(ArtifactMeta::parse("model=x\n").is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts (L2 output) and
+//! executes them from the rust request path. Python never runs here.
+//!
+//! Flow: `HloModuleProto::from_text_file` (HLO *text* — the interchange
+//! format xla_extension 0.5.1 accepts, see DESIGN.md §3) →
+//! `XlaComputation::from_proto` → `PjRtClient::cpu().compile` →
+//! `execute_b` with device-resident buffers. Weights are uploaded once
+//! per model; KV caches live on the device and round-trip as buffers
+//! between decode steps.
+
+pub mod compiled;
+
+pub use compiled::{ArtifactMeta, CompiledModel, DeviceKv};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT client (CPU platform).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact file.
+    pub fn compile_artifact(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Load a model's full artifact set (logits + decode executables,
+    /// metadata, weights uploaded to the device).
+    pub fn load_model(
+        &self,
+        artifacts_dir: impl AsRef<Path>,
+        model: &crate::model::Model,
+    ) -> Result<CompiledModel> {
+        CompiledModel::load(self, artifacts_dir.as_ref(), model)
+    }
+}
+
+/// Path of an artifact kind for a model name.
+pub fn artifact_path(dir: &Path, name: &str, kind: &str) -> PathBuf {
+    dir.join(format!("{name}.{kind}.hlo.txt"))
+}
+
+/// True if the full artifact set for `name` exists under `dir` — used by
+/// tests and examples to skip gracefully before `make artifacts` has run.
+pub fn artifacts_present(dir: impl AsRef<Path>, name: &str) -> bool {
+    let dir = dir.as_ref();
+    artifact_path(dir, name, "logits").exists()
+        && artifact_path(dir, name, "decode").exists()
+        && dir.join(format!("{name}.meta.txt")).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_paths() {
+        let p = artifact_path(Path::new("artifacts"), "opt-nano", "logits");
+        assert_eq!(p.to_str().unwrap(), "artifacts/opt-nano.logits.hlo.txt");
+    }
+
+    #[test]
+    fn artifacts_present_false_for_missing() {
+        assert!(!artifacts_present("/definitely/not/here", "opt-nano"));
+    }
+}

@@ -1,0 +1,297 @@
+//! Dense linear algebra needed by GPTQ: symmetric positive-definite
+//! Cholesky factorization, triangular solves, and SPD inversion.
+//!
+//! GPTQ needs `H⁻¹` of the (dampened) Hessian `H = 2XXᵀ + λI` and, in the
+//! standard formulation, the *upper Cholesky factor of the inverse*
+//! (`chol(H⁻¹)ᵀ`) whose rows drive the column-by-column compensation.
+//! Everything is computed in f64 for stability and returned as f64 — the
+//! Hessian dimension is the layer input width (≤ a few thousand here).
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+}
+
+/// Row-major square f64 matrix helper for the linalg layer.
+#[derive(Clone, Debug)]
+pub struct MatF64 {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(n: usize) -> Self {
+        MatF64 { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(n: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n * n);
+        MatF64 { n, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.n + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.n + c] = v;
+    }
+
+    /// `self @ other`.
+    pub fn matmul(&self, other: &MatF64) -> MatF64 {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = MatF64::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.data[i * n + j] += a * other.data[k * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> MatF64 {
+        let n = self.n;
+        let mut out = MatF64::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out.data[j * n + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &MatF64) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
+///
+/// `A` must be symmetric positive definite; returns
+/// [`LinalgError::NotPositiveDefinite`] otherwise (callers damp and retry).
+pub fn cholesky(a: &MatF64) -> Result<MatF64, LinalgError> {
+    let n = a.n;
+    let mut l = MatF64::zeros(n);
+    for j in 0..n {
+        // diagonal
+        let mut d = a.get(j, j);
+        for k in 0..j {
+            let ljk = l.get(j, k);
+            d -= ljk * ljk;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(LinalgError::NotPositiveDefinite(j, d));
+        }
+        let dj = d.sqrt();
+        l.set(j, j, dj);
+        // column below the diagonal
+        for i in j + 1..n {
+            let mut s = a.get(i, j);
+            let (ri, rj) = (i * n, j * n);
+            for k in 0..j {
+                s -= l.data[ri + k] * l.data[rj + k];
+            }
+            l.set(i, j, s / dj);
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (lower triangular, forward substitution).
+pub fn solve_lower(l: &MatF64, b: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = &l.data[i * n..i * n + i];
+        for (k, &lik) in row.iter().enumerate() {
+            s -= lik * y[k];
+        }
+        y[i] = s / l.data[i * n + i];
+    }
+    y
+}
+
+/// Solve `Lᵀ x = y` (backward substitution on the transpose of lower `L`).
+pub fn solve_lower_t(l: &MatF64, y: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l.data[k * n + i] * x[k];
+        }
+        x[i] = s / l.data[i * n + i];
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky: `A⁻¹ = L⁻ᵀ L⁻¹`.
+pub fn spd_inverse(a: &MatF64) -> Result<MatF64, LinalgError> {
+    let n = a.n;
+    let l = cholesky(a)?;
+    let mut inv = MatF64::zeros(n);
+    // Solve A x_j = e_j column by column.
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            inv.data[i * n + j] = x[i];
+        }
+    }
+    Ok(inv)
+}
+
+/// Upper Cholesky factor `U` with `Uᵀ U = A` (i.e. `U = chol(A)ᵀ`).
+///
+/// GPTQ uses `U = chol(H⁻¹)ᵀ`: row `q` of `U` scaled by `1/U[q,q]` gives
+/// the compensation coefficients for the remaining columns.
+pub fn cholesky_upper(a: &MatF64) -> Result<MatF64, LinalgError> {
+    Ok(cholesky(a)?.transpose())
+}
+
+/// Dampen a symmetric matrix in place: `A += lambda * mean(diag(A)) * I`.
+/// Returns the additive term used.
+pub fn dampen(a: &mut MatF64, lambda: f64) -> f64 {
+    let n = a.n;
+    let mean_diag = (0..n).map(|i| a.get(i, i)).sum::<f64>() / n.max(1) as f64;
+    let add = lambda * mean_diag;
+    for i in 0..n {
+        a.data[i * n + i] += add;
+    }
+    add
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Random SPD matrix `M Mᵀ + n·I`.
+    fn random_spd(n: usize, rng: &mut Rng) -> MatF64 {
+        let mut m = MatF64::zeros(n);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let mt = m.transpose();
+        let mut a = m.matmul(&mt);
+        for i in 0..n {
+            a.data[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(21);
+        for n in [1, 2, 5, 17, 40] {
+            let a = random_spd(n, &mut rng);
+            let l = cholesky(&a).unwrap();
+            let llt = l.matmul(&l.transpose());
+            assert!(llt.max_abs_diff(&a) < 1e-8 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = MatF64::from_rows(2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(22);
+        let a = random_spd(12, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| (i as f64) - 3.0).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // check A x = b
+        let n = 12;
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += a.get(i, j) * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-8, "row {i}: {s} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        let mut rng = Rng::new(23);
+        for n in [1, 3, 8, 25] {
+            let a = random_spd(n, &mut rng);
+            let inv = spd_inverse(&a).unwrap();
+            let prod = a.matmul(&inv);
+            let eye = MatF64::eye(n);
+            assert!(prod.max_abs_diff(&eye) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn upper_factor_matches() {
+        let mut rng = Rng::new(24);
+        let a = random_spd(9, &mut rng);
+        let u = cholesky_upper(&a).unwrap();
+        let utu = u.transpose().matmul(&u);
+        assert!(utu.max_abs_diff(&a) < 1e-8);
+        // upper triangular: zeros below diagonal
+        for i in 0..9 {
+            for j in 0..i {
+                assert_eq!(u.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn dampen_shifts_diagonal() {
+        let mut a = MatF64::eye(4);
+        let add = dampen(&mut a, 0.01);
+        assert!((add - 0.01).abs() < 1e-12);
+        for i in 0..4 {
+            assert!((a.get(i, i) - 1.01).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dampening_rescues_near_singular() {
+        // rank-deficient Hessian (duplicate rows in X) becomes factorizable
+        // (4s are exactly representable: the inner subtraction hits 0.0)
+        let mut a = MatF64::from_rows(2, vec![4.0, 4.0, 4.0, 4.0]);
+        assert!(cholesky(&a).is_err());
+        dampen(&mut a, 0.01);
+        assert!(cholesky(&a).is_ok());
+    }
+}

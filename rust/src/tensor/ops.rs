@@ -1,0 +1,323 @@
+//! Matmul / gemv and elementwise kernels for [`Tensor`].
+//!
+//! Cache-blocked, k-inner-loop matmul with optional threading via the
+//! global pool. These are the *calibration-time* kernels; the serving hot
+//! path uses the specialized quantized kernels in `crate::kernels`.
+
+use super::Tensor;
+use crate::util::pool;
+
+/// Tile sizes for the blocked matmul. Chosen for ~32 KiB L1 data cache:
+/// an MC×KC panel of A (64×256×4 B = 64 KiB, L2-resident) and a KC-row
+/// slab of B streamed through L1.
+const MC: usize = 64;
+const KC: usize = 256;
+
+impl Tensor {
+    /// `self (m×k) @ other (k×n)` single-threaded.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(
+            self.cols(),
+            other.rows(),
+            "matmul shape mismatch: {:?} @ {:?}",
+            self.shape(),
+            other.shape()
+        );
+        let mut out = Tensor::zeros(self.rows(), other.cols());
+        matmul_into(self, other, &mut out, false);
+        out
+    }
+
+    /// `self @ other` using the global thread pool (row-partitioned).
+    pub fn matmul_par(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.cols(), other.rows(), "matmul_par shape mismatch");
+        let mut out = Tensor::zeros(self.rows(), other.cols());
+        matmul_into(self, other, &mut out, true);
+        out
+    }
+
+    /// `self (m×k) @ other (n×k)ᵀ` — the natural layout for linear layers
+    /// stored (out × in): `y = x · Wᵀ` runs row-dot-row with no transpose
+    /// materialization.
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        assert_eq!(
+            self.cols(),
+            other.cols(),
+            "matmul_nt shape mismatch: {:?} @ {:?}ᵀ",
+            self.shape(),
+            other.shape()
+        );
+        let mut out = Tensor::zeros(self.rows(), other.rows());
+        let n = other.rows();
+        if self.rows() >= 4 && n >= 16 {
+            // parallel over output rows
+            let out_ptr = SendPtrF(out.data_mut().as_mut_ptr());
+            let m = self.rows();
+            pool::global().scope_chunks(m, |range| {
+                let out_ptr = &out_ptr;
+                for i in range {
+                    let xrow = self.row(i);
+                    // Safety: disjoint rows per chunk, joined before return.
+                    let orow =
+                        unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = dot(xrow, other.row(j));
+                    }
+                }
+            });
+        } else {
+            for i in 0..self.rows() {
+                for j in 0..n {
+                    let v = dot(self.row(i), other.row(j));
+                    out.set(i, j, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product `self (m×k) @ x (k)`.
+    pub fn gemv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols(), x.len(), "gemv shape mismatch");
+        let mut y = vec![0.0f32; self.rows()];
+        for (r, yr) in y.iter_mut().enumerate() {
+            *yr = dot(self.row(r), x);
+        }
+        y
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data_mut().iter_mut().zip(other.data()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self - other` as a new tensor.
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| a - b)
+            .collect();
+        Tensor::from_vec(self.rows(), self.cols(), data)
+    }
+
+    /// `self + other` as a new tensor.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| a + b)
+            .collect();
+        Tensor::from_vec(self.rows(), self.cols(), data)
+    }
+
+    /// Scale by a scalar, returning a new tensor.
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+}
+
+struct SendPtrF(*mut f32);
+unsafe impl Sync for SendPtrF {}
+unsafe impl Send for SendPtrF {}
+
+/// Unrolled dot product; the compiler auto-vectorizes this shape well.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 += a[o] * b[o];
+        s1 += a[o + 1] * b[o + 1];
+        s2 += a[o + 2] * b[o + 2];
+        s3 += a[o + 3] * b[o + 3];
+        s4 += a[o + 4] * b[o + 4];
+        s5 += a[o + 5] * b[o + 5];
+        s6 += a[o + 6] * b[o + 6];
+        s7 += a[o + 7] * b[o + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+/// Blocked matmul kernel. `C += A @ B` with C zero-initialized by caller.
+fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor, threaded: bool) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let a_data = a.data();
+    let b_data = b.data();
+    let c_data = c.data_mut();
+
+    let row_block = |rows: std::ops::Range<usize>, c_rows: &mut [f32]| {
+        // i-k-j loop order: innermost j streams B rows and C rows
+        // contiguously; k blocked so the B panel stays cache-resident.
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            for ib in (rows.start..rows.end).step_by(MC) {
+                let iend = (ib + MC).min(rows.end);
+                for i in ib..iend {
+                    let arow = &a_data[i * k..(i + 1) * k];
+                    let crow = &mut c_rows[(i - rows.start) * n..(i - rows.start + 1) * n];
+                    for kk in kb..kend {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b_data[kk * n..(kk + 1) * n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    };
+
+    if !threaded || m < 8 {
+        row_block(0..m, c_data);
+        return;
+    }
+
+    // Partition output rows into disjoint mutable slabs for the pool.
+    let pool = pool::global();
+    let parts = pool.threads().min(m);
+    let chunk = m.div_ceil(parts);
+    let mut slabs: Vec<(usize, &mut [f32])> = Vec::with_capacity(parts);
+    {
+        let mut rest = c_data;
+        let mut start = 0usize;
+        while start < m {
+            let rows = chunk.min(m - start);
+            let (head, tail) = rest.split_at_mut(rows * n);
+            slabs.push((start, head));
+            rest = tail;
+            start += rows;
+        }
+    }
+    let slabs_cell: Vec<std::sync::Mutex<(usize, &mut [f32])>> =
+        slabs.into_iter().map(std::sync::Mutex::new).collect();
+    pool.scope_chunks(slabs_cell.len(), |range| {
+        for idx in range {
+            let mut guard = slabs_cell[idx].lock().unwrap();
+            let (start, ref mut slab) = *guard;
+            let rows = slab.len() / n;
+            row_block(start..start + rows, slab);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let mut c = Tensor::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for kk in 0..a.cols() {
+                    s += a.get(i, kk) as f64 * b.get(kk, j) as f64;
+                }
+                c.set(i, j, s as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(10);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 128, 32), (70, 300, 65)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            let c = a.matmul(&b);
+            let c_ref = naive_matmul(&a, &b);
+            let scale = (k as f32).sqrt();
+            assert!(
+                c.max_abs_diff(&c_ref) < 1e-4 * scale,
+                "mismatch at ({m},{k},{n}): {}",
+                c.max_abs_diff(&c_ref)
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_par_matches_serial() {
+        let mut rng = Rng::new(11);
+        let a = Tensor::randn(123, 77, 1.0, &mut rng);
+        let b = Tensor::randn(77, 55, 1.0, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_par(&b);
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose() {
+        let mut rng = Rng::new(13);
+        for &(m, k, n) in &[(3, 7, 5), (40, 64, 33), (2, 8, 100)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(n, k, 1.0, &mut rng);
+            let c1 = a.matmul_nt(&b);
+            let c2 = a.matmul(&b.transpose());
+            assert!(c1.max_abs_diff(&c2) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let mut rng = Rng::new(12);
+        let a = Tensor::randn(31, 47, 1.0, &mut rng);
+        let x = Tensor::randn(47, 1, 1.0, &mut rng);
+        let y1 = a.gemv(x.data());
+        let y2 = a.matmul(&x);
+        for (i, v) in y1.iter().enumerate() {
+            assert!((v - y2.get(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_basic() {
+        let a: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let b = vec![2.0f32; 19];
+        let expect: f32 = (0..19).map(|i| i as f32 * 2.0).sum();
+        assert_eq!(dot(&a, &b), expect);
+    }
+
+    #[test]
+    fn axpy_add_sub_scale() {
+        let a = Tensor::from_slice(1, 3, &[1., 2., 3.]);
+        let b = Tensor::from_slice(1, 3, &[10., 20., 30.]);
+        assert_eq!(a.add(&b).data(), &[11., 22., 33.]);
+        assert_eq!(b.sub(&a).data(), &[9., 18., 27.]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4., 6.]);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert_eq!(c.data(), &[6., 12., 18.]);
+    }
+
+    #[test]
+    fn empty_matmul() {
+        let a = Tensor::zeros(0, 5);
+        let b = Tensor::zeros(5, 3);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape(), (0, 3));
+    }
+}

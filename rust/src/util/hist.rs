@@ -1,0 +1,210 @@
+//! Latency histogram with percentile queries.
+//!
+//! Log-bucketed (HdrHistogram-flavoured) over nanoseconds: constant-size,
+//! lock-free-friendly recording, good-enough percentile resolution for
+//! serving metrics (≤ ~4% relative error per bucket).
+
+use std::time::Duration;
+
+const SUB_BUCKETS: usize = 32; // per power-of-two magnitude
+const MAGNITUDES: usize = 40; // covers 1ns .. ~18 minutes
+
+/// Log-bucketed histogram of durations.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; SUB_BUCKETS * MAGNITUDES],
+            total: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns < SUB_BUCKETS as u64 {
+            return ns as usize;
+        }
+        let mag = 63 - ns.leading_zeros() as usize; // >= 5
+        let shift = mag - 5; // keep 5 significant bits
+        let sub = ((ns >> shift) as usize) & (SUB_BUCKETS - 1);
+        let idx = (mag - 4) * SUB_BUCKETS + sub;
+        idx.min(SUB_BUCKETS * MAGNITUDES - 1)
+    }
+
+    /// Lower edge (ns) of a bucket index — used to report percentiles.
+    fn bucket_low(idx: usize) -> u64 {
+        if idx < SUB_BUCKETS {
+            return idx as u64;
+        }
+        let mag = idx / SUB_BUCKETS + 4;
+        let sub = idx % SUB_BUCKETS;
+        let shift = mag - 5;
+        ((1u64 << 5) | sub as u64) << shift
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[Self::bucket_of(ns)] += 1;
+        self.total += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.sum_ns / self.total as u128) as u64)
+    }
+
+    pub fn min(&self) -> Duration {
+        if self.total == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.min_ns)
+        }
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// p in [0, 100]. Returns the lower edge of the bucket containing the
+    /// p-th percentile sample.
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let ns = Self::bucket_low(i).clamp(self.min_ns, self.max_ns);
+                return Duration::from_nanos(ns);
+            }
+        }
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// One-line summary: `n=..  mean=..  p50=..  p95=..  p99=..  max=..`.
+    pub fn summary(&self) -> String {
+        use super::time::fmt_duration as f;
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.total,
+            f(self.mean()),
+            f(self.percentile(50.0)),
+            f(self.percentile(95.0)),
+            f(self.percentile(99.0)),
+            f(self.max()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(100));
+        assert_eq!(h.count(), 1);
+        let p50 = h.percentile(50.0).as_nanos() as f64;
+        assert!((p50 - 1e5).abs() / 1e5 < 0.05, "p50={p50}");
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1000);
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max());
+        // ~relative accuracy
+        let p50n = p50.as_nanos() as f64;
+        assert!((p50n - 500_000.0).abs() / 500_000.0 < 0.07, "p50={p50n}");
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 0..100 {
+            a.record_ns(1000 + i);
+            b.record_ns(2000 + i);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!(a.max() >= Duration::from_nanos(2099));
+    }
+
+    #[test]
+    fn bucket_low_monotone() {
+        let mut prev = 0;
+        for i in 0..SUB_BUCKETS * MAGNITUDES {
+            let lo = Histogram::bucket_low(i);
+            assert!(lo >= prev, "bucket {i}: {lo} < {prev}");
+            prev = lo;
+        }
+    }
+
+    #[test]
+    fn bucket_of_roundtrip() {
+        for ns in [0u64, 1, 31, 32, 33, 100, 1_000, 123_456, 10_000_000, u32::MAX as u64] {
+            let idx = Histogram::bucket_of(ns);
+            let lo = Histogram::bucket_low(idx);
+            let hi = Histogram::bucket_low((idx + 1).min(SUB_BUCKETS * MAGNITUDES - 1));
+            assert!(lo <= ns, "ns={ns} lo={lo}");
+            if idx + 1 < SUB_BUCKETS * MAGNITUDES {
+                assert!(ns <= hi.max(lo), "ns={ns} hi={hi}");
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Foundation utilities: deterministic RNG, thread pool, timing, histograms.
+//!
+//! Everything here exists because the offline vendored crate set has no
+//! `rand`, `rayon`, `criterion`, or `hdrhistogram`; the implementations are
+//! deliberately small, tested, and tailored to what the quantization and
+//! serving paths need.
+
+pub mod hist;
+pub mod pool;
+pub mod rng;
+pub mod time;
+
+pub use hist::Histogram;
+pub use pool::ThreadPool;
+pub use rng::Rng;
+pub use time::Stopwatch;

@@ -1,0 +1,256 @@
+//! A small scoped thread pool.
+//!
+//! The vendored crate set has neither `rayon` nor `tokio`, so the library
+//! carries its own work-stealing-free but contention-light pool:
+//! a fixed set of workers pulling closures from a shared injector queue.
+//! [`ThreadPool::scope`] provides rayon-like scoped parallelism (borrowed
+//! data, joined before return), which is all the quantization and serving
+//! hot paths need.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+    in_flight: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+}
+
+/// Fixed-size thread pool with scoped execution.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `threads` workers (min 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gptqt-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, threads }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`, capped at 16).
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        Self::new(n)
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Submit a detached job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    /// Run `f` for each index in `0..n`, partitioned into contiguous chunks
+    /// across workers, blocking until all complete. `f` may borrow from the
+    /// caller's stack (scoped via `std::thread::scope` semantics emulated
+    /// by transmuting lifetimes safely through join-before-return).
+    pub fn scope_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let parts = self.threads.min(n);
+        let chunk = n.div_ceil(parts);
+        // Safety: every job is joined before `scope_chunks` returns, so the
+        // borrowed closure outlives all uses. We enforce the join with an
+        // explicit counter rather than relying on pool drop order.
+        let f_ref: &(dyn Fn(std::ops::Range<usize>) + Sync) = &f;
+        let f_static: &'static (dyn Fn(std::ops::Range<usize>) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let pending = Arc::new((Mutex::new(parts), Condvar::new()));
+        for p in 0..parts {
+            let lo = p * chunk;
+            let hi = ((p + 1) * chunk).min(n);
+            let pending = Arc::clone(&pending);
+            self.execute(move || {
+                f_static(lo..hi);
+                let (lock, cv) = &*pending;
+                let mut left = lock.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    cv.notify_all();
+                }
+            });
+        }
+        let (lock, cv) = &*pending;
+        let mut left = lock.lock().unwrap();
+        while *left != 0 {
+            left = cv.wait(left).unwrap();
+        }
+    }
+
+    /// Map `0..n` in parallel collecting results in index order.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let out_ptr = SendPtr(out.as_mut_ptr());
+            self.scope_chunks(n, |range| {
+                let out_ptr = &out_ptr;
+                for i in range {
+                    // Safety: disjoint indices per chunk; joined before return.
+                    unsafe { *out_ptr.0.add(i) = Some(f(i)) };
+                }
+            });
+        }
+        out.into_iter().map(|o| o.expect("map slot filled")).collect()
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if *sh.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => {
+                job();
+                if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = sh.done_lock.lock().unwrap();
+                    sh.done.notify_all();
+                }
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join();
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Process-wide shared pool for hot-path kernels.
+pub fn global() -> &'static ThreadPool {
+    use once_cell::sync::Lazy;
+    static POOL: Lazy<ThreadPool> = Lazy::new(ThreadPool::default_size);
+    &POOL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_chunks_covers_all_indices() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_chunks(97, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(1000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn scope_zero_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope_chunks(0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn nested_sequential_scopes() {
+        let pool = ThreadPool::new(2);
+        let total = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let t = Arc::clone(&total);
+            pool.scope_chunks(10, move |r| {
+                t.fetch_add(r.len() as u64, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 100);
+    }
+}

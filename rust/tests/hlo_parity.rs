@@ -1,0 +1,109 @@
+//! Cross-layer numerics: the AOT-compiled XLA executables (L1 Pallas +
+//! L2 JAX, lowered at build time) must agree with the rust reference
+//! forward (L3) on the same weights — the contract that makes the fused
+//! binary coding servable through either path.
+//!
+//! Skips gracefully when `make artifacts` has not run.
+
+use gptqt::model::{load_or_init, KvCache};
+use gptqt::runtime::{artifacts_present, Runtime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    // cargo test runs from the package root
+    std::path::PathBuf::from("artifacts")
+}
+
+#[test]
+fn logits_artifact_matches_rust_forward() {
+    let dir = artifacts_dir();
+    if !artifacts_present(&dir, "opt-nano") {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let (model, _) = load_or_init("opt-nano", &dir, 0).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let compiled = rt.load_model(&dir, &model).unwrap();
+    let seq = compiled.meta.seq;
+
+    // deterministic pseudo-random token window
+    let tokens: Vec<u32> = (0..seq as u32)
+        .map(|i| 3 + (i * 2654435761u32 % 997) % (model.cfg.vocab as u32 - 3))
+        .collect();
+
+    let hlo = compiled.logits(&tokens).unwrap();
+    let rust = model.forward(&tokens);
+    assert_eq!(hlo.shape(), rust.shape());
+    let max_diff = hlo.max_abs_diff(&rust);
+    // same math in f32 through two compilers: expect ~1e-3 worst case
+    assert!(
+        max_diff < 5e-2,
+        "XLA vs rust forward diverged: max |Δlogit| = {max_diff}"
+    );
+    // perplexity-level agreement (the metric experiments actually use)
+    let (nll_h, n) = gptqt::model::forward::nll_from_logits(&hlo, &tokens);
+    let (nll_r, _) = gptqt::model::forward::nll_from_logits(&rust, &tokens);
+    let (p_h, p_r) = ((nll_h / n as f64).exp(), (nll_r / n as f64).exp());
+    assert!(
+        (p_h - p_r).abs() / p_r < 1e-3,
+        "ppl mismatch: hlo {p_h} vs rust {p_r}"
+    );
+}
+
+#[test]
+fn decode_artifact_matches_rust_decode() {
+    let dir = artifacts_dir();
+    if !artifacts_present(&dir, "opt-nano") {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let (model, _) = load_or_init("opt-nano", &dir, 0).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let compiled = rt.load_model(&dir, &model).unwrap();
+
+    let bm = gptqt::model::BackendModel::dense(&model);
+    let mut rust_cache = KvCache::new(&model.cfg);
+    let mut dev_kv = compiled.new_kv().unwrap();
+
+    let tokens = [5u32, 17, 42, 100, 7, 9, 300, 11];
+    for &t in &tokens {
+        let hlo_logits = compiled.decode(&mut dev_kv, t).unwrap();
+        let rust_logits = bm.decode_step(t, &mut rust_cache);
+        assert_eq!(hlo_logits.len(), rust_logits.len());
+        let max_diff = hlo_logits
+            .iter()
+            .zip(&rust_logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 5e-2, "decode diverged at token {t}: {max_diff}");
+        // greedy choices must agree (what generation actually consumes)
+        let am_h = gptqt::coordinator::sampler::argmax(&hlo_logits);
+        let am_r = gptqt::coordinator::sampler::argmax(&rust_logits);
+        assert_eq!(am_h, am_r, "greedy token diverged after feeding {t}");
+    }
+}
+
+#[test]
+fn pjrt_engine_serves_requests() {
+    let dir = artifacts_dir();
+    if !artifacts_present(&dir, "opt-nano") {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    use gptqt::coordinator::{Engine, EngineBackend, EngineConfig, Request};
+    let (model, _) = load_or_init("opt-nano", &dir, 0).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let compiled = rt.load_model(&dir, &model).unwrap();
+    let mut engine = Engine::new(
+        EngineBackend::Pjrt(compiled),
+        EngineConfig { max_batch: 2, ..Default::default() },
+    );
+    for id in 0..3u64 {
+        engine
+            .submit(Request::new(id, vec![4 + id as u32, 9, 13, 22], 6))
+            .unwrap();
+    }
+    let out = engine.run_to_completion().unwrap();
+    assert_eq!(out.len(), 3);
+    assert!(engine.check_invariants().is_ok());
+    assert!(out.iter().all(|r| !r.tokens.is_empty()));
+}
