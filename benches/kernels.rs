@@ -4,24 +4,10 @@
 
 use gptqt::bench::Suite;
 use gptqt::kernels::{gemv_f32, Gemv};
-use gptqt::quant::fuse::FusedRow;
 use gptqt::quant::linear::{rtn_quantize, IntLayer};
 use gptqt::quant::pack::PackedBcLayer;
 use gptqt::tensor::Tensor;
 use gptqt::util::Rng;
-
-fn random_packed(rows: usize, cols: usize, planes: usize, rng: &mut Rng) -> PackedBcLayer {
-    let fused: Vec<FusedRow> = (0..rows)
-        .map(|_| FusedRow {
-            alphas: (0..planes).map(|p| 0.02 / (1 << p) as f32).collect(),
-            bias: 0.001,
-        })
-        .collect();
-    let patterns: Vec<Vec<u32>> = (0..rows)
-        .map(|_| (0..cols).map(|_| rng.below(1 << planes) as u32).collect())
-        .collect();
-    PackedBcLayer::pack(rows, cols, &fused, &patterns)
-}
 
 fn main() {
     let mut rng = Rng::new(1);
@@ -44,7 +30,7 @@ fn main() {
             std::hint::black_box(&y);
         });
 
-        let packed = random_packed(rows, cols, 3, &mut rng);
+        let packed = PackedBcLayer::random(rows, cols, 3, rows as u64);
         suite.run(&format!("gemv_lut3     {label}"), 3, 30, || {
             packed.gemv(&x, &mut y);
             std::hint::black_box(&y);
@@ -61,6 +47,38 @@ fn main() {
             &format!("gemv_lut3     {label}"),
         ) {
             println!("  speedup lut3 vs f32 at {label}: {r:.2}x");
+        }
+    }
+
+    // ---- batched gemm: weight streaming amortized across B activations
+    let mut suite = Suite::new("batched gemm weight reuse (1024x1024)");
+    let (rows, cols) = (1024usize, 1024usize);
+    let w = Tensor::randn(rows, cols, 0.02, &mut rng);
+    let dense = gptqt::kernels::DenseGemv::new(w.clone());
+    let (q, grids) = rtn_quantize(&w, 2);
+    let il = IntLayer::encode(&q, &grids, 2);
+    let packed = PackedBcLayer::random(rows, cols, 3, 2);
+    for &batch in &[1usize, 4, 16] {
+        let xs: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..cols).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys: Vec<Vec<f32>> = (0..batch).map(|_| vec![0.0f32; rows]).collect();
+        for (label, layer) in [
+            ("gemm_f32     ", &dense as &dyn Gemv),
+            ("gemm_dequant2", &il as &dyn Gemv),
+            ("gemm_lut3    ", &packed as &dyn Gemv),
+        ] {
+            let r = suite.run(&format!("{label} B={batch:<2}"), 2, 15, || {
+                layer.gemm(&refs, &mut ys);
+                std::hint::black_box(&ys);
+            });
+            let per_tok_ns = r.median_ns / batch as f64;
+            println!(
+                "  {label} B={batch:<2}: {per_tok_ns:>10.0} ns/token, \
+                 {:.3} MB weight traffic/token (amortized)",
+                layer.streamed_bytes() as f64 / batch as f64 / 1e6,
+            );
         }
     }
 }

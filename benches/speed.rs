@@ -1,11 +1,15 @@
 //! Table IV end-to-end: per-token decode latency of the full model under
 //! the three weight formats, across the OPT ladder (trained weights not
-//! required — timing only). This is the bench that regenerates the
-//! paper's speed table; `gptqt exp table4` prints the same numbers with
-//! table formatting.
+//! required — timing only), plus the batched-serving sweep: tokens/sec
+//! at batch {1, 4, 16} per format with the amortized weight traffic.
+//! `gptqt exp table4` prints the batch-1 numbers with table formatting.
 
-use gptqt::eval::speed::{build_variant, measure_decode, SpeedVariant};
+use gptqt::eval::speed::{
+    build_variant, measure_decode, measure_decode_batch, SpeedVariant,
+};
 use gptqt::model::{load_or_init, presets};
+
+const BATCHES: [usize; 3] = [1, 4, 16];
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
@@ -20,7 +24,7 @@ fn main() {
         "{:<12} {:>10} {:>14} {:>14} {:>14} {:>9}",
         "model", "params", "full fp32", "GPTQ2 dequant", "GPTQT3 LUT", "speedup"
     );
-    for name in ladder {
+    for name in &ladder {
         let (model, _) = load_or_init(name, "artifacts", 0).expect("preset");
         let mut ms = Vec::new();
         for variant in [
@@ -43,5 +47,58 @@ fn main() {
             ms[2],
             ms[0] / ms[2],
         );
+    }
+
+    // ---- batched decode: weight reuse across concurrent sequences -----
+    let batch_ladder: Vec<&str> = if fast {
+        vec!["opt-nano"]
+    } else {
+        vec!["opt-mini", "opt-sm"]
+    };
+    let gen_steps = if fast { 6 } else { 16 };
+    println!(
+        "\n=== bench suite: batched decode — tokens/sec at batch {{1, 4, 16}} \
+         (gen {gen_steps} steps/seq) ==="
+    );
+    println!(
+        "{:<12} {:<18} {:>6} {:>12} {:>14} {:>16}",
+        "model", "format", "batch", "ms/step", "tok/s", "MB/token (amort)"
+    );
+    for name in &batch_ladder {
+        let (model, _) = load_or_init(name, "artifacts", 0).expect("preset");
+        for variant in [
+            SpeedVariant::Full,
+            SpeedVariant::GptqInt { bits: 2 },
+            SpeedVariant::GptqtLut { bits: 3 },
+        ] {
+            let bm = build_variant(&model, variant, 0);
+            let mut tps_b1 = 0.0f64;
+            let mut tps_b16 = 0.0f64;
+            for &batch in &BATCHES {
+                let r = measure_decode_batch(&model.cfg, &bm, variant, batch, 8, gen_steps, 7);
+                if batch == 1 {
+                    tps_b1 = r.tokens_per_sec;
+                }
+                if batch == 16 {
+                    tps_b16 = r.tokens_per_sec;
+                }
+                println!(
+                    "{:<12} {:<18} {:>6} {:>12.3} {:>14.0} {:>16.3}",
+                    name,
+                    variant.label(),
+                    batch,
+                    r.ms_per_step,
+                    r.tokens_per_sec,
+                    r.amortized_mb_per_token,
+                );
+            }
+            if tps_b1 > 0.0 && tps_b16 > 0.0 {
+                println!(
+                    "  -> {} batched B=16 vs sequential B=1 throughput: {:.2}x",
+                    variant.label(),
+                    tps_b16 / tps_b1
+                );
+            }
+        }
     }
 }

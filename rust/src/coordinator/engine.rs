@@ -118,8 +118,12 @@ impl Engine {
         !self.running.is_empty() || !self.queue.is_empty()
     }
 
-    /// One scheduling tick: admit, advance every running sequence by one
-    /// unit (a prefill chunk or one decoded token), retire finished ones.
+    /// One scheduling tick: admit, prefill prompt-feeding sequences by a
+    /// chunk, then advance **all** decoding sequences together through
+    /// one batched decode call (weights stream once per tick, not once
+    /// per sequence), retire finished ones. Per-sequence sampling and
+    /// finish logic are untouched, so generations are token-identical to
+    /// the sequential per-sequence loop.
     pub fn step(&mut self) -> Result<Vec<Response>> {
         // ---- admission -------------------------------------------------
         for req in self.batcher.admit(&self.queue, self.running.len(), &mut self.kv) {
@@ -135,36 +139,92 @@ impl Engine {
             });
         }
 
-        // ---- advance ---------------------------------------------------
-        let mut finished: Vec<usize> = Vec::new();
-        for (idx, run) in self.running.iter_mut().enumerate() {
+        // ---- prefill: advance prompt-feeding sequences by one chunk ----
+        let mut prefilled_now: Vec<u64> = Vec::new();
+        for run in self.running.iter_mut() {
+            if run.prompt_idx >= run.req.prompt.len() {
+                continue;
+            }
             let t0 = Instant::now();
-            if run.prompt_idx < run.req.prompt.len() {
-                // prefill a chunk
-                let end = (run.prompt_idx + self.prefill_chunk).min(run.req.prompt.len());
-                let mut logits = Vec::new();
-                for i in run.prompt_idx..end {
-                    logits = self.backend.decode(run.req.prompt[i], &mut run.cache)?;
-                }
-                run.prompt_idx = end;
-                if run.prompt_idx == run.req.prompt.len() {
-                    // prompt complete → first token
-                    let tok = run.sampler.sample(&logits);
-                    run.generated.push(tok);
-                    self.kv.append_token(run.req.id);
-                    self.metrics.record_ttft(run.req.arrived.elapsed());
-                    self.metrics.record_token(t0.elapsed());
-                }
-            } else {
-                let last = *run.generated.last().expect("at least one generated token");
-                let logits = self.backend.decode(last, &mut run.cache)?;
+            let end = (run.prompt_idx + self.prefill_chunk).min(run.req.prompt.len());
+            let mut logits = Vec::new();
+            for i in run.prompt_idx..end {
+                logits = self.backend.decode(run.req.prompt[i], &mut run.cache)?;
+            }
+            run.prompt_idx = end;
+            if run.prompt_idx == run.req.prompt.len() {
+                // prompt complete → first token
                 let tok = run.sampler.sample(&logits);
                 run.generated.push(tok);
                 self.kv.append_token(run.req.id);
+                self.metrics.record_ttft(run.req.arrived.elapsed());
                 self.metrics.record_token(t0.elapsed());
+                prefilled_now.push(run.req.id);
             }
+        }
 
-            // ---- finish checks ------------------------------------
+        // ---- decode: one batched call over every runnable sequence -----
+        let mut decoders: Vec<&mut Running> = self
+            .running
+            .iter_mut()
+            .filter(|r| {
+                r.prompt_idx == r.req.prompt.len() && !prefilled_now.contains(&r.req.id)
+            })
+            .collect();
+        if !decoders.is_empty() {
+            match &self.backend {
+                // the batched hot path: every linear layer streams its
+                // weights once for the whole runnable set
+                EngineBackend::Cpu(m) => {
+                    let t0 = Instant::now();
+                    let tokens: Vec<u32> = decoders
+                        .iter()
+                        .map(|r| *r.generated.last().expect("at least one generated token"))
+                        .collect();
+                    let mut caches: Vec<&mut KvCache> = decoders
+                        .iter_mut()
+                        .map(|r| match &mut r.cache {
+                            SeqCache::Cpu(k) => k,
+                            SeqCache::Pjrt(_) => unreachable!("cache/backend mismatch"),
+                        })
+                        .collect();
+                    let all_logits = m.decode_batch_refs(&tokens, &mut caches);
+                    let per_token = t0.elapsed() / decoders.len() as u32;
+                    self.metrics.record_batch(decoders.len());
+                    for (run, logits) in decoders.iter_mut().zip(&all_logits) {
+                        let tok = run.sampler.sample(logits);
+                        run.generated.push(tok);
+                        self.kv.append_token(run.req.id);
+                        self.metrics.record_token(per_token);
+                    }
+                }
+                // PJRT has no batched executable ABI yet (ROADMAP):
+                // per-sequence decode with sample/push immediately after
+                // each step, so a mid-batch error leaves every completed
+                // sequence's cache and token list consistent
+                EngineBackend::Pjrt(m) => {
+                    for run in decoders.iter_mut() {
+                        let t0 = Instant::now();
+                        let last =
+                            *run.generated.last().expect("at least one generated token");
+                        let logits = match &mut run.cache {
+                            SeqCache::Pjrt(k) => m.decode(k, last)?,
+                            SeqCache::Cpu(_) => unreachable!("cache/backend mismatch"),
+                        };
+                        let tok = run.sampler.sample(&logits);
+                        run.generated.push(tok);
+                        self.kv.append_token(run.req.id);
+                        self.metrics.record_token(t0.elapsed());
+                        // occupancy 1: no weight-streaming amortization
+                        self.metrics.record_batch(1);
+                    }
+                }
+            }
+        }
+
+        // ---- finish checks ---------------------------------------------
+        let mut finished: Vec<usize> = Vec::new();
+        for (idx, run) in self.running.iter().enumerate() {
             if run.prompt_idx == run.req.prompt.len() {
                 let hit_eos = run.generated.last() == Some(&self.cfg.eos_token);
                 let hit_len = run.generated.len() >= run.req.max_new_tokens;
@@ -269,6 +329,13 @@ mod tests {
         assert!(e.check_invariants().is_ok());
         assert_eq!(e.metrics.completed, 9);
         assert!(e.metrics.generated_tokens > 0);
+        // with 9 requests and max_batch 3, decode ticks run >1 sequence
+        assert!(
+            e.metrics.max_batch_occupancy >= 2,
+            "batched decode never ran: max occupancy {}",
+            e.metrics.max_batch_occupancy
+        );
+        assert!(e.metrics.mean_batch_occupancy() > 1.0);
     }
 
     #[test]

@@ -14,6 +14,14 @@ pub struct Metrics {
     pub generated_tokens: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Number of batched decode calls issued by the engine.
+    pub decode_batches: u64,
+    /// Sequences advanced across all batched decode calls (tokens
+    /// decoded on the batched path).
+    pub decode_batch_tokens: u64,
+    /// Largest batch a single decode call carried — >1 means the engine
+    /// actually amortized weight streaming across sequences.
+    pub max_batch_occupancy: u64,
     wall: Option<Stopwatch>,
 }
 
@@ -41,6 +49,22 @@ impl Metrics {
         self.completed += 1;
     }
 
+    /// Record one batched decode call advancing `occupancy` sequences.
+    pub fn record_batch(&mut self, occupancy: usize) {
+        self.decode_batches += 1;
+        self.decode_batch_tokens += occupancy as u64;
+        self.max_batch_occupancy = self.max_batch_occupancy.max(occupancy as u64);
+    }
+
+    /// Mean sequences per batched decode call (0 when none ran).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.decode_batches == 0 {
+            0.0
+        } else {
+            self.decode_batch_tokens as f64 / self.decode_batches as f64
+        }
+    }
+
     /// Generated tokens per wall-clock second since engine start.
     pub fn throughput(&self) -> f64 {
         match &self.wall {
@@ -55,6 +79,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "completed={} rejected={} prompt_toks={} gen_toks={} throughput={:.1} tok/s\n\
+             batch   : calls={} mean_occupancy={:.2} max_occupancy={}\n\
              queue   : {}\n\
              ttft    : {}\n\
              per-tok : {}\n\
@@ -64,6 +89,9 @@ impl Metrics {
             self.prompt_tokens,
             self.generated_tokens,
             self.throughput(),
+            self.decode_batches,
+            self.mean_batch_occupancy(),
+            self.max_batch_occupancy,
             self.queue_time.summary(),
             self.ttft.summary(),
             self.per_token.summary(),
@@ -91,5 +119,18 @@ mod tests {
         let r = m.report();
         assert!(r.contains("completed=1"));
         assert!(r.contains("per-tok"));
+    }
+
+    #[test]
+    fn batch_occupancy_tracks_mean_and_max() {
+        let mut m = Metrics::new();
+        assert_eq!(m.mean_batch_occupancy(), 0.0);
+        m.record_batch(1);
+        m.record_batch(3);
+        m.record_batch(8);
+        assert_eq!(m.decode_batches, 3);
+        assert_eq!(m.max_batch_occupancy, 8);
+        assert!((m.mean_batch_occupancy() - 4.0).abs() < 1e-9);
+        assert!(m.report().contains("max_occupancy=8"));
     }
 }

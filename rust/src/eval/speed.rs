@@ -1,4 +1,5 @@
-//! Token-generation speed measurement (Table IV).
+//! Token-generation speed measurement (Table IV), single-sequence and
+//! batched.
 //!
 //! Protocol mirrors §III-E: generate a fixed number of tokens at batch 1
 //! and report mean seconds/token. The three contenders are the three
@@ -7,6 +8,12 @@
 //! * `full`   — dense f32 ([`DenseGemv`]),
 //! * `GPTQ 2` — int codes + on-the-fly dequant ([`IntLayer`]),
 //! * `GPTQT 3`— fused binary coding via LUT-GEMM ([`PackedBcLayer`]).
+//!
+//! [`measure_decode_batch`] extends the protocol to B concurrent
+//! sequences through [`BackendModel::decode_batch`]: one batched step
+//! decodes B tokens while streaming the weights once, so the reported
+//! amortized weight traffic is `streamed_bytes_per_token / B` — the
+//! serving-side win the batched kernels exist for.
 //!
 //! Weight *values* are irrelevant for timing, so quantized forms are
 //! synthesized directly (RTN codes / random sign patterns) — this keeps
@@ -135,6 +142,73 @@ pub fn measure_decode(
     }
 }
 
+/// Timing result for one (model, variant, batch) cell.
+#[derive(Debug, Clone)]
+pub struct BatchSpeedResult {
+    pub model: String,
+    pub variant: SpeedVariant,
+    pub batch: usize,
+    /// Wall-clock ms per batched decode step (each step emits `batch`
+    /// tokens).
+    pub ms_per_step: f64,
+    /// Generated tokens per second summed over the batch — the serving
+    /// throughput this configuration sustains.
+    pub tokens_per_sec: f64,
+    /// Total tokens generated during the timed window.
+    pub tokens: usize,
+    /// Weight MB streamed per *generated token*, amortized over the
+    /// batch (`streamed_bytes_per_token / batch`).
+    pub amortized_mb_per_token: f64,
+}
+
+/// Measure batched decode throughput: prefill `batch` independent
+/// sequences with `prompt_len` random tokens each (untimed), then run
+/// `gen_steps` timed [`BackendModel::decode_batch`] steps. Like
+/// [`measure_decode`], the first timed step re-feeds each sequence's
+/// last prompt token (token values are irrelevant for timing);
+/// subsequent steps use greedy feedback. `batch == 1` matches the
+/// sequential protocol exactly.
+pub fn measure_decode_batch(
+    cfg: &ModelConfig,
+    bm: &BackendModel,
+    variant: SpeedVariant,
+    batch: usize,
+    prompt_len: usize,
+    gen_steps: usize,
+    seed: u64,
+) -> BatchSpeedResult {
+    assert!(batch >= 1 && gen_steps >= 1);
+    assert!(prompt_len + gen_steps <= cfg.max_seq, "exceeds KV capacity");
+    let mut rng = Rng::new(seed);
+    let mut caches: Vec<KvCache> = (0..batch).map(|_| KvCache::new(cfg)).collect();
+    let mut lasts: Vec<u32> = vec![3; batch];
+    for (cache, last) in caches.iter_mut().zip(lasts.iter_mut()) {
+        for _ in 0..prompt_len {
+            let tok = 3 + rng.below((cfg.vocab - 3) as u64) as u32;
+            bm.decode_step(tok, cache);
+            *last = tok;
+        }
+    }
+    let sw = Stopwatch::start();
+    for _ in 0..gen_steps {
+        let logits = bm.decode_batch(&lasts, &mut caches);
+        for (last, l) in lasts.iter_mut().zip(&logits) {
+            *last = crate::coordinator::sampler::argmax(l);
+        }
+    }
+    let secs = sw.elapsed_secs();
+    let tokens = gen_steps * batch;
+    BatchSpeedResult {
+        model: cfg.name.to_string(),
+        variant,
+        batch,
+        ms_per_step: secs * 1e3 / gen_steps as f64,
+        tokens_per_sec: tokens as f64 / secs.max(1e-12),
+        tokens,
+        amortized_mb_per_token: bm.streamed_bytes_per_token() as f64 / batch as f64 / 1e6,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +234,30 @@ mod tests {
             let r = measure_decode(&m.cfg, &bm, v, 4, 4, 2);
             assert!(r.ms_per_token > 0.0, "{v:?}");
             assert_eq!(r.tokens, 4);
+        }
+    }
+
+    #[test]
+    fn batched_variants_run_at_all_batch_sizes() {
+        let m = tiny_model();
+        for v in [
+            SpeedVariant::Full,
+            SpeedVariant::GptqInt { bits: 2 },
+            SpeedVariant::GptqtLut { bits: 3 },
+        ] {
+            let bm = build_variant(&m, v, 1);
+            for batch in [1usize, 4] {
+                let r = measure_decode_batch(&m.cfg, &bm, v, batch, 4, 3, 2);
+                assert_eq!(r.batch, batch, "{v:?}");
+                assert_eq!(r.tokens, 3 * batch);
+                assert!(r.tokens_per_sec > 0.0 && r.ms_per_step > 0.0);
+            }
+            // amortization accounting: B=4 streams 4x less per token
+            let r1 = measure_decode_batch(&m.cfg, &bm, v, 1, 4, 2, 2);
+            let r4 = measure_decode_batch(&m.cfg, &bm, v, 4, 4, 2, 2);
+            assert!(
+                (r1.amortized_mb_per_token / r4.amortized_mb_per_token - 4.0).abs() < 1e-6
+            );
         }
     }
 

@@ -13,6 +13,32 @@
 
 use crate::quant::linear::IntLayer;
 
+/// Integer-code dot product for one row (4-way unrolled). Shared by the
+/// single-sequence and batched paths so both produce bit-identical
+/// results — the invariant the batched engine's token parity rests on.
+#[inline]
+fn row_code_dot(codes: &[u8], x: &[f32]) -> f32 {
+    let cols = x.len();
+    debug_assert_eq!(codes.len(), cols);
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = cols / 4;
+    for i in 0..chunks {
+        let o = i * 4;
+        acc0 += codes[o] as f32 * x[o];
+        acc1 += codes[o + 1] as f32 * x[o + 1];
+        acc2 += codes[o + 2] as f32 * x[o + 2];
+        acc3 += codes[o + 3] as f32 * x[o + 3];
+    }
+    let mut acc = (acc0 + acc1) + (acc2 + acc3);
+    for c in chunks * 4..cols {
+        acc += codes[c] as f32 * x[c];
+    }
+    acc
+}
+
 /// `y = Ŵ·x` over the integer layer.
 pub fn gemv_dequant(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), layer.cols);
@@ -22,23 +48,34 @@ pub fn gemv_dequant(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
     for r in 0..layer.rows {
         let (s, qz) = layer.row_params[r];
         let codes = &layer.codes[r * cols..(r + 1) * cols];
-        let mut acc0 = 0.0f32;
-        let mut acc1 = 0.0f32;
-        let mut acc2 = 0.0f32;
-        let mut acc3 = 0.0f32;
-        let chunks = cols / 4;
-        for i in 0..chunks {
-            let o = i * 4;
-            acc0 += codes[o] as f32 * x[o];
-            acc1 += codes[o + 1] as f32 * x[o + 1];
-            acc2 += codes[o + 2] as f32 * x[o + 2];
-            acc3 += codes[o + 3] as f32 * x[o + 3];
-        }
-        let mut acc = (acc0 + acc1) + (acc2 + acc3);
-        for c in chunks * 4..cols {
-            acc += codes[c] as f32 * x[c];
-        }
+        let acc = row_code_dot(codes, x);
         y[r] = s * acc + s * qz * sum_x;
+    }
+}
+
+/// Batched `ys[b] = Ŵ·xs[b]`: each row's packed codes are streamed from
+/// memory once and applied to every activation in the batch while they
+/// sit in cache — the per-token weight traffic drops from
+/// `packed_bytes()` to `packed_bytes() / B`. Per batch item the
+/// arithmetic is exactly [`gemv_dequant`]'s (same unrolled accumulators,
+/// same order), so batched and sequential decode agree bit-for-bit.
+pub fn gemm_dequant(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    assert_eq!(xs.len(), ys.len(), "gemm_dequant batch size mismatch");
+    for x in xs {
+        assert_eq!(x.len(), layer.cols);
+    }
+    for y in ys.iter() {
+        assert_eq!(y.len(), layer.rows);
+    }
+    let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
+    let cols = layer.cols;
+    for r in 0..layer.rows {
+        let (s, qz) = layer.row_params[r];
+        let codes = &layer.codes[r * cols..(r + 1) * cols];
+        for (bi, x) in xs.iter().enumerate() {
+            let acc = row_code_dot(codes, x);
+            ys[bi][r] = s * acc + s * qz * sum_x[bi];
+        }
     }
 }
 
@@ -65,6 +102,27 @@ mod tests {
             for (r, (a, b)) in y.iter().zip(&y_ref).enumerate() {
                 let tol = 1e-4 * (cols as f32).sqrt() * (1.0 + b.abs());
                 assert!((a - b).abs() < tol, "({rows}x{cols}) row {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_is_bitwise_identical_to_gemv() {
+        let mut rng = Rng::new(313);
+        for (rows, cols) in [(8, 16), (33, 77)] {
+            let w = Tensor::randn(rows, cols, 1.0, &mut rng);
+            let (q, grids) = rtn_quantize(&w, 3);
+            let il = IntLayer::encode(&q, &grids, 3);
+            let xs: Vec<Vec<f32>> = (0..4)
+                .map(|_| (0..cols).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let mut ys: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; rows]).collect();
+            gemm_dequant(&il, &refs, &mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut y_ref = vec![0.0; rows];
+                gemv_dequant(&il, x, &mut y_ref);
+                assert_eq!(y, &y_ref);
             }
         }
     }

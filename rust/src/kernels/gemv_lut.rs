@@ -90,6 +90,80 @@ pub fn gemv_lut(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Batched `ys[b] = Ŵ·xs[b]` — the LUT-GEMM path with weight reuse.
+///
+/// The per-group 256-entry LUTs are built once per batch item (that cost
+/// scales with B, as in B gemvs), but the packed sign bytes — the
+/// dominant memory stream, `rows·planes` bytes per group — are walked
+/// **once per group block for the whole batch**: every code byte is
+/// looked up in all B tables while it is register/L1-hot. Per-token
+/// weight traffic is `packed_bytes() / B`.
+///
+/// Per batch item the accumulation order is identical to [`gemv_lut`]
+/// (groups added in ascending order onto the same `(row, plane)`
+/// accumulator, same epilogue), so batched results are bit-identical to
+/// sequential ones.
+pub fn gemm_lut(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    let nb = xs.len();
+    assert_eq!(nb, ys.len(), "gemm_lut batch size mismatch");
+    for x in xs {
+        assert_eq!(x.len(), layer.cols);
+    }
+    for y in ys.iter() {
+        assert_eq!(y.len(), layer.rows);
+    }
+    if nb == 0 {
+        return;
+    }
+    let rows = layer.rows;
+    let planes = layer.planes;
+    let slots = rows * planes;
+    let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
+
+    // per-item (row, plane) accumulators, batch-major
+    let mut acc = vec![0.0f32; nb * slots];
+    // per-item LUTs for the current group block, index `bi·GBLOCK + g`
+    let mut luts = vec![[0.0f32; 1 << GROUP]; nb * GBLOCK];
+
+    for gb in (0..layer.groups).step_by(GBLOCK) {
+        let gn = GBLOCK.min(layer.groups - gb);
+        for (bi, x) in xs.iter().enumerate() {
+            for g in 0..gn {
+                let base = (gb + g) * GROUP;
+                let take = GROUP.min(layer.cols - base);
+                let mut xg = [0.0f32; GROUP];
+                xg[..take].copy_from_slice(&x[base..base + take]);
+                build_lut(&xg, &mut luts[bi * GBLOCK + g]);
+            }
+        }
+        let codes = &layer.codes[gb * slots..(gb + gn) * slots];
+        for bi in 0..nb {
+            let lut_b = &luts[bi * GBLOCK..bi * GBLOCK + gn];
+            let arow = &mut acc[bi * slots..(bi + 1) * slots];
+            for (i, slot) in arow.iter_mut().enumerate() {
+                let mut s = *slot;
+                for (g, lut) in lut_b.iter().enumerate() {
+                    s += lut[codes[g * slots + i] as usize];
+                }
+                *slot = s;
+            }
+        }
+    }
+
+    for (bi, y) in ys.iter_mut().enumerate() {
+        let acc_b = &acc[bi * slots..(bi + 1) * slots];
+        for r in 0..rows {
+            let mut v = layer.bias[r] * sum_x[bi];
+            let arow = &layer.alphas[r * planes..(r + 1) * planes];
+            let crow = &acc_b[r * planes..(r + 1) * planes];
+            for (a, s) in arow.iter().zip(crow) {
+                v += a * s;
+            }
+            y[r] = v;
+        }
+    }
+}
+
 /// Fill `lut[pattern] = Σ_k sign_k(pattern)·xg[k]` for all 256 patterns
 /// in 256 adds (DP over the lowest set bit).
 #[inline]
@@ -109,22 +183,11 @@ pub fn build_lut(xg: &[f32; GROUP], lut: &mut [f32; 1 << GROUP]) {
 mod tests {
     use super::*;
     use crate::kernels::gemv_f32;
-    use crate::quant::fuse::FusedRow;
     use crate::quant::pack::PackedBcLayer;
     use crate::util::Rng;
 
     fn random_packed(rows: usize, cols: usize, planes: usize, seed: u64) -> PackedBcLayer {
-        let mut rng = Rng::new(seed);
-        let fused: Vec<FusedRow> = (0..rows)
-            .map(|_| FusedRow {
-                alphas: (0..planes).map(|_| rng.next_f32() + 0.1).collect(),
-                bias: rng.normal_f32() * 0.1,
-            })
-            .collect();
-        let patterns: Vec<Vec<u32>> = (0..rows)
-            .map(|_| (0..cols).map(|_| rng.below(1 << planes) as u32).collect())
-            .collect();
-        PackedBcLayer::pack(rows, cols, &fused, &patterns)
+        PackedBcLayer::random(rows, cols, planes, seed)
     }
 
     #[test]
@@ -162,6 +225,27 @@ mod tests {
                     (a - b).abs() < tol,
                     "({rows}x{cols}x{planes}) row {r}: {a} vs {b}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_is_bitwise_identical_to_gemv() {
+        let mut rng = Rng::new(325);
+        // 130 cols exercises both a ragged final group and a partial
+        // GBLOCK tail (17 groups = 2 blocks of 8 + 1)
+        for (rows, cols, planes) in [(16, 40, 3), (8, 130, 2)] {
+            let layer = random_packed(rows, cols, planes, 77 + rows as u64);
+            let xs: Vec<Vec<f32>> = (0..5)
+                .map(|_| (0..cols).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let mut ys: Vec<Vec<f32>> = (0..5).map(|_| vec![0.0; rows]).collect();
+            gemm_lut(&layer, &refs, &mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut y_ref = vec![0.0; rows];
+                gemv_lut(&layer, x, &mut y_ref);
+                assert_eq!(y, &y_ref);
             }
         }
     }

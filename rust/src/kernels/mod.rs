@@ -1,17 +1,32 @@
 //! Serving hot-path kernels — the CPU realization of the three weight
 //! formats the paper races in Table IV:
 //!
-//! | format                | kernel         | paper row      |
-//! |-----------------------|----------------|----------------|
-//! | dense f32             | [`gemv_f32`]   | `full` (fp16)  |
-//! | packed int + dequant  | [`gemv_dequant`]| `GPTQ`        |
-//! | fused binary coding   | [`gemv_lut`]   | `GPTQT` (LUT-GEMM) |
+//! | format                | gemv kernel     | batched gemm       | paper row      |
+//! |-----------------------|-----------------|--------------------|----------------|
+//! | dense f32             | [`gemv_f32`]    | [`gemm_f32`]       | `full` (fp16)  |
+//! | packed int + dequant  | [`gemv_dequant`]| [`gemm_dequant`]   | `GPTQ`         |
+//! | fused binary coding   | [`gemv_lut`]    | [`gemm_lut`]       | `GPTQT` (LUT-GEMM) |
 //!
 //! All three implement [`Gemv`], so the decode loop and the speed
 //! benchmarks swap formats without touching the model code. In the
 //! bandwidth-bound single-token decode regime the ranking is decided by
 //! bytes streamed per output element: 4 B (f32) vs ~`bits/8` B (packed)
 //! — the same asymmetry that gives the paper its 30B-scale speedups.
+//!
+//! **Batched weight reuse.** A server decoding B concurrent sequences
+//! would stream the weights B times through the gemv path; the batched
+//! [`Gemv::gemm`] entry point streams each weight row/byte **once per
+//! batch** and applies it to all B activation vectors (per-row dequant
+//! params and per-group LUT tables are likewise built once per batch
+//! item but the dominant packed-code traffic is amortized B×). This is
+//! the same weight-reuse win LUT-GEMM and FineQuant report for batched
+//! serving. Every `gemm` is element-for-element identical in fp
+//! arithmetic order to B independent `gemv` calls, so batched decode is
+//! token-identical to sequential decode (tested in
+//! `tests/kernel_parity.rs`).
+//!
+//! [`gemm_dequant`]: gemv_dequant::gemm_dequant
+//! [`gemm_lut`]: gemv_lut::gemm_lut
 
 pub mod gemv_dequant;
 pub mod gemv_lut;
@@ -20,14 +35,31 @@ use crate::quant::linear::IntLayer;
 use crate::quant::pack::PackedBcLayer;
 use crate::tensor::Tensor;
 
-/// A matrix–vector product backend: `y = W·x` for one weight format.
+/// A matrix–vector product backend: `y = W·x` for one weight format,
+/// plus the batched `Y = W·X` form that amortizes weight streaming
+/// across concurrent sequences.
 pub trait Gemv: Send + Sync {
     fn rows(&self) -> usize;
     fn cols(&self) -> usize;
     /// `y` must have length `rows()`, `x` length `cols()`.
     fn gemv(&self, x: &[f32], y: &mut [f32]);
+    /// Batched matvec: `ys[b] = W·xs[b]` for every batch item `b`.
+    ///
+    /// Implementations stream the weights once for the whole batch.
+    /// Contract: the result must be *identical* (same fp operation
+    /// order per item) to calling [`Gemv::gemv`] on each item — the
+    /// engine relies on this for batched == sequential token parity.
+    /// The default falls back to that per-item loop.
+    fn gemm(&self, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+        assert_eq!(xs.len(), ys.len(), "gemm batch size mismatch");
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            self.gemv(x, y);
+        }
+    }
     /// Bytes this layer streams from memory per matvec — the quantity
-    /// that dominates decode latency (Table IV's bandwidth story).
+    /// that dominates decode latency (Table IV's bandwidth story). A
+    /// batched gemm streams this once per batch, i.e. `streamed_bytes /
+    /// B` per generated token.
     fn streamed_bytes(&self) -> usize;
     /// Human label for benches.
     fn label(&self) -> &'static str;
@@ -57,6 +89,10 @@ impl Gemv for DenseGemv {
         gemv_f32(&self.w, x, y);
     }
 
+    fn gemm(&self, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+        gemm_f32(&self.w, xs, ys);
+    }
+
     fn streamed_bytes(&self) -> usize {
         self.w.len() * 4
     }
@@ -75,6 +111,26 @@ pub fn gemv_f32(w: &Tensor, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Dense f32 batched matvec: each weight row is streamed once and dotted
+/// against every batch activation while it is cache-hot — `rows·cols`
+/// weight traffic for the whole batch instead of per sequence. Per item
+/// the arithmetic is exactly [`gemv_f32`]'s.
+pub fn gemm_f32(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    assert_eq!(xs.len(), ys.len(), "gemm_f32 batch size mismatch");
+    for x in xs {
+        assert_eq!(x.len(), w.cols());
+    }
+    for y in ys.iter() {
+        assert_eq!(y.len(), w.rows());
+    }
+    for r in 0..w.rows() {
+        let row = w.row(r);
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            y[r] = crate::tensor::ops::dot(row, x);
+        }
+    }
+}
+
 impl Gemv for IntLayer {
     fn rows(&self) -> usize {
         self.rows
@@ -86,6 +142,10 @@ impl Gemv for IntLayer {
 
     fn gemv(&self, x: &[f32], y: &mut [f32]) {
         gemv_dequant::gemv_dequant(self, x, y);
+    }
+
+    fn gemm(&self, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+        gemv_dequant::gemm_dequant(self, xs, ys);
     }
 
     fn streamed_bytes(&self) -> usize {
@@ -108,6 +168,10 @@ impl Gemv for PackedBcLayer {
 
     fn gemv(&self, x: &[f32], y: &mut [f32]) {
         gemv_lut::gemv_lut(self, x, y);
+    }
+
+    fn gemm(&self, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+        gemv_lut::gemm_lut(self, xs, ys);
     }
 
     fn streamed_bytes(&self) -> usize {
@@ -134,6 +198,24 @@ mod tests {
         let y_ref = w.gemv(&x);
         for (a, b) in y.iter().zip(&y_ref) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dense_gemm_equals_per_item_gemv() {
+        let mut rng = Rng::new(303);
+        let w = Tensor::randn(19, 45, 1.0, &mut rng);
+        let dense = DenseGemv::new(w.clone());
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..45).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys: Vec<Vec<f32>> = (0..5).map(|_| vec![0.0; 19]).collect();
+        dense.gemm(&refs, &mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut y_ref = vec![0.0; 19];
+            dense.gemv(x, &mut y_ref);
+            assert_eq!(y, &y_ref, "gemm must be bitwise identical to gemv");
         }
     }
 

@@ -20,9 +20,27 @@
 //!   to HLO *text* artifacts.
 //! * **L3 — this crate**: the runtime system. Quantization library
 //!   ([`quant`]), CPU hot-path kernels ([`kernels`]), PJRT runtime
-//!   ([`runtime`]), serving coordinator ([`coordinator`]), synthetic data
-//!   ([`data`]), model/weight substrate ([`model`]), evaluation and
-//!   experiment drivers ([`eval`]), and a micro-bench harness ([`bench`]).
+//!   ([`runtime`], behind the `pjrt` feature), serving coordinator
+//!   ([`coordinator`]), synthetic data ([`data`]), model/weight substrate
+//!   ([`model`]), evaluation and experiment drivers ([`eval`]), and a
+//!   micro-bench harness ([`bench`]).
+//!
+//! ## Serving hot path: gemv *and* batched gemm
+//!
+//! Every linear layer is a [`kernels::Gemv`] backend with two entry
+//! points: single-sequence `gemv` (the paper's §III-E batch-1 latency
+//! protocol) and batched `gemm`, which streams each weight row / packed
+//! code byte **once per batch of concurrent sequences** instead of once
+//! per sequence. Single-token decode is bandwidth-bound, so at batch B
+//! the per-token weight traffic drops to `streamed_bytes / B` — the
+//! LUT-GEMM/FineQuant-style weight-reuse win a multi-tenant server
+//! needs. [`model::BackendModel::decode_batch`] threads the batched
+//! kernels through the whole transformer step, and the coordinator's
+//! `Engine::step` collects all runnable sequences into one batched
+//! decode call per tick. Batched arithmetic is per-item identical to the
+//! sequential path (same fp operation order), so generations are
+//! token-identical either way — `tests/kernel_parity.rs` and
+//! `tests/engine_batched.rs` pin both properties.
 //!
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + trained weights once; the `gptqt` binary is

@@ -91,14 +91,18 @@ impl BackendModel {
         BackendModel { cfg: model.cfg.clone(), weights: model.weights.clone(), linears }
     }
 
-    fn gemv(&self, name: &str, x: &[f32]) -> Vec<f32> {
+    /// Batched linear: one weight stream serves every sequence in the
+    /// batch (see [`crate::kernels::Gemv::gemm`]). Batch 1 (the
+    /// [`BackendModel::decode_step`] path) hits each backend's `gemm`,
+    /// which is bitwise-identical to its `gemv`.
+    fn gemm(&self, name: &str, xs: &[&[f32]]) -> Vec<Vec<f32>> {
         let b = self
             .linears
             .get(name)
             .unwrap_or_else(|| panic!("no backend for {name}"));
-        let mut y = vec![0.0f32; b.rows()];
-        b.gemv(x, &mut y);
-        y
+        let mut ys: Vec<Vec<f32>> = (0..xs.len()).map(|_| vec![0.0f32; b.rows()]).collect();
+        b.gemm(xs, &mut ys);
+        ys
     }
 
     /// Total weight bytes streamed per decoded token — the bandwidth
@@ -153,10 +157,48 @@ impl BackendModel {
 
     /// Run one decode step: consume `token` at position `cache.len`,
     /// append K/V, return the next-token logits.
+    ///
+    /// Implemented as [`BackendModel::decode_batch_refs`] at batch 1 —
+    /// one shared transformer step means batched and sequential decode
+    /// cannot drift apart (the engine's token-parity guarantee holds by
+    /// construction), and `gemm(B=1)` is pinned bitwise-identical to
+    /// `gemv` in the kernel layer.
     pub fn decode_step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
+        let mut caches = [cache];
+        self.decode_batch_refs(&[token], &mut caches)
+            .pop()
+            .expect("decode_batch_refs returns one logits vector per sequence")
+    }
+
+    /// One decode step for a batch of independent sequences:
+    /// `tokens[b]` is consumed at position `caches[b].len`, each cache
+    /// gets its K/V appended, and the per-sequence next-token logits are
+    /// returned in batch order.
+    ///
+    /// Every linear layer runs through the batched [`Gemv::gemm`]
+    /// kernels, so the weights are streamed once per *batch* instead of
+    /// once per sequence — the amortization a multi-tenant server needs.
+    /// Sequences may sit at different positions. Per sequence the fp
+    /// arithmetic is identical to [`BackendModel::decode_step`], so
+    /// greedy generation is token-identical to a sequential loop.
+    pub fn decode_batch(&self, tokens: &[u32], caches: &mut [KvCache]) -> Vec<Vec<f32>> {
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        self.decode_batch_refs(tokens, &mut refs)
+    }
+
+    /// [`BackendModel::decode_batch`] over borrowed caches — the form
+    /// the engine uses when the caches live inside its running set.
+    pub fn decode_batch_refs(
+        &self,
+        tokens: &[u32],
+        caches: &mut [&mut KvCache],
+    ) -> Vec<Vec<f32>> {
         let cfg = &self.cfg;
-        let pos = cache.len;
-        assert!(pos < cfg.max_seq, "KV cache full");
+        let nb = tokens.len();
+        assert_eq!(caches.len(), nb, "decode_batch token/cache count mismatch");
+        if nb == 0 {
+            return Vec::new();
+        }
         let heads = cfg.heads;
         let dh = cfg.head_dim();
         let scale = 1.0 / (dh as f32).sqrt();
@@ -165,73 +207,113 @@ impl BackendModel {
         } else {
             vec![0.0; heads]
         };
+        let pos: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        for (bi, &p) in pos.iter().enumerate() {
+            assert!(p < cfg.max_seq, "KV cache full (batch seq {bi})");
+        }
 
-        let mut x = self.embed_one(token, pos);
+        let mut xs: Vec<Vec<f32>> = tokens
+            .iter()
+            .zip(&pos)
+            .map(|(&t, &p)| self.embed_one(t, p))
+            .collect();
         for i in 0..cfg.layers {
-            let h = self.norm(&format!("L{i}.ln1"), &x);
-            let mut q = self.gemv(&format!("L{i}.attn.q"), &h);
-            let mut k = self.gemv(&format!("L{i}.attn.k"), &h);
-            let v = self.gemv(&format!("L{i}.attn.v"), &h);
-            if cfg.family == Family::Llama {
-                rope_vec(&mut q, heads, pos);
-                rope_vec(&mut k, heads, pos);
-            }
-            cache.k[i].row_mut(pos).copy_from_slice(&k);
-            cache.v[i].row_mut(pos).copy_from_slice(&v);
-
-            let mut ctx = vec![0.0f32; cfg.d_model];
-            let mut scores = vec![0.0f32; pos + 1];
-            for head in 0..heads {
-                let base = head * dh;
-                let qh = &q[base..base + dh];
-                for (j, s) in scores.iter_mut().enumerate() {
-                    let krow = &cache.k[i].row(j)[base..base + dh];
-                    let mut dot = 0.0f32;
-                    for (a, b) in qh.iter().zip(krow) {
-                        dot += a * b;
-                    }
-                    *s = dot * scale + slopes[head] * (j as f32 - pos as f32);
+            let hs: Vec<Vec<f32>> =
+                xs.iter().map(|x| self.norm(&format!("L{i}.ln1"), x)).collect();
+            let hrefs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
+            let mut qs = self.gemm(&format!("L{i}.attn.q"), &hrefs);
+            let mut ks = self.gemm(&format!("L{i}.attn.k"), &hrefs);
+            let vs = self.gemm(&format!("L{i}.attn.v"), &hrefs);
+            for (bi, cache) in caches.iter_mut().enumerate() {
+                if cfg.family == Family::Llama {
+                    rope_vec(&mut qs[bi], heads, pos[bi]);
+                    rope_vec(&mut ks[bi], heads, pos[bi]);
                 }
-                softmax(&mut scores);
-                let out = &mut ctx[base..base + dh];
-                for (j, &p) in scores.iter().enumerate() {
-                    let vrow = &cache.v[i].row(j)[base..base + dh];
-                    for (o, &vv) in out.iter_mut().zip(vrow) {
-                        *o += p * vv;
-                    }
-                }
-            }
-            let attn = self.gemv(&format!("L{i}.attn.o"), &ctx);
-            for (xv, &a) in x.iter_mut().zip(&attn) {
-                *xv += a;
+                cache.k[i].row_mut(pos[bi]).copy_from_slice(&ks[bi]);
+                cache.v[i].row_mut(pos[bi]).copy_from_slice(&vs[bi]);
             }
 
-            let h2 = self.norm(&format!("L{i}.ln2"), &x);
-            let ff = match cfg.family {
+            // attention stays per-sequence: each cache has its own length
+            let mut ctxs: Vec<Vec<f32>> = Vec::with_capacity(nb);
+            for (bi, cache) in caches.iter().enumerate() {
+                let p = pos[bi];
+                let q = &qs[bi];
+                let mut ctx = vec![0.0f32; cfg.d_model];
+                let mut scores = vec![0.0f32; p + 1];
+                for head in 0..heads {
+                    let base = head * dh;
+                    let qh = &q[base..base + dh];
+                    for (j, s) in scores.iter_mut().enumerate() {
+                        let krow = &cache.k[i].row(j)[base..base + dh];
+                        let mut dot = 0.0f32;
+                        for (a, b) in qh.iter().zip(krow) {
+                            dot += a * b;
+                        }
+                        *s = dot * scale + slopes[head] * (j as f32 - p as f32);
+                    }
+                    softmax(&mut scores);
+                    let out = &mut ctx[base..base + dh];
+                    for (j, &pw) in scores.iter().enumerate() {
+                        let vrow = &cache.v[i].row(j)[base..base + dh];
+                        for (o, &vv) in out.iter_mut().zip(vrow) {
+                            *o += pw * vv;
+                        }
+                    }
+                }
+                ctxs.push(ctx);
+            }
+            let crefs: Vec<&[f32]> = ctxs.iter().map(|v| v.as_slice()).collect();
+            let attns = self.gemm(&format!("L{i}.attn.o"), &crefs);
+            for (x, a) in xs.iter_mut().zip(&attns) {
+                for (xv, &av) in x.iter_mut().zip(a) {
+                    *xv += av;
+                }
+            }
+
+            let h2s: Vec<Vec<f32>> =
+                xs.iter().map(|x| self.norm(&format!("L{i}.ln2"), x)).collect();
+            let h2refs: Vec<&[f32]> = h2s.iter().map(|v| v.as_slice()).collect();
+            let ffs = match cfg.family {
                 Family::Llama => {
-                    let gate = self.gemv(&format!("L{i}.ff.gate"), &h2);
-                    let up = self.gemv(&format!("L{i}.ff.up"), &h2);
-                    let act: Vec<f32> =
-                        gate.iter().zip(&up).map(|(&g, &u)| silu(g) * u).collect();
-                    self.gemv(&format!("L{i}.ff.down"), &act)
+                    let gates = self.gemm(&format!("L{i}.ff.gate"), &h2refs);
+                    let ups = self.gemm(&format!("L{i}.ff.up"), &h2refs);
+                    let acts: Vec<Vec<f32>> = gates
+                        .iter()
+                        .zip(&ups)
+                        .map(|(gate, up)| {
+                            gate.iter().zip(up).map(|(&g, &u)| silu(g) * u).collect()
+                        })
+                        .collect();
+                    let arefs: Vec<&[f32]> = acts.iter().map(|v| v.as_slice()).collect();
+                    self.gemm(&format!("L{i}.ff.down"), &arefs)
                 }
                 _ => {
-                    let up = self.gemv(&format!("L{i}.ff.up"), &h2);
-                    let act: Vec<f32> = up.iter().map(|&u| gelu(u)).collect();
-                    self.gemv(&format!("L{i}.ff.down"), &act)
+                    let ups = self.gemm(&format!("L{i}.ff.up"), &h2refs);
+                    let acts: Vec<Vec<f32>> = ups
+                        .iter()
+                        .map(|up| up.iter().map(|&u| gelu(u)).collect())
+                        .collect();
+                    let arefs: Vec<&[f32]> = acts.iter().map(|v| v.as_slice()).collect();
+                    self.gemm(&format!("L{i}.ff.down"), &arefs)
                 }
             };
-            for (xv, &f) in x.iter_mut().zip(&ff) {
-                *xv += f;
+            for (x, f) in xs.iter_mut().zip(&ffs) {
+                for (xv, &fv) in x.iter_mut().zip(f) {
+                    *xv += fv;
+                }
             }
         }
-        cache.len = pos + 1;
+        for (cache, &p) in caches.iter_mut().zip(&pos) {
+            cache.len = p + 1;
+        }
 
-        let xf = self.norm("final_ln", &x);
-        // tied-embedding logits (fp32 — the paper keeps the head in fp16)
+        // tied-embedding logits through the batched dense kernel: the
+        // (vocab × d_model) embedding streams once for the whole batch
+        let xfs: Vec<Vec<f32>> = xs.iter().map(|x| self.norm("final_ln", x)).collect();
+        let xrefs: Vec<&[f32]> = xfs.iter().map(|v| v.as_slice()).collect();
         let tok = self.weights.expect("tok_emb");
-        let mut logits = vec![0.0f32; cfg.vocab];
-        crate::kernels::gemv_f32(tok, &xf, &mut logits);
+        let mut logits: Vec<Vec<f32>> = (0..nb).map(|_| vec![0.0f32; cfg.vocab]).collect();
+        crate::kernels::gemm_f32(tok, &xrefs, &mut logits);
         logits
     }
 
@@ -320,6 +402,58 @@ mod tests {
         }
         assert_eq!(c1.len, c2.len);
         for (a, b) in l1.iter().zip(&l2) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn decode_batch_matches_decode_step_mixed_lengths() {
+        for fam in [Family::Opt, Family::Llama, Family::Bloom] {
+            let m = tiny(fam);
+            let bm = BackendModel::dense(&m);
+            // three sequences with different histories/positions
+            let prompts: [&[u32]; 3] = [&[3, 9, 27], &[44, 5], &[13, 60, 2, 7, 1]];
+            let mut batch_caches: Vec<KvCache> =
+                (0..3).map(|_| KvCache::new(&m.cfg)).collect();
+            let mut seq_caches: Vec<KvCache> =
+                (0..3).map(|_| KvCache::new(&m.cfg)).collect();
+            for (bi, prompt) in prompts.iter().enumerate() {
+                for &t in prompt.iter() {
+                    bm.decode_step(t, &mut batch_caches[bi]);
+                    bm.decode_step(t, &mut seq_caches[bi]);
+                }
+            }
+            // two batched steps vs two sequential steps, greedy feedback
+            let mut batch_tokens: Vec<u32> = vec![11, 22, 33];
+            let mut seq_tokens = batch_tokens.clone();
+            for _ in 0..2 {
+                let batch_logits = bm.decode_batch(&batch_tokens, &mut batch_caches);
+                for (bi, logits) in batch_logits.iter().enumerate() {
+                    let seq_logits = bm.decode_step(seq_tokens[bi], &mut seq_caches[bi]);
+                    assert_eq!(
+                        logits, &seq_logits,
+                        "{fam:?} batched logits diverged from sequential (seq {bi})"
+                    );
+                    batch_tokens[bi] = crate::coordinator::sampler::argmax(logits);
+                    seq_tokens[bi] = crate::coordinator::sampler::argmax(&seq_logits);
+                }
+                assert_eq!(batch_tokens, seq_tokens);
+            }
+            for (a, b) in batch_caches.iter().zip(&seq_caches) {
+                assert_eq!(a.len, b.len);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_of_one_equals_decode_step() {
+        let m = tiny(Family::Opt);
+        let bm = BackendModel::dense(&m);
+        let mut c1 = KvCache::new(&m.cfg);
+        let mut c2 = vec![KvCache::new(&m.cfg)];
+        for &t in &[5u32, 9, 13] {
+            let a = bm.decode_step(t, &mut c1);
+            let b = bm.decode_batch(&[t], &mut c2).remove(0);
             assert_eq!(a, b);
         }
     }

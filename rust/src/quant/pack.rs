@@ -74,6 +74,23 @@ impl PackedBcLayer {
         PackedBcLayer { rows, cols, planes, groups, alphas, bias, codes }
     }
 
+    /// Deterministic randomly-signed layer (positive α̂s, small bias) —
+    /// shared scaffolding for the kernel parity tests and micro-benches,
+    /// where only the *format* matters, not the values.
+    pub fn random(rows: usize, cols: usize, planes: usize, seed: u64) -> Self {
+        let mut rng = crate::util::Rng::new(seed);
+        let fused: Vec<FusedRow> = (0..rows)
+            .map(|_| FusedRow {
+                alphas: (0..planes).map(|_| rng.next_f32() + 0.1).collect(),
+                bias: rng.normal_f32() * 0.1,
+            })
+            .collect();
+        let patterns: Vec<Vec<u32>> = (0..rows)
+            .map(|_| (0..cols).map(|_| rng.below(1 << planes) as u32).collect())
+            .collect();
+        Self::pack(rows, cols, &fused, &patterns)
+    }
+
     /// Sign of element `(r, c)` on plane `p`: `+1.0` or `-1.0`.
     #[inline]
     pub fn sign(&self, r: usize, c: usize, p: usize) -> f32 {

@@ -1,49 +1,11 @@
 //! A compiled model: executables + device-resident weights + KV buffers.
+//! Only built with the `pjrt` feature (needs the `xla` bindings crate).
 
-use super::Runtime;
+use super::{ArtifactMeta, Runtime};
 use crate::model::Model;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
-
-/// Metadata written by `python -m compile.aot` next to the HLO files.
-#[derive(Debug, Clone)]
-pub struct ArtifactMeta {
-    pub model: String,
-    pub seq: usize,
-    pub kv_len: usize,
-    pub pallas: bool,
-    pub weights: usize,
-}
-
-impl ArtifactMeta {
-    pub fn parse(text: &str) -> Result<ArtifactMeta> {
-        let mut map = std::collections::HashMap::new();
-        for line in text.lines() {
-            if let Some((k, v)) = line.split_once('=') {
-                map.insert(k.trim().to_string(), v.trim().to_string());
-            }
-        }
-        let get = |k: &str| {
-            map.get(k)
-                .with_context(|| format!("meta missing key `{k}`"))
-                .cloned()
-        };
-        Ok(ArtifactMeta {
-            model: get("model")?,
-            seq: get("seq")?.parse()?,
-            kv_len: get("kv_len")?.parse()?,
-            pallas: get("pallas")? == "1",
-            weights: get("weights")?.parse()?,
-        })
-    }
-
-    pub fn load(path: &Path) -> Result<ArtifactMeta> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("read {}", path.display()))?;
-        Self::parse(&text)
-    }
-}
 
 /// Device-resident KV caches for one sequence (round-trip between decode
 /// steps as buffers — never copied to host).
@@ -215,28 +177,5 @@ impl CompiledModel {
         } else {
             bail!("decode returned {} buffers", outs.len());
         }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn meta_parses() {
-        let m = ArtifactMeta::parse(
-            "model=opt-nano\nseq=128\nkv_len=64\npallas=1\nweights=24\n",
-        )
-        .unwrap();
-        assert_eq!(m.model, "opt-nano");
-        assert_eq!(m.seq, 128);
-        assert_eq!(m.kv_len, 64);
-        assert!(m.pallas);
-        assert_eq!(m.weights, 24);
-    }
-
-    #[test]
-    fn meta_rejects_missing_keys() {
-        assert!(ArtifactMeta::parse("model=x\n").is_err());
     }
 }

@@ -7,19 +7,49 @@
 //! `execute_b` with device-resident buffers. Weights are uploaded once
 //! per model; KV caches live on the device and round-trip as buffers
 //! between decode steps.
+//!
+//! The XLA bindings are only present when the crate is built with the
+//! `pjrt` feature (they need the `xla` crate + libxla_extension, which
+//! the hermetic offline build does not carry). Without the feature,
+//! [`stub`] provides the same types with a runtime error on
+//! construction, so the engine, CLI, and tests compile either way.
 
+pub mod meta;
+
+// The gated implementation below references the `xla` bindings crate,
+// which is not vendored in the offline build and therefore not declared
+// in Cargo.toml. Fail with instructions instead of a wall of E0433s.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature additionally requires the `xla` bindings crate \
+     (xla_extension 0.5.1 ABI) plus a libxla_extension install: add \
+     `xla = ...` to [dependencies] in rust/Cargo.toml and remove this \
+     guard in rust/src/runtime/mod.rs"
+);
+
+#[cfg(feature = "pjrt")]
 pub mod compiled;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
-pub use compiled::{ArtifactMeta, CompiledModel, DeviceKv};
+pub use meta::ArtifactMeta;
 
+#[cfg(feature = "pjrt")]
+pub use compiled::{CompiledModel, DeviceKv};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{CompiledModel, DeviceKv, Runtime};
+
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Shared PJRT client (CPU platform).
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {

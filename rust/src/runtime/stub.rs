@@ -1,0 +1,84 @@
+//! API-compatible stand-ins for the PJRT runtime, compiled when the
+//! `pjrt` feature is off (the default in the hermetic offline build).
+//!
+//! The real implementation in `compiled.rs` needs the `xla` bindings
+//! crate and a libxla_extension install. This stub keeps every caller —
+//! the engine's `EngineBackend::Pjrt` variant, the CLI `serve --backend
+//! pjrt` path, and the `hlo_parity` integration tests — type-checking
+//! without them. [`Runtime::cpu`] fails with an explanatory error, and
+//! since that is the only way to obtain a [`CompiledModel`], the other
+//! methods are unreachable at runtime.
+
+use super::ArtifactMeta;
+use crate::model::Model;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::path::Path;
+
+fn unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "PJRT runtime unavailable: gptqt was built without the `pjrt` \
+         feature (requires the `xla` bindings crate + libxla_extension)"
+    )
+}
+
+/// Stub PJRT client — construction always fails.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always errors in the stub build.
+    pub fn cpu() -> Result<Runtime> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load_model(
+        &self,
+        _artifacts_dir: impl AsRef<Path>,
+        _model: &Model,
+    ) -> Result<CompiledModel> {
+        Err(unavailable())
+    }
+}
+
+/// Stub device KV cache (never instantiated).
+pub struct DeviceKv {
+    pub len: usize,
+    pub capacity: usize,
+}
+
+/// Stub compiled model (never instantiated — `Runtime::cpu` fails first).
+pub struct CompiledModel {
+    pub meta: ArtifactMeta,
+    _private: (),
+}
+
+impl CompiledModel {
+    pub fn new_kv(&self) -> Result<DeviceKv> {
+        Err(unavailable())
+    }
+
+    pub fn logits(&self, _tokens: &[u32]) -> Result<Tensor> {
+        Err(unavailable())
+    }
+
+    pub fn decode(&self, _kv: &mut DeviceKv, _token: u32) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_cpu_reports_missing_feature() {
+        let err = Runtime::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

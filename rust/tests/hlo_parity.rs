@@ -13,6 +13,19 @@ fn artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from("artifacts")
 }
 
+/// PJRT client, or `None` to skip: without the `pjrt` feature the stub
+/// runtime always errors, and even with artifacts on disk there is
+/// nothing to execute them with.
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+    }
+}
+
 #[test]
 fn logits_artifact_matches_rust_forward() {
     let dir = artifacts_dir();
@@ -21,7 +34,7 @@ fn logits_artifact_matches_rust_forward() {
         return;
     }
     let (model, _) = load_or_init("opt-nano", &dir, 0).unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime_or_skip() else { return };
     let compiled = rt.load_model(&dir, &model).unwrap();
     let seq = compiled.meta.seq;
 
@@ -57,7 +70,7 @@ fn decode_artifact_matches_rust_decode() {
         return;
     }
     let (model, _) = load_or_init("opt-nano", &dir, 0).unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime_or_skip() else { return };
     let compiled = rt.load_model(&dir, &model).unwrap();
 
     let bm = gptqt::model::BackendModel::dense(&model);
@@ -91,7 +104,7 @@ fn pjrt_engine_serves_requests() {
     }
     use gptqt::coordinator::{Engine, EngineBackend, EngineConfig, Request};
     let (model, _) = load_or_init("opt-nano", &dir, 0).unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime_or_skip() else { return };
     let compiled = rt.load_model(&dir, &model).unwrap();
     let mut engine = Engine::new(
         EngineBackend::Pjrt(compiled),
