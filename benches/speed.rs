@@ -3,11 +3,17 @@
 //! required — timing only), plus the batched-serving sweep: tokens/sec
 //! at batch {1, 4, 16} per format with the amortized weight traffic.
 //! `gptqt exp table4` prints the batch-1 numbers with table formatting.
+//!
+//! The prefill sweep at the end compares the chunk-major multi-token
+//! prefill against the legacy per-token loop over prompt ∈ {64, 256,
+//! 1024} × batch ∈ {1, 8}, reporting prefill tokens/sec and TTFT — the
+//! trajectory line for the chunking win and future SIMD work.
 
 use gptqt::eval::speed::{
-    build_variant, measure_decode, measure_decode_batch, SpeedVariant,
+    build_variant, measure_decode, measure_decode_batch, measure_prefill, SpeedVariant,
 };
-use gptqt::model::{load_or_init, presets};
+use gptqt::model::init::random_weights;
+use gptqt::model::{load_or_init, presets, Model};
 
 const BATCHES: [usize; 3] = [1, 4, 16];
 
@@ -97,6 +103,45 @@ fn main() {
                     "  -> {} batched B=16 vs sequential B=1 throughput: {:.2}x",
                     variant.label(),
                     tps_b16 / tps_b1
+                );
+            }
+        }
+    }
+
+    // ---- prefill: chunked multi-token forward vs per-token loop --------
+    // Prompt lengths exceed the preset max_seq (256), so the sweep runs a
+    // widened KV capacity with random weights (timing only).
+    let (prefill_model, chunk) = if fast { ("opt-nano", 16) } else { ("opt-sm", 32) };
+    let prompt_lens: &[usize] = if fast { &[64, 256] } else { &[64, 256, 1024] };
+    let batches: &[usize] = &[1, 8];
+    let mut cfg = presets::by_name(prefill_model).expect("preset");
+    cfg.max_seq = prompt_lens.iter().copied().max().unwrap_or(256) + 32;
+    let model = Model::new(cfg.clone(), random_weights(&cfg, 0));
+    println!(
+        "\n=== bench suite: prefill — chunked (chunk {chunk}) vs per-token loop \
+         ({prefill_model}) ==="
+    );
+    println!(
+        "{:<18} {:>7} {:>6} {:>15} {:>15} {:>11} {:>11} {:>9}",
+        "format", "prompt", "batch", "tok/s chunked", "tok/s 1-tok", "ttft ms ck",
+        "ttft ms 1t", "speedup"
+    );
+    for variant in [SpeedVariant::Full, SpeedVariant::GptqtLut { bits: 3 }] {
+        let bm = build_variant(&model, variant, 0);
+        for &plen in prompt_lens {
+            for &batch in batches {
+                let base = measure_prefill(&cfg, &bm, variant, batch, plen, 0, 7);
+                let chunked = measure_prefill(&cfg, &bm, variant, batch, plen, chunk, 7);
+                println!(
+                    "{:<18} {:>7} {:>6} {:>15.0} {:>15.0} {:>11.2} {:>11.2} {:>8.2}x",
+                    variant.label(),
+                    plen,
+                    batch,
+                    chunked.tokens_per_sec,
+                    base.tokens_per_sec,
+                    chunked.ttft_ms,
+                    base.ttft_ms,
+                    chunked.tokens_per_sec / base.tokens_per_sec.max(1e-12),
                 );
             }
         }

@@ -82,7 +82,10 @@ COMMANDS:
                --step1-bits <n>         GPTQT intermediate bits (default 5)
                --explore-range <n>      GPTQT scale re-exploration range (default 1)
                --seed <n>               rng seed (default 0)
-    ppl        Evaluate perplexity of a (quantized) model
+    ppl        Evaluate perplexity of a (quantized) model. Quantized
+               methods run through the serving kernels (LUT/dequant)
+               end-to-end; --dequant evaluates the dequantized dense
+               weights instead (legacy path)
                --model <name> --dataset <wiki-syn|ptb-syn> --method <m> --bits <n>
     serve      Run the serving coordinator on AOT artifacts
                --model <name> --quant <fp32|gptq2|gptqt3> --requests <n>

@@ -43,14 +43,6 @@ impl EngineBackend {
         })
     }
 
-    fn decode(&self, token: u32, cache: &mut SeqCache) -> Result<Vec<f32>> {
-        match (self, cache) {
-            (EngineBackend::Cpu(m), SeqCache::Cpu(c)) => Ok(m.decode_step(token, c)),
-            (EngineBackend::Pjrt(m), SeqCache::Pjrt(c)) => m.decode(c, token),
-            _ => unreachable!("cache/backend mismatch"),
-        }
-    }
-
     /// Human label (which Table-IV row this engine realizes).
     pub fn label(&self) -> &'static str {
         match self {
@@ -70,6 +62,12 @@ struct Running {
     prefill_started: Option<Instant>,
 }
 
+impl Running {
+    fn prefilling(&self) -> bool {
+        self.prompt_idx < self.req.prompt.len()
+    }
+}
+
 /// The engine. Single-threaded scheduling loop (`step`) over a
 /// thread-safe submission queue — a worker thread can own the engine
 /// while any number of producers submit.
@@ -81,17 +79,18 @@ pub struct Engine {
     running: Vec<Running>,
     kv: PagedKvManager,
     pub metrics: Metrics,
-    /// prompt tokens fed per sequence per tick
-    prefill_chunk: usize,
 }
 
 impl Engine {
     pub fn new(backend: EngineBackend, cfg: EngineConfig) -> Engine {
         let queue = Arc::new(RequestQueue::new(cfg.max_queue));
         let kv = PagedKvManager::new(cfg.total_blocks, cfg.block_size);
+        // prefill pacing lives in the batcher config — the scheduling
+        // policy's single runtime source of truth
         let batcher = Batcher::new(BatcherConfig {
             max_batch: cfg.max_batch,
             prefill_token_budget: cfg.block_size * cfg.max_batch * 4,
+            prefill_chunk: cfg.prefill_chunk,
         });
         Engine {
             backend,
@@ -101,7 +100,6 @@ impl Engine {
             running: Vec::new(),
             kv,
             metrics: Metrics::new(),
-            prefill_chunk: 16,
         }
     }
 
@@ -118,12 +116,14 @@ impl Engine {
         !self.running.is_empty() || !self.queue.is_empty()
     }
 
-    /// One scheduling tick: admit, prefill prompt-feeding sequences by a
-    /// chunk, then advance **all** decoding sequences together through
-    /// one batched decode call (weights stream once per tick, not once
-    /// per sequence), retire finished ones. Per-sequence sampling and
-    /// finish logic are untouched, so generations are token-identical to
-    /// the sequential per-sequence loop.
+    /// One scheduling tick: admit, then advance **every** running
+    /// sequence through a single chunk-major forward — prefilling
+    /// sequences contribute their next prompt chunk, decoding sequences
+    /// their last sampled token, and all of it shares one weight stream
+    /// per linear per tick (CPU backend). Finished sequences retire.
+    /// Per-sequence sampling and finish logic are untouched, and the
+    /// core is per-token bit-identical to the sequential loop, so
+    /// generations are token-identical to per-sequence serving.
     pub fn step(&mut self) -> Result<Vec<Response>> {
         // ---- admission -------------------------------------------------
         for req in self.batcher.admit(&self.queue, self.running.len(), &mut self.kv) {
@@ -139,72 +139,111 @@ impl Engine {
             });
         }
 
-        // ---- prefill: advance prompt-feeding sequences by one chunk ----
-        let mut prefilled_now: Vec<u64> = Vec::new();
-        for run in self.running.iter_mut() {
-            if run.prompt_idx >= run.req.prompt.len() {
-                continue;
-            }
-            let t0 = Instant::now();
-            let end = (run.prompt_idx + self.prefill_chunk).min(run.req.prompt.len());
-            let mut logits = Vec::new();
-            for i in run.prompt_idx..end {
-                logits = self.backend.decode(run.req.prompt[i], &mut run.cache)?;
-            }
-            run.prompt_idx = end;
-            if run.prompt_idx == run.req.prompt.len() {
-                // prompt complete → first token
-                let tok = run.sampler.sample(&logits);
-                run.generated.push(tok);
-                self.kv.append_token(run.req.id);
-                self.metrics.record_ttft(run.req.arrived.elapsed());
-                self.metrics.record_token(t0.elapsed());
-                prefilled_now.push(run.req.id);
-            }
-        }
-
-        // ---- decode: one batched call over every runnable sequence -----
-        let mut decoders: Vec<&mut Running> = self
-            .running
-            .iter_mut()
-            .filter(|r| {
-                r.prompt_idx == r.req.prompt.len() && !prefilled_now.contains(&r.req.id)
-            })
-            .collect();
-        if !decoders.is_empty() {
-            match &self.backend {
-                // the batched hot path: every linear layer streams its
-                // weights once for the whole runnable set
-                EngineBackend::Cpu(m) => {
+        // ---- one unified chunked forward over the running set ----------
+        let chunk_len = self.batcher.cfg.prefill_chunk.max(1);
+        match &self.backend {
+            // the batched hot path: prefill chunks and decode tokens
+            // flatten into one gemm per linear — the weights stream once
+            // for the whole tick
+            EngineBackend::Cpu(m) => {
+                if !self.running.is_empty() {
                     let t0 = Instant::now();
-                    let tokens: Vec<u32> = decoders
+                    let chunks: Vec<Vec<u32>> = self
+                        .running
                         .iter()
-                        .map(|r| *r.generated.last().expect("at least one generated token"))
+                        .map(|run| {
+                            if run.prefilling() {
+                                let end = (run.prompt_idx + chunk_len)
+                                    .min(run.req.prompt.len());
+                                run.req.prompt[run.prompt_idx..end].to_vec()
+                            } else {
+                                vec![*run
+                                    .generated
+                                    .last()
+                                    .expect("decoding sequence has a sampled token")]
+                            }
+                        })
                         .collect();
-                    let mut caches: Vec<&mut KvCache> = decoders
+                    // logits are needed only where something will sample:
+                    // decoding sequences and prompts completing this tick
+                    let need: Vec<bool> = self
+                        .running
+                        .iter()
+                        .zip(&chunks)
+                        .map(|(run, chunk)| {
+                            run.prompt_idx + chunk.len() >= run.req.prompt.len()
+                        })
+                        .collect();
+                    let chunk_refs: Vec<&[u32]> =
+                        chunks.iter().map(|c| c.as_slice()).collect();
+                    let mut caches: Vec<&mut KvCache> = self
+                        .running
                         .iter_mut()
                         .map(|r| match &mut r.cache {
                             SeqCache::Cpu(k) => k,
                             SeqCache::Pjrt(_) => unreachable!("cache/backend mismatch"),
                         })
                         .collect();
-                    let all_logits = m.decode_batch_refs(&tokens, &mut caches);
-                    let per_token = t0.elapsed() / decoders.len() as u32;
-                    self.metrics.record_batch(decoders.len());
-                    for (run, logits) in decoders.iter_mut().zip(&all_logits) {
-                        let tok = run.sampler.sample(logits);
-                        run.generated.push(tok);
-                        self.kv.append_token(run.req.id);
-                        self.metrics.record_token(per_token);
+                    let all_logits =
+                        m.forward_chunks_masked(&chunk_refs, &mut caches, &need);
+                    // sample: sequences that just completed their prompt
+                    // emit their first token, decoding ones their next —
+                    // mid-prompt sequences only advanced their KV cache
+                    let seqs = chunks.len();
+                    let mut emitted = 0usize;
+                    for ((run, chunk), logits) in
+                        self.running.iter_mut().zip(&chunks).zip(&all_logits)
+                    {
+                        if run.prefilling() {
+                            run.prompt_idx += chunk.len();
+                            if !run.prefilling() {
+                                let logits =
+                                    logits.as_ref().expect("completing chunk has logits");
+                                let tok = run.sampler.sample(logits);
+                                run.generated.push(tok);
+                                self.kv.append_token(run.req.id);
+                                self.metrics.record_ttft(run.req.arrived.elapsed());
+                                emitted += 1;
+                            }
+                        } else {
+                            let logits =
+                                logits.as_ref().expect("decoding chunk has logits");
+                            let tok = run.sampler.sample(logits);
+                            run.generated.push(tok);
+                            self.kv.append_token(run.req.id);
+                            emitted += 1;
+                        }
                     }
+                    self.metrics.record_batch_step(t0.elapsed(), seqs, emitted);
                 }
-                // PJRT has no batched executable ABI yet (ROADMAP):
-                // per-sequence decode with sample/push immediately after
-                // each step, so a mid-batch error leaves every completed
-                // sequence's cache and token list consistent
-                EngineBackend::Pjrt(m) => {
-                    for run in decoders.iter_mut() {
-                        let t0 = Instant::now();
+            }
+            // PJRT has no batched (or multi-token) executable ABI yet
+            // (ROADMAP): per-sequence single-token stepping, with
+            // sample/push immediately after each step so a mid-batch
+            // error leaves completed sequences consistent
+            EngineBackend::Pjrt(m) => {
+                for run in self.running.iter_mut() {
+                    let t0 = Instant::now();
+                    if run.prefilling() {
+                        let end = (run.prompt_idx + chunk_len).min(run.req.prompt.len());
+                        let mut logits = Vec::new();
+                        for i in run.prompt_idx..end {
+                            let tok = run.req.prompt[i];
+                            logits = match &mut run.cache {
+                                SeqCache::Pjrt(k) => m.decode(k, tok)?,
+                                SeqCache::Cpu(_) => unreachable!("cache/backend mismatch"),
+                            };
+                        }
+                        run.prompt_idx = end;
+                        if !run.prefilling() {
+                            let tok = run.sampler.sample(&logits);
+                            run.generated.push(tok);
+                            self.kv.append_token(run.req.id);
+                            self.metrics.record_ttft(run.req.arrived.elapsed());
+                            // occupancy 1: no weight-streaming amortization
+                            self.metrics.record_batch_step(t0.elapsed(), 1, 1);
+                        }
+                    } else {
                         let last =
                             *run.generated.last().expect("at least one generated token");
                         let logits = match &mut run.cache {
@@ -214,9 +253,7 @@ impl Engine {
                         let tok = run.sampler.sample(&logits);
                         run.generated.push(tok);
                         self.kv.append_token(run.req.id);
-                        self.metrics.record_token(t0.elapsed());
-                        // occupancy 1: no weight-streaming amortization
-                        self.metrics.record_batch(1);
+                        self.metrics.record_batch_step(t0.elapsed(), 1, 1);
                     }
                 }
             }
@@ -388,7 +425,7 @@ mod tests {
     #[test]
     fn long_prompts_prefill_in_chunks() {
         let mut e = cpu_engine(2);
-        e.prefill_chunk = 4;
+        e.batcher.cfg.prefill_chunk = 4;
         e.submit(req(1, 20, 3)).unwrap();
         let mut steps = 0;
         let mut responses = Vec::new();

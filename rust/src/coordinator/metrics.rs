@@ -56,6 +56,25 @@ impl Metrics {
         self.max_batch_occupancy = self.max_batch_occupancy.max(occupancy as u64);
     }
 
+    /// Record one batched forward step — the accounting both the CPU and
+    /// PJRT engine paths share. `seqs` sequences shared the step's
+    /// weight stream (the occupancy) and `emitted` sampled tokens came
+    /// out of it. Each emitted token is attributed the **full** step
+    /// latency: that is the inter-token gap a streaming client observes
+    /// (every sequence advances once per tick), so co-scheduled prefill
+    /// chunks visibly inflate it — the interference the
+    /// `prefill_chunk` knob is tuned against. No-op when nothing was
+    /// emitted (a tick that only advanced mid-prompt prefill chunks).
+    pub fn record_batch_step(&mut self, elapsed: Duration, seqs: usize, emitted: usize) {
+        if emitted == 0 {
+            return;
+        }
+        self.record_batch(seqs);
+        for _ in 0..emitted {
+            self.record_token(elapsed);
+        }
+    }
+
     /// Mean sequences per batched decode call (0 when none ran).
     pub fn mean_batch_occupancy(&self) -> f64 {
         if self.decode_batches == 0 {
@@ -119,6 +138,21 @@ mod tests {
         let r = m.report();
         assert!(r.contains("completed=1"));
         assert!(r.contains("per-tok"));
+    }
+
+    #[test]
+    fn batch_step_attributes_full_tick_latency() {
+        let mut m = Metrics::new();
+        // 4 sequences advanced, 4 sampled tokens: each token sees the
+        // whole tick as its inter-token latency
+        m.record_batch_step(Duration::from_millis(20), 4, 4);
+        assert_eq!(m.generated_tokens, 4);
+        assert_eq!(m.decode_batches, 1);
+        assert_eq!(m.max_batch_occupancy, 4);
+        // an all-mid-prompt tick records nothing
+        m.record_batch_step(Duration::from_millis(5), 4, 0);
+        assert_eq!(m.generated_tokens, 4);
+        assert_eq!(m.decode_batches, 1);
     }
 
     #[test]

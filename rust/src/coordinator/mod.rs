@@ -36,6 +36,11 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// Stop token (EOS).
     pub eos_token: u32,
+    /// Prompt tokens each prefilling sequence feeds into the shared
+    /// chunked forward per tick. Copied into `batcher::BatcherConfig`
+    /// at engine construction — the batcher's copy is the runtime
+    /// source of truth.
+    pub prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -46,6 +51,7 @@ impl Default for EngineConfig {
             total_blocks: 256,
             max_queue: 1024,
             eos_token: crate::data::vocab::EOS,
+            prefill_chunk: 16,
         }
     }
 }

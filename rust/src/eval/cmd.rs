@@ -1,6 +1,6 @@
 //! CLI command implementations (`gptqt quantize|ppl|serve|exp|gen-corpus`).
 
-use super::ppl::{calib_for, eval_for, eval_ppl, EvalConfig};
+use super::ppl::{calib_for, eval_for, eval_ppl, eval_ppl_backend, EvalConfig};
 use super::tables::{self, ExpConfig};
 use crate::cli::Args;
 use crate::coordinator::{Engine, EngineBackend, EngineConfig, Request, SamplingParams};
@@ -63,7 +63,12 @@ pub fn quantize(a: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `gptqt ppl --model <name> --dataset <wiki-syn|ptb-syn> --method <m>`
+/// `gptqt ppl --model <name> --dataset <wiki-syn|ptb-syn> --method <m>
+///            [--dequant]`
+///
+/// Quantized methods evaluate through the serving kernels
+/// ([`eval_ppl_backend`]) by default — the deployment path; `--dequant`
+/// restores the legacy dequantized-dense evaluation for comparison.
 pub fn ppl(a: &Args) -> Result<()> {
     let name = a.get_or("model", "opt-mini");
     let dataset = Dataset::parse(a.get_or("dataset", "wiki-syn")).context("bad --dataset")?;
@@ -75,15 +80,23 @@ pub fn ppl(a: &Args) -> Result<()> {
         eprintln!("WARNING: no trained artifact for {name}; using random init");
     }
     let windows = eval_for(&ecfg, dataset);
-    let ppl = if method == Method::Full {
-        eval_ppl(&model, &windows)
+    let (ppl, via) = if method == Method::Full {
+        (eval_ppl(&model, &windows), "full".to_string())
     } else {
         let calib = calib_for(&ecfg, dataset);
         let qm = quantize_model(&model, &calib, method, &qcfg, false)?;
-        eval_ppl(&qm.model, &windows)
+        if a.has_flag("dequant") {
+            // legacy path: perplexity of the dequantized dense weights
+            (eval_ppl(&qm.model, &windows), "dequant-dense".to_string())
+        } else {
+            // deployment path: the quantized serving kernels end-to-end
+            let bm = BackendModel::quantized(&model, qm.layers);
+            let label = bm.backend_label().to_string();
+            (eval_ppl_backend(&bm, &windows), format!("{label} kernels"))
+        }
     };
     println!(
-        "{name} {} {}bit on {}: ppl {}",
+        "{name} {} {}bit on {} [{via}]: ppl {}",
         method.name(),
         if method == Method::Full { 16 } else { qcfg.bits },
         dataset.name(),

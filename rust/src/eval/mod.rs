@@ -6,7 +6,7 @@ pub mod ppl;
 pub mod speed;
 pub mod tables;
 
-pub use ppl::{eval_ppl, EvalConfig};
+pub use ppl::{eval_ppl, eval_ppl_backend, EvalConfig};
 
 /// Where experiment outputs are written (one text file per experiment,
 /// same rows that are printed).

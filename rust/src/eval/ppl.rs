@@ -1,8 +1,15 @@
 //! Perplexity protocol (paper §III): non-overlapping windows over a
 //! held-out synthetic stream, teacher-forced next-token NLL, `exp(mean)`.
+//!
+//! Two entry points share one implementation: [`eval_ppl`] evaluates a
+//! dense [`Model`] and [`eval_ppl_backend`] evaluates any
+//! [`BackendModel`] — including the quantized int-dequant and LUT-GEMM
+//! backends, so the formats the paper serves are perplexity-measured on
+//! the exact kernel path deployment runs (not on dequantized dense
+//! stand-ins). Both run each window as one chunked KV-cache forward.
 
 use crate::data::{calibration_slices, eval_windows, CorpusGenerator, Dataset, TokenSlice};
-use crate::model::{presets, Model};
+use crate::model::{presets, BackendModel, Model};
 
 /// Evaluation-scale knobs (the paper's "128 slices × 2048 tokens"
 /// calibration and full-dataset ppl, scaled to this testbed).
@@ -43,11 +50,20 @@ pub fn eval_for(cfg: &EvalConfig, dataset: Dataset) -> Vec<TokenSlice> {
     eval_windows(&stream, cfg.eval_len, cfg.eval_windows)
 }
 
-/// Perplexity of a model over prepared windows.
+/// Perplexity of a dense model over prepared windows — the degenerate
+/// dense-backend case of [`eval_ppl_backend`].
 pub fn eval_ppl(model: &Model, windows: &[TokenSlice]) -> f64 {
+    eval_ppl_backend(&BackendModel::dense(model), windows)
+}
+
+/// Perplexity through a serving backend: each window runs as one
+/// chunked KV-cache forward over the backend's kernels (dense f32,
+/// int-dequant, or LUT-GEMM), so quantized formats are evaluated
+/// end-to-end on the deployment path.
+pub fn eval_ppl_backend(bm: &BackendModel, windows: &[TokenSlice]) -> f64 {
     let (mut nll, mut count) = (0.0f64, 0usize);
     for w in windows {
-        let (s, c) = model.nll_window(&w.tokens);
+        let (s, c) = bm.nll_window(&w.tokens);
         nll += s;
         count += c;
     }

@@ -15,11 +15,14 @@
 //! amortized weight traffic is `streamed_bytes_per_token / B` — the
 //! serving-side win the batched kernels exist for.
 //!
+//! [`measure_prefill`] covers the prompt phase: chunked multi-token
+//! prefill ([`BackendModel::prefill_batch`]) against the legacy
+//! per-token loop, reporting prompt tokens/sec and time-to-first-token.
+//!
 //! Weight *values* are irrelevant for timing, so quantized forms are
 //! synthesized directly (RTN codes / random sign patterns) — this keeps
 //! the big timing-only ladder entries (opt-lg/xl) cheap to set up.
 
-use crate::kernels::Gemv;
 use crate::model::{BackendModel, KvCache, Model, ModelConfig};
 use crate::quant::fuse::FusedRow;
 use crate::quant::linear::{rtn_quantize, IntLayer};
@@ -209,6 +212,84 @@ pub fn measure_decode_batch(
     }
 }
 
+/// Timing result for one (model, variant, batch, prompt, chunk) prefill
+/// cell.
+#[derive(Debug, Clone)]
+pub struct PrefillSpeedResult {
+    pub model: String,
+    pub variant: SpeedVariant,
+    pub batch: usize,
+    pub prompt_len: usize,
+    /// Prompt tokens per core call; 0 marks the per-token baseline.
+    pub chunk: usize,
+    /// Prompt tokens processed per second, summed over the batch.
+    pub tokens_per_sec: f64,
+    /// Mean time-to-first-token across the batch, ms (time until each
+    /// sequence's last prompt-token logits were available).
+    pub ttft_ms: f64,
+}
+
+/// Measure prefill throughput for `batch` sequences of `prompt_len`
+/// random tokens each.
+///
+/// `chunk == 0` runs the pre-chunking baseline — a sequential
+/// [`BackendModel::decode_step`] loop per sequence, streaming every
+/// weight once **per prompt token per sequence**. `chunk >= 1` runs
+/// [`BackendModel::prefill_batch`]: each round advances every sequence
+/// by `chunk` tokens through one shared forward, so each linear streams
+/// its weights once per `batch × chunk` prompt tokens — the
+/// O(prompt_len) → O(prompt_len / chunk) weight-stream reduction the
+/// chunk-major core exists for. Logits are bit-identical either way.
+pub fn measure_prefill(
+    cfg: &ModelConfig,
+    bm: &BackendModel,
+    variant: SpeedVariant,
+    batch: usize,
+    prompt_len: usize,
+    chunk: usize,
+    seed: u64,
+) -> PrefillSpeedResult {
+    assert!(batch >= 1 && prompt_len >= 1);
+    assert!(prompt_len <= cfg.max_seq, "prompt exceeds KV capacity");
+    let mut rng = Rng::new(seed);
+    let prompts: Vec<Vec<u32>> = (0..batch)
+        .map(|_| {
+            (0..prompt_len)
+                .map(|_| 3 + rng.below((cfg.vocab - 3) as u64) as u32)
+                .collect()
+        })
+        .collect();
+    let mut caches: Vec<KvCache> = (0..batch).map(|_| KvCache::new(cfg)).collect();
+    let sw = Stopwatch::start();
+    let mut ttft_sum = 0.0f64;
+    if chunk == 0 {
+        for (prompt, cache) in prompts.iter().zip(caches.iter_mut()) {
+            for &t in prompt {
+                bm.decode_step(t, cache);
+            }
+            ttft_sum += sw.elapsed_secs();
+        }
+    } else {
+        let prefs: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        bm.prefill_batch(&prefs, &mut caches, chunk);
+        // all sequences finish together in the shared-forward mode
+        ttft_sum = sw.elapsed_secs() * batch as f64;
+    }
+    let secs = sw.elapsed_secs();
+    for cache in &caches {
+        assert_eq!(cache.len, prompt_len, "prefill left a cache short");
+    }
+    PrefillSpeedResult {
+        model: cfg.name.to_string(),
+        variant,
+        batch,
+        prompt_len,
+        chunk,
+        tokens_per_sec: (batch * prompt_len) as f64 / secs.max(1e-12),
+        ttft_ms: ttft_sum / batch as f64 * 1e3,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +339,19 @@ mod tests {
             assert!(
                 (r1.amortized_mb_per_token / r4.amortized_mb_per_token - 4.0).abs() < 1e-6
             );
+        }
+    }
+
+    #[test]
+    fn prefill_measurement_runs_baseline_and_chunked() {
+        let m = tiny_model();
+        let bm = build_variant(&m, SpeedVariant::Full, 1);
+        for chunk in [0usize, 1, 8] {
+            let r = measure_prefill(&m.cfg, &bm, SpeedVariant::Full, 2, 12, chunk, 5);
+            assert_eq!(r.batch, 2);
+            assert_eq!(r.prompt_len, 12);
+            assert_eq!(r.chunk, chunk);
+            assert!(r.tokens_per_sec > 0.0 && r.ttft_ms >= 0.0, "chunk {chunk}");
         }
     }
 

@@ -12,7 +12,7 @@ use super::speed::{build_variant, measure_decode, SpeedVariant};
 use super::{emit_result, fmt_ppl, render_table};
 use crate::data::{Dataset, TokenSlice};
 use crate::model::quantize::quantize_model;
-use crate::model::{load_or_init, presets, Model};
+use crate::model::{load_or_init, Model};
 use crate::quant::{Method, QuantConfig};
 use anyhow::Result;
 

@@ -59,6 +59,8 @@ pub fn gemv_dequant(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
 /// `packed_bytes()` to `packed_bytes() / B`. Per batch item the
 /// arithmetic is exactly [`gemv_dequant`]'s (same unrolled accumulators,
 /// same order), so batched and sequential decode agree bit-for-bit.
+/// Calls with enough total work split rows across the pool; the row
+/// partition keeps every output element's reduction order unchanged.
 pub fn gemm_dequant(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     assert_eq!(xs.len(), ys.len(), "gemm_dequant batch size mismatch");
     for x in xs {
@@ -69,12 +71,27 @@ pub fn gemm_dequant(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     }
     let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
     let cols = layer.cols;
-    for r in 0..layer.rows {
-        let (s, qz) = layer.row_params[r];
-        let codes = &layer.codes[r * cols..(r + 1) * cols];
-        for (bi, x) in xs.iter().enumerate() {
-            let acc = row_code_dot(codes, x);
-            ys[bi][r] = s * acc + s * qz * sum_x[bi];
+    if super::par_rows(layer.rows, cols, xs.len()) {
+        let writer = super::RowWriter::new(ys);
+        crate::util::pool::global().scope_chunks(layer.rows, |range| {
+            for r in range {
+                let (s, qz) = layer.row_params[r];
+                let codes = &layer.codes[r * cols..(r + 1) * cols];
+                for (bi, x) in xs.iter().enumerate() {
+                    let acc = row_code_dot(codes, x);
+                    // Safety: each row lands in exactly one chunk.
+                    unsafe { writer.set(bi, r, s * acc + s * qz * sum_x[bi]) };
+                }
+            }
+        });
+    } else {
+        for r in 0..layer.rows {
+            let (s, qz) = layer.row_params[r];
+            let codes = &layer.codes[r * cols..(r + 1) * cols];
+            for (bi, x) in xs.iter().enumerate() {
+                let acc = row_code_dot(codes, x);
+                ys[bi][r] = s * acc + s * qz * sum_x[bi];
+            }
         }
     }
 }

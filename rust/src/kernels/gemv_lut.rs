@@ -102,7 +102,11 @@ pub fn gemv_lut(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
 /// Per batch item the accumulation order is identical to [`gemv_lut`]
 /// (groups added in ascending order onto the same `(row, plane)`
 /// accumulator, same epilogue), so batched results are bit-identical to
-/// sequential ones.
+/// sequential ones. Calls with enough total work split rows across the
+/// pool: each worker re-runs the group loop over its own row range with
+/// private LUTs and accumulators, so the per-element order — and with it
+/// the bitwise contract — is untouched (LUT builds are duplicated per
+/// worker; they are a small, row-count-independent cost).
 pub fn gemm_lut(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     let nb = xs.len();
     assert_eq!(nb, ys.len(), "gemm_lut batch size mismatch");
@@ -115,13 +119,35 @@ pub fn gemm_lut(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     if nb == 0 {
         return;
     }
+    let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
+    let writer = super::RowWriter::new(ys);
+    if super::par_rows(layer.rows, layer.cols, nb) {
+        crate::util::pool::global().scope_chunks(layer.rows, |range| {
+            gemm_lut_rows(layer, xs, &sum_x, range.start, range.end, &writer);
+        });
+    } else {
+        gemm_lut_rows(layer, xs, &sum_x, 0, layer.rows, &writer);
+    }
+}
+
+/// The gemm body restricted to output rows `[rows_lo, rows_hi)` — the
+/// unit one pool worker executes. Accumulation per (row, plane) slot
+/// still walks groups in ascending order, matching [`gemv_lut`] exactly.
+fn gemm_lut_rows(
+    layer: &PackedBcLayer,
+    xs: &[&[f32]],
+    sum_x: &[f32],
+    rows_lo: usize,
+    rows_hi: usize,
+    writer: &super::RowWriter,
+) {
+    let nb = xs.len();
     let rows = layer.rows;
     let planes = layer.planes;
-    let slots = rows * planes;
-    let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
-
-    // per-item (row, plane) accumulators, batch-major
-    let mut acc = vec![0.0f32; nb * slots];
+    let nrows = rows_hi - rows_lo;
+    // per-item (row, plane) accumulators for this row range, batch-major
+    let lslots = nrows * planes;
+    let mut acc = vec![0.0f32; nb * lslots];
     // per-item LUTs for the current group block, index `bi·GBLOCK + g`
     let mut luts = vec![[0.0f32; 1 << GROUP]; nb * GBLOCK];
 
@@ -136,30 +162,31 @@ pub fn gemm_lut(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
                 build_lut(&xg, &mut luts[bi * GBLOCK + g]);
             }
         }
-        let codes = &layer.codes[gb * slots..(gb + gn) * slots];
         for bi in 0..nb {
             let lut_b = &luts[bi * GBLOCK..bi * GBLOCK + gn];
-            let arow = &mut acc[bi * slots..(bi + 1) * slots];
-            for (i, slot) in arow.iter_mut().enumerate() {
-                let mut s = *slot;
-                for (g, lut) in lut_b.iter().enumerate() {
-                    s += lut[codes[g * slots + i] as usize];
+            let arow = &mut acc[bi * lslots..(bi + 1) * lslots];
+            for (g, lut) in lut_b.iter().enumerate() {
+                // this group's code bytes for our row range only
+                let codes = &layer.codes[((gb + g) * rows + rows_lo) * planes
+                    ..((gb + g) * rows + rows_hi) * planes];
+                for (slot, &code) in arow.iter_mut().zip(codes) {
+                    *slot += lut[code as usize];
                 }
-                *slot = s;
             }
         }
     }
 
-    for (bi, y) in ys.iter_mut().enumerate() {
-        let acc_b = &acc[bi * slots..(bi + 1) * slots];
-        for r in 0..rows {
+    for bi in 0..nb {
+        let acc_b = &acc[bi * lslots..(bi + 1) * lslots];
+        for r in rows_lo..rows_hi {
             let mut v = layer.bias[r] * sum_x[bi];
             let arow = &layer.alphas[r * planes..(r + 1) * planes];
-            let crow = &acc_b[r * planes..(r + 1) * planes];
+            let crow = &acc_b[(r - rows_lo) * planes..(r - rows_lo + 1) * planes];
             for (a, s) in arow.iter().zip(crow) {
                 v += a * s;
             }
-            y[r] = v;
+            // Safety: each row lands in exactly one worker's range.
+            unsafe { writer.set(bi, r, v) };
         }
     }
 }

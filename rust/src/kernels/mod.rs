@@ -25,6 +25,24 @@
 //! token-identical to sequential decode (tested in
 //! `tests/kernel_parity.rs`).
 //!
+//! The batch dimension of `gemm` carries *anything that shares a weight
+//! stream*: concurrent decode sequences, the T tokens of one prefill
+//! chunk, or both mixed in a single engine tick — the chunk-major
+//! forward core ([`crate::model::BackendModel`]) flattens all of them
+//! into one activation list per linear.
+//!
+//! **Thread-level parallelism.** When a `gemm` call carries enough total
+//! work (`rows × cols × batch ≥ 2²¹`, see [`PAR_MIN_WORK`]), its output
+//! rows are partitioned across the global [`crate::util::pool`] workers.
+//! The partition is by *row*, so every output element keeps the exact
+//! reduction order of the single-threaded kernel — the bitwise
+//! `gemm == per-item gemv` contract survives threading. The gate is
+//! total work, not batch size: a `gemm(B=1)` decode step on a layer
+//! big enough to clear the threshold also threads (that *helps* batch-1
+//! latency), while small calls stay single-threaded because pool
+//! dispatch would cost more than it saves. The `gemv` entry points are
+//! always single-threaded.
+//!
 //! [`gemm_dequant`]: gemv_dequant::gemm_dequant
 //! [`gemm_lut`]: gemv_lut::gemm_lut
 
@@ -34,6 +52,42 @@ pub mod gemv_lut;
 use crate::quant::linear::IntLayer;
 use crate::quant::pack::PackedBcLayer;
 use crate::tensor::Tensor;
+use crate::util::pool;
+
+/// Minimum total work (`rows × cols × batch` weight-element applications)
+/// before a batched kernel fans its output rows across the pool.
+pub const PAR_MIN_WORK: usize = 1 << 21;
+
+/// Whether a `rows × cols` layer applied to `batch` activations should
+/// run row-parallel on the global pool.
+pub(crate) fn par_rows(rows: usize, cols: usize, batch: usize) -> bool {
+    rows.saturating_mul(cols).saturating_mul(batch) >= PAR_MIN_WORK
+        && pool::global().threads() > 1
+}
+
+/// Pointer bundle giving pool workers disjoint-row write access to the
+/// per-batch-item output vectors of a `gemm` call.
+pub(crate) struct RowWriter(Vec<*mut f32>);
+unsafe impl Sync for RowWriter {}
+unsafe impl Send for RowWriter {}
+
+impl RowWriter {
+    pub(crate) fn new(ys: &mut [Vec<f32>]) -> RowWriter {
+        RowWriter(ys.iter_mut().map(|y| y.as_mut_ptr()).collect())
+    }
+
+    /// Write output row `r` of batch item `bi`.
+    ///
+    /// # Safety
+    /// Each row index must be written by exactly one thread (the pool
+    /// partitions `0..rows` into disjoint ranges), and the `ys` the
+    /// writer was built from must outlive all writes — guaranteed by
+    /// `scope_chunks` joining before return.
+    #[inline]
+    pub(crate) unsafe fn set(&self, bi: usize, r: usize, v: f32) {
+        *self.0[bi].add(r) = v;
+    }
+}
 
 /// A matrix–vector product backend: `y = W·x` for one weight format,
 /// plus the batched `Y = W·X` form that amortizes weight streaming
@@ -114,7 +168,8 @@ pub fn gemv_f32(w: &Tensor, x: &[f32], y: &mut [f32]) {
 /// Dense f32 batched matvec: each weight row is streamed once and dotted
 /// against every batch activation while it is cache-hot — `rows·cols`
 /// weight traffic for the whole batch instead of per sequence. Per item
-/// the arithmetic is exactly [`gemv_f32`]'s.
+/// the arithmetic is exactly [`gemv_f32`]'s; large calls split rows
+/// across the pool (same per-row reduction order, so still bitwise).
 pub fn gemm_f32(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     assert_eq!(xs.len(), ys.len(), "gemm_f32 batch size mismatch");
     for x in xs {
@@ -123,10 +178,24 @@ pub fn gemm_f32(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     for y in ys.iter() {
         assert_eq!(y.len(), w.rows());
     }
-    for r in 0..w.rows() {
-        let row = w.row(r);
-        for (x, y) in xs.iter().zip(ys.iter_mut()) {
-            y[r] = crate::tensor::ops::dot(row, x);
+    let rows = w.rows();
+    if par_rows(rows, w.cols(), xs.len()) {
+        let writer = RowWriter::new(ys);
+        pool::global().scope_chunks(rows, |range| {
+            for r in range {
+                let row = w.row(r);
+                for (bi, x) in xs.iter().enumerate() {
+                    // Safety: each row lands in exactly one chunk.
+                    unsafe { writer.set(bi, r, crate::tensor::ops::dot(row, x)) };
+                }
+            }
+        });
+    } else {
+        for r in 0..rows {
+            let row = w.row(r);
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                y[r] = crate::tensor::ops::dot(row, x);
+            }
         }
     }
 }
@@ -216,6 +285,40 @@ mod tests {
             let mut y_ref = vec![0.0; 19];
             dense.gemv(x, &mut y_ref);
             assert_eq!(y, &y_ref, "gemm must be bitwise identical to gemv");
+        }
+    }
+
+    #[test]
+    fn parallel_gemm_stays_bitwise_identical_to_gemv() {
+        // 2048×1024 ≥ PAR_MIN_WORK even at batch 1, so this exercises the
+        // row-partitioned pool path on multicore machines (and the
+        // sequential path on single-core ones — same contract either way)
+        let mut rng = Rng::new(307);
+        let (rows, cols) = (2048usize, 1024usize);
+        let w = Tensor::randn(rows, cols, 0.05, &mut rng);
+        let dense = DenseGemv::new(w.clone());
+        let (q, grids) = crate::quant::linear::rtn_quantize(&w, 3);
+        let il = IntLayer::encode(&q, &grids, 3);
+        let packed = PackedBcLayer::random(rows, cols, 3, 11);
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..cols).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let backends: [&dyn Gemv; 3] = [&dense, &il, &packed];
+        for backend in backends {
+            assert!(par_rows(rows, cols, 1) || pool::global().threads() == 1);
+            let mut ys: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0; rows]).collect();
+            backend.gemm(&refs, &mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut y_ref = vec![0.0; rows];
+                backend.gemv(x, &mut y_ref);
+                assert_eq!(
+                    y,
+                    &y_ref,
+                    "{}: threaded gemm must stay bitwise identical to gemv",
+                    backend.label()
+                );
+            }
         }
     }
 

@@ -25,22 +25,33 @@
 //!   ([`model`]), evaluation and experiment drivers ([`eval`]), and a
 //!   micro-bench harness ([`bench`]).
 //!
-//! ## Serving hot path: gemv *and* batched gemm
+//! ## Serving hot path: one chunk-major forward core
 //!
 //! Every linear layer is a [`kernels::Gemv`] backend with two entry
 //! points: single-sequence `gemv` (the paper's §III-E batch-1 latency
 //! protocol) and batched `gemm`, which streams each weight row / packed
-//! code byte **once per batch of concurrent sequences** instead of once
-//! per sequence. Single-token decode is bandwidth-bound, so at batch B
-//! the per-token weight traffic drops to `streamed_bytes / B` — the
-//! LUT-GEMM/FineQuant-style weight-reuse win a multi-tenant server
-//! needs. [`model::BackendModel::decode_batch`] threads the batched
-//! kernels through the whole transformer step, and the coordinator's
-//! `Engine::step` collects all runnable sequences into one batched
-//! decode call per tick. Batched arithmetic is per-item identical to the
-//! sequential path (same fp operation order), so generations are
-//! token-identical either way — `tests/kernel_parity.rs` and
-//! `tests/engine_batched.rs` pin both properties.
+//! code byte **once per batch of activation vectors** instead of once
+//! per vector — and, above a total-work threshold, fans its output rows
+//! across the global thread pool. Single-token decode is
+//! bandwidth-bound, so at batch B the per-token weight traffic drops to
+//! `streamed_bytes / B` — the LUT-GEMM/FineQuant-style weight-reuse win
+//! a multi-tenant server needs.
+//!
+//! The batch dimension carries more than concurrent decodes: the
+//! private chunk-major core in `model::decode` flattens **per-sequence
+//! token chunks** into the same gemm calls, so prefill processes T
+//! prompt tokens per weight stream, the coordinator's `Engine::step`
+//! advances prefilling *and* decoding sequences in one forward per
+//! tick, and full-sequence evaluation ([`model::Model::forward`],
+//! `eval ppl` — including through the quantized backends) is the
+//! degenerate one-chunk case. [`model::BackendModel::decode_step`],
+//! [`model::BackendModel::decode_batch`],
+//! [`model::BackendModel::prefill`], and
+//! [`model::BackendModel::forward_chunk`] are all thin views of that
+//! core. Per token the fp operation order is identical everywhere, so
+//! chunked, batched, and sequential execution produce bit-identical
+//! logits — `tests/kernel_parity.rs`, `tests/chunked_prefill.rs`, and
+//! `tests/engine_batched.rs` pin it.
 //!
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + trained weights once; the `gptqt` binary is
@@ -48,6 +59,11 @@
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
+
+// Explicit index loops are the idiom in the kernel/numeric code: the
+// reduction order they spell out is load-bearing for the bitwise
+// gemv == gemm parity contract, so don't let style lints rewrite them.
+#![allow(clippy::needless_range_loop)]
 
 pub mod bench;
 pub mod cli;

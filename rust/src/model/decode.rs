@@ -1,9 +1,32 @@
-//! Single-token decode path with KV cache — the serving hot loop.
+//! The chunk-major KV-cache forward core — the serving hot loop.
 //!
-//! Every linear layer is a [`Gemv`] backend, so the same loop executes
+//! Every linear layer is a [`Gemv`] backend, so the same code executes
 //! the dense f32 model (`full`), the GPTQ int+dequant model, or the GPTQT
 //! fused binary-coded model — Table IV's three contenders — with
 //! identical math and different memory traffic.
+//!
+//! One private core, [`BackendModel::forward_core`], advances any mix of
+//! per-sequence token chunks against their KV caches in a single pass
+//! per layer: every linear runs one batched [`Gemv::gemm`] over **all**
+//! chunk tokens of **all** sequences, so the weights stream once per
+//! (linear, tick) instead of once per token per sequence. Everything
+//! else is a thin view of that core:
+//!
+//! * single-token decode = B chunks of length 1 ([`BackendModel::decode_step`],
+//!   [`BackendModel::decode_batch`]),
+//! * chunked prefill = chunks of T prompt tokens ([`BackendModel::prefill`],
+//!   [`BackendModel::prefill_batch`]),
+//! * full-sequence evaluation = one chunk spanning the whole window
+//!   against an empty cache ([`BackendModel::forward_chunk`],
+//!   [`BackendModel::nll_window`] — and [`Model::forward`] delegates
+//!   here too).
+//!
+//! Causality inside a chunk falls out of the iteration bound: the whole
+//! chunk's K/V rows are appended first, then token at position `p`
+//! attends over cache rows `0..=p` only. Per token the fp operation
+//! order is identical to the sequential single-token loop (the kernels
+//! pin `gemm == per-item gemv` bitwise), so chunked, batched, and
+//! sequential execution all produce bit-identical logits.
 
 use super::config::{Family, ModelConfig};
 use super::forward::{alibi_slopes, gelu, silu, softmax, LN_EPS};
@@ -188,14 +211,177 @@ impl BackendModel {
 
     /// [`BackendModel::decode_batch`] over borrowed caches — the form
     /// the engine uses when the caches live inside its running set.
+    /// The degenerate all-chunks-of-length-1 case of the forward core.
     pub fn decode_batch_refs(
         &self,
         tokens: &[u32],
         caches: &mut [&mut KvCache],
     ) -> Vec<Vec<f32>> {
+        let chunks: Vec<&[u32]> = tokens.iter().map(std::slice::from_ref).collect();
+        self.forward_chunks_refs(&chunks, caches)
+    }
+
+    /// Advance each sequence by its token chunk and return the logits
+    /// after each chunk's **last** token (the serving form: that is the
+    /// only position a sampler needs). Chunks may have different lengths;
+    /// length-1 chunks are exactly single-token decode, so one call can
+    /// mix prefilling and decoding sequences — the engine's unified tick.
+    pub fn forward_chunks_refs(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut KvCache],
+    ) -> Vec<Vec<f32>> {
+        self.forward_core(chunks, caches, LogitsWanted::Last)
+            .into_iter()
+            .map(|t| t.into_vec())
+            .collect()
+    }
+
+    /// [`BackendModel::forward_chunks_refs`] with a per-sequence logits
+    /// mask: chunks with `need[b] == false` advance their KV cache but
+    /// skip the final-norm + vocab projection entirely (`None` in the
+    /// result). The engine uses this for mid-prompt prefill chunks,
+    /// whose logits nothing samples.
+    pub fn forward_chunks_masked(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut KvCache],
+        need: &[bool],
+    ) -> Vec<Option<Vec<f32>>> {
+        assert_eq!(chunks.len(), need.len(), "forward_chunks_masked need-mask length");
+        self.forward_core(chunks, caches, LogitsWanted::LastIf(need))
+            .into_iter()
+            .zip(need)
+            .map(|(t, &k)| if k { Some(t.into_vec()) } else { None })
+            .collect()
+    }
+
+    /// Process `tokens` as one chunk against `cache`, returning the full
+    /// (T × vocab) logits matrix — one row per position. With an empty
+    /// cache this is the whole-window forward pass ([`Model::forward`]
+    /// delegates here); with a warm cache it is multi-token continuation.
+    pub fn forward_chunk(&self, tokens: &[u32], cache: &mut KvCache) -> Tensor {
+        let mut caches = [cache];
+        self.forward_core(&[tokens], &mut caches, LogitsWanted::All)
+            .pop()
+            .expect("forward_core returns one logits tensor per chunk")
+    }
+
+    /// Teacher-forced `(Σ nll, count)` over a window — [`Model::nll_window`]
+    /// semantics through the serving kernels, so quantized backends
+    /// (int-dequant, LUT) are perplexity-evaluated end-to-end on the
+    /// exact code path deployment runs.
+    pub fn nll_window(&self, tokens: &[u32]) -> (f64, usize) {
+        if tokens.len() < 2 {
+            return (0.0, 0);
+        }
+        let mut cache = KvCache::new(&self.cfg);
+        let logits = self.forward_chunk(tokens, &mut cache);
+        super::forward::nll_from_logits(&logits, tokens)
+    }
+
+    /// Prefill a prompt through the chunked core (one weight stream per
+    /// linear per [`PREFILL_CHUNK`] tokens instead of per token),
+    /// returning the logits after the last prompt token. Bit-identical
+    /// to a sequential [`BackendModel::decode_step`] loop.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Vec<f32> {
+        self.prefill_chunked(tokens, cache, PREFILL_CHUNK)
+    }
+
+    /// [`BackendModel::prefill`] with an explicit chunk size (tests and
+    /// sweeps; `chunk >= tokens.len()` is a single pass).
+    pub fn prefill_chunked(&self, tokens: &[u32], cache: &mut KvCache, chunk: usize) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        assert!(chunk >= 1, "prefill chunk must be >= 1");
+        let mut logits = Vec::new();
+        let last_start = tokens.len() - 1 - (tokens.len() - 1) % chunk;
+        for (ci, piece) in tokens.chunks(chunk).enumerate() {
+            // only the final chunk's logits are observable
+            let need = [ci * chunk == last_start];
+            let mut caches = [&mut *cache];
+            if let Some(l) = self
+                .forward_chunks_masked(&[piece], &mut caches, &need)
+                .pop()
+                .expect("forward_chunks_masked returns one entry per chunk")
+            {
+                logits = l;
+            }
+        }
+        logits
+    }
+
+    /// Prefill B prompts concurrently: each round takes the next `chunk`
+    /// tokens of every unfinished prompt and advances them through one
+    /// core call, so the weights stream once per `B × chunk` prompt
+    /// tokens. Prompts may have different lengths (finished ones simply
+    /// drop out of later rounds). Returns each sequence's last-token
+    /// logits, bit-identical to per-sequence sequential prefill.
+    pub fn prefill_batch(
+        &self,
+        prompts: &[&[u32]],
+        caches: &mut [KvCache],
+        chunk: usize,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(prompts.len(), caches.len(), "prefill_batch prompt/cache mismatch");
+        assert!(chunk >= 1, "prefill chunk must be >= 1");
+        let nb = prompts.len();
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); nb];
+        let mut idx = vec![0usize; nb];
+        loop {
+            let pending: Vec<bool> = (0..nb).map(|bi| idx[bi] < prompts[bi].len()).collect();
+            let mut sel: Vec<usize> = Vec::new();
+            let mut chunks: Vec<&[u32]> = Vec::new();
+            let mut need: Vec<bool> = Vec::new();
+            for (bi, prompt) in prompts.iter().enumerate() {
+                if pending[bi] {
+                    let end = (idx[bi] + chunk).min(prompt.len());
+                    chunks.push(&prompt[idx[bi]..end]);
+                    // only a prompt-completing chunk's logits are observable
+                    need.push(end == prompt.len());
+                    sel.push(bi);
+                }
+            }
+            if sel.is_empty() {
+                return out;
+            }
+            let mut cache_refs: Vec<&mut KvCache> = caches
+                .iter_mut()
+                .enumerate()
+                .filter_map(|(bi, c)| if pending[bi] { Some(c) } else { None })
+                .collect();
+            let logits = self.forward_chunks_masked(&chunks, &mut cache_refs, &need);
+            for ((&bi, chunk_fed), l) in sel.iter().zip(&chunks).zip(logits) {
+                idx[bi] += chunk_fed.len();
+                if let Some(l) = l {
+                    out[bi] = l;
+                }
+            }
+        }
+    }
+
+    /// The chunk-major forward core every public entry point reduces to.
+    ///
+    /// `chunks[b]` is consumed at positions `caches[b].len ..`, all K/V
+    /// rows are appended, and each linear layer runs **one** batched
+    /// [`Gemv::gemm`] over the flattened token rows of every chunk — the
+    /// single place weights are streamed. Attention is per token over
+    /// cache rows `0..=pos` (causal by construction; intra-chunk tokens
+    /// see exactly the prefix a sequential loop would have written).
+    ///
+    /// Returns one logits tensor per chunk, per `wanted`: all T
+    /// positions (evaluation), the last position only (serving — skips
+    /// `T−1` of the vocab-sized projections per chunk), or the last
+    /// position of masked chunks only (mid-prompt chunks skip the
+    /// final-norm + vocab projection entirely and get an empty tensor).
+    fn forward_core(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut KvCache],
+        wanted: LogitsWanted,
+    ) -> Vec<Tensor> {
         let cfg = &self.cfg;
-        let nb = tokens.len();
-        assert_eq!(caches.len(), nb, "decode_batch token/cache count mismatch");
+        let nb = chunks.len();
+        assert_eq!(caches.len(), nb, "forward_core chunk/cache count mismatch");
         if nb == 0 {
             return Vec::new();
         }
@@ -207,16 +393,34 @@ impl BackendModel {
         } else {
             vec![0.0; heads]
         };
-        let pos: Vec<usize> = caches.iter().map(|c| c.len).collect();
-        for (bi, &p) in pos.iter().enumerate() {
-            assert!(p < cfg.max_seq, "KV cache full (batch seq {bi})");
+
+        // flat row layout: chunk 0's tokens, then chunk 1's, …
+        let starts: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        let mut row_seq: Vec<usize> = Vec::new(); // row → chunk index
+        let mut row_pos: Vec<usize> = Vec::new(); // row → absolute position
+        for (bi, chunk) in chunks.iter().enumerate() {
+            assert!(!chunk.is_empty(), "forward_core: empty chunk (seq {bi})");
+            assert!(
+                starts[bi] + chunk.len() <= cfg.max_seq,
+                "KV cache overflow (seq {bi}: {} + {} > {})",
+                starts[bi],
+                chunk.len(),
+                cfg.max_seq
+            );
+            for t in 0..chunk.len() {
+                row_seq.push(bi);
+                row_pos.push(starts[bi] + t);
+            }
+        }
+        let nrows = row_seq.len();
+
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(nrows);
+        for (bi, chunk) in chunks.iter().enumerate() {
+            for (t, &tok) in chunk.iter().enumerate() {
+                xs.push(self.embed_one(tok, starts[bi] + t));
+            }
         }
 
-        let mut xs: Vec<Vec<f32>> = tokens
-            .iter()
-            .zip(&pos)
-            .map(|(&t, &p)| self.embed_one(t, p))
-            .collect();
         for i in 0..cfg.layers {
             let hs: Vec<Vec<f32>> =
                 xs.iter().map(|x| self.norm(&format!("L{i}.ln1"), x)).collect();
@@ -224,20 +428,24 @@ impl BackendModel {
             let mut qs = self.gemm(&format!("L{i}.attn.q"), &hrefs);
             let mut ks = self.gemm(&format!("L{i}.attn.k"), &hrefs);
             let vs = self.gemm(&format!("L{i}.attn.v"), &hrefs);
-            for (bi, cache) in caches.iter_mut().enumerate() {
+            // rope + append the whole chunk's K/V before any attention
+            for r in 0..nrows {
+                let (bi, p) = (row_seq[r], row_pos[r]);
                 if cfg.family == Family::Llama {
-                    rope_vec(&mut qs[bi], heads, pos[bi]);
-                    rope_vec(&mut ks[bi], heads, pos[bi]);
+                    rope_vec(&mut qs[r], heads, p);
+                    rope_vec(&mut ks[r], heads, p);
                 }
-                cache.k[i].row_mut(pos[bi]).copy_from_slice(&ks[bi]);
-                cache.v[i].row_mut(pos[bi]).copy_from_slice(&vs[bi]);
+                caches[bi].k[i].row_mut(p).copy_from_slice(&ks[r]);
+                caches[bi].v[i].row_mut(p).copy_from_slice(&vs[r]);
             }
 
-            // attention stays per-sequence: each cache has its own length
-            let mut ctxs: Vec<Vec<f32>> = Vec::with_capacity(nb);
-            for (bi, cache) in caches.iter().enumerate() {
-                let p = pos[bi];
-                let q = &qs[bi];
+            // attention stays per token: row at position p attends over
+            // cache rows 0..=p — prefix plus the intra-chunk past
+            let mut ctxs: Vec<Vec<f32>> = Vec::with_capacity(nrows);
+            for r in 0..nrows {
+                let (bi, p) = (row_seq[r], row_pos[r]);
+                let cache = &caches[bi];
+                let q = &qs[r];
                 let mut ctx = vec![0.0f32; cfg.d_model];
                 let mut scores = vec![0.0f32; p + 1];
                 for head in 0..heads {
@@ -303,31 +511,86 @@ impl BackendModel {
                 }
             }
         }
-        for (cache, &p) in caches.iter_mut().zip(&pos) {
-            cache.len = p + 1;
+        for (cache, chunk) in caches.iter_mut().zip(chunks) {
+            cache.len += chunk.len();
         }
 
         // tied-embedding logits through the batched dense kernel: the
-        // (vocab × d_model) embedding streams once for the whole batch
-        let xfs: Vec<Vec<f32>> = xs.iter().map(|x| self.norm("final_ln", x)).collect();
-        let xrefs: Vec<&[f32]> = xfs.iter().map(|v| v.as_slice()).collect();
+        // (vocab × d_model) embedding streams once for the whole call
         let tok = self.weights.expect("tok_emb");
-        let mut logits: Vec<Vec<f32>> = (0..nb).map(|_| vec![0.0f32; cfg.vocab]).collect();
-        crate::kernels::gemm_f32(tok, &xrefs, &mut logits);
-        logits
-    }
-
-    /// Prefill a prompt (sequential decode steps), returning the logits
-    /// after the last prompt token.
-    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Vec<f32> {
-        assert!(!tokens.is_empty());
-        let mut logits = Vec::new();
-        for &t in tokens {
-            logits = self.decode_step(t, cache);
+        if let LogitsWanted::All = wanted {
+            let xfs: Vec<Vec<f32>> = xs.iter().map(|x| self.norm("final_ln", x)).collect();
+            let xrefs: Vec<&[f32]> = xfs.iter().map(|v| v.as_slice()).collect();
+            let mut ys: Vec<Vec<f32>> =
+                (0..nrows).map(|_| vec![0.0f32; cfg.vocab]).collect();
+            crate::kernels::gemm_f32(tok, &xrefs, &mut ys);
+            let mut out = Vec::with_capacity(nb);
+            let mut row = 0usize;
+            for chunk in chunks {
+                let t = chunk.len();
+                let mut data = Vec::with_capacity(t * cfg.vocab);
+                for y in &ys[row..row + t] {
+                    data.extend_from_slice(y);
+                }
+                out.push(Tensor::from_vec(t, cfg.vocab, data));
+                row += t;
+            }
+            return out;
         }
-        logits
+        // serving only samples after a chunk's last token — and only for
+        // chunks the mask wants; everything else skips the final norm
+        // and the vocab-sized projection altogether
+        let keep: Vec<bool> = match wanted {
+            LogitsWanted::All => unreachable!("handled above"),
+            LogitsWanted::Last => vec![true; nb],
+            LogitsWanted::LastIf(mask) => {
+                assert_eq!(mask.len(), nb, "forward_core logits-mask length");
+                mask.to_vec()
+            }
+        };
+        let mut last_rows = Vec::new();
+        let mut row = 0usize;
+        for (chunk, &k) in chunks.iter().zip(&keep) {
+            row += chunk.len();
+            if k {
+                last_rows.push(row - 1);
+            }
+        }
+        let xfs: Vec<Vec<f32>> =
+            last_rows.iter().map(|&r| self.norm("final_ln", &xs[r])).collect();
+        let xrefs: Vec<&[f32]> = xfs.iter().map(|v| v.as_slice()).collect();
+        let mut ys: Vec<Vec<f32>> =
+            (0..last_rows.len()).map(|_| vec![0.0f32; cfg.vocab]).collect();
+        crate::kernels::gemm_f32(tok, &xrefs, &mut ys);
+        let mut ys_iter = ys.into_iter();
+        keep.iter()
+            .map(|&k| {
+                if k {
+                    Tensor::from_vec(1, cfg.vocab, ys_iter.next().expect("one per kept chunk"))
+                } else {
+                    Tensor::zeros(0, 0)
+                }
+            })
+            .collect()
     }
 }
+
+/// Which logits a [`BackendModel::forward_core`] call materializes.
+#[derive(Clone, Copy)]
+enum LogitsWanted<'a> {
+    /// Every position of every chunk (evaluation).
+    All,
+    /// Each chunk's last position (serving).
+    Last,
+    /// Last position of masked chunks only; others return empty tensors
+    /// (mid-prompt prefill chunks — nothing will sample them).
+    LastIf(&'a [bool]),
+}
+
+/// Default prompt tokens per core call in [`BackendModel::prefill`]:
+/// weight streams per prompt drop `PREFILL_CHUNK`× vs the per-token
+/// loop, while the per-call activation working set stays small.
+pub const PREFILL_CHUNK: usize = 32;
 
 /// RoPE on a single d_model vector at absolute position `pos`.
 pub fn rope_vec(x: &mut [f32], heads: usize, pos: usize) {

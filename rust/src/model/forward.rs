@@ -10,6 +10,13 @@
 //! 3. **Numerics oracle** — integration tests check the AOT-compiled XLA
 //!    executables (Layer 2) against this implementation.
 //!
+//! Since the chunk-major refactor, `Model::forward` (and with it
+//! `nll_window`) is the degenerate full-sequence case of the KV-cache
+//! forward core in [`super::decode`] — one code path serves decode,
+//! prefill, and evaluation. Only the hooked block-by-block form below
+//! remains a separate implementation, because calibration needs
+//! whole-window activation matrices fed to each linear.
+//!
 //! Every op matches the JAX model in `python/compile/model.py` exactly
 //! (same GELU tanh approximation, same RoPE pairing, same ALiBi slopes,
 //! same ε) so HLO-vs-rust diffs stay at f32 round-off level.
@@ -177,7 +184,13 @@ impl Model {
 
     /// Multi-head causal self-attention over a full window (training-style
     /// square attention, batch 1).
-    fn attention(&self, i: usize, h: &Tensor, start_pos: usize, hook: &mut Option<LinearHook>) -> Tensor {
+    fn attention(
+        &self,
+        i: usize,
+        h: &Tensor,
+        start_pos: usize,
+        hook: &mut Option<LinearHook>,
+    ) -> Tensor {
         let cfg = &self.cfg;
         let (tlen, d) = h.shape();
         let heads = cfg.heads;
@@ -282,11 +295,28 @@ impl Model {
     }
 
     /// Full forward over a token window → (T × vocab) logits.
+    ///
+    /// Since the chunk-major refactor this is the degenerate
+    /// single-chunk case of the KV-cache forward core: the whole window
+    /// as one chunk of a dense [`super::BackendModel`] against an empty
+    /// cache. Bit-identical to the old block-by-block implementation
+    /// (same per-row ops, and the kernels pin `gemm == per-item gemv`),
+    /// which survives as [`Model::forward_hooked`] for calibration.
+    /// Windows are capped at `cfg.max_seq` (the KV-cache capacity).
+    ///
+    /// Builds a dense backend (one weight clone) per call — convenient
+    /// for tests and one-shot forwards; anything calling in a loop
+    /// should hold a [`super::BackendModel`] and use `forward_chunk` /
+    /// `nll_window` directly (as `eval_ppl` does).
     pub fn forward(&self, tokens: &[u32]) -> Tensor {
-        self.forward_hooked(tokens, None)
+        let bm = super::BackendModel::dense(self);
+        let mut cache = super::KvCache::new(&self.cfg);
+        bm.forward_chunk(tokens, &mut cache)
     }
 
-    /// Forward with per-linear input hooks (calibration).
+    /// Forward with per-linear input hooks (calibration). Keeps the
+    /// explicit block-by-block square-attention form: the quantization
+    /// driver needs whole-window activation matrices per linear.
     pub fn forward_hooked(&self, tokens: &[u32], mut hook: Option<LinearHook>) -> Tensor {
         let mut x = self.embed(tokens, 0);
         for i in 0..self.cfg.layers {
@@ -302,6 +332,9 @@ impl Model {
 
     /// Sum of next-token negative log-likelihoods over a window plus the
     /// number of predictions (for perplexity: `exp(Σnll / Σcount)`).
+    /// Runs through [`Model::forward`], i.e. the same chunked core the
+    /// quantized backends use — see `BackendModel::nll_window` for the
+    /// quantized-kernel variant.
     pub fn nll_window(&self, tokens: &[u32]) -> (f64, usize) {
         if tokens.len() < 2 {
             return (0.0, 0);

@@ -137,8 +137,8 @@ fn batched_engine_handles_staggered_arrivals_and_sampling() {
         for _ in 0..3 {
             engine.step().unwrap();
         }
-        let mut late = requests(10, 3, 4); // ids 0..10, keep 8/9 only
-        let late: Vec<Request> = late.drain(..).filter(|r| r.id >= 8).collect();
+        // ids 0..10, keep 8/9 only
+        let late: Vec<Request> = requests(10, 3, 4).into_iter().filter(|r| r.id >= 8).collect();
         for req in late {
             engine.submit(req).unwrap();
         }
