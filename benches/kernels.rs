@@ -1,40 +1,61 @@
 //! Kernel micro-benchmarks: the three weight-format matvecs underneath
 //! Table IV, isolated from the model. Shows where the LUT-GEMM win comes
-//! from (bytes streamed, not flops).
+//! from (bytes streamed, not flops), and races the runtime-dispatched
+//! SIMD tier against the pinned scalar tier on the batched kernels.
+//!
+//! `--smoke` runs the CI profile: tiny dims, minimal iterations,
+//! deterministic seeds — plus the SIMD-vs-scalar headline at
+//! 4096×4096×3 planes, batch 8 — and always writes the machine-readable
+//! `BENCH_kernels.json` (`{name, tokens_per_sec, ns_per_call}` entries)
+//! that the bench-smoke CI job uploads as the perf-trajectory artifact.
 
-use gptqt::bench::Suite;
-use gptqt::kernels::{gemv_f32, Gemv};
+use gptqt::bench::{write_bench_json, BenchRecord, Suite};
+use gptqt::kernels::gemv_lut::gemm_lut_scalar;
+use gptqt::kernels::{gemv_f32, simd, Gemv};
 use gptqt::quant::linear::{rtn_quantize, IntLayer};
 use gptqt::quant::pack::PackedBcLayer;
 use gptqt::tensor::Tensor;
 use gptqt::util::Rng;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, iters) = if smoke { (1, 2) } else { (3, 30) };
     let mut rng = Rng::new(1);
+    let mut records: Vec<BenchRecord> = Vec::new();
+    println!("simd tier: {}", simd::tier().label());
+
+    let gemv_shapes: &[(usize, usize)] = if smoke {
+        &[(64, 64), (96, 256)]
+    } else {
+        &[(512, 512), (1024, 1024), (2048, 2048), (2048, 8192)]
+    };
     let mut suite = Suite::new("weight-format matvec kernels");
-    for &(rows, cols) in &[(512usize, 512usize), (1024, 1024), (2048, 2048), (2048, 8192)] {
+    for &(rows, cols) in gemv_shapes {
         let w = Tensor::randn(rows, cols, 0.02, &mut rng);
         let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32()).collect();
         let mut y = vec![0.0f32; rows];
 
         let label = format!("{rows}x{cols}");
-        suite.run(&format!("gemv_f32      {label}"), 3, 30, || {
+        let r = suite.run(&format!("gemv_f32      {label}"), warmup, iters, || {
             gemv_f32(&w, &x, &mut y);
             std::hint::black_box(&y);
         });
+        records.push(r.to_record(1.0));
 
         let (q, grids) = rtn_quantize(&w, 2);
         let il = IntLayer::encode(&q, &grids, 2);
-        suite.run(&format!("gemv_dequant2 {label}"), 3, 30, || {
+        let r = suite.run(&format!("gemv_dequant2 {label}"), warmup, iters, || {
             il.gemv(&x, &mut y);
             std::hint::black_box(&y);
         });
+        records.push(r.to_record(1.0));
 
         let packed = PackedBcLayer::random(rows, cols, 3, rows as u64);
-        suite.run(&format!("gemv_lut3     {label}"), 3, 30, || {
+        let r = suite.run(&format!("gemv_lut3     {label}"), warmup, iters, || {
             packed.gemv(&x, &mut y);
             std::hint::black_box(&y);
         });
+        records.push(r.to_record(1.0));
 
         println!(
             "  bytes/matvec: f32 {:.2} MB | int2 {:.2} MB | lut3 {:.2} MB",
@@ -51,14 +72,15 @@ fn main() {
     }
 
     // ---- batched gemm: weight streaming amortized across B activations
-    let mut suite = Suite::new("batched gemm weight reuse (1024x1024)");
-    let (rows, cols) = (1024usize, 1024usize);
+    let (rows, cols) = if smoke { (128usize, 128usize) } else { (1024usize, 1024usize) };
+    let mut suite = Suite::new(&format!("batched gemm weight reuse ({rows}x{cols})"));
     let w = Tensor::randn(rows, cols, 0.02, &mut rng);
     let dense = gptqt::kernels::DenseGemv::new(w.clone());
     let (q, grids) = rtn_quantize(&w, 2);
     let il = IntLayer::encode(&q, &grids, 2);
     let packed = PackedBcLayer::random(rows, cols, 3, 2);
-    for &batch in &[1usize, 4, 16] {
+    let batches: &[usize] = if smoke { &[1, 8] } else { &[1, 4, 16] };
+    for &batch in batches {
         let xs: Vec<Vec<f32>> = (0..batch)
             .map(|_| (0..cols).map(|_| rng.normal_f32()).collect())
             .collect();
@@ -69,11 +91,12 @@ fn main() {
             ("gemm_dequant2", &il as &dyn Gemv),
             ("gemm_lut3    ", &packed as &dyn Gemv),
         ] {
-            let r = suite.run(&format!("{label} B={batch:<2}"), 2, 15, || {
+            let r = suite.run(&format!("{label} B={batch:<2}"), warmup.max(1), iters, || {
                 layer.gemm(&refs, &mut ys);
                 std::hint::black_box(&ys);
             });
             let per_tok_ns = r.median_ns / batch as f64;
+            records.push(r.to_record(batch as f64));
             println!(
                 "  {label} B={batch:<2}: {per_tok_ns:>10.0} ns/token, \
                  {:.3} MB weight traffic/token (amortized)",
@@ -81,4 +104,42 @@ fn main() {
             );
         }
     }
+
+    // ---- SIMD-vs-scalar headline: the acceptance shape for the AVX2
+    // inner loops — gemm_lut at 4096×4096, planes 3, batch 8. Runs in
+    // both modes (the smoke JSON is where CI reads the ratio from).
+    let (rows, cols, planes, batch) = (4096usize, 4096usize, 3usize, 8usize);
+    let mut suite = Suite::new(&format!(
+        "gemm_lut{planes} {rows}x{cols} B={batch}: {} vs scalar tier",
+        simd::tier().label()
+    ));
+    let packed = PackedBcLayer::random(rows, cols, planes, 4096);
+    let xs: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..cols).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let mut ys: Vec<Vec<f32>> = (0..batch).map(|_| vec![0.0f32; rows]).collect();
+    let (hw, hi) = if smoke { (1, 3) } else { (2, 10) };
+    let dispatched_name =
+        format!("gemm_lut{planes} {rows}x{cols} B={batch} {}", simd::tier().label());
+    let r = suite.run(&dispatched_name, hw, hi, || {
+        packed.gemm(&refs, &mut ys);
+        std::hint::black_box(&ys);
+    });
+    records.push(r.to_record(batch as f64));
+    let scalar_name = format!("gemm_lut{planes} {rows}x{cols} B={batch} scalar");
+    let r = suite.run(&scalar_name, hw, hi, || {
+        gemm_lut_scalar(&packed, &refs, &mut ys);
+        std::hint::black_box(&ys);
+    });
+    records.push(r.to_record(batch as f64));
+    if let Some(ratio) = suite.ratio(&scalar_name, &dispatched_name) {
+        println!(
+            "  {} vs scalar at {rows}x{cols}x{planes} B={batch}: {ratio:.2}x",
+            simd::tier().label()
+        );
+    }
+
+    write_bench_json("BENCH_kernels.json", &records).expect("write BENCH_kernels.json");
+    println!("\nwrote BENCH_kernels.json ({} records)", records.len());
 }

@@ -7,24 +7,41 @@
 //! The prefill sweep at the end compares the chunk-major multi-token
 //! prefill against the legacy per-token loop over prompt ∈ {64, 256,
 //! 1024} × batch ∈ {1, 8}, reporting prefill tokens/sec and TTFT — the
-//! trajectory line for the chunking win and future SIMD work.
+//! trajectory line for the chunking win and the SIMD inner loops.
+//!
+//! `--fast` shrinks the ladder; `--smoke` is the CI profile (opt-nano
+//! only, a handful of tokens, deterministic seeds) and is what the
+//! bench-smoke job runs. Both normal and smoke runs write the
+//! machine-readable `BENCH_speed.json` (`{name, tokens_per_sec,
+//! ns_per_call}`) uploaded as a CI artifact.
 
+use gptqt::bench::{write_bench_json, BenchRecord};
 use gptqt::eval::speed::{
     build_variant, measure_decode, measure_decode_batch, measure_prefill, SpeedVariant,
 };
 use gptqt::model::init::random_weights;
 use gptqt::model::{load_or_init, presets, Model};
 
-const BATCHES: [usize; 3] = [1, 4, 16];
-
 fn main() {
-    let fast = std::env::args().any(|a| a == "--fast");
-    let ladder: Vec<&str> = if fast {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let fast = smoke || std::env::args().any(|a| a == "--fast");
+    let mut records: Vec<BenchRecord> = Vec::new();
+    println!("simd tier: {}", gptqt::kernels::simd::tier().label());
+
+    let ladder: Vec<&str> = if smoke {
+        vec!["opt-nano"]
+    } else if fast {
         vec!["opt-nano", "opt-mini"]
     } else {
         vec!["opt-nano", "opt-mini", "opt-sm", "opt-md", "opt-lg"]
     };
-    let gen_tokens = if fast { 8 } else { 24 };
+    let gen_tokens = if smoke {
+        4
+    } else if fast {
+        8
+    } else {
+        24
+    };
     println!("\n=== bench suite: Table IV — ms/token, batch 1 (gen {gen_tokens} tokens) ===");
     println!(
         "{:<12} {:>10} {:>14} {:>14} {:>14} {:>9}",
@@ -40,6 +57,11 @@ fn main() {
         ] {
             let bm = build_variant(&model, variant, 0);
             let r = measure_decode(&model.cfg, &bm, variant, 8, gen_tokens, 7);
+            records.push(BenchRecord {
+                name: format!("decode {} {} B=1", name, variant.label()),
+                tokens_per_sec: 1e3 / r.ms_per_token.max(1e-12),
+                ns_per_call: r.ms_per_token * 1e6,
+            });
             ms.push(r.ms_per_token);
         }
         println!(
@@ -61,9 +83,16 @@ fn main() {
     } else {
         vec!["opt-mini", "opt-sm"]
     };
-    let gen_steps = if fast { 6 } else { 16 };
+    let gen_steps = if smoke {
+        3
+    } else if fast {
+        6
+    } else {
+        16
+    };
+    let batches: &[usize] = if smoke { &[1, 8] } else { &[1, 4, 16] };
     println!(
-        "\n=== bench suite: batched decode — tokens/sec at batch {{1, 4, 16}} \
+        "\n=== bench suite: batched decode — tokens/sec at batch {batches:?} \
          (gen {gen_steps} steps/seq) ==="
     );
     println!(
@@ -78,16 +107,21 @@ fn main() {
             SpeedVariant::GptqtLut { bits: 3 },
         ] {
             let bm = build_variant(&model, variant, 0);
-            let mut tps_b1 = 0.0f64;
-            let mut tps_b16 = 0.0f64;
-            for &batch in &BATCHES {
+            let mut tps_first = 0.0f64;
+            let mut tps_last = 0.0f64;
+            for &batch in batches {
                 let r = measure_decode_batch(&model.cfg, &bm, variant, batch, 8, gen_steps, 7);
-                if batch == 1 {
-                    tps_b1 = r.tokens_per_sec;
+                if batch == batches[0] {
+                    tps_first = r.tokens_per_sec;
                 }
-                if batch == 16 {
-                    tps_b16 = r.tokens_per_sec;
+                if batch == *batches.last().unwrap() {
+                    tps_last = r.tokens_per_sec;
                 }
+                records.push(BenchRecord {
+                    name: format!("decode_batch {} {} B={}", name, variant.label(), batch),
+                    tokens_per_sec: r.tokens_per_sec,
+                    ns_per_call: r.ms_per_step * 1e6,
+                });
                 println!(
                     "{:<12} {:<18} {:>6} {:>12.3} {:>14.0} {:>16.3}",
                     name,
@@ -98,11 +132,13 @@ fn main() {
                     r.amortized_mb_per_token,
                 );
             }
-            if tps_b1 > 0.0 && tps_b16 > 0.0 {
+            if tps_first > 0.0 && tps_last > 0.0 && batches.len() > 1 {
                 println!(
-                    "  -> {} batched B=16 vs sequential B=1 throughput: {:.2}x",
+                    "  -> {} batched B={} vs sequential B={} throughput: {:.2}x",
                     variant.label(),
-                    tps_b16 / tps_b1
+                    batches.last().unwrap(),
+                    batches[0],
+                    tps_last / tps_first
                 );
             }
         }
@@ -112,8 +148,14 @@ fn main() {
     // Prompt lengths exceed the preset max_seq (256), so the sweep runs a
     // widened KV capacity with random weights (timing only).
     let (prefill_model, chunk) = if fast { ("opt-nano", 16) } else { ("opt-sm", 32) };
-    let prompt_lens: &[usize] = if fast { &[64, 256] } else { &[64, 256, 1024] };
-    let batches: &[usize] = &[1, 8];
+    let prompt_lens: &[usize] = if smoke {
+        &[32]
+    } else if fast {
+        &[64, 256]
+    } else {
+        &[64, 256, 1024]
+    };
+    let prefill_batches: &[usize] = if smoke { &[1, 4] } else { &[1, 8] };
     let mut cfg = presets::by_name(prefill_model).expect("preset");
     cfg.max_seq = prompt_lens.iter().copied().max().unwrap_or(256) + 32;
     let model = Model::new(cfg.clone(), random_weights(&cfg, 0));
@@ -129,9 +171,16 @@ fn main() {
     for variant in [SpeedVariant::Full, SpeedVariant::GptqtLut { bits: 3 }] {
         let bm = build_variant(&model, variant, 0);
         for &plen in prompt_lens {
-            for &batch in batches {
+            for &batch in prefill_batches {
                 let base = measure_prefill(&cfg, &bm, variant, batch, plen, 0, 7);
                 let chunked = measure_prefill(&cfg, &bm, variant, batch, plen, chunk, 7);
+                let pname =
+                    format!("prefill {} p={plen} B={batch} chunk={chunk}", variant.label());
+                records.push(BenchRecord {
+                    name: pname,
+                    tokens_per_sec: chunked.tokens_per_sec,
+                    ns_per_call: (batch * plen) as f64 * 1e9 / chunked.tokens_per_sec.max(1e-12),
+                });
                 println!(
                     "{:<18} {:>7} {:>6} {:>15.0} {:>15.0} {:>11.2} {:>11.2} {:>8.2}x",
                     variant.label(),
@@ -146,4 +195,7 @@ fn main() {
             }
         }
     }
+
+    write_bench_json("BENCH_speed.json", &records).expect("write BENCH_speed.json");
+    println!("\nwrote BENCH_speed.json ({} records)", records.len());
 }

@@ -24,6 +24,21 @@ impl BenchResult {
         self.median_ns / 1e9
     }
 
+    /// Convert to a machine-readable record; `tokens_per_call` is how
+    /// many tokens (or other throughput units) one timed call produced.
+    pub fn to_record(&self, tokens_per_call: f64) -> BenchRecord {
+        let tps = if self.median_ns > 0.0 {
+            tokens_per_call * 1e9 / self.median_ns
+        } else {
+            0.0
+        };
+        BenchRecord {
+            name: self.name.clone(),
+            tokens_per_sec: tps,
+            ns_per_call: self.median_ns,
+        }
+    }
+
     pub fn report_line(&self) -> String {
         format!(
             "{:<44} {:>12}/iter  (±{} MAD, min {}, n={})",
@@ -62,6 +77,60 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         mean_ns: mean,
         min_ns: samples[0],
     }
+}
+
+/// One machine-readable benchmark entry for the CI artifact files
+/// (`BENCH_kernels.json` / `BENCH_speed.json`): the perf-trajectory
+/// schema the bench-smoke job uploads on every PR.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub tokens_per_sec: f64,
+    pub ns_per_call: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+/// Serialize records as a JSON array (no serde in the offline build).
+pub fn bench_records_json(records: &[BenchRecord]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"tokens_per_sec\": {}, \"ns_per_call\": {}}}{}\n",
+            json_escape(&r.name),
+            json_num(r.tokens_per_sec),
+            json_num(r.ns_per_call),
+            if i + 1 < records.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// Write the records to `path` as JSON (the CI bench-smoke artifact).
+pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, bench_records_json(records))
 }
 
 /// A collection of results printed as a suite.
@@ -109,6 +178,41 @@ mod tests {
         assert!(r.median_ns > 0.0);
         assert!(r.min_ns <= r.median_ns);
         assert_eq!(r.iters, 20);
+    }
+
+    #[test]
+    fn json_records_are_well_formed() {
+        let records = vec![
+            BenchRecord {
+                name: "gemm_lut3 4096x4096 B=8 \"avx2\"".into(),
+                tokens_per_sec: 1234.5678,
+                ns_per_call: 9.9e6,
+            },
+            BenchRecord { name: "empty".into(), tokens_per_sec: f64::INFINITY, ns_per_call: 0.0 },
+        ];
+        let json = bench_records_json(&records);
+        assert!(json.starts_with("[\n") && json.ends_with("]\n"), "{json}");
+        assert!(json.contains("\\\"avx2\\\""), "quotes escaped: {json}");
+        assert!(json.contains("\"tokens_per_sec\": 1234.568"), "{json}");
+        assert!(json.contains("\"tokens_per_sec\": 0.0"), "non-finite sanitized: {json}");
+        assert_eq!(json.matches('{').count(), 2);
+        assert_eq!(json.matches("},").count(), 1, "comma between entries only: {json}");
+        assert!(bench_records_json(&[]).contains("[\n]"), "empty array stays valid");
+    }
+
+    #[test]
+    fn result_to_record_computes_throughput() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 2e9,
+            mad_ns: 0.0,
+            mean_ns: 2e9,
+            min_ns: 2e9,
+        };
+        let rec = r.to_record(8.0);
+        assert!((rec.tokens_per_sec - 4.0).abs() < 1e-9);
+        assert_eq!(rec.ns_per_call, 2e9);
     }
 
     #[test]

@@ -10,37 +10,31 @@
 //! `Σ_c S(q_c + qz)·x_c = S·(Σ_c q_c·x_c) + S·qz·(Σ_c x_c)` — one integer
 //! ·f32 accumulation plus two scalars, which is both faster and exactly
 //! equal (fp-associativity aside) to the naive form.
+//!
+//! The integer·f32 dot runs at the dispatched SIMD tier
+//! ([`crate::kernels::simd::code_dot_t`]): AVX2 widens 8 code bytes per
+//! step and multiplies-then-adds with the same lane → accumulator
+//! mapping as the scalar tier, so scalar and SIMD results are bitwise
+//! identical. The batched [`gemm_dequant`] additionally widens each
+//! streamed code row to f32 **once per batch** and feeds all batch
+//! items the widened tile at SIMD width — exact conversion, so still
+//! the same bits as per-item [`gemv_dequant`].
 
+use super::simd::{self, SimdTier};
 use crate::quant::linear::IntLayer;
-
-/// Integer-code dot product for one row (4-way unrolled). Shared by the
-/// single-sequence and batched paths so both produce bit-identical
-/// results — the invariant the batched engine's token parity rests on.
-#[inline]
-fn row_code_dot(codes: &[u8], x: &[f32]) -> f32 {
-    let cols = x.len();
-    debug_assert_eq!(codes.len(), cols);
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    let chunks = cols / 4;
-    for i in 0..chunks {
-        let o = i * 4;
-        acc0 += codes[o] as f32 * x[o];
-        acc1 += codes[o + 1] as f32 * x[o + 1];
-        acc2 += codes[o + 2] as f32 * x[o + 2];
-        acc3 += codes[o + 3] as f32 * x[o + 3];
-    }
-    let mut acc = (acc0 + acc1) + (acc2 + acc3);
-    for c in chunks * 4..cols {
-        acc += codes[c] as f32 * x[c];
-    }
-    acc
-}
 
 /// `y = Ŵ·x` over the integer layer.
 pub fn gemv_dequant(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
+    gemv_dequant_t(layer, x, y, simd::tier());
+}
+
+/// [`gemv_dequant`] forced onto the scalar tier — the reference the
+/// SIMD path must match bitwise (`tests/simd_parity.rs`).
+pub fn gemv_dequant_scalar(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
+    gemv_dequant_t(layer, x, y, SimdTier::Scalar);
+}
+
+fn gemv_dequant_t(layer: &IntLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
     assert_eq!(x.len(), layer.cols);
     assert_eq!(y.len(), layer.rows);
     let sum_x: f32 = x.iter().sum();
@@ -48,20 +42,32 @@ pub fn gemv_dequant(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
     for r in 0..layer.rows {
         let (s, qz) = layer.row_params[r];
         let codes = &layer.codes[r * cols..(r + 1) * cols];
-        let acc = row_code_dot(codes, x);
+        let acc = simd::code_dot_t(codes, x, t);
         y[r] = s * acc + s * qz * sum_x;
     }
 }
 
 /// Batched `ys[b] = Ŵ·xs[b]`: each row's packed codes are streamed from
-/// memory once and applied to every activation in the batch while they
-/// sit in cache — the per-token weight traffic drops from
-/// `packed_bytes()` to `packed_bytes() / B`. Per batch item the
-/// arithmetic is exactly [`gemv_dequant`]'s (same unrolled accumulators,
-/// same order), so batched and sequential decode agree bit-for-bit.
-/// Calls with enough total work split rows across the pool; the row
-/// partition keeps every output element's reduction order unchanged.
+/// memory once, widened to an f32 tile once, and that tile is dotted
+/// against every activation in the batch while it sits in cache — the
+/// per-token weight traffic drops from `packed_bytes()` to
+/// `packed_bytes() / B`, and the `u8 → f32` conversion cost is paid
+/// once per row instead of once per (row, item). Per batch item the
+/// arithmetic is exactly [`gemv_dequant`]'s (widening is exact; the dot
+/// keeps the same pinned lanes and reduction), so batched and
+/// sequential decode agree bit-for-bit. Calls with enough total work
+/// split rows across the pool; the row partition keeps every output
+/// element's reduction order unchanged.
 pub fn gemm_dequant(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    gemm_dequant_t(layer, xs, ys, simd::tier());
+}
+
+/// [`gemm_dequant`] forced onto the scalar tier (bench/test reference).
+pub fn gemm_dequant_scalar(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    gemm_dequant_t(layer, xs, ys, SimdTier::Scalar);
+}
+
+fn gemm_dequant_t(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdTier) {
     assert_eq!(xs.len(), ys.len(), "gemm_dequant batch size mismatch");
     for x in xs {
         assert_eq!(x.len(), layer.cols);
@@ -74,22 +80,27 @@ pub fn gemm_dequant(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     if super::par_rows(layer.rows, cols, xs.len()) {
         let writer = super::RowWriter::new(ys);
         crate::util::pool::global().scope_chunks(layer.rows, |range| {
+            // per-worker scratch for the widened row tile
+            let mut wide = vec![0.0f32; cols];
             for r in range {
                 let (s, qz) = layer.row_params[r];
                 let codes = &layer.codes[r * cols..(r + 1) * cols];
+                simd::widen_codes(codes, &mut wide, t);
                 for (bi, x) in xs.iter().enumerate() {
-                    let acc = row_code_dot(codes, x);
+                    let acc = simd::dot_t(&wide, x, t);
                     // Safety: each row lands in exactly one chunk.
                     unsafe { writer.set(bi, r, s * acc + s * qz * sum_x[bi]) };
                 }
             }
         });
     } else {
+        let mut wide = vec![0.0f32; cols];
         for r in 0..layer.rows {
             let (s, qz) = layer.row_params[r];
             let codes = &layer.codes[r * cols..(r + 1) * cols];
+            simd::widen_codes(codes, &mut wide, t);
             for (bi, x) in xs.iter().enumerate() {
-                let acc = row_code_dot(codes, x);
+                let acc = simd::dot_t(&wide, x, t);
                 ys[bi][r] = s * acc + s * qz * sum_x[bi];
             }
         }
@@ -142,6 +153,30 @@ mod tests {
                 assert_eq!(y, &y_ref);
             }
         }
+    }
+
+    #[test]
+    fn scalar_tier_is_bitwise_identical_to_dispatch() {
+        let mut rng = Rng::new(314);
+        let (rows, cols) = (17, 131);
+        let w = Tensor::randn(rows, cols, 1.0, &mut rng);
+        let (q, grids) = rtn_quantize(&w, 4);
+        let il = IntLayer::encode(&q, &grids, 4);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32()).collect();
+        let mut y_s = vec![0.0; rows];
+        let mut y_d = vec![0.0; rows];
+        gemv_dequant_scalar(&il, &x, &mut y_s);
+        gemv_dequant(&il, &x, &mut y_d);
+        assert_eq!(y_s, y_d, "gemv scalar vs dispatched");
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..cols).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys_s: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0; rows]).collect();
+        let mut ys_d = ys_s.clone();
+        gemm_dequant_scalar(&il, &refs, &mut ys_s);
+        gemm_dequant(&il, &refs, &mut ys_d);
+        assert_eq!(ys_s, ys_d, "gemm scalar vs dispatched");
     }
 
     #[test]

@@ -20,7 +20,15 @@
 //!
 //! The LUT is built by gray-code-free DP: `lut[p] = lut[p \ lowbit] +
 //! 2·x[lowbit]`, starting from `lut[0] = −Σ_k x_k`.
+//!
+//! The per-slot accumulation runs at the dispatched SIMD tier
+//! ([`crate::kernels::simd::lut_accumulate`]): AVX2 processes 8
+//! `(row, plane)` slots per step, gathering 8 byte-codes per L1-resident
+//! table (`vpgatherdps`) and adding tables in ascending group order —
+//! the same per-slot add order as the scalar tier, so scalar and SIMD
+//! results are bitwise identical (gathers are exact loads).
 
+use super::simd::{self, SimdTier};
 use crate::quant::pack::{PackedBcLayer, GROUP};
 
 /// Groups processed per accumulator pass. The `(rows × planes)` f32
@@ -31,6 +39,16 @@ const GBLOCK: usize = 8;
 
 /// `y = Ŵ·x` over the packed binary-coded layer.
 pub fn gemv_lut(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
+    gemv_lut_t(layer, x, y, simd::tier());
+}
+
+/// [`gemv_lut`] forced onto the scalar tier — the reference the SIMD
+/// path must match bitwise (`tests/simd_parity.rs`).
+pub fn gemv_lut_scalar(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
+    gemv_lut_t(layer, x, y, SimdTier::Scalar);
+}
+
+fn gemv_lut_t(layer: &PackedBcLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
     assert_eq!(x.len(), layer.cols);
     assert_eq!(y.len(), layer.rows);
     let rows = layer.rows;
@@ -54,29 +72,11 @@ pub fn gemv_lut(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
             build_lut(&xg, lut);
         }
         let codes = &layer.codes[gb * slots..(gb + gn) * slots];
-        if gn == GBLOCK {
-            // hot path: unrolled over the group block, one acc pass
-            for (i, slot) in acc.iter_mut().enumerate() {
-                let mut s = *slot;
-                s += luts[0][codes[i] as usize];
-                s += luts[1][codes[slots + i] as usize];
-                s += luts[2][codes[2 * slots + i] as usize];
-                s += luts[3][codes[3 * slots + i] as usize];
-                s += luts[4][codes[4 * slots + i] as usize];
-                s += luts[5][codes[5 * slots + i] as usize];
-                s += luts[6][codes[6 * slots + i] as usize];
-                s += luts[7][codes[7 * slots + i] as usize];
-                *slot = s;
-            }
-        } else {
-            for (i, slot) in acc.iter_mut().enumerate() {
-                let mut s = *slot;
-                for (g, lut) in luts.iter().enumerate().take(gn) {
-                    s += lut[codes[g * slots + i] as usize];
-                }
-                *slot = s;
-            }
+        let mut slices: [&[u8]; GBLOCK] = [&[]; GBLOCK];
+        for (g, sl) in slices.iter_mut().enumerate().take(gn) {
+            *sl = &codes[g * slots..(g + 1) * slots];
         }
+        simd::lut_accumulate(&mut acc, &slices[..gn], &luts[..gn], t);
     }
 
     for r in 0..rows {
@@ -96,8 +96,9 @@ pub fn gemv_lut(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
 /// scales with B, as in B gemvs), but the packed sign bytes — the
 /// dominant memory stream, `rows·planes` bytes per group — are walked
 /// **once per group block for the whole batch**: every code byte is
-/// looked up in all B tables while it is register/L1-hot. Per-token
-/// weight traffic is `packed_bytes() / B`.
+/// looked up in all B tables while it is register/L1-hot, 8 slots per
+/// SIMD step on the AVX2 tier. Per-token weight traffic is
+/// `packed_bytes() / B`.
 ///
 /// Per batch item the accumulation order is identical to [`gemv_lut`]
 /// (groups added in ascending order onto the same `(row, plane)`
@@ -106,8 +107,19 @@ pub fn gemv_lut(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
 /// pool: each worker re-runs the group loop over its own row range with
 /// private LUTs and accumulators, so the per-element order — and with it
 /// the bitwise contract — is untouched (LUT builds are duplicated per
-/// worker; they are a small, row-count-independent cost).
+/// worker; they are a small, row-count-independent cost). The partition
+/// is aligned to [`simd::BLOCK`] rows so every worker's slot range is a
+/// whole number of SIMD blocks (scalar tails only in the last chunk).
 pub fn gemm_lut(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    gemm_lut_t(layer, xs, ys, simd::tier());
+}
+
+/// [`gemm_lut`] forced onto the scalar tier (bench/test reference).
+pub fn gemm_lut_scalar(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    gemm_lut_t(layer, xs, ys, SimdTier::Scalar);
+}
+
+fn gemm_lut_t(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdTier) {
     let nb = xs.len();
     assert_eq!(nb, ys.len(), "gemm_lut batch size mismatch");
     for x in xs {
@@ -122,17 +134,18 @@ pub fn gemm_lut(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
     let writer = super::RowWriter::new(ys);
     if super::par_rows(layer.rows, layer.cols, nb) {
-        crate::util::pool::global().scope_chunks(layer.rows, |range| {
-            gemm_lut_rows(layer, xs, &sum_x, range.start, range.end, &writer);
+        crate::util::pool::global().scope_chunks_aligned(layer.rows, simd::BLOCK, |range| {
+            gemm_lut_rows(layer, xs, &sum_x, range.start, range.end, &writer, t);
         });
     } else {
-        gemm_lut_rows(layer, xs, &sum_x, 0, layer.rows, &writer);
+        gemm_lut_rows(layer, xs, &sum_x, 0, layer.rows, &writer, t);
     }
 }
 
 /// The gemm body restricted to output rows `[rows_lo, rows_hi)` — the
 /// unit one pool worker executes. Accumulation per (row, plane) slot
 /// still walks groups in ascending order, matching [`gemv_lut`] exactly.
+#[allow(clippy::too_many_arguments)]
 fn gemm_lut_rows(
     layer: &PackedBcLayer,
     xs: &[&[f32]],
@@ -140,6 +153,7 @@ fn gemm_lut_rows(
     rows_lo: usize,
     rows_hi: usize,
     writer: &super::RowWriter,
+    t: SimdTier,
 ) {
     let nb = xs.len();
     let rows = layer.rows;
@@ -162,17 +176,16 @@ fn gemm_lut_rows(
                 build_lut(&xg, &mut luts[bi * GBLOCK + g]);
             }
         }
+        // this group block's code bytes restricted to our row range
+        let mut slices: [&[u8]; GBLOCK] = [&[]; GBLOCK];
+        for (g, sl) in slices.iter_mut().enumerate().take(gn) {
+            *sl = &layer.codes
+                [((gb + g) * rows + rows_lo) * planes..((gb + g) * rows + rows_hi) * planes];
+        }
         for bi in 0..nb {
             let lut_b = &luts[bi * GBLOCK..bi * GBLOCK + gn];
             let arow = &mut acc[bi * lslots..(bi + 1) * lslots];
-            for (g, lut) in lut_b.iter().enumerate() {
-                // this group's code bytes for our row range only
-                let codes = &layer.codes[((gb + g) * rows + rows_lo) * planes
-                    ..((gb + g) * rows + rows_hi) * planes];
-                for (slot, &code) in arow.iter_mut().zip(codes) {
-                    *slot += lut[code as usize];
-                }
-            }
+            simd::lut_accumulate(arow, &slices[..gn], lut_b, t);
         }
     }
 
@@ -274,6 +287,30 @@ mod tests {
                 gemv_lut(&layer, x, &mut y_ref);
                 assert_eq!(y, &y_ref);
             }
+        }
+    }
+
+    #[test]
+    fn scalar_tier_is_bitwise_identical_to_dispatch() {
+        let mut rng = Rng::new(326);
+        // rows·planes not a multiple of the SIMD block, ragged cols
+        for (rows, cols, planes) in [(5, 13, 3), (33, 130, 2)] {
+            let layer = random_packed(rows, cols, planes, 400 + cols as u64);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32()).collect();
+            let mut y_s = vec![0.0; rows];
+            let mut y_d = vec![0.0; rows];
+            gemv_lut_scalar(&layer, &x, &mut y_s);
+            gemv_lut(&layer, &x, &mut y_d);
+            assert_eq!(y_s, y_d, "gemv scalar vs dispatched ({rows}x{cols})");
+            let xs: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..cols).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let mut ys_s: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0; rows]).collect();
+            let mut ys_d = ys_s.clone();
+            gemm_lut_scalar(&layer, &refs, &mut ys_s);
+            gemm_lut(&layer, &refs, &mut ys_d);
+            assert_eq!(ys_s, ys_d, "gemm scalar vs dispatched ({rows}x{cols})");
         }
     }
 

@@ -1,17 +1,34 @@
 //! Serving hot-path kernels — the CPU realization of the three weight
 //! formats the paper races in Table IV:
 //!
-//! | format                | gemv kernel     | batched gemm       | paper row      |
-//! |-----------------------|-----------------|--------------------|----------------|
-//! | dense f32             | [`gemv_f32`]    | [`gemm_f32`]       | `full` (fp16)  |
-//! | packed int + dequant  | [`gemv_dequant`]| [`gemm_dequant`]   | `GPTQ`         |
-//! | fused binary coding   | [`gemv_lut`]    | [`gemm_lut`]       | `GPTQT` (LUT-GEMM) |
+//! | format                | gemv kernel     | batched gemm       | dispatch tiers | scalar↔SIMD parity | paper row      |
+//! |-----------------------|-----------------|--------------------|----------------|--------------------|----------------|
+//! | dense f32             | [`gemv_f32`]    | [`gemm_f32`]       | scalar / AVX2  | bitwise            | `full` (fp16)  |
+//! | packed int + dequant  | [`gemv_dequant`]| [`gemm_dequant`]   | scalar / AVX2  | bitwise            | `GPTQ`         |
+//! | fused binary coding   | [`gemv_lut`]    | [`gemm_lut`]       | scalar / AVX2  | bitwise            | `GPTQT` (LUT-GEMM) |
 //!
 //! All three implement [`Gemv`], so the decode loop and the speed
 //! benchmarks swap formats without touching the model code. In the
 //! bandwidth-bound single-token decode regime the ranking is decided by
 //! bytes streamed per output element: 4 B (f32) vs ~`bits/8` B (packed)
 //! — the same asymmetry that gives the paper its 30B-scale speedups.
+//!
+//! **SIMD dispatch.** Every inner accumulation runs through
+//! [`simd`]: an explicit AVX2 tier selected once per process via
+//! `is_x86_feature_detected!("avx2")`, with a portable scalar fallback
+//! everywhere else. All three kernels pin the *bitwise* variant of the
+//! parity contract — AVX2 uses the same lane → accumulator mapping, the
+//! same mul-then-add rounding (no FMA), and the same tree reduction as
+//! the scalar tier, so dispatch can never change a served token. Each
+//! kernel has a `*_scalar` twin (e.g. [`gemm_lut_scalar`]) that forces
+//! the scalar tier; `tests/simd_parity.rs` asserts `assert_eq!` between
+//! the twins across ragged shapes and batch sizes. Compare the tiers
+//! locally with the smoke benches:
+//!
+//! ```text
+//! cargo bench --bench kernels -- --smoke   # writes BENCH_kernels.json
+//! cargo bench --bench speed   -- --smoke   # writes BENCH_speed.json
+//! ```
 //!
 //! **Batched weight reuse.** A server decoding B concurrent sequences
 //! would stream the weights B times through the gemv path; the batched
@@ -45,9 +62,13 @@
 //!
 //! [`gemm_dequant`]: gemv_dequant::gemm_dequant
 //! [`gemm_lut`]: gemv_lut::gemm_lut
+//! [`gemm_lut_scalar`]: gemv_lut::gemm_lut_scalar
 
 pub mod gemv_dequant;
 pub mod gemv_lut;
+pub mod simd;
+
+pub use simd::SimdTier;
 
 use crate::quant::linear::IntLayer;
 use crate::quant::pack::PackedBcLayer;
@@ -156,12 +177,22 @@ impl Gemv for DenseGemv {
     }
 }
 
-/// Dense f32 matvec (unrolled dot per row).
+/// Dense f32 matvec (SIMD-dispatched dot per row).
 pub fn gemv_f32(w: &Tensor, x: &[f32], y: &mut [f32]) {
+    gemv_f32_t(w, x, y, simd::tier());
+}
+
+/// [`gemv_f32`] forced onto the scalar tier — the reference the SIMD
+/// path must match bitwise (`tests/simd_parity.rs`).
+pub fn gemv_f32_scalar(w: &Tensor, x: &[f32], y: &mut [f32]) {
+    gemv_f32_t(w, x, y, SimdTier::Scalar);
+}
+
+fn gemv_f32_t(w: &Tensor, x: &[f32], y: &mut [f32], t: SimdTier) {
     assert_eq!(x.len(), w.cols());
     assert_eq!(y.len(), w.rows());
     for (r, yr) in y.iter_mut().enumerate() {
-        *yr = crate::tensor::ops::dot(w.row(r), x);
+        *yr = simd::dot_t(w.row(r), x, t);
     }
 }
 
@@ -171,6 +202,15 @@ pub fn gemv_f32(w: &Tensor, x: &[f32], y: &mut [f32]) {
 /// the arithmetic is exactly [`gemv_f32`]'s; large calls split rows
 /// across the pool (same per-row reduction order, so still bitwise).
 pub fn gemm_f32(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    gemm_f32_t(w, xs, ys, simd::tier());
+}
+
+/// [`gemm_f32`] forced onto the scalar tier (bench/test reference).
+pub fn gemm_f32_scalar(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    gemm_f32_t(w, xs, ys, SimdTier::Scalar);
+}
+
+fn gemm_f32_t(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdTier) {
     assert_eq!(xs.len(), ys.len(), "gemm_f32 batch size mismatch");
     for x in xs {
         assert_eq!(x.len(), w.cols());
@@ -186,7 +226,7 @@ pub fn gemm_f32(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
                 let row = w.row(r);
                 for (bi, x) in xs.iter().enumerate() {
                     // Safety: each row lands in exactly one chunk.
-                    unsafe { writer.set(bi, r, crate::tensor::ops::dot(row, x)) };
+                    unsafe { writer.set(bi, r, simd::dot_t(row, x, t)) };
                 }
             }
         });
@@ -194,7 +234,7 @@ pub fn gemm_f32(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
         for r in 0..rows {
             let row = w.row(r);
             for (x, y) in xs.iter().zip(ys.iter_mut()) {
-                y[r] = crate::tensor::ops::dot(row, x);
+                y[r] = simd::dot_t(row, x, t);
             }
         }
     }

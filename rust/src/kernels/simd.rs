@@ -1,0 +1,415 @@
+//! Runtime-dispatched SIMD inner loops for the serving kernels.
+//!
+//! Every hot accumulation in [`crate::kernels`] funnels through one of
+//! the primitives here: the f32 dot ([`dot`]), the integer-code dot of
+//! the dequant path (`code_dot_t`), the byte-code widening used by the
+//! batched dequant gemm (`widen_codes`), and the LUT gather-accumulate
+//! of the binary-coding path (`lut_accumulate`). Each primitive has a
+//! portable scalar tier and an explicit AVX2 tier selected once per
+//! process via `is_x86_feature_detected!` (no compile-time feature
+//! flags needed — `RUSTFLAGS=-C target-feature=+avx2` merely lets the
+//! compiler assume what the dispatcher would have detected anyway).
+//!
+//! ## The bitwise parity contract
+//!
+//! The engine's batched == sequential token guarantee rests on `gemv ==
+//! gemm(B=1)` being *bitwise*. The SIMD tiers extend that contract one
+//! axis further: **scalar and AVX2 produce bit-identical results on
+//! every input**, so runtime dispatch can never change a served token.
+//! Three rules make this possible:
+//!
+//! 1. **Pinned lane → accumulator mapping.** The scalar tiers keep 8
+//!    independent accumulators where accumulator `k` owns indices
+//!    `8·i + k`; the AVX2 tiers put accumulator `k` in vector lane `k`.
+//!    Identical operand sequence per accumulator ⇒ identical rounding.
+//! 2. **Pinned tree reduction.** Horizontal sums always reduce as
+//!    `(l0+l1) + (l2+l3) + ((l4+l5) + (l6+l7)) + tail` — the same
+//!    expression in both tiers.
+//! 3. **No FMA.** `_mm256_fmadd_ps` rounds once where `mul` + `add`
+//!    round twice, which would break rule 1. In this bandwidth-bound
+//!    regime the fused multiply buys nothing the wider registers did
+//!    not already, so every tier multiplies then adds. (Decision pinned
+//!    per kernel by `tests/simd_parity.rs`.)
+//!
+//! Conversions (`u8 → f32`) and LUT gathers are exact, so they cannot
+//! perturb parity. The upshot: `kernel_parity.rs` / `engine_batched.rs`
+//! keep their `assert_eq!` checks — no ULP tolerance anywhere.
+
+use crate::quant::pack::GROUP;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Width (f32 lanes / code bytes) of one SIMD block; row partitions that
+/// want tail-free workers align on this (see
+/// [`crate::util::pool::ThreadPool::scope_chunks_aligned`]).
+pub const BLOCK: usize = 8;
+
+/// Instruction tier a kernel executes at.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdTier {
+    /// Portable unrolled loops (the reference semantics).
+    Scalar,
+    /// Explicit AVX2 intrinsics, bitwise-equal to `Scalar`.
+    Avx2,
+}
+
+impl SimdTier {
+    /// Probe the running CPU (uncached; prefer [`tier`]).
+    pub fn detect() -> SimdTier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return SimdTier::Avx2;
+            }
+        }
+        SimdTier::Scalar
+    }
+
+    /// Human label for bench output ("scalar" / "avx2").
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The best tier the running CPU supports, detected once per process.
+pub fn tier() -> SimdTier {
+    use once_cell::sync::Lazy;
+    static TIER: Lazy<SimdTier> = Lazy::new(SimdTier::detect);
+    *TIER
+}
+
+// ---------------------------------------------------------------- dot
+
+/// `Σ a[i]·b[i]` at the detected tier.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_t(a, b, tier())
+}
+
+/// [`dot`] pinned to an explicit tier. `t` must not exceed the detected
+/// tier (the public wrappers guarantee this).
+#[inline]
+pub(crate) fn dot_t(a: &[f32], b: &[f32], t: SimdTier) -> f32 {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: callers only pass Avx2 when tier() reported it.
+        SimdTier::Avx2 => unsafe { dot_avx2(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Scalar-tier dot: 8 accumulators, lane `k` owns indices `8·i + k`,
+/// pinned tree reduction. This exact shape is the parity reference for
+/// the AVX2 tier *and* auto-vectorizes acceptably where AVX2 is absent.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 += a[o] * b[o];
+        s1 += a[o + 1] * b[o + 1];
+        s2 += a[o + 2] * b[o + 2];
+        s3 += a[o + 3] * b[o + 3];
+        s4 += a[o + 4] * b[o + 4];
+        s5 += a[o + 5] * b[o + 5];
+        s6 += a[o + 6] * b[o + 6];
+        s7 += a[o + 7] * b[o + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+/// Pinned-order horizontal sum of one vector of 8 lane accumulators —
+/// the same tree the scalar tier spells out.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_pinned(v: __m256) -> f32 {
+    let mut l = [0.0f32; 8];
+    _mm256_storeu_ps(l.as_mut_ptr(), v);
+    (l[0] + l[1]) + (l[2] + l[3]) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let o = i * 8;
+        let prod = _mm256_mul_ps(_mm256_loadu_ps(ap.add(o)), _mm256_loadu_ps(bp.add(o)));
+        acc = _mm256_add_ps(acc, prod);
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    hsum_pinned(acc) + tail
+}
+
+// ----------------------------------------------------------- code dot
+
+/// `Σ codes[i]·x[i]` with the codes widened `u8 → f32` on the fly —
+/// the dequant path's inner product, same pinned shape as [`dot`]
+/// (widening is exact, so `code_dot(c, x) == dot(widen(c), x)` bitwise).
+#[inline]
+pub(crate) fn code_dot_t(codes: &[u8], x: &[f32], t: SimdTier) -> f32 {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: callers only pass Avx2 when tier() reported it.
+        SimdTier::Avx2 => unsafe { code_dot_avx2(codes, x) },
+        _ => code_dot_scalar(codes, x),
+    }
+}
+
+#[inline]
+fn code_dot_scalar(codes: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), x.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 += codes[o] as f32 * x[o];
+        s1 += codes[o + 1] as f32 * x[o + 1];
+        s2 += codes[o + 2] as f32 * x[o + 2];
+        s3 += codes[o + 3] as f32 * x[o + 3];
+        s4 += codes[o + 4] as f32 * x[o + 4];
+        s5 += codes[o + 5] as f32 * x[o + 5];
+        s6 += codes[o + 6] as f32 * x[o + 6];
+        s7 += codes[o + 7] as f32 * x[o + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += codes[i] as f32 * x[i];
+    }
+    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+/// Load 8 code bytes and widen them to 8 exact f32 lanes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn load8_u8_as_f32(p: *const u8) -> __m256 {
+    _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i)))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn code_dot_avx2(codes: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), x.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let cp = codes.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let o = i * 8;
+        let prod = _mm256_mul_ps(load8_u8_as_f32(cp.add(o)), _mm256_loadu_ps(xp.add(o)));
+        acc = _mm256_add_ps(acc, prod);
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += codes[i] as f32 * x[i];
+    }
+    hsum_pinned(acc) + tail
+}
+
+/// Widen a row of code bytes to f32 (`out[i] = codes[i] as f32`) — the
+/// batched dequant gemm converts each streamed weight row once and then
+/// feeds every batch item the f32 tile at SIMD width. Exact, so the
+/// tier cannot matter for the value; the AVX2 tier only converts faster.
+#[inline]
+pub(crate) fn widen_codes(codes: &[u8], out: &mut [f32], t: SimdTier) {
+    debug_assert_eq!(codes.len(), out.len());
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: callers only pass Avx2 when tier() reported it.
+        SimdTier::Avx2 => unsafe { widen_codes_avx2(codes, out) },
+        _ => {
+            for (o, &c) in out.iter_mut().zip(codes) {
+                *o = c as f32;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn widen_codes_avx2(codes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let chunks = n / 8;
+    let cp = codes.as_ptr();
+    let op = out.as_mut_ptr();
+    for i in 0..chunks {
+        let o = i * 8;
+        _mm256_storeu_ps(op.add(o), load8_u8_as_f32(cp.add(o)));
+    }
+    for i in chunks * 8..n {
+        *op.add(i) = *cp.add(i) as f32;
+    }
+}
+
+// ------------------------------------------------------ LUT accumulate
+
+/// `acc[i] += Σ_g luts[g][codes[g][i]]` with `g` ascending per slot —
+/// the LUT-GEMM inner accumulation shared by `gemv_lut` and `gemm_lut`.
+/// Each `codes[g]` slice must be exactly `acc.len()` bytes. The AVX2
+/// tier gathers 8 byte-codes per table per step (`vpgatherdps` over the
+/// L1-resident 256-entry LUT); per slot the add order is identical to
+/// the scalar tier, so the result is bitwise equal.
+#[inline]
+pub(crate) fn lut_accumulate(
+    acc: &mut [f32],
+    codes: &[&[u8]],
+    luts: &[[f32; 1 << GROUP]],
+    t: SimdTier,
+) {
+    debug_assert_eq!(codes.len(), luts.len());
+    for cs in codes {
+        debug_assert_eq!(cs.len(), acc.len());
+    }
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: callers only pass Avx2 when tier() reported it; every
+        // gather index is a u8, in bounds of the 256-entry tables.
+        SimdTier::Avx2 => unsafe { lut_accumulate_avx2(acc, codes, luts) },
+        _ => lut_accumulate_scalar(acc, codes, luts),
+    }
+}
+
+fn lut_accumulate_scalar(acc: &mut [f32], codes: &[&[u8]], luts: &[[f32; 1 << GROUP]]) {
+    for (i, slot) in acc.iter_mut().enumerate() {
+        let mut s = *slot;
+        for (cs, lut) in codes.iter().zip(luts) {
+            s += lut[cs[i] as usize];
+        }
+        *slot = s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn lut_accumulate_avx2(acc: &mut [f32], codes: &[&[u8]], luts: &[[f32; 1 << GROUP]]) {
+    let n = acc.len();
+    let chunks = n / 8;
+    let ap = acc.as_mut_ptr();
+    for i in 0..chunks {
+        let o = i * 8;
+        let mut v = _mm256_loadu_ps(ap.add(o));
+        for (cs, lut) in codes.iter().zip(luts) {
+            let idx = _mm256_cvtepu8_epi32(_mm_loadl_epi64(cs.as_ptr().add(o) as *const __m128i));
+            v = _mm256_add_ps(v, _mm256_i32gather_ps::<4>(lut.as_ptr(), idx));
+        }
+        _mm256_storeu_ps(ap.add(o), v);
+    }
+    for i in chunks * 8..n {
+        let mut s = *ap.add(i);
+        for (cs, lut) in codes.iter().zip(luts) {
+            s += lut[cs[i] as usize];
+        }
+        *ap.add(i) = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn detection_is_stable_and_labeled() {
+        let t = tier();
+        assert_eq!(t, tier(), "cached tier must not change");
+        assert!(t.label() == "scalar" || t.label() == "avx2");
+    }
+
+    #[test]
+    fn dot_tiers_match_bitwise_on_ragged_lengths() {
+        let mut rng = Rng::new(41);
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 1031] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let scalar = dot_scalar(&a, &b);
+            let dispatched = dot(&a, &b);
+            assert_eq!(scalar.to_bits(), dispatched.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn code_dot_tiers_match_bitwise_and_equal_widened_dot() {
+        let mut rng = Rng::new(42);
+        for n in [1usize, 8, 13, 77, 256, 1031] {
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let scalar = code_dot_t(&codes, &x, SimdTier::Scalar);
+            let dispatched = code_dot_t(&codes, &x, tier());
+            assert_eq!(scalar.to_bits(), dispatched.to_bits(), "n={n}");
+            // widening is exact, so the widened dot is the same bits too
+            let mut wide = vec![0.0f32; n];
+            widen_codes(&codes, &mut wide, tier());
+            assert_eq!(dot(&wide, &x).to_bits(), scalar.to_bits(), "widen n={n}");
+        }
+    }
+
+    #[test]
+    fn widen_tiers_agree_exactly() {
+        let mut rng = Rng::new(43);
+        for n in [1usize, 9, 64, 257] {
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            widen_codes(&codes, &mut a, SimdTier::Scalar);
+            widen_codes(&codes, &mut b, tier());
+            assert_eq!(a, b);
+            for (v, &c) in a.iter().zip(&codes) {
+                assert_eq!(*v, c as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn lut_accumulate_tiers_match_bitwise() {
+        let mut rng = Rng::new(44);
+        for slots in [1usize, 7, 8, 16, 33, 1031] {
+            for groups in [1usize, 3, 8] {
+                let mut luts = vec![[0.0f32; 1 << GROUP]; groups];
+                for lut in luts.iter_mut() {
+                    for v in lut.iter_mut() {
+                        *v = rng.normal_f32();
+                    }
+                }
+                let codes: Vec<Vec<u8>> = (0..groups)
+                    .map(|_| (0..slots).map(|_| rng.below(256) as u8).collect())
+                    .collect();
+                let slices: Vec<&[u8]> = codes.iter().map(|c| c.as_slice()).collect();
+                let base: Vec<f32> = (0..slots).map(|_| rng.normal_f32()).collect();
+                let mut acc_s = base.clone();
+                let mut acc_d = base.clone();
+                lut_accumulate(&mut acc_s, &slices, &luts, SimdTier::Scalar);
+                lut_accumulate(&mut acc_d, &slices, &luts, tier());
+                for (i, (a, b)) in acc_s.iter().zip(&acc_d).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "slots={slots} groups={groups} slot {i}"
+                    );
+                }
+            }
+        }
+    }
+}

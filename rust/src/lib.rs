@@ -53,6 +53,18 @@
 //! logits — `tests/kernel_parity.rs`, `tests/chunked_prefill.rs`, and
 //! `tests/engine_batched.rs` pin it.
 //!
+//! Below the gemm calls, every inner accumulation runs at a
+//! runtime-dispatched SIMD tier ([`kernels::simd`]): explicit AVX2
+//! (detected once via `is_x86_feature_detected!`) with a portable
+//! scalar fallback. The AVX2 tier keeps the scalar tier's lane →
+//! accumulator mapping, mul-then-add rounding (no FMA), and pinned
+//! tree reduction, so **scalar and SIMD are bitwise identical** for
+//! all three weight formats — dispatch can never change a served
+//! token; `tests/simd_parity.rs` pins the decision per kernel. The
+//! smoke benches (`cargo bench --bench kernels -- --smoke`, same for
+//! `speed`) emit `BENCH_*.json` perf records that CI archives on every
+//! PR.
+//!
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + trained weights once; the `gptqt` binary is
 //! self-contained afterwards.

@@ -18,6 +18,18 @@ use crate::tensor::Tensor;
 /// Columns per LUT group (one packed byte).
 pub const GROUP: usize = 8;
 
+/// Bit value of every padded tail column (positions `>= cols % GROUP`
+/// of the last group's bytes, when `cols` is ragged).
+///
+/// The kernels build each group's 256-entry LUT from zero-padded
+/// activations, so *any* sign pattern in the padding contributes ±0 —
+/// but SIMD gathers consume the **entire** byte as a table index, so
+/// the format pins the padding to one documented encoding instead of
+/// whatever the packer happened to leave behind: all bits clear
+/// (sign −1). [`PackedBcLayer::pack`] masks the tail explicitly and
+/// [`PackedBcLayer::tail_is_neutral`] checks the invariant.
+pub const TAIL_NEUTRAL: u8 = 0;
+
 /// A packed binary-coded layer (rows × cols, `planes` sign bits/weight).
 #[derive(Clone)]
 pub struct PackedBcLayer {
@@ -68,10 +80,22 @@ impl PackedBcLayer {
                     }
                 }
             }
-            // padded tail columns of the last group keep sign −1 (bit 0):
-            // the kernel multiplies them by x = 0, so the value is moot.
         }
-        PackedBcLayer { rows, cols, planes, groups, alphas, bias, codes }
+        // Pin the padded tail columns of the last group to TAIL_NEUTRAL:
+        // the LUTs are built from zero-padded activations so the value
+        // is moot, but SIMD gathers read the full byte — the format
+        // guarantees one deterministic encoding there.
+        let tail_cols = cols % GROUP;
+        if tail_cols != 0 {
+            let keep = (1u8 << tail_cols) - 1;
+            let g = groups - 1;
+            for slot in codes[g * rows * planes..].iter_mut() {
+                *slot = (*slot & keep) | (TAIL_NEUTRAL & !keep);
+            }
+        }
+        let packed = PackedBcLayer { rows, cols, planes, groups, alphas, bias, codes };
+        debug_assert!(packed.tail_is_neutral());
+        packed
     }
 
     /// Deterministic randomly-signed layer (positive α̂s, small bias) —
@@ -118,6 +142,21 @@ impl PackedBcLayer {
             }
         }
         t
+    }
+
+    /// True when every padded tail bit of the last group carries the
+    /// [`TAIL_NEUTRAL`] encoding — the invariant that makes full-byte
+    /// SIMD gathers over the tail group deterministic.
+    pub fn tail_is_neutral(&self) -> bool {
+        let tail_cols = self.cols % GROUP;
+        if tail_cols == 0 {
+            return true;
+        }
+        let pad = !((1u8 << tail_cols) - 1);
+        let g = self.groups - 1;
+        self.codes[g * self.rows * self.planes..]
+            .iter()
+            .all(|&b| b & pad == TAIL_NEUTRAL & pad)
     }
 
     /// Packed storage bytes (codes + per-row parameters).
@@ -219,6 +258,49 @@ mod tests {
         );
         assert_eq!(packed.planes, 3);
         assert!(packed.bits_per_weight() < 32.0);
+    }
+
+    #[test]
+    fn ragged_tail_is_pinned_to_neutral_encoding() {
+        // 10 cols → 2 ragged tail columns in the last group; the packer
+        // must leave their bits at TAIL_NEUTRAL even when the pattern
+        // source would have set them.
+        let (p, _, _) = toy_packed();
+        assert!(p.tail_is_neutral());
+        let pad = !((1u8 << (10 % GROUP)) - 1);
+        let g = p.groups - 1;
+        for &b in &p.codes[g * p.rows * p.planes..] {
+            assert_eq!(b & pad, TAIL_NEUTRAL & pad, "tail bits of byte {b:#010b}");
+        }
+        // aligned layers are trivially neutral
+        let fused = vec![FusedRow { alphas: vec![1.0], bias: 0.0 }];
+        let patterns = vec![vec![1u32; 16]];
+        assert!(PackedBcLayer::pack(1, 16, &fused, &patterns).tail_is_neutral());
+        // the deterministic random scaffolding goes through pack() too
+        assert!(PackedBcLayer::random(7, 13, 3, 5).tail_is_neutral());
+    }
+
+    #[test]
+    fn corrupted_tail_bits_cannot_change_kernel_output() {
+        // The neutrality argument: LUTs are built from zero-padded
+        // activations, so even adversarial tail patterns contribute ±0.
+        // This pins the *reason* the TAIL_NEUTRAL contract is safe to
+        // rely on from full-byte gathers.
+        let layer = PackedBcLayer::random(6, 13, 2, 123);
+        let mut rng = Rng::new(124);
+        let x: Vec<f32> = (0..13).map(|_| rng.normal_f32()).collect();
+        let mut y_ref = vec![0.0f32; 6];
+        crate::kernels::gemv_lut::gemv_lut(&layer, &x, &mut y_ref);
+        let mut corrupted = layer.clone();
+        let pad = !((1u8 << (13 % GROUP)) - 1);
+        let g = corrupted.groups - 1;
+        for slot in corrupted.codes[g * corrupted.rows * corrupted.planes..].iter_mut() {
+            *slot |= pad;
+        }
+        assert!(!corrupted.tail_is_neutral());
+        let mut y = vec![0.0f32; 6];
+        crate::kernels::gemv_lut::gemv_lut(&corrupted, &x, &mut y);
+        assert_eq!(y, y_ref, "tail sign bits must be value-neutral");
     }
 
     #[test]

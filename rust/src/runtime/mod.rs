@@ -9,47 +9,49 @@
 //! between decode steps.
 //!
 //! The XLA bindings are only present when the crate is built with the
-//! `pjrt` feature (they need the `xla` crate + libxla_extension, which
-//! the hermetic offline build does not carry). Without the feature,
-//! [`stub`] provides the same types with a runtime error on
-//! construction, so the engine, CLI, and tests compile either way.
+//! `xla-runtime` feature (they need the `xla` crate + libxla_extension,
+//! which the hermetic offline build does not carry). Without it, [`stub`]
+//! provides the same types with a runtime error on construction, so the
+//! engine, CLI, and tests compile either way — including under
+//! `--features pjrt` alone, which selects the PJRT API surface with the
+//! stub backing it (the CI feature-matrix builds exactly that).
 
 pub mod meta;
 
 // The gated implementation below references the `xla` bindings crate,
 // which is not vendored in the offline build and therefore not declared
 // in Cargo.toml. Fail with instructions instead of a wall of E0433s.
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla-runtime")]
 compile_error!(
-    "the `pjrt` feature additionally requires the `xla` bindings crate \
-     (xla_extension 0.5.1 ABI) plus a libxla_extension install: add \
-     `xla = ...` to [dependencies] in rust/Cargo.toml and remove this \
-     guard in rust/src/runtime/mod.rs"
+    "the `xla-runtime` feature additionally requires the `xla` bindings \
+     crate (xla_extension 0.5.1 ABI) plus a libxla_extension install: \
+     add `xla = ...` to [dependencies] in rust/Cargo.toml and remove \
+     this guard in rust/src/runtime/mod.rs"
 );
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla-runtime")]
 pub mod compiled;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla-runtime"))]
 pub mod stub;
 
 pub use meta::ArtifactMeta;
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla-runtime")]
 pub use compiled::{CompiledModel, DeviceKv};
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla-runtime"))]
 pub use stub::{CompiledModel, DeviceKv, Runtime};
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla-runtime")]
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Shared PJRT client (CPU platform).
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla-runtime")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla-runtime")]
 impl Runtime {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {

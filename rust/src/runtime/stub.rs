@@ -1,5 +1,7 @@
 //! API-compatible stand-ins for the PJRT runtime, compiled when the
-//! `pjrt` feature is off (the default in the hermetic offline build).
+//! `xla-runtime` feature is off (the default in the hermetic offline
+//! build — including under `--features pjrt` alone, which the CI
+//! feature-matrix job builds and tests).
 //!
 //! The real implementation in `compiled.rs` needs the `xla` bindings
 //! crate and a libxla_extension install. This stub keeps every caller —
@@ -17,8 +19,9 @@ use std::path::Path;
 
 fn unavailable() -> anyhow::Error {
     anyhow::anyhow!(
-        "PJRT runtime unavailable: gptqt was built without the `pjrt` \
-         feature (requires the `xla` bindings crate + libxla_extension)"
+        "PJRT runtime unavailable: gptqt was built without the \
+         `xla-runtime` feature that backs the pjrt path (requires the \
+         `xla` bindings crate + libxla_extension)"
     )
 }
 

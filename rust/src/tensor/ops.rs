@@ -128,30 +128,13 @@ struct SendPtrF(*mut f32);
 unsafe impl Sync for SendPtrF {}
 unsafe impl Send for SendPtrF {}
 
-/// Unrolled dot product; the compiler auto-vectorizes this shape well.
+/// Dot product, dispatched to the best SIMD tier of the running CPU
+/// ([`crate::kernels::simd`]). The AVX2 tier is bitwise-identical to
+/// the pinned 8-accumulator scalar loop, so routing the calibration
+/// kernels through it changes no result anywhere.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let o = i * 8;
-        s0 += a[o] * b[o];
-        s1 += a[o + 1] * b[o + 1];
-        s2 += a[o + 2] * b[o + 2];
-        s3 += a[o + 3] * b[o + 3];
-        s4 += a[o + 4] * b[o + 4];
-        s5 += a[o + 5] * b[o + 5];
-        s6 += a[o + 6] * b[o + 6];
-        s7 += a[o + 7] * b[o + 7];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
-    }
-    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
+    crate::kernels::simd::dot(a, b)
 }
 
 /// Blocked matmul kernel. `C += A @ B` with C zero-initialized by caller.

@@ -96,10 +96,41 @@ impl ThreadPool {
             return;
         }
         let parts = self.threads.min(n);
-        let chunk = n.div_ceil(parts);
-        // Safety: every job is joined before `scope_chunks` returns, so the
-        // borrowed closure outlives all uses. We enforce the join with an
-        // explicit counter rather than relying on pool drop order.
+        self.scope_chunks_with(n, n.div_ceil(parts), f);
+    }
+
+    /// Like [`ThreadPool::scope_chunks`], but rounds the per-worker chunk
+    /// size up to a multiple of `align`, so every chunk except possibly
+    /// the last starts on an `align` boundary and spans a whole number of
+    /// `align` blocks. The SIMD kernels partition output rows with this
+    /// so each worker's accumulator range is a whole number of vector
+    /// blocks (scalar tails only in the final chunk); the per-index work
+    /// and ordering are identical to `scope_chunks`, only the chunk
+    /// boundaries move.
+    pub fn scope_chunks_aligned<F>(&self, n: usize, align: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let align = align.max(1);
+        let parts = self.threads.min(n);
+        let chunk = n.div_ceil(parts).div_ceil(align) * align;
+        self.scope_chunks_with(n, chunk, f);
+    }
+
+    /// Shared body of the scoped partitioners: `0..n` split into chunks
+    /// of `chunk` (last one ragged), one pool job per non-empty chunk.
+    fn scope_chunks_with<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        debug_assert!(chunk > 0);
+        let parts = n.div_ceil(chunk);
+        // Safety: every job is joined before `scope_chunks_with` returns,
+        // so the borrowed closure outlives all uses. We enforce the join
+        // with an explicit counter rather than relying on pool drop order.
         let f_ref: &(dyn Fn(std::ops::Range<usize>) + Sync) = &f;
         let f_static: &'static (dyn Fn(std::ops::Range<usize>) + Sync) =
             unsafe { std::mem::transmute(f_ref) };
@@ -239,6 +270,30 @@ mod tests {
     fn scope_zero_is_noop() {
         let pool = ThreadPool::new(2);
         pool.scope_chunks(0, |_| panic!("should not run"));
+        pool.scope_chunks_aligned(0, 8, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn aligned_chunks_cover_all_indices_on_block_boundaries() {
+        let pool = ThreadPool::new(3);
+        for (n, align) in [(97usize, 8usize), (64, 8), (5, 8), (100, 16), (33, 1)] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let starts = Mutex::new(Vec::new());
+            pool.scope_chunks_aligned(n, align, |range| {
+                starts.lock().unwrap().push((range.start, range.end));
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "n={n} align={align}: every index exactly once"
+            );
+            for &(lo, hi) in starts.lock().unwrap().iter() {
+                assert_eq!(lo % align, 0, "n={n} align={align}: chunk start {lo}");
+                assert!(hi % align == 0 || hi == n, "n={n} align={align}: chunk end {hi}");
+            }
+        }
     }
 
     #[test]
