@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json artifacts and flag tokens_per_sec regressions.
+
+Usage: bench_trend.py PREVIOUS.json CURRENT.json [--threshold PCT]
+
+Writes a markdown table to $GITHUB_STEP_SUMMARY (stdout when unset)
+and emits GitHub `::warning::` annotations on stdout for entries whose
+tokens_per_sec dropped by more than the threshold (default 10%).
+Always exits 0 — the trend job is a non-blocking signal, not a gate
+(smoke benches run on shared CI runners, so single-run noise is
+expected; the trajectory across PRs is the information).
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)}
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(f"usage: {argv[0]} PREVIOUS.json CURRENT.json [--threshold PCT]")
+        return 0
+    threshold = 10.0
+    if "--threshold" in argv:
+        threshold = float(argv[argv.index("--threshold") + 1])
+
+    summary_lines = []
+    try:
+        prev = load(argv[1])
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"no usable previous record ({e}); nothing to diff")
+        return 0
+    try:
+        cur = load(argv[2])
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"::warning::bench-trend: current record unreadable ({e})")
+        return 0
+
+    summary_lines.append(f"### Bench trend (tokens/sec, warn at −{threshold:.0f}%)")
+    summary_lines.append("")
+    summary_lines.append("| benchmark | previous | current | Δ |")
+    summary_lines.append("|---|---:|---:|---:|")
+    regressions = []
+    for name, c in cur.items():
+        p = prev.get(name)
+        if p is None or not p.get("tokens_per_sec"):
+            summary_lines.append(f"| {name} | — | {c['tokens_per_sec']:.1f} | new |")
+            continue
+        delta = (c["tokens_per_sec"] / p["tokens_per_sec"] - 1.0) * 100.0
+        mark = " ⚠️" if delta < -threshold else ""
+        summary_lines.append(
+            f"| {name} | {p['tokens_per_sec']:.1f} | "
+            f"{c['tokens_per_sec']:.1f} | {delta:+.1f}%{mark} |"
+        )
+        if delta < -threshold:
+            regressions.append((name, delta))
+    dropped = [n for n in prev if n not in cur]
+    if dropped:
+        summary_lines.append("")
+        summary_lines.append(
+            f"{len(dropped)} benchmark(s) from the previous run are gone: "
+            + ", ".join(sorted(dropped))
+        )
+    summary_lines.append("")
+    if regressions:
+        names = ", ".join(f"`{n}`" for n, _ in regressions)
+        summary_lines.append(f"⚠️ {len(regressions)} regression(s) beyond {threshold:.0f}%: {names}")
+    else:
+        summary_lines.append(f"No regression beyond {threshold:.0f}%.")
+
+    summary = "\n".join(summary_lines) + "\n"
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(summary)
+    print(summary)
+    for name, delta in regressions:
+        print(
+            f"::warning::bench-trend: `{name}` tokens_per_sec "
+            f"regressed {delta:+.1f}% vs previous run"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

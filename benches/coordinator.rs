@@ -4,7 +4,9 @@
 //! the bottleneck (the paper's latency story is weight bandwidth).
 
 use gptqt::bench::Suite;
-use gptqt::coordinator::{Engine, EngineBackend, EngineConfig, PagedKvManager, Request, RequestQueue};
+use gptqt::coordinator::{
+    CpuBackend, Engine, EngineConfig, PagedKvManager, Request, RequestQueue, Server,
+};
 use gptqt::model::init::random_weights;
 use gptqt::model::{presets, BackendModel, Model};
 use gptqt::util::Rng;
@@ -45,7 +47,7 @@ fn main() {
     for &max_batch in &[1usize, 4, 8] {
         let name = format!("engine 12 reqs, max_batch={max_batch}");
         let r = suite.run(&name, 1, 5, || {
-            let backend = EngineBackend::Cpu(BackendModel::dense(&model));
+            let backend = CpuBackend(BackendModel::dense(&model));
             let mut engine = Engine::new(
                 backend,
                 EngineConfig { max_batch, total_blocks: 512, ..Default::default() },
@@ -64,4 +66,26 @@ fn main() {
     for (mb, tps) in tok_per_sec {
         println!("  max_batch={mb}: {tps:.0} generated tok/s");
     }
+
+    // --- streaming session round-trip: Server thread + event channels --
+    // vs the in-thread engine loop above; the delta is the session
+    // machinery's overhead (it should be noise next to the model math)
+    suite.run("server stream 12 reqs, max_batch=4", 1, 5, || {
+        let backend = CpuBackend(BackendModel::dense(&model));
+        let server = Server::spawn(
+            backend,
+            EngineConfig { max_batch: 4, total_blocks: 512, ..Default::default() },
+        );
+        let mut rng = Rng::new(1);
+        let handles: Vec<_> = (0..12u64)
+            .map(|id| {
+                let prompt: Vec<u32> = (0..8).map(|_| 3 + rng.below(250) as u32).collect();
+                server.submit(Request::new(id, prompt, 12))
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        server.shutdown();
+    });
 }

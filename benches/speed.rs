@@ -16,8 +16,10 @@
 //! ns_per_call}`) uploaded as a CI artifact.
 
 use gptqt::bench::{write_bench_json, BenchRecord};
+use gptqt::coordinator::SchedulePolicyKind;
 use gptqt::eval::speed::{
-    build_variant, measure_decode, measure_decode_batch, measure_prefill, SpeedVariant,
+    build_variant, measure_decode, measure_decode_batch, measure_prefill, measure_streaming,
+    SpeedVariant,
 };
 use gptqt::model::init::random_weights;
 use gptqt::model::{load_or_init, presets, Model};
@@ -194,6 +196,39 @@ fn main() {
                 );
             }
         }
+    }
+
+    // ---- streaming session server: client-observed TTFT + tok/s -------
+    // The full serving stack (queue → engine thread → event channels),
+    // per schedule policy — the number a deployment actually delivers.
+    let (serve_model, n_reqs, s_gen) = if smoke {
+        ("opt-nano", 4, 4)
+    } else if fast {
+        ("opt-nano", 8, 12)
+    } else {
+        ("opt-mini", 16, 24)
+    };
+    let (model, _) = load_or_init(serve_model, "artifacts", 0).expect("preset");
+    println!("\n=== bench suite: streaming serve — {serve_model}, {n_reqs} requests ===");
+    for (kind, klabel) in [
+        (SchedulePolicyKind::Fixed, "fixed"),
+        (SchedulePolicyKind::Adaptive, "adaptive"),
+    ] {
+        let variant = SpeedVariant::GptqtLut { bits: 3 };
+        let bm = build_variant(&model, variant, 0);
+        let r = measure_streaming(&model.cfg, bm, variant, n_reqs, 8, s_gen, kind, 7);
+        records.push(BenchRecord {
+            name: format!(
+                "serve stream {serve_model} {} R={n_reqs} policy={klabel}",
+                variant.label()
+            ),
+            tokens_per_sec: r.tokens_per_sec,
+            ns_per_call: r.ttft_ms * 1e6,
+        });
+        println!(
+            "{:<10} {:>10.0} tok/s   ttft {:>8.2} ms   inter-token {:>7.3} ms   ({} tokens)",
+            klabel, r.tokens_per_sec, r.ttft_ms, r.inter_token_ms, r.tokens,
+        );
     }
 
     write_bench_json("BENCH_speed.json", &records).expect("write BENCH_speed.json");

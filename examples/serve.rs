@@ -1,15 +1,21 @@
 //! End-to-end serving driver — the system-validation example (DESIGN.md):
 //! loads the in-repo-trained model, quantizes it with GPTQT, stands up
-//! the coordinator (queue → batcher → paged KV → decode backends), serves
-//! a batch of real prompts, and reports latency/throughput — against both
-//! the rust CPU hot path (LUT-GEMM) and, when artifacts are present, the
-//! AOT-compiled XLA executables over PJRT.
+//! the streaming session server (`Server` front-end over the
+//! coordinator's queue → batcher → paged KV → `Backend` stack), serves
+//! a batch of real prompts through per-request event streams, and
+//! reports latency/throughput — against both the rust CPU hot path
+//! (LUT-GEMM) and, when artifacts are present, the AOT-compiled XLA
+//! executables over PJRT.
 //!
 //! ```sh
-//! cargo run --release --example serve -- [model] [--requests 16] [--fast] [--pjrt]
+//! cargo run --release --example serve -- [model] [--requests 16] [--fast] [--adaptive] [--pjrt]
 //! ```
 
-use gptqt::coordinator::{Engine, EngineBackend, EngineConfig, Request, SamplingParams};
+use gptqt::coordinator::{
+    CpuBackend, EngineConfig, Event, FinishReason, PjrtBackend, Request, SamplingParams,
+    SchedulePolicyKind, Server,
+};
+use gptqt::data::vocab::Vocab;
 use gptqt::data::{CorpusGenerator, Dataset};
 use gptqt::eval::ppl::{calib_for, EvalConfig};
 use gptqt::model::quantize::quantize_model;
@@ -21,6 +27,11 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let fast = args.iter().any(|a| a == "--fast");
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
+    let policy = if args.iter().any(|a| a == "--adaptive") {
+        SchedulePolicyKind::Adaptive
+    } else {
+        SchedulePolicyKind::Fixed
+    };
     let name = args
         .iter()
         .find(|a| !a.starts_with("--"))
@@ -46,8 +57,11 @@ fn main() -> anyhow::Result<()> {
     println!("quantizing with GPTQT 3-bit (step1 {} bits) …", qcfg.step1_bits);
     let qm = quantize_model(&model, &calib, Method::Gptqt, &qcfg, false)?;
 
-    // ---- choose the execution backend ---------------------------------
-    let backend = if use_pjrt {
+    let cfg = EngineConfig { max_batch: 4, policy, ..Default::default() };
+    let model_cfg = model.cfg.clone();
+
+    // ---- choose the execution backend, spawn the session server ------
+    let server = if use_pjrt {
         if !gptqt::runtime::artifacts_present("artifacts", name) {
             anyhow::bail!("--pjrt needs HLO artifacts: run `make artifacts` (AOT_MODELS includes {name}?)");
         }
@@ -55,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         println!("PJRT platform: {}", rt.platform());
         // the XLA path consumes the dequantized weights — numerically
         // identical to the fused binary coding (fusion property)
-        EngineBackend::Pjrt(rt.load_model("artifacts", &qm.model)?)
+        Server::spawn(PjrtBackend(rt.load_model("artifacts", &qm.model)?), cfg)
     } else {
         // the rust hot path consumes the *packed* binary-coded weights
         // through the LUT-GEMM kernel
@@ -66,40 +80,60 @@ fn main() -> anyhow::Result<()> {
             bm.streamed_bytes_per_token() as f64 / 1e6,
             BackendModel::dense(&model).streamed_bytes_per_token() as f64 / 1e6,
         );
-        EngineBackend::Cpu(bm)
+        Server::spawn(CpuBackend(bm), cfg)
     };
 
     // ---- build requests from corpus prompts ----------------------------
-    let (gen, vocab) = CorpusGenerator::with_vocab(Dataset::WikiSyn, model.cfg.vocab, 0);
+    let (gen, vocab) = CorpusGenerator::with_vocab(Dataset::WikiSyn, model_cfg.vocab, 0);
     let stream = gen.generate(4096, 17);
-    let mut engine = Engine::new(
-        backend,
-        EngineConfig { max_batch: 4, ..Default::default() },
-    );
     let mut rng = Rng::new(7);
     let (prompt_len, gen_len) = if fast { (8, 12) } else { (12, 24) };
+    let mut handles = Vec::new();
     for id in 0..n_requests as u64 {
         let start = rng.range(0, stream.len() - prompt_len);
         let prompt = stream[start..start + prompt_len].to_vec();
-        engine
-            .submit(
-                Request::new(id, prompt, gen_len).with_sampling(SamplingParams::TopK {
-                    k: 16,
-                    temperature: 0.9,
-                    seed: id,
-                }),
-            )
-            .map_err(|e| anyhow::anyhow!("submit: {e:?}"))?;
+        handles.push(server.submit(Request::new(id, prompt, gen_len).with_sampling(
+            SamplingParams::TopK { k: 16, temperature: 0.9, seed: id },
+        )));
     }
+    // one extra request, cancelled immediately: the stream still
+    // terminates (reason Cancelled) and its KV blocks return to the pool
+    let doomed = server.submit(Request::new(
+        n_requests as u64,
+        stream[..prompt_len].to_vec(),
+        gen_len,
+    ));
+    doomed.cancel();
 
-    // ---- serve ----------------------------------------------------------
-    let responses = engine.run_to_completion()?;
-    engine
-        .check_invariants()
-        .map_err(|e| anyhow::anyhow!("KV invariant: {e}"))?;
+    // ---- stream request 0 live, then drain the rest --------------------
+    let mut live = handles.into_iter();
+    let first = live.next().expect("at least one request");
+    println!("\n--- streaming req 0 ---");
+    let mut responses = Vec::new();
+    for ev in first.events() {
+        match ev {
+            Event::Started { queue_secs, .. } => {
+                println!("[started after {:.2} ms queued]", queue_secs * 1e3);
+            }
+            Event::Token { token, .. } => print_token(&vocab, token),
+            Event::Finished(r) => {
+                println!("\n[finished: {:?}, ttft {:.1} ms]", r.finish, r.ttft_secs * 1e3);
+                responses.push(r);
+            }
+            Event::Rejected { error, .. } => anyhow::bail!("req 0 rejected: {error:?}"),
+        }
+    }
+    for h in live {
+        let id = h.id();
+        responses.push(h.wait().map_err(|e| anyhow::anyhow!("request {id}: {e:?}"))?);
+    }
+    let cancelled = doomed.wait().map_err(|e| anyhow::anyhow!("cancelled stream: {e:?}"))?;
+    anyhow::ensure!(cancelled.finish == FinishReason::Cancelled, "cancel must be terminal");
 
+    // ---- shut down, report the engine-thread metrics --------------------
+    let metrics = server.shutdown();
     println!("\n--- engine metrics ---");
-    println!("{}", engine.metrics.report());
+    println!("{}", metrics.report());
     println!("\n--- sample generations ---");
     for r in responses.iter().take(3) {
         println!(
@@ -111,6 +145,13 @@ fn main() -> anyhow::Result<()> {
         );
     }
     anyhow::ensure!(responses.len() == n_requests);
-    println!("\nserved {} requests OK", responses.len());
+    anyhow::ensure!(metrics.cancelled_total == 1);
+    println!("\nserved {} requests OK (+1 cancelled)", responses.len());
     Ok(())
+}
+
+fn print_token(vocab: &Vocab, token: u32) {
+    use std::io::Write;
+    print!("{} ", vocab.detokenize(&[token]));
+    let _ = std::io::stdout().flush();
 }

@@ -87,9 +87,10 @@ COMMANDS:
                end-to-end; --dequant evaluates the dequantized dense
                weights instead (legacy path)
                --model <name> --dataset <wiki-syn|ptb-syn> --method <m> --bits <n>
-    serve      Run the serving coordinator on AOT artifacts
+    serve      Serve requests through the streaming session server
                --model <name> --quant <fp32|gptq2|gptqt3> --requests <n>
                --max-batch <n> --prompt-len <n> --gen-len <n>
+               --backend <cpu|pjrt> --policy <fixed|adaptive>
     exp        Reproduce a paper experiment:
                table1|table2|table3|table4|table5|table6|fig4|all
     gen-corpus Write synthetic training corpora to artifacts/ (build step

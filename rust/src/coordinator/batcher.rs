@@ -10,22 +10,19 @@ use super::kv_pool::PagedKvManager;
 use super::queue::RequestQueue;
 use super::request::Request;
 
-/// Admission policy knobs.
+/// Admission policy knobs. (The per-tick prefill *chunk* decision lives
+/// in [`super::policy::SchedulePolicy`] — the batcher only decides what
+/// enters the running set.)
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     pub max_batch: usize,
     /// Max prompt tokens admitted per tick.
     pub prefill_token_budget: usize,
-    /// Prompt tokens each prefilling sequence feeds into the shared
-    /// forward per tick. Larger chunks amortize weight streaming harder
-    /// but lengthen the tick, delaying decode tokens of co-scheduled
-    /// sequences — the prefill/decode interference knob.
-    pub prefill_chunk: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, prefill_token_budget: 512, prefill_chunk: 16 }
+        BatcherConfig { max_batch: 8, prefill_token_budget: 512 }
     }
 }
 
@@ -88,11 +85,7 @@ mod tests {
             q.push(req(id, 4, 4)).unwrap();
         }
         let mut kv = PagedKvManager::new(1024, 16);
-        let b = Batcher::new(BatcherConfig {
-            max_batch: 4,
-            prefill_token_budget: 1000,
-            ..Default::default()
-        });
+        let b = Batcher::new(BatcherConfig { max_batch: 4, prefill_token_budget: 1000 });
         let admitted = b.admit(&q, 0, &mut kv);
         assert_eq!(admitted.len(), 4);
         assert_eq!(q.len(), 6);
@@ -123,11 +116,7 @@ mod tests {
         q.push(req(1, 100, 4)).unwrap();
         q.push(req(2, 100, 4)).unwrap();
         let mut kv = PagedKvManager::new(1024, 16);
-        let b = Batcher::new(BatcherConfig {
-            max_batch: 8,
-            prefill_token_budget: 128,
-            ..Default::default()
-        });
+        let b = Batcher::new(BatcherConfig { max_batch: 8, prefill_token_budget: 128 });
         let admitted = b.admit(&q, 0, &mut kv);
         // first long prompt admits (budget applies after the first),
         // second is deferred to the next tick

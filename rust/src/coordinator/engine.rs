@@ -1,13 +1,21 @@
-//! The serving engine: scheduling loop over admitted sequences, driving
-//! either the CPU decode backends (quantized or dense) or the PJRT
-//! executables, with paged-KV admission and full metrics.
+//! The serving engine: the per-tick scheduling loop over admitted
+//! sequences, generic over a pluggable [`Backend`], emitting per-token
+//! [`Event`]s with paged-KV admission, cancellation, deadlines, and
+//! full metrics.
+//!
+//! The engine is single-threaded by design — [`Engine::step`] is one
+//! scheduling tick — and [`super::server::Server`] owns it on a
+//! dedicated thread behind the streaming session API. Offline callers
+//! can still drive it directly ([`Engine::run_to_completion`]).
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::kv_pool::PagedKvManager;
 use super::metrics::Metrics;
+use super::policy::{SchedulePolicy, TickState};
 use super::queue::{RequestQueue, SubmitError};
 use super::request::{FinishReason, Request, Response};
 use super::sampler::Sampler;
+use super::server::Event;
 use super::EngineConfig;
 use crate::model::{BackendModel, KvCache};
 use crate::runtime::{CompiledModel, DeviceKv};
@@ -15,54 +23,131 @@ use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// What executes the model math.
-pub enum EngineBackend {
-    /// Pure-rust decode path (dense / gptq-dequant / gptqt-lut kernels).
-    Cpu(BackendModel),
-    /// AOT-compiled XLA executables on the PJRT CPU device.
-    Pjrt(CompiledModel),
+/// What executes the model math. The engine body never matches on a
+/// concrete implementation: new backends (NEON tier builds, sharded
+/// CPU, a real batched PJRT ABI) plug in by implementing this trait —
+/// `engine.rs` does not change.
+pub trait Backend {
+    /// Per-sequence attention-cache type this backend owns.
+    type Kv;
+
+    /// Max tokens (prompt + generated) one sequence may occupy.
+    fn capacity(&self) -> usize;
+
+    /// Fresh per-sequence cache for a newly admitted request.
+    fn new_cache(&self) -> Result<Self::Kv>;
+
+    /// Advance every running sequence by its token chunk in one tick:
+    /// `chunks[b]` is consumed against `caches[b]`, and the next-token
+    /// logits are returned for exactly the sequences with
+    /// `need[b] == true` (mid-prompt chunks pass `false` — nothing
+    /// samples them). Per token the math must be identical to feeding
+    /// the same tokens one at a time, so chunking and batching can
+    /// never change a served token.
+    fn forward_tick(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut Self::Kv],
+        need: &[bool],
+    ) -> Result<Vec<Option<Vec<f32>>>>;
+
+    /// Whether `forward_tick` amortizes one weight stream across the
+    /// whole batch. Per-sequence fallbacks return `false` so the
+    /// batch-occupancy metrics never claim amortization that did not
+    /// happen.
+    fn batch_amortized(&self) -> bool {
+        true
+    }
+
+    /// Human label (which Table-IV row this backend realizes).
+    fn label(&self) -> &'static str;
 }
 
-enum SeqCache {
-    Cpu(KvCache),
-    Pjrt(DeviceKv),
-}
+/// Pure-rust decode path (dense / gptq-dequant / gptqt-lut kernels).
+/// One [`BackendModel::forward_chunks_masked`] call advances the whole
+/// tick — every linear streams its weights once per tick.
+pub struct CpuBackend(pub BackendModel);
 
-impl EngineBackend {
+impl Backend for CpuBackend {
+    type Kv = KvCache;
+
     fn capacity(&self) -> usize {
-        match self {
-            EngineBackend::Cpu(m) => m.cfg.max_seq,
-            EngineBackend::Pjrt(m) => m.meta.kv_len,
-        }
+        self.0.cfg.max_seq
     }
 
-    fn new_cache(&self) -> Result<SeqCache> {
-        Ok(match self {
-            EngineBackend::Cpu(m) => SeqCache::Cpu(KvCache::new(&m.cfg)),
-            EngineBackend::Pjrt(m) => SeqCache::Pjrt(m.new_kv()?),
-        })
+    fn new_cache(&self) -> Result<KvCache> {
+        Ok(KvCache::new(&self.0.cfg))
     }
 
-    /// Human label (which Table-IV row this engine realizes).
-    pub fn label(&self) -> &'static str {
-        match self {
-            EngineBackend::Cpu(m) => m.backend_label(),
-            EngineBackend::Pjrt(_) => "pjrt",
-        }
+    fn forward_tick(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut KvCache],
+        need: &[bool],
+    ) -> Result<Vec<Option<Vec<f32>>>> {
+        Ok(self.0.forward_chunks_masked(chunks, caches, need))
+    }
+
+    fn label(&self) -> &'static str {
+        self.0.backend_label()
     }
 }
 
-struct Running {
+/// AOT-compiled XLA executables on the PJRT CPU device. There is no
+/// batched (or multi-token) executable ABI yet (ROADMAP), so a tick
+/// feeds each sequence's chunk token-by-token — correct, just without
+/// the weight-stream amortization the CPU path gets.
+pub struct PjrtBackend(pub CompiledModel);
+
+impl Backend for PjrtBackend {
+    type Kv = DeviceKv;
+
+    fn capacity(&self) -> usize {
+        self.0.kv_capacity()
+    }
+
+    fn new_cache(&self) -> Result<DeviceKv> {
+        self.0.new_kv()
+    }
+
+    fn forward_tick(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut DeviceKv],
+        need: &[bool],
+    ) -> Result<Vec<Option<Vec<f32>>>> {
+        let mut out = Vec::with_capacity(chunks.len());
+        for ((chunk, cache), &wanted) in chunks.iter().zip(caches.iter_mut()).zip(need) {
+            let mut logits = Vec::new();
+            for &tok in chunk.iter() {
+                logits = self.0.decode(&mut **cache, tok)?;
+            }
+            out.push(if wanted { Some(logits) } else { None });
+        }
+        Ok(out)
+    }
+
+    fn batch_amortized(&self) -> bool {
+        false // per-sequence per-token loop: nothing is shared
+    }
+
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+struct Running<K> {
     req: Request,
     sampler: Sampler,
-    cache: SeqCache,
+    cache: K,
     /// next prompt index to feed (== prompt.len() once prefilled)
     prompt_idx: usize,
     generated: Vec<u32>,
-    prefill_started: Option<Instant>,
+    admitted_at: Instant,
+    first_token_at: Option<Instant>,
 }
 
-impl Running {
+impl<K> Running<K> {
     fn prefilling(&self) -> bool {
         self.prompt_idx < self.req.prompt.len()
     }
@@ -71,35 +156,49 @@ impl Running {
 /// The engine. Single-threaded scheduling loop (`step`) over a
 /// thread-safe submission queue — a worker thread can own the engine
 /// while any number of producers submit.
-pub struct Engine {
-    backend: EngineBackend,
+pub struct Engine<B: Backend> {
+    backend: B,
     pub cfg: EngineConfig,
     batcher: Batcher,
+    policy: Box<dyn SchedulePolicy>,
     pub queue: Arc<RequestQueue>,
-    running: Vec<Running>,
+    running: Vec<Running<B::Kv>>,
     kv: PagedKvManager,
     pub metrics: Metrics,
+    /// Events produced outside `step` (cancellations), drained by the
+    /// next `step` so every event still flows through one stream.
+    pending: Vec<Event>,
 }
 
-impl Engine {
-    pub fn new(backend: EngineBackend, cfg: EngineConfig) -> Engine {
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
+        let policy = cfg.policy.build(cfg.prefill_chunk);
+        Engine::with_policy(backend, cfg, policy)
+    }
+
+    /// Construct with a custom [`SchedulePolicy`] (anything beyond the
+    /// [`super::SchedulePolicyKind`] presets).
+    pub fn with_policy(
+        backend: B,
+        cfg: EngineConfig,
+        policy: Box<dyn SchedulePolicy>,
+    ) -> Engine<B> {
         let queue = Arc::new(RequestQueue::new(cfg.max_queue));
         let kv = PagedKvManager::new(cfg.total_blocks, cfg.block_size);
-        // prefill pacing lives in the batcher config — the scheduling
-        // policy's single runtime source of truth
         let batcher = Batcher::new(BatcherConfig {
             max_batch: cfg.max_batch,
             prefill_token_budget: cfg.block_size * cfg.max_batch * 4,
-            prefill_chunk: cfg.prefill_chunk,
         });
         Engine {
             backend,
             cfg,
             batcher,
+            policy,
             queue,
             running: Vec::new(),
             kv,
             metrics: Metrics::new(),
+            pending: Vec::new(),
         }
     }
 
@@ -109,200 +208,268 @@ impl Engine {
             self.metrics.rejected += 1;
             return Err(SubmitError::Full); // semantic: cannot ever be served
         }
-        self.queue.push(req)
+        // an id is reusable only once its terminal event has drained —
+        // a pending Finished (cancel/expiry) still owns the id, else a
+        // cancel-then-resubmit race would cross-route the two streams
+        if self.running.iter().any(|r| r.req.id == req.id)
+            || self.pending.iter().any(|ev| ev.id() == req.id)
+        {
+            self.metrics.rejected += 1;
+            return Err(SubmitError::DuplicateId);
+        }
+        let r = self.queue.push(req);
+        if r.is_err() {
+            self.metrics.rejected += 1;
+        }
+        r
     }
 
     pub fn has_work(&self) -> bool {
-        !self.running.is_empty() || !self.queue.is_empty()
+        !self.running.is_empty() || !self.queue.is_empty() || !self.pending.is_empty()
     }
 
-    /// One scheduling tick: admit, then advance **every** running
-    /// sequence through a single chunk-major forward — prefilling
-    /// sequences contribute their next prompt chunk, decoding sequences
-    /// their last sampled token, and all of it shares one weight stream
-    /// per linear per tick (CPU backend). Finished sequences retire.
-    /// Per-sequence sampling and finish logic are untouched, and the
-    /// core is per-token bit-identical to the sequential loop, so
-    /// generations are token-identical to per-sequence serving.
-    pub fn step(&mut self) -> Result<Vec<Response>> {
+    /// Cancel a request by id, queued or mid-flight. A running
+    /// sequence's paged-KV blocks are returned to the pool immediately;
+    /// the terminal [`Event::Finished`] (reason
+    /// [`FinishReason::Cancelled`], tokens streamed so far included)
+    /// surfaces on the next [`Engine::step`]. Returns `false` for ids
+    /// the engine does not know.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(req) = self.queue.remove(id) {
+            self.metrics.record_cancelled();
+            let e2e = req.arrived.elapsed().as_secs_f64();
+            self.pending.push(Event::Finished(Response {
+                id,
+                tokens: Vec::new(),
+                finish: FinishReason::Cancelled,
+                queue_secs: e2e,
+                ttft_secs: 0.0,
+                e2e_secs: e2e,
+            }));
+            return true;
+        }
+        if let Some(idx) = self.running.iter().position(|r| r.req.id == id) {
+            self.metrics.record_cancelled();
+            let resp = self.retire(idx, FinishReason::Cancelled);
+            self.pending.push(Event::Finished(resp));
+            return true;
+        }
+        false
+    }
+
+    /// Remove `running[idx]`, release its KV blocks, and build the
+    /// terminal response. Completion metrics are only recorded for
+    /// natural finishes (EOS / length).
+    fn retire(&mut self, idx: usize, finish: FinishReason) -> Response {
+        let run = self.running.swap_remove(idx);
+        self.kv.release(run.req.id);
+        let e2e = run.req.arrived.elapsed();
+        if matches!(finish, FinishReason::Eos | FinishReason::Length) {
+            self.metrics.record_done(e2e, run.req.prompt.len());
+        }
+        Response {
+            id: run.req.id,
+            tokens: run.generated,
+            finish,
+            queue_secs: run.admitted_at.duration_since(run.req.arrived).as_secs_f64(),
+            ttft_secs: run
+                .first_token_at
+                .map(|t| t.duration_since(run.req.arrived).as_secs_f64())
+                .unwrap_or(0.0),
+            e2e_secs: e2e.as_secs_f64(),
+        }
+    }
+
+    /// One scheduling tick: expire deadlines, admit from the queue,
+    /// then advance **every** running sequence through a single
+    /// [`Backend::forward_tick`] — prefilling sequences contribute
+    /// their next prompt chunk (length chosen by the
+    /// [`SchedulePolicy`]), decoding sequences their last sampled
+    /// token. Tokens are emitted as [`Event::Token`] the moment they
+    /// are sampled; finished sequences retire with
+    /// [`Event::Finished`]. Per-sequence sampling and finish logic are
+    /// chunking-independent and the forward core is per-token
+    /// bit-identical to the sequential loop, so generations are
+    /// token-identical to per-sequence serving under any policy.
+    pub fn step(&mut self) -> Result<Vec<Event>> {
+        let mut events = std::mem::take(&mut self.pending);
+
+        // ---- deadline expiry (queued + running) ------------------------
+        let now = Instant::now();
+        self.expire_queued(now, &mut events);
+        let mut idx = 0;
+        while idx < self.running.len() {
+            let deadline = self.running[idx].req.deadline;
+            let arrived = self.running[idx].req.arrived;
+            if deadline.is_some_and(|d| now.duration_since(arrived) >= d) {
+                self.metrics.record_expired();
+                let resp = self.retire(idx, FinishReason::DeadlineExpired);
+                events.push(Event::Finished(resp));
+            } else {
+                idx += 1;
+            }
+        }
+
         // ---- admission -------------------------------------------------
         for req in self.batcher.admit(&self.queue, self.running.len(), &mut self.kv) {
-            self.metrics.record_queue(req.arrived.elapsed());
+            let waited = req.arrived.elapsed();
+            if req.deadline.is_some_and(|d| waited >= d) {
+                // expired while queued; admission committed KV blocks —
+                // hand them straight back
+                self.kv.release(req.id);
+                self.metrics.record_expired();
+                events.push(Event::Finished(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    finish: FinishReason::DeadlineExpired,
+                    queue_secs: waited.as_secs_f64(),
+                    ttft_secs: 0.0,
+                    e2e_secs: waited.as_secs_f64(),
+                }));
+                continue;
+            }
+            self.metrics.record_queue(waited);
+            events.push(Event::Started { id: req.id, queue_secs: waited.as_secs_f64() });
             let cache = self.backend.new_cache()?;
             self.running.push(Running {
                 sampler: Sampler::new(req.sampling),
                 cache,
                 prompt_idx: 0,
                 generated: Vec::new(),
-                prefill_started: Some(Instant::now()),
+                admitted_at: Instant::now(),
+                first_token_at: None,
                 req,
             });
         }
 
         // ---- one unified chunked forward over the running set ----------
-        let chunk_len = self.batcher.cfg.prefill_chunk.max(1);
-        match &self.backend {
-            // the batched hot path: prefill chunks and decode tokens
-            // flatten into one gemm per linear — the weights stream once
-            // for the whole tick
-            EngineBackend::Cpu(m) => {
-                if !self.running.is_empty() {
-                    let t0 = Instant::now();
-                    let chunks: Vec<Vec<u32>> = self
-                        .running
-                        .iter()
-                        .map(|run| {
-                            if run.prefilling() {
-                                let end = (run.prompt_idx + chunk_len)
-                                    .min(run.req.prompt.len());
-                                run.req.prompt[run.prompt_idx..end].to_vec()
-                            } else {
-                                vec![*run
-                                    .generated
-                                    .last()
-                                    .expect("decoding sequence has a sampled token")]
-                            }
-                        })
-                        .collect();
-                    // logits are needed only where something will sample:
-                    // decoding sequences and prompts completing this tick
-                    let need: Vec<bool> = self
-                        .running
-                        .iter()
-                        .zip(&chunks)
-                        .map(|(run, chunk)| {
-                            run.prompt_idx + chunk.len() >= run.req.prompt.len()
-                        })
-                        .collect();
-                    let chunk_refs: Vec<&[u32]> =
-                        chunks.iter().map(|c| c.as_slice()).collect();
-                    let mut caches: Vec<&mut KvCache> = self
-                        .running
-                        .iter_mut()
-                        .map(|r| match &mut r.cache {
-                            SeqCache::Cpu(k) => k,
-                            SeqCache::Pjrt(_) => unreachable!("cache/backend mismatch"),
-                        })
-                        .collect();
-                    let all_logits =
-                        m.forward_chunks_masked(&chunk_refs, &mut caches, &need);
-                    // sample: sequences that just completed their prompt
-                    // emit their first token, decoding ones their next —
-                    // mid-prompt sequences only advanced their KV cache
-                    let seqs = chunks.len();
-                    let mut emitted = 0usize;
-                    for ((run, chunk), logits) in
-                        self.running.iter_mut().zip(&chunks).zip(&all_logits)
-                    {
-                        if run.prefilling() {
-                            run.prompt_idx += chunk.len();
-                            if !run.prefilling() {
-                                let logits =
-                                    logits.as_ref().expect("completing chunk has logits");
-                                let tok = run.sampler.sample(logits);
-                                run.generated.push(tok);
-                                self.kv.append_token(run.req.id);
-                                self.metrics.record_ttft(run.req.arrived.elapsed());
-                                emitted += 1;
-                            }
-                        } else {
-                            let logits =
-                                logits.as_ref().expect("decoding chunk has logits");
-                            let tok = run.sampler.sample(logits);
-                            run.generated.push(tok);
-                            self.kv.append_token(run.req.id);
-                            emitted += 1;
-                        }
-                    }
-                    self.metrics.record_batch_step(t0.elapsed(), seqs, emitted);
-                }
-            }
-            // PJRT has no batched (or multi-token) executable ABI yet
-            // (ROADMAP): per-sequence single-token stepping, with
-            // sample/push immediately after each step so a mid-batch
-            // error leaves completed sequences consistent
-            EngineBackend::Pjrt(m) => {
-                for run in self.running.iter_mut() {
-                    let t0 = Instant::now();
+        if !self.running.is_empty() {
+            let tick = TickState {
+                prefilling: self.running.iter().filter(|r| r.prefilling()).count(),
+                decoding: self.running.iter().filter(|r| !r.prefilling()).count(),
+                queued: self.queue.len(),
+            };
+            let bound = self.cfg.prefill_chunk.max(1);
+            let chunk_len = self.policy.chunk_for_tick(tick).clamp(1, bound);
+            self.metrics.record_tick_chunk(chunk_len);
+
+            let t0 = Instant::now();
+            let chunks: Vec<Vec<u32>> = self
+                .running
+                .iter()
+                .map(|run| {
                     if run.prefilling() {
                         let end = (run.prompt_idx + chunk_len).min(run.req.prompt.len());
-                        let mut logits = Vec::new();
-                        for i in run.prompt_idx..end {
-                            let tok = run.req.prompt[i];
-                            logits = match &mut run.cache {
-                                SeqCache::Pjrt(k) => m.decode(k, tok)?,
-                                SeqCache::Cpu(_) => unreachable!("cache/backend mismatch"),
-                            };
-                        }
-                        run.prompt_idx = end;
-                        if !run.prefilling() {
-                            let tok = run.sampler.sample(&logits);
-                            run.generated.push(tok);
-                            self.kv.append_token(run.req.id);
-                            self.metrics.record_ttft(run.req.arrived.elapsed());
-                            // occupancy 1: no weight-streaming amortization
-                            self.metrics.record_batch_step(t0.elapsed(), 1, 1);
-                        }
+                        run.req.prompt[run.prompt_idx..end].to_vec()
                     } else {
-                        let last =
-                            *run.generated.last().expect("at least one generated token");
-                        let logits = match &mut run.cache {
-                            SeqCache::Pjrt(k) => m.decode(k, last)?,
-                            SeqCache::Cpu(_) => unreachable!("cache/backend mismatch"),
-                        };
-                        let tok = run.sampler.sample(&logits);
-                        run.generated.push(tok);
-                        self.kv.append_token(run.req.id);
-                        self.metrics.record_batch_step(t0.elapsed(), 1, 1);
+                        vec![*run.generated.last().expect("decoding sequence has a token")]
                     }
+                })
+                .collect();
+            // logits are needed only where something will sample:
+            // decoding sequences and prompts completing this tick
+            let need: Vec<bool> = self
+                .running
+                .iter()
+                .zip(&chunks)
+                .map(|(run, chunk)| run.prompt_idx + chunk.len() >= run.req.prompt.len())
+                .collect();
+            let chunk_refs: Vec<&[u32]> = chunks.iter().map(|c| c.as_slice()).collect();
+            let mut caches: Vec<&mut B::Kv> =
+                self.running.iter_mut().map(|r| &mut r.cache).collect();
+            let all_logits = self.backend.forward_tick(&chunk_refs, &mut caches, &need)?;
+            drop(caches);
+
+            // sample: sequences that just completed their prompt emit
+            // their first token, decoding ones their next — mid-prompt
+            // sequences only advanced their KV cache
+            let seqs = chunks.len();
+            let mut emitted = 0usize;
+            for ((run, chunk), logits) in self.running.iter_mut().zip(&chunks).zip(&all_logits) {
+                let sample_from = if run.prefilling() {
+                    run.prompt_idx += chunk.len();
+                    if run.prefilling() {
+                        None
+                    } else {
+                        Some(logits.as_ref().expect("completing chunk has logits"))
+                    }
+                } else {
+                    Some(logits.as_ref().expect("decoding chunk has logits"))
+                };
+                if let Some(logits) = sample_from {
+                    let tok = run.sampler.sample(logits);
+                    run.generated.push(tok);
+                    self.kv.append_token(run.req.id);
+                    let t_emit = Instant::now();
+                    if run.first_token_at.is_none() {
+                        run.first_token_at = Some(t_emit);
+                        self.metrics.record_ttft(t_emit.duration_since(run.req.arrived));
+                    }
+                    events.push(Event::Token { id: run.req.id, token: tok, t_emit });
+                    emitted += 1;
                 }
             }
-        }
-
-        // ---- finish checks ---------------------------------------------
-        let mut finished: Vec<usize> = Vec::new();
-        for (idx, run) in self.running.iter().enumerate() {
-            if run.prompt_idx == run.req.prompt.len() {
-                let hit_eos = run.generated.last() == Some(&self.cfg.eos_token);
-                let hit_len = run.generated.len() >= run.req.max_new_tokens;
-                if hit_eos || hit_len {
-                    finished.push(idx);
-                }
-            }
-        }
-
-        // ---- retire ----------------------------------------------------
-        let mut responses = Vec::new();
-        for idx in finished.into_iter().rev() {
-            let run = self.running.swap_remove(idx);
-            self.kv.release(run.req.id);
-            let e2e = run.req.arrived.elapsed();
-            self.metrics.record_done(e2e, run.req.prompt.len());
-            let finish = if run.generated.last() == Some(&self.cfg.eos_token) {
-                FinishReason::Eos
+            if self.backend.batch_amortized() {
+                self.metrics.record_batch_step(t0.elapsed(), seqs, emitted);
             } else {
-                FinishReason::Length
-            };
-            responses.push(Response {
-                id: run.req.id,
-                tokens: run.generated,
-                finish,
-                queue_secs: run
-                    .prefill_started
-                    .map(|t| t.duration_since(run.req.arrived).as_secs_f64())
-                    .unwrap_or(0.0),
-                ttft_secs: 0.0, // per-request ttft folded into metrics
-                e2e_secs: e2e.as_secs_f64(),
-            });
+                // per-sequence backend: every token still saw the whole
+                // tick as its client-observed latency, but no weight
+                // stream was shared — occupancy must stay 1
+                for _ in 0..emitted {
+                    self.metrics.record_batch_step(t0.elapsed(), 1, 1);
+                }
+            }
         }
-        Ok(responses)
+
+        // ---- finish checks + retire ------------------------------------
+        let mut idx = 0;
+        while idx < self.running.len() {
+            let run = &self.running[idx];
+            let hit_eos = run.generated.last() == Some(&self.cfg.eos_token);
+            let done = !run.prefilling()
+                && (hit_eos || run.generated.len() >= run.req.max_new_tokens);
+            if done {
+                let finish = if hit_eos { FinishReason::Eos } else { FinishReason::Length };
+                let resp = self.retire(idx, finish);
+                events.push(Event::Finished(resp));
+            } else {
+                idx += 1;
+            }
+        }
+        Ok(events)
     }
 
-    /// Drain everything currently queued/running (offline batch mode).
+    /// Retire every *queued* request whose deadline has already passed
+    /// (they never reach admission, so the sweep is what bounds their
+    /// wait under saturation).
+    fn expire_queued(&mut self, now: Instant, events: &mut Vec<Event>) {
+        for req in self.queue.remove_expired(now) {
+            self.metrics.record_expired();
+            let waited = now.duration_since(req.arrived).as_secs_f64();
+            events.push(Event::Finished(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                finish: FinishReason::DeadlineExpired,
+                queue_secs: waited,
+                ttft_secs: 0.0,
+                e2e_secs: waited,
+            }));
+        }
+    }
+
+    /// Drain everything currently queued/running (offline batch mode),
+    /// returning only the terminal responses. The streamed
+    /// [`Event::Token`] sequence of a request concatenates to exactly
+    /// the `tokens` of its response here — same forward core, same
+    /// sampler state, bit-identical logits.
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
         while self.has_work() {
-            out.extend(self.step()?);
+            for ev in self.step()? {
+                if let Event::Finished(r) = ev {
+                    out.push(r);
+                }
+            }
         }
         Ok(out)
     }
@@ -312,8 +479,20 @@ impl Engine {
         self.kv.check_invariants()
     }
 
-    pub fn backend(&self) -> &EngineBackend {
+    /// Paged-KV pool accounting (tests assert cancelled sequences
+    /// return every block).
+    pub fn kv(&self) -> &PagedKvManager {
+        &self.kv
+    }
+
+    pub fn backend(&self) -> &B {
         &self.backend
+    }
+
+    /// Tear down, keeping the final metrics (the server thread returns
+    /// these on shutdown).
+    pub fn into_metrics(self) -> Metrics {
+        self.metrics
     }
 }
 
@@ -321,19 +500,26 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::coordinator::request::SamplingParams;
+    use crate::coordinator::SchedulePolicyKind;
     use crate::model::init::random_weights;
     use crate::model::{presets, Model};
+    use std::time::Duration;
 
-    fn cpu_engine(max_batch: usize) -> Engine {
-        let mut cfg = presets::by_name("opt-nano").unwrap();
-        cfg.vocab = 64;
-        cfg.max_seq = 48;
-        let model = Model::new(cfg.clone(), random_weights(&cfg, 42));
-        let backend = EngineBackend::Cpu(BackendModel::dense(&model));
-        Engine::new(
-            backend,
-            EngineConfig { max_batch, total_blocks: 64, block_size: 8, ..Default::default() },
-        )
+    fn cpu_engine(max_batch: usize) -> Engine<CpuBackend> {
+        cpu_engine_cfg(EngineConfig {
+            max_batch,
+            total_blocks: 64,
+            block_size: 8,
+            ..Default::default()
+        })
+    }
+
+    fn cpu_engine_cfg(cfg: EngineConfig) -> Engine<CpuBackend> {
+        let mut mcfg = presets::by_name("opt-nano").unwrap();
+        mcfg.vocab = 64;
+        mcfg.max_seq = 48;
+        let model = Model::new(mcfg.clone(), random_weights(&mcfg, 42));
+        Engine::new(CpuBackend(BackendModel::dense(&model)), cfg)
     }
 
     fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
@@ -348,6 +534,7 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].id, 1);
         assert!(out[0].tokens.len() <= 6 && !out[0].tokens.is_empty());
+        assert!(out[0].ttft_secs > 0.0, "per-request TTFT must be populated");
         assert!(e.check_invariants().is_ok());
         assert_eq!(e.metrics.completed, 1);
     }
@@ -373,6 +560,35 @@ mod tests {
             e.metrics.max_batch_occupancy
         );
         assert!(e.metrics.mean_batch_occupancy() > 1.0);
+    }
+
+    #[test]
+    fn step_streams_token_events_matching_responses() {
+        let mut e = cpu_engine(4);
+        for id in 0..3 {
+            e.submit(req(id, 5, 6)).unwrap();
+        }
+        let mut streamed: std::collections::HashMap<u64, Vec<u32>> = Default::default();
+        let mut finished: std::collections::HashMap<u64, Response> = Default::default();
+        while e.has_work() {
+            for ev in e.step().unwrap() {
+                match ev {
+                    Event::Token { id, token, .. } => streamed.entry(id).or_default().push(token),
+                    Event::Finished(r) => {
+                        finished.insert(r.id, r);
+                    }
+                    Event::Started { queue_secs, .. } => assert!(queue_secs >= 0.0),
+                    Event::Rejected { .. } => panic!("nothing was rejected"),
+                }
+            }
+        }
+        assert_eq!(finished.len(), 3);
+        for (id, r) in &finished {
+            assert_eq!(
+                &streamed[id], &r.tokens,
+                "request {id}: streamed tokens diverged from the terminal response"
+            );
+        }
     }
 
     #[test]
@@ -410,6 +626,14 @@ mod tests {
     }
 
     #[test]
+    fn rejects_id_already_running() {
+        let mut e = cpu_engine(2);
+        e.submit(req(7, 4, 10)).unwrap();
+        e.step().unwrap(); // admits 7
+        assert_eq!(e.submit(req(7, 4, 4)), Err(SubmitError::DuplicateId));
+    }
+
+    #[test]
     fn kv_pressure_defers_but_completes_all() {
         let mut e = cpu_engine(8);
         // tiny pool: only ~2 requests' worst case fit at once
@@ -424,18 +648,185 @@ mod tests {
 
     #[test]
     fn long_prompts_prefill_in_chunks() {
-        let mut e = cpu_engine(2);
-        e.batcher.cfg.prefill_chunk = 4;
+        let mut e = cpu_engine_cfg(EngineConfig {
+            max_batch: 2,
+            total_blocks: 64,
+            block_size: 8,
+            prefill_chunk: 4,
+            ..Default::default()
+        });
         e.submit(req(1, 20, 3)).unwrap();
         let mut steps = 0;
         let mut responses = Vec::new();
         while e.has_work() {
-            responses.extend(e.step().unwrap());
+            for ev in e.step().unwrap() {
+                if let Event::Finished(r) = ev {
+                    responses.push(r);
+                }
+            }
             steps += 1;
             assert!(steps < 100, "engine stuck");
         }
         // 20 prompt tokens / 4 per tick = 5 prefill ticks + ≥2 decode
         assert!(steps >= 7, "only {steps} steps");
         assert_eq!(responses.len(), 1);
+        assert!(e.metrics.max_tick_chunk <= 4);
+    }
+
+    /// Engine config with EOS disabled — random-weight models can
+    /// argmax the EOS id, which would make generation lengths (and the
+    /// cancel/deadline timing these tests rely on) nondeterministic.
+    fn no_eos(max_batch: usize) -> EngineConfig {
+        EngineConfig {
+            max_batch,
+            total_blocks: 64,
+            block_size: 8,
+            eos_token: u32::MAX,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cancel_running_frees_kv_and_reports_partial_tokens() {
+        let mut e = cpu_engine_cfg(no_eos(4));
+        let total_free = e.kv().free_blocks();
+        for id in 0..3 {
+            e.submit(req(id, 6, 30)).unwrap();
+        }
+        // into decode: prompt prefills in one tick, a few tokens stream
+        for _ in 0..4 {
+            e.step().unwrap();
+        }
+        let used_before = e.kv().used_blocks();
+        assert!(used_before > 0);
+        assert!(e.cancel(1), "id 1 is running");
+        assert!(e.kv().used_blocks() < used_before, "cancel must free blocks now");
+        e.check_invariants().unwrap();
+        // the terminal event surfaces on the next step
+        let evs = e.step().unwrap();
+        let resp = evs
+            .iter()
+            .find_map(|ev| match ev {
+                Event::Finished(r) if r.id == 1 => Some(r.clone()),
+                _ => None,
+            })
+            .expect("cancelled response");
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(!resp.tokens.is_empty(), "mid-decode cancel keeps streamed tokens");
+        let rest = e.run_to_completion().unwrap();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(e.metrics.cancelled_total, 1);
+        assert_eq!(e.metrics.completed, 2);
+        assert_eq!(e.kv().free_blocks(), total_free, "every block back in the pool");
+        e.check_invariants().unwrap();
+        assert!(!e.cancel(1), "already gone");
+    }
+
+    #[test]
+    fn cancel_queued_request_never_runs() {
+        let mut e = cpu_engine_cfg(no_eos(1));
+        e.submit(req(0, 4, 30)).unwrap();
+        e.step().unwrap(); // 0 occupies the only slot
+        e.submit(req(1, 4, 4)).unwrap();
+        assert!(e.cancel(1), "id 1 is queued");
+        let out = e.run_to_completion().unwrap();
+        let cancelled = out.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(cancelled.finish, FinishReason::Cancelled);
+        assert!(cancelled.tokens.is_empty());
+        assert_eq!(out.iter().find(|r| r.id == 0).unwrap().finish, FinishReason::Length);
+        assert_eq!(e.metrics.cancelled_total, 1);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resubmit_of_cancelled_id_waits_for_terminal_drain() {
+        let mut e = cpu_engine_cfg(no_eos(2));
+        e.submit(req(1, 4, 20)).unwrap();
+        e.step().unwrap();
+        assert!(e.cancel(1));
+        // the terminal event is still pending: the id is not reusable
+        // yet, else the old and new streams would cross-route
+        assert_eq!(e.submit(req(1, 4, 4)), Err(SubmitError::DuplicateId));
+        e.step().unwrap(); // drains the pending Finished(Cancelled)
+        e.submit(req(1, 4, 4)).unwrap();
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert_eq!(e.metrics.cancelled_total, 1);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn queued_deadline_expires_without_admission() {
+        // the only slot is busy for 30 ticks; the queued request's
+        // deadline must fire on the next tick, not at admission
+        let mut e = cpu_engine_cfg(no_eos(1));
+        e.submit(req(0, 4, 30)).unwrap();
+        e.step().unwrap();
+        e.submit(req(1, 4, 4).with_deadline(Duration::ZERO)).unwrap();
+        let evs = e.step().unwrap();
+        let resp = evs
+            .iter()
+            .find_map(|ev| match ev {
+                Event::Finished(r) if r.id == 1 => Some(r.clone()),
+                _ => None,
+            })
+            .expect("queued request must expire on the very next tick");
+        assert_eq!(resp.finish, FinishReason::DeadlineExpired);
+        assert!(resp.tokens.is_empty());
+        assert_eq!(e.metrics.expired_total, 1);
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1); // only request 0 remains
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deadline_zero_expires_before_serving() {
+        let mut e = cpu_engine(2);
+        e.submit(req(1, 5, 8).with_deadline(Duration::ZERO)).unwrap();
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::DeadlineExpired);
+        assert!(out[0].tokens.is_empty());
+        assert_eq!(e.metrics.expired_total, 1);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deadline_expires_mid_flight() {
+        let mut e = cpu_engine_cfg(no_eos(2));
+        e.submit(req(1, 4, 40).with_deadline(Duration::from_millis(30))).unwrap();
+        e.step().unwrap(); // admit + prefill + first token
+        std::thread::sleep(Duration::from_millis(40));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::DeadlineExpired);
+        assert!(out[0].tokens.len() < 40, "deadline must cut generation short");
+        assert_eq!(e.metrics.expired_total, 1);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn adaptive_policy_matches_fixed_tokens() {
+        // chunking is an efficiency decision, never a correctness one
+        let run = |policy| {
+            let mut e = cpu_engine_cfg(EngineConfig {
+                max_batch: 4,
+                total_blocks: 64,
+                block_size: 8,
+                prefill_chunk: 8,
+                policy,
+                ..Default::default()
+            });
+            for id in 0..5 {
+                e.submit(req(id, 14, 6)).unwrap();
+            }
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            assert!(e.metrics.max_tick_chunk <= 8, "chunk bound violated");
+            e.check_invariants().unwrap();
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(SchedulePolicyKind::Fixed), run(SchedulePolicyKind::Adaptive));
     }
 }

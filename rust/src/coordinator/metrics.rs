@@ -22,6 +22,13 @@ pub struct Metrics {
     /// Largest batch a single decode call carried — >1 means the engine
     /// actually amortized weight streaming across sequences.
     pub max_batch_occupancy: u64,
+    /// Requests cancelled by the client (queued or mid-flight).
+    pub cancelled_total: u64,
+    /// Requests retired because their deadline passed.
+    pub expired_total: u64,
+    /// Largest per-tick prefill chunk the schedule policy chose —
+    /// bounded by `EngineConfig::prefill_chunk` (tests pin this).
+    pub max_tick_chunk: u64,
     wall: Option<Stopwatch>,
 }
 
@@ -47,6 +54,21 @@ impl Metrics {
         self.e2e.record(e2e);
         self.prompt_tokens += prompt_tokens as u64;
         self.completed += 1;
+    }
+
+    /// Record a client cancellation (queued or mid-flight).
+    pub fn record_cancelled(&mut self) {
+        self.cancelled_total += 1;
+    }
+
+    /// Record a deadline expiry.
+    pub fn record_expired(&mut self) {
+        self.expired_total += 1;
+    }
+
+    /// Record the chunk length the schedule policy chose for one tick.
+    pub fn record_tick_chunk(&mut self, chunk: usize) {
+        self.max_tick_chunk = self.max_tick_chunk.max(chunk as u64);
     }
 
     /// Record one batched decode call advancing `occupancy` sequences.
@@ -97,13 +119,16 @@ impl Metrics {
     /// Multi-line human report.
     pub fn report(&self) -> String {
         format!(
-            "completed={} rejected={} prompt_toks={} gen_toks={} throughput={:.1} tok/s\n\
-             batch   : calls={} mean_occupancy={:.2} max_occupancy={}\n\
+            "completed={} cancelled={} expired={} rejected={} prompt_toks={} gen_toks={} \
+             throughput={:.1} tok/s\n\
+             batch   : calls={} mean_occupancy={:.2} max_occupancy={} max_tick_chunk={}\n\
              queue   : {}\n\
              ttft    : {}\n\
              per-tok : {}\n\
              e2e     : {}",
             self.completed,
+            self.cancelled_total,
+            self.expired_total,
             self.rejected,
             self.prompt_tokens,
             self.generated_tokens,
@@ -111,6 +136,7 @@ impl Metrics {
             self.decode_batches,
             self.mean_batch_occupancy(),
             self.max_batch_occupancy,
+            self.max_tick_chunk,
             self.queue_time.summary(),
             self.ttft.summary(),
             self.per_token.summary(),
@@ -153,6 +179,24 @@ mod tests {
         m.record_batch_step(Duration::from_millis(5), 4, 0);
         assert_eq!(m.generated_tokens, 4);
         assert_eq!(m.decode_batches, 1);
+    }
+
+    #[test]
+    fn cancellation_and_expiry_surface_in_report() {
+        let mut m = Metrics::new();
+        m.record_cancelled();
+        m.record_cancelled();
+        m.record_expired();
+        m.record_tick_chunk(4);
+        m.record_tick_chunk(16);
+        m.record_tick_chunk(8);
+        assert_eq!(m.cancelled_total, 2);
+        assert_eq!(m.expired_total, 1);
+        assert_eq!(m.max_tick_chunk, 16);
+        let r = m.report();
+        assert!(r.contains("cancelled=2"), "{r}");
+        assert!(r.contains("expired=1"), "{r}");
+        assert!(r.contains("max_tick_chunk=16"), "{r}");
     }
 
     #[test]

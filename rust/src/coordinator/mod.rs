@@ -1,27 +1,58 @@
 //! Serving coordinator — the L3 runtime system around the quantized
-//! model: request queue, continuous batcher, paged KV-cache manager,
-//! sampler, metrics, and the engine loop driving either the CPU decode
-//! backends (`full` / `gptq-dequant` / `gptqt-lut`) or the PJRT
-//! executables.
+//! model, organized around three public abstractions:
+//!
+//! * [`Server`] — the streaming session front-end. It owns the engine
+//!   on a dedicated thread; [`Server::submit`] returns a
+//!   [`RequestHandle`] whose [`Event`] stream yields every generated
+//!   token as it is sampled, plus admission ([`Event::Started`]) and a
+//!   terminal [`Event::Finished`] / [`Event::Rejected`]. Handles
+//!   support mid-flight cancellation (paged-KV blocks return to the
+//!   pool immediately) and per-request deadlines.
+//! * [`Backend`] — what executes the model math. [`CpuBackend`] wraps
+//!   the pure-rust decode path (dense / gptq-dequant / gptqt-lut
+//!   kernels, one weight stream per tick); [`PjrtBackend`] wraps the
+//!   AOT-compiled XLA executables. The engine never matches on a
+//!   concrete backend, so new ones plug in without touching
+//!   `engine.rs`.
+//! * [`SchedulePolicy`] — the per-tick chunk decision.
+//!   [`policy::FixedChunk`] is the constant-chunk baseline;
+//!   [`policy::AdaptiveChunk`] shrinks prefill chunks as decode
+//!   occupancy rises to bound inter-token latency and grows them back
+//!   when a tick is prefill-only. Selected via
+//!   [`EngineConfig::policy`].
+//!
+//! Underneath sit the same building blocks as before: a bounded
+//! priority+FIFO [`RequestQueue`], the continuous [`batcher`], the
+//! paged [`PagedKvManager`], per-sequence [`sampler`]s, and
+//! [`Metrics`] (now including per-request TTFT, queue wait,
+//! cancellation and deadline-expiry counts). The [`Engine`] itself is
+//! still a single-threaded scheduling loop — offline callers may
+//! drive [`Engine::step`] / [`Engine::run_to_completion`] directly,
+//! and the streamed token sequence of a request is bit-identical to
+//! its offline response (same forward core, same sampler state).
 //!
 //! Shape: a miniature vLLM-style router/engine. The paper measures
 //! per-token generation latency under low-concurrency serving (§III-E);
 //! this module is the system that measurement runs in, plus the
-//! admission/batching machinery a deployment needs around it.
+//! admission/batching/streaming machinery a deployment needs around it.
 
 pub mod batcher;
 pub mod engine;
 pub mod kv_pool;
 pub mod metrics;
+pub mod policy;
 pub mod queue;
 pub mod request;
 pub mod sampler;
+pub mod server;
 
-pub use engine::{Engine, EngineBackend};
+pub use engine::{Backend, CpuBackend, Engine, PjrtBackend};
 pub use kv_pool::PagedKvManager;
 pub use metrics::Metrics;
-pub use queue::RequestQueue;
-pub use request::{Request, Response, SamplingParams};
+pub use policy::{AdaptiveChunk, FixedChunk, SchedulePolicy, SchedulePolicyKind, TickState};
+pub use queue::{RequestQueue, SubmitError};
+pub use request::{FinishReason, Request, Response, SamplingParams};
+pub use server::{Event, RequestHandle, Server};
 
 /// Engine configuration knobs.
 #[derive(Debug, Clone)]
@@ -36,11 +67,14 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// Stop token (EOS).
     pub eos_token: u32,
-    /// Prompt tokens each prefilling sequence feeds into the shared
-    /// chunked forward per tick. Copied into `batcher::BatcherConfig`
-    /// at engine construction — the batcher's copy is the runtime
-    /// source of truth.
+    /// Upper bound on the prompt tokens a prefilling sequence feeds
+    /// into the shared forward per tick. The [`SchedulePolicy`] decides
+    /// the actual per-tick chunk within `1..=prefill_chunk`.
     pub prefill_chunk: usize,
+    /// Which [`SchedulePolicy`] the engine instantiates (with
+    /// `prefill_chunk` as its bound). Custom policy objects go through
+    /// [`Engine::with_policy`] instead.
+    pub policy: SchedulePolicyKind,
 }
 
 impl Default for EngineConfig {
@@ -52,6 +86,7 @@ impl Default for EngineConfig {
             max_queue: 1024,
             eos_token: crate::data::vocab::EOS,
             prefill_chunk: 16,
+            policy: SchedulePolicyKind::Fixed,
         }
     }
 }

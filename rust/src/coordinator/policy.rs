@@ -1,0 +1,188 @@
+//! Scheduling policy — the per-tick chunk decision behind the engine.
+//!
+//! Each tick the engine advances every running sequence through one
+//! shared forward: prefilling sequences contribute their next prompt
+//! chunk, decoding sequences one token. The chunk length is the
+//! prefill/decode interference knob: long chunks amortize weight
+//! streaming harder but lengthen the tick, inflating the inter-token
+//! latency of every co-scheduled decoding sequence — the very quantity
+//! the paper's §III-E speed claims are about.
+//!
+//! [`SchedulePolicy`] makes that decision a first-class object:
+//! [`FixedChunk`] feeds a constant chunk (the historical behavior),
+//! [`AdaptiveChunk`] shrinks the chunk as decode occupancy rises to
+//! bound inter-token latency and grows it back to the configured
+//! maximum when the tick is prefill-only. Policies are selected via
+//! [`super::EngineConfig::policy`]; custom implementations plug in
+//! through [`super::Engine::with_policy`].
+//!
+//! Chunking never changes generated tokens: the chunk-major forward
+//! core is bit-identical under any chunk split (pinned by
+//! `tests/chunked_prefill.rs`), so a policy can only trade latency
+//! against throughput — never correctness.
+
+/// Occupancy snapshot a policy sees each tick, taken after admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TickState {
+    /// Running sequences still consuming their prompt.
+    pub prefilling: usize,
+    /// Running sequences in the decode phase (one token per tick each).
+    pub decoding: usize,
+    /// Requests waiting in the admission queue.
+    pub queued: usize,
+}
+
+/// Per-tick chunk/batch decision. `&mut self` so policies may carry
+/// state (EWMA latency trackers, hysteresis, ...).
+pub trait SchedulePolicy: Send {
+    /// Prompt tokens each prefilling sequence feeds into this tick's
+    /// shared forward. The engine clamps the result to
+    /// `1..=EngineConfig::prefill_chunk`.
+    fn chunk_for_tick(&mut self, tick: TickState) -> usize;
+
+    /// Human label for reports.
+    fn label(&self) -> &'static str;
+}
+
+/// Constant chunk length — the pre-policy engine behavior.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedChunk(pub usize);
+
+impl SchedulePolicy for FixedChunk {
+    fn chunk_for_tick(&mut self, _tick: TickState) -> usize {
+        self.0.max(1)
+    }
+
+    fn label(&self) -> &'static str {
+        "fixed-chunk"
+    }
+}
+
+/// Occupancy-adaptive chunking (the ROADMAP "adaptive chunk
+/// scheduling" item): a prefill-only tick takes the full `max_chunk`
+/// (nobody is waiting on a next token, so amortize the weight stream
+/// as hard as possible); once sequences are decoding, the chunk
+/// shrinks as `max_chunk / (decoding + 1)` so the tick length — and
+/// with it every decoding sequence's inter-token latency — stays
+/// roughly constant as occupancy rises.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveChunk {
+    /// Upper bound (a prefill-only tick uses exactly this).
+    pub max_chunk: usize,
+    /// Lower bound under heavy decode pressure.
+    pub min_chunk: usize,
+}
+
+impl AdaptiveChunk {
+    pub fn new(max_chunk: usize) -> AdaptiveChunk {
+        AdaptiveChunk { max_chunk: max_chunk.max(1), min_chunk: 1 }
+    }
+}
+
+impl SchedulePolicy for AdaptiveChunk {
+    fn chunk_for_tick(&mut self, tick: TickState) -> usize {
+        if tick.decoding == 0 {
+            self.max_chunk
+        } else {
+            (self.max_chunk / (tick.decoding + 1))
+                .max(self.min_chunk.max(1))
+                .min(self.max_chunk)
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "adaptive-chunk"
+    }
+}
+
+/// Config-level policy selector ([`super::EngineConfig::policy`]).
+/// The engine instantiates the policy with
+/// `EngineConfig::prefill_chunk` as its chunk bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulePolicyKind {
+    /// [`FixedChunk`] at `prefill_chunk` — the historical behavior.
+    #[default]
+    Fixed,
+    /// [`AdaptiveChunk`] bounded by `prefill_chunk`.
+    Adaptive,
+}
+
+impl SchedulePolicyKind {
+    /// Parse a CLI-style name.
+    pub fn parse(s: &str) -> Option<SchedulePolicyKind> {
+        match s {
+            "fixed" => Some(SchedulePolicyKind::Fixed),
+            "adaptive" => Some(SchedulePolicyKind::Adaptive),
+            _ => None,
+        }
+    }
+
+    /// Build the policy object with `chunk` as its bound.
+    pub fn build(self, chunk: usize) -> Box<dyn SchedulePolicy> {
+        match self {
+            SchedulePolicyKind::Fixed => Box::new(FixedChunk(chunk)),
+            SchedulePolicyKind::Adaptive => Box::new(AdaptiveChunk::new(chunk)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tick(prefilling: usize, decoding: usize) -> TickState {
+        TickState { prefilling, decoding, queued: 0 }
+    }
+
+    #[test]
+    fn fixed_is_constant() {
+        let mut p = FixedChunk(16);
+        assert_eq!(p.chunk_for_tick(tick(1, 0)), 16);
+        assert_eq!(p.chunk_for_tick(tick(4, 7)), 16);
+        // degenerate zero config still feeds one token per tick
+        assert_eq!(FixedChunk(0).chunk_for_tick(tick(1, 1)), 1);
+    }
+
+    #[test]
+    fn adaptive_full_chunk_when_prefill_only() {
+        let mut p = AdaptiveChunk::new(32);
+        assert_eq!(p.chunk_for_tick(tick(3, 0)), 32);
+    }
+
+    #[test]
+    fn adaptive_shrinks_with_decode_occupancy() {
+        let mut p = AdaptiveChunk::new(32);
+        let mut prev = usize::MAX;
+        for decoding in 1..=16 {
+            let c = p.chunk_for_tick(tick(2, decoding));
+            assert!(c <= prev, "chunk grew as occupancy rose: {c} > {prev}");
+            assert!((1..=32).contains(&c), "chunk {c} escaped the bound");
+            prev = c;
+        }
+        // heavy decode pressure bottoms out at min_chunk
+        assert_eq!(p.chunk_for_tick(tick(1, 100)), 1);
+    }
+
+    #[test]
+    fn adaptive_never_exceeds_configured_bound() {
+        for max in [1usize, 2, 7, 16, 64] {
+            let mut p = AdaptiveChunk::new(max);
+            for prefilling in 0..4 {
+                for decoding in 0..20 {
+                    let c = p.chunk_for_tick(tick(prefilling, decoding));
+                    assert!(c >= 1 && c <= max, "chunk {c} outside 1..={max}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kind_builds_and_parses() {
+        assert_eq!(SchedulePolicyKind::parse("fixed"), Some(SchedulePolicyKind::Fixed));
+        assert_eq!(SchedulePolicyKind::parse("adaptive"), Some(SchedulePolicyKind::Adaptive));
+        assert_eq!(SchedulePolicyKind::parse("nope"), None);
+        assert_eq!(SchedulePolicyKind::Fixed.build(8).chunk_for_tick(tick(0, 3)), 8);
+        assert!(SchedulePolicyKind::Adaptive.build(8).chunk_for_tick(tick(0, 3)) <= 8);
+        assert_eq!(SchedulePolicyKind::default(), SchedulePolicyKind::Fixed);
+    }
+}

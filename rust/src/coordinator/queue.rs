@@ -4,6 +4,7 @@
 use super::request::Request;
 use std::collections::{BinaryHeap, HashSet};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 struct Entry {
     priority: u8,
@@ -45,7 +46,7 @@ pub struct RequestQueue {
 }
 
 /// Submission failure modes.
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
     Full,
     Closed,
@@ -116,6 +117,54 @@ impl RequestQueue {
         }
     }
 
+    /// Remove a queued request by id (the cancellation path). O(n)
+    /// heap rebuild — cancellations are rare next to pops. Returns
+    /// `None` when the id is not queued (already admitted or unknown).
+    pub fn remove(&self, id: u64) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.ids.remove(&id) {
+            return None;
+        }
+        let mut removed = None;
+        let entries = std::mem::take(&mut g.heap).into_vec();
+        g.heap = entries
+            .into_iter()
+            .filter_map(|e| {
+                if e.req.id == id {
+                    removed = Some(e.req);
+                    None
+                } else {
+                    Some(e)
+                }
+            })
+            .collect();
+        removed
+    }
+
+    /// Remove every queued request whose deadline has passed as of
+    /// `now` (the engine's per-tick expiry sweep — without it a
+    /// saturated queue would hold expired requests until admission).
+    /// Cheap O(n) scan when nothing expired; heap rebuild otherwise.
+    pub fn remove_expired(&self, now: Instant) -> Vec<Request> {
+        let is_expired = |req: &Request| {
+            req.deadline.is_some_and(|d| now.duration_since(req.arrived) >= d)
+        };
+        let mut g = self.inner.lock().unwrap();
+        if !g.heap.iter().any(|e| is_expired(&e.req)) {
+            return Vec::new();
+        }
+        let entries = std::mem::take(&mut g.heap).into_vec();
+        let (expired, keep): (Vec<Entry>, Vec<Entry>) =
+            entries.into_iter().partition(|e| is_expired(&e.req));
+        g.heap = keep.into_iter().collect();
+        let mut out = Vec::with_capacity(expired.len());
+        for e in expired {
+            g.ids.remove(&e.req.id);
+            out.push(e.req);
+        }
+        out
+    }
+
     /// Close the queue: pending items still drain, new pushes fail.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
@@ -167,6 +216,42 @@ mod tests {
         assert_eq!(q.push(req(3, 0)), Err(SubmitError::Full));
         q.try_pop().unwrap();
         q.push(req(3, 0)).unwrap(); // id freed after pop? no — id 1 popped, 3 is new
+    }
+
+    #[test]
+    fn remove_cancels_queued_requests_only() {
+        let q = RequestQueue::new(16);
+        for id in 0..5 {
+            q.push(req(id, (id % 2) as u8)).unwrap();
+        }
+        let r = q.remove(3).expect("id 3 is queued");
+        assert_eq!(r.id, 3);
+        assert!(q.remove(3).is_none(), "already removed");
+        assert!(q.remove(99).is_none(), "never queued");
+        // remaining order is unchanged: priority class, then FIFO
+        let order: Vec<u64> = std::iter::from_fn(|| q.try_pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 2, 4, 1]);
+        // removed id is free for resubmission
+        q.push(req(3, 0)).unwrap();
+        assert_eq!(q.try_pop().unwrap().id, 3);
+    }
+
+    #[test]
+    fn remove_expired_sweeps_only_past_deadline() {
+        let q = RequestQueue::new(16);
+        q.push(req(1, 0)).unwrap();
+        q.push(req(2, 0).with_deadline(std::time::Duration::ZERO)).unwrap();
+        q.push(req(3, 1).with_deadline(std::time::Duration::from_secs(3600))).unwrap();
+        let expired = q.remove_expired(Instant::now());
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, 2);
+        assert_eq!(q.len(), 2);
+        // no-deadline and far-future requests survive, order preserved
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert_eq!(q.try_pop().unwrap().id, 3);
+        // swept id is free for reuse
+        q.push(req(2, 0)).unwrap();
+        assert!(q.remove_expired(Instant::now()).is_empty());
     }
 
     #[test]

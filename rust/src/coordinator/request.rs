@@ -1,6 +1,6 @@
 //! Request/response types for the serving path.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// How to pick the next token from the logits.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -26,6 +26,10 @@ pub struct Request {
     pub sampling: SamplingParams,
     /// Lower value = served earlier within the same admission wave.
     pub priority: u8,
+    /// Serving budget measured from `arrived`; once exceeded the engine
+    /// retires the request (queued or mid-flight) with
+    /// [`FinishReason::DeadlineExpired`].
+    pub deadline: Option<Duration>,
     pub arrived: Instant,
 }
 
@@ -37,6 +41,7 @@ impl Request {
             max_new_tokens,
             sampling: SamplingParams::Greedy,
             priority: 0,
+            deadline: None,
             arrived: Instant::now(),
         }
     }
@@ -48,6 +53,11 @@ impl Request {
 
     pub fn with_priority(mut self, p: u8) -> Request {
         self.priority = p;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Request {
+        self.deadline = Some(d);
         self
     }
 
@@ -64,6 +74,11 @@ pub enum FinishReason {
     Eos,
     /// Exhausted `max_new_tokens`.
     Length,
+    /// Client cancelled (queued or mid-flight); `Response::tokens`
+    /// holds whatever streamed before the cancel landed.
+    Cancelled,
+    /// The request's deadline passed before it finished.
+    DeadlineExpired,
 }
 
 /// Completed generation.
@@ -99,6 +114,9 @@ mod tests {
         let r = Request::new(1, vec![1, 2, 3], 10);
         assert_eq!(r.max_tokens(), 13);
         assert_eq!(r.sampling, SamplingParams::Greedy);
+        assert_eq!(r.deadline, None);
+        let r = r.with_deadline(Duration::from_millis(250));
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Streaming session front-end — the public serving API.
+//!
+//! [`Server::spawn`] moves an [`Engine`] onto a dedicated worker
+//! thread; any number of producer threads then [`Server::submit`]
+//! requests and consume per-request [`Event`] streams through the
+//! returned [`RequestHandle`]s. Tokens surface the moment the engine
+//! samples them ([`Event::Token`]), so callers observe true
+//! inter-token latency instead of a fully-buffered response — the
+//! quantity the paper's §III-E speed claims are about — and can
+//! [`RequestHandle::cancel`] mid-flight (paged-KV blocks return to the
+//! pool immediately) or bound a request with a deadline
+//! ([`super::Request::with_deadline`]).
+//!
+//! The engine thread multiplexes control messages (submit / cancel /
+//! shutdown) with scheduling ticks: it drains the control channel
+//! without blocking while work is running and parks on it when idle,
+//! so an idle server burns no CPU. Dropping a [`RequestHandle`]
+//! auto-cancels its request on the next token, and dropping the
+//! [`Server`] (or calling [`Server::shutdown`]) drains in-flight work
+//! and returns the final [`Metrics`].
+
+use super::engine::{Backend, Engine};
+use super::metrics::Metrics;
+use super::queue::SubmitError;
+use super::request::{Request, Response};
+use super::EngineConfig;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+/// What a [`RequestHandle`] yields. `Finished` and `Rejected` are
+/// terminal: the stream closes after them.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// The request left the queue and began prefill (queue-wait
+    /// visibility; also recorded in `Metrics::queue_time`).
+    Started { id: u64, queue_secs: f64 },
+    /// One generated token, emitted as soon as it was sampled.
+    Token { id: u64, token: u32, t_emit: Instant },
+    /// Terminal: the full response — any [`super::request::FinishReason`],
+    /// including `Cancelled` and `DeadlineExpired`. Its `tokens` are
+    /// exactly the concatenated `Token` events of this stream.
+    Finished(Response),
+    /// Terminal: the request never entered the queue.
+    Rejected { id: u64, error: SubmitError },
+}
+
+impl Event {
+    /// The request this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            Event::Started { id, .. } => *id,
+            Event::Token { id, .. } => *id,
+            Event::Rejected { id, .. } => *id,
+            Event::Finished(r) => r.id,
+        }
+    }
+
+    /// True for `Finished` / `Rejected` — the stream ends here.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::Finished(_) | Event::Rejected { .. })
+    }
+}
+
+enum Ctl {
+    Submit(Box<Request>, mpsc::Sender<Event>),
+    Cancel(u64),
+    Shutdown,
+}
+
+/// Handle to one submitted request: a live [`Event`] stream plus a
+/// cancellation edge. The stream always ends with exactly one terminal
+/// event (unless the server died mid-request, in which case it just
+/// closes).
+pub struct RequestHandle {
+    id: u64,
+    ctl: mpsc::Sender<Ctl>,
+    events: mpsc::Receiver<Event>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Next event, blocking. `None` once the stream is closed.
+    pub fn recv(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Next event if one is ready (non-blocking).
+    pub fn try_recv(&self) -> Option<Event> {
+        self.events.try_recv().ok()
+    }
+
+    /// Blocking iterator over the remaining events; ends after the
+    /// terminal event.
+    pub fn events(&self) -> impl Iterator<Item = Event> + '_ {
+        self.events.iter()
+    }
+
+    /// Ask the engine to cancel this request, queued or mid-flight.
+    /// The stream still terminates with [`Event::Finished`] (reason
+    /// `Cancelled`, tokens streamed so far included) — unless the
+    /// request already finished, in which case the cancel is a no-op.
+    pub fn cancel(&self) {
+        let _ = self.ctl.send(Ctl::Cancel(self.id));
+    }
+
+    /// Drain the stream to its terminal event.
+    pub fn wait(self) -> Result<Response, SubmitError> {
+        loop {
+            match self.events.recv() {
+                Ok(Event::Finished(r)) => return Ok(r),
+                Ok(Event::Rejected { error, .. }) => return Err(error),
+                Ok(_) => {}
+                Err(_) => return Err(SubmitError::Closed),
+            }
+        }
+    }
+}
+
+/// The streaming session server: owns the engine thread.
+pub struct Server {
+    ctl: mpsc::Sender<Ctl>,
+    worker: Option<thread::JoinHandle<Metrics>>,
+}
+
+impl Server {
+    /// Move `backend` into an [`Engine`] on a dedicated worker thread
+    /// and start serving.
+    pub fn spawn<B>(backend: B, cfg: EngineConfig) -> Server
+    where
+        B: Backend + Send + 'static,
+        B::Kv: Send,
+    {
+        let (ctl, ctl_rx) = mpsc::channel();
+        let worker = thread::Builder::new()
+            .name("gptqt-engine".into())
+            .spawn(move || serve_loop(Engine::new(backend, cfg), ctl_rx))
+            .expect("spawn engine thread");
+        Server { ctl, worker: Some(worker) }
+    }
+
+    /// Submit a request; its lifecycle streams through the returned
+    /// handle. Validation happens on the engine thread — a request the
+    /// engine cannot serve yields [`Event::Rejected`] as the stream's
+    /// only event.
+    pub fn submit(&self, req: Request) -> RequestHandle {
+        let (tx, rx) = mpsc::channel();
+        let id = req.id;
+        if self.ctl.send(Ctl::Submit(Box::new(req), tx.clone())).is_err() {
+            // engine thread is gone: reject locally so the handle still
+            // sees a terminal event
+            let _ = tx.send(Event::Rejected { id, error: SubmitError::Closed });
+        }
+        RequestHandle { id, ctl: self.ctl.clone(), events: rx }
+    }
+
+    /// Stop accepting new requests, drain everything in flight, join
+    /// the engine thread, and return its final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        self.worker
+            .take()
+            .expect("server already shut down")
+            .join()
+            .expect("engine thread panicked")
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(worker) = self.worker.take() {
+            let _ = self.ctl.send(Ctl::Shutdown);
+            let _ = worker.join();
+        }
+    }
+}
+
+/// The engine thread: multiplex control messages with scheduling ticks
+/// and route every event to its request's channel.
+fn serve_loop<B: Backend>(mut engine: Engine<B>, ctl: mpsc::Receiver<Ctl>) -> Metrics {
+    let mut sinks: HashMap<u64, mpsc::Sender<Event>> = HashMap::new();
+    let mut draining = false;
+    'serve: loop {
+        // ---- control: non-blocking while busy, parked when idle --------
+        loop {
+            let msg = if engine.has_work() {
+                match ctl.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        draining = true;
+                        None
+                    }
+                }
+            } else if draining {
+                break 'serve;
+            } else {
+                match ctl.recv() {
+                    Ok(m) => Some(m),
+                    // every Server clone and handle is gone, nothing runs
+                    Err(_) => break 'serve,
+                }
+            };
+            let Some(msg) = msg else { break };
+            match msg {
+                Ctl::Submit(req, tx) => {
+                    let id = req.id;
+                    if draining {
+                        let _ = tx.send(Event::Rejected { id, error: SubmitError::Closed });
+                    } else {
+                        match engine.submit(*req) {
+                            Ok(()) => {
+                                sinks.insert(id, tx);
+                            }
+                            Err(error) => {
+                                let _ = tx.send(Event::Rejected { id, error });
+                            }
+                        }
+                    }
+                }
+                Ctl::Cancel(id) => {
+                    engine.cancel(id);
+                }
+                Ctl::Shutdown => draining = true,
+            }
+        }
+        if !engine.has_work() {
+            continue;
+        }
+
+        // ---- one scheduling tick ---------------------------------------
+        match engine.step() {
+            Ok(events) => {
+                for ev in events {
+                    let id = ev.id();
+                    let terminal = ev.is_terminal();
+                    let receiver_gone = match sinks.get(&id) {
+                        Some(tx) => tx.send(ev).is_err(),
+                        None => false,
+                    };
+                    if terminal {
+                        sinks.remove(&id);
+                    } else if receiver_gone {
+                        // handle dropped: free the KV blocks and stop
+                        // spending ticks on a stream nobody reads
+                        sinks.remove(&id);
+                        engine.cancel(id);
+                    }
+                }
+            }
+            Err(e) => {
+                // backend failure is fatal for the whole engine; closing
+                // the sinks ends every stream without a terminal event
+                eprintln!("gptqt-engine: fatal backend error: {e:#}");
+                break 'serve;
+            }
+        }
+    }
+    engine.into_metrics()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+    use crate::coordinator::CpuBackend;
+    use crate::model::init::random_weights;
+    use crate::model::{presets, BackendModel, Model};
+
+    fn backend(seed: u64) -> CpuBackend {
+        let mut cfg = presets::by_name("opt-nano").unwrap();
+        cfg.vocab = 64;
+        cfg.max_seq = 48;
+        let model = Model::new(cfg.clone(), random_weights(&cfg, seed));
+        CpuBackend(BackendModel::dense(&model))
+    }
+
+    fn cfg(max_batch: usize) -> EngineConfig {
+        EngineConfig {
+            max_batch,
+            total_blocks: 64,
+            block_size: 8,
+            // random-weight models can argmax the EOS id; disable EOS so
+            // generation lengths are deterministic in these tests
+            eos_token: u32::MAX,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serves_and_streams_tokens() {
+        let server = Server::spawn(backend(1), cfg(2));
+        let h = server.submit(Request::new(1, vec![5, 9, 13], 6));
+        let mut streamed = Vec::new();
+        let mut saw_started = false;
+        let resp = loop {
+            match h.recv().expect("stream must end with a terminal event") {
+                Event::Started { id, .. } => {
+                    assert_eq!(id, 1);
+                    saw_started = true;
+                }
+                Event::Token { id, token, .. } => {
+                    assert_eq!(id, 1);
+                    streamed.push(token);
+                }
+                Event::Finished(r) => break r,
+                Event::Rejected { error, .. } => panic!("rejected: {error:?}"),
+            }
+        };
+        assert!(saw_started, "admission must be visible");
+        assert_eq!(resp.tokens, streamed, "stream and response must agree");
+        assert!(h.recv().is_none(), "stream closed after terminal event");
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn rejects_unservable_requests_via_event() {
+        let server = Server::spawn(backend(2), cfg(2));
+        // capacity is 48; this wants 100
+        let h = server.submit(Request::new(1, vec![3; 50], 50));
+        match h.wait() {
+            Err(SubmitError::Full) => {}
+            other => panic!("expected Rejected(Full), got {other:?}"),
+        }
+        // empty prompt is unservable too
+        let h = server.submit(Request::new(2, vec![], 4));
+        assert!(h.wait().is_err());
+        let m = server.shutdown();
+        assert_eq!(m.rejected, 2);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let server = Server::spawn(backend(3), cfg(2));
+        let ctl = server.ctl.clone();
+        let m = server.shutdown();
+        assert_eq!(m.completed, 0);
+        // a handle built against the dead thread still terminates
+        let (tx, rx) = mpsc::channel();
+        if ctl.send(Ctl::Submit(Box::new(Request::new(9, vec![3], 2)), tx.clone())).is_err() {
+            let _ = tx.send(Event::Rejected { id: 9, error: SubmitError::Closed });
+        }
+        drop(tx);
+        match rx.recv() {
+            Ok(Event::Rejected { error: SubmitError::Closed, .. }) | Err(_) => {}
+            other => panic!("expected closed-channel rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_queued_request_streams_cancelled() {
+        // max_batch 1: request 0 occupies the engine long enough that
+        // the FIFO control channel guarantees request 1 is still queued
+        // when its cancel lands
+        let server = Server::spawn(backend(4), cfg(1));
+        let long = server.submit(Request::new(0, vec![4; 6], 40));
+        let doomed = server.submit(Request::new(1, vec![4; 6], 4));
+        doomed.cancel();
+        let r = doomed.wait().expect("cancelled stream still terminates");
+        assert_eq!(r.finish, FinishReason::Cancelled);
+        assert!(r.tokens.is_empty());
+        let r = long.wait().unwrap();
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 40);
+        let m = server.shutdown();
+        assert_eq!(m.cancelled_total, 1);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn dropped_handle_auto_cancels() {
+        let server = Server::spawn(backend(5), cfg(2));
+        let h = server.submit(Request::new(0, vec![4; 6], 40));
+        // read one token so the request is known to be mid-flight
+        while !matches!(h.recv().expect("stream alive"), Event::Token { .. }) {}
+        drop(h);
+        let m = server.shutdown();
+        assert_eq!(
+            m.cancelled_total + m.completed,
+            1,
+            "dropped handle must cancel (or the request raced to completion)"
+        );
+    }
+}

@@ -3,7 +3,10 @@
 use super::ppl::{calib_for, eval_for, eval_ppl, eval_ppl_backend, EvalConfig};
 use super::tables::{self, ExpConfig};
 use crate::cli::Args;
-use crate::coordinator::{Engine, EngineBackend, EngineConfig, Request, SamplingParams};
+use crate::coordinator::{
+    Backend, CpuBackend, EngineConfig, PjrtBackend, Request, SamplingParams,
+    SchedulePolicyKind, Server,
+};
 use crate::data::{CorpusGenerator, Dataset};
 use crate::model::quantize::quantize_model;
 use crate::model::{load_or_init, presets, BackendModel};
@@ -106,7 +109,13 @@ pub fn ppl(a: &Args) -> Result<()> {
 }
 
 /// `gptqt serve --model <name> --quant <fp32|gptq2|gptqt3|gptqt2>
-///              [--backend cpu|pjrt] --requests <n> ...`
+///              [--backend cpu|pjrt] [--policy fixed|adaptive]
+///              --requests <n> ...`
+///
+/// Serves through the streaming [`Server`] session API: requests are
+/// submitted up front, every token is consumed from the per-request
+/// event streams as it is produced, and the engine-thread metrics are
+/// reported at shutdown.
 pub fn serve(a: &Args) -> Result<()> {
     let name = a.get_or("model", "opt-mini");
     let quant = a.get_or("quant", "gptqt3");
@@ -144,9 +153,9 @@ pub fn serve(a: &Args) -> Result<()> {
             // CPU backend consumes packed/int layers for the real hot path
             if backend_kind == "cpu" {
                 let bm = BackendModel::quantized(&model, qm.layers);
-                return serve_with_engine(
+                return serve_with_backend(
                     a,
-                    EngineBackend::Cpu(bm),
+                    CpuBackend(bm),
                     &model.cfg,
                     n_requests,
                     prompt_len,
@@ -162,9 +171,9 @@ pub fn serve(a: &Args) -> Result<()> {
     match backend_kind {
         "cpu" => {
             let bm = BackendModel::dense(&served);
-            serve_with_engine(
+            serve_with_backend(
                 a,
-                EngineBackend::Cpu(bm),
+                CpuBackend(bm),
                 &served.cfg,
                 n_requests,
                 prompt_len,
@@ -180,9 +189,9 @@ pub fn serve(a: &Args) -> Result<()> {
             let rt = crate::runtime::Runtime::cpu()?;
             eprintln!("PJRT platform: {}", rt.platform());
             let compiled = rt.load_model(artifacts, &served)?;
-            serve_with_engine(
+            serve_with_backend(
                 a,
-                EngineBackend::Pjrt(compiled),
+                PjrtBackend(compiled),
                 &served.cfg,
                 n_requests,
                 prompt_len,
@@ -196,25 +205,32 @@ pub fn serve(a: &Args) -> Result<()> {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn serve_with_engine(
+fn serve_with_backend<B>(
     a: &Args,
-    backend: EngineBackend,
+    backend: B,
     cfg: &crate::model::ModelConfig,
     n_requests: usize,
     prompt_len: usize,
     gen_len: usize,
     max_batch: usize,
     label: &str,
-) -> Result<()> {
+) -> Result<()>
+where
+    B: Backend + Send + 'static,
+    B::Kv: Send,
+{
     let seed = a.get_u64("seed", 0);
+    let policy = SchedulePolicyKind::parse(a.get_or("policy", "fixed"))
+        .context("bad --policy (fixed|adaptive)")?;
     let (gen, vocab) = CorpusGenerator::with_vocab(Dataset::WikiSyn, cfg.vocab, seed);
     let stream = gen.generate(n_requests * prompt_len * 4 + 64, 9);
-    let mut engine = Engine::new(
+    let server = Server::spawn(
         backend,
-        EngineConfig { max_batch, ..Default::default() },
+        EngineConfig { max_batch, policy, ..Default::default() },
     );
-    eprintln!("serving {n_requests} requests on {} [{label}]", cfg.name);
+    eprintln!("serving {n_requests} requests on {} [{label}, {policy:?} scheduling]", cfg.name);
     let mut rng = crate::util::Rng::new(seed);
+    let mut handles = Vec::new();
     for id in 0..n_requests as u64 {
         let start = rng.range(0, stream.len() - prompt_len);
         let prompt = stream[start..start + prompt_len].to_vec();
@@ -223,20 +239,21 @@ fn serve_with_engine(
         } else {
             SamplingParams::TopK { k: 16, temperature: 0.9, seed: seed ^ id }
         };
-        engine
-            .submit(Request::new(id, prompt, gen_len).with_sampling(sampling))
-            .map_err(|e| anyhow::anyhow!("submit {id}: {e:?}"))?;
+        handles.push(server.submit(Request::new(id, prompt, gen_len).with_sampling(sampling)));
     }
-    let responses = engine.run_to_completion()?;
-    engine
-        .check_invariants()
-        .map_err(|e| anyhow::anyhow!("KV invariant violated: {e}"))?;
+    let mut responses = Vec::new();
+    for h in handles {
+        let id = h.id();
+        responses.push(h.wait().map_err(|e| anyhow::anyhow!("request {id}: {e:?}"))?);
+    }
+    let metrics = server.shutdown();
     println!("--- engine metrics [{label}] ---");
-    println!("{}", engine.metrics.report());
+    println!("{}", metrics.report());
     if let Some(r) = responses.first() {
         println!(
-            "sample continuation (req {}): {}",
+            "sample continuation (req {}, ttft {:.1} ms): {}",
             r.id,
+            r.ttft_secs * 1e3,
             vocab.detokenize(&r.tokens)
         );
     }

@@ -23,6 +23,7 @@
 //! synthesized directly (RTN codes / random sign patterns) — this keeps
 //! the big timing-only ladder entries (opt-lg/xl) cheap to set up.
 
+use crate::coordinator::{CpuBackend, EngineConfig, Event, Request, SchedulePolicyKind, Server};
 use crate::model::{BackendModel, KvCache, Model, ModelConfig};
 use crate::quant::fuse::FusedRow;
 use crate::quant::linear::{rtn_quantize, IntLayer};
@@ -30,6 +31,7 @@ use crate::quant::pack::PackedBcLayer;
 use crate::quant::QuantizedLayer;
 use crate::util::{Rng, Stopwatch};
 use std::collections::HashMap;
+use std::time::Instant;
 
 /// Which weight format to time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -290,6 +292,105 @@ pub fn measure_prefill(
     }
 }
 
+/// Timing result for the streaming-server protocol: client-observed
+/// latency through the full session stack (queue → engine thread →
+/// per-request event channels), not just raw kernel time.
+#[derive(Debug, Clone)]
+pub struct StreamSpeedResult {
+    pub model: String,
+    pub variant: SpeedVariant,
+    pub requests: usize,
+    /// Total tokens streamed across all requests.
+    pub tokens: usize,
+    /// Streamed tokens per wall-clock second (submit → last terminal).
+    pub tokens_per_sec: f64,
+    /// Mean time-to-first-token across requests, ms (from submit).
+    pub ttft_ms: f64,
+    /// Mean gap between consecutive streamed tokens of a request, ms —
+    /// the §III-E quantity as a client actually observes it.
+    pub inter_token_ms: f64,
+    /// Cancellations recorded by the engine (should be 0 here; surfaced
+    /// from the metrics summary as a sanity check).
+    pub cancelled: u64,
+}
+
+/// Measure end-to-end streaming latency: spawn a [`Server`] over `bm`,
+/// submit `requests` greedy requests of `prompt_len` random prompt
+/// tokens each, and consume every [`Event::Token`] as it arrives.
+/// TTFT and inter-token gaps are computed from the tokens' `t_emit`
+/// stamps, so buffering in the consumer loop does not distort them.
+/// EOS is disabled so each request streams exactly `gen_tokens`.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_streaming(
+    cfg: &ModelConfig,
+    bm: BackendModel,
+    variant: SpeedVariant,
+    requests: usize,
+    prompt_len: usize,
+    gen_tokens: usize,
+    policy: SchedulePolicyKind,
+    seed: u64,
+) -> StreamSpeedResult {
+    assert!(requests >= 1 && prompt_len >= 1 && gen_tokens >= 1);
+    assert!(prompt_len + gen_tokens <= cfg.max_seq, "exceeds KV capacity");
+    let mut rng = Rng::new(seed);
+    let server = Server::spawn(
+        CpuBackend(bm),
+        EngineConfig {
+            max_batch: requests,
+            policy,
+            eos_token: u32::MAX, // deterministic token counts
+            ..Default::default()
+        },
+    );
+    let t_submit = Instant::now();
+    let handles: Vec<_> = (0..requests as u64)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..prompt_len)
+                .map(|_| 3 + rng.below((cfg.vocab - 3) as u64) as u32)
+                .collect();
+            server.submit(Request::new(id, prompt, gen_tokens))
+        })
+        .collect();
+    let mut tokens = 0usize;
+    let mut ttft_sum = 0.0f64;
+    let mut gap_sum = 0.0f64;
+    let mut gaps = 0usize;
+    let mut t_done = t_submit;
+    for h in handles {
+        let mut last: Option<Instant> = None;
+        for ev in h.events() {
+            match ev {
+                Event::Token { t_emit, .. } => {
+                    tokens += 1;
+                    match last {
+                        None => ttft_sum += t_emit.duration_since(t_submit).as_secs_f64(),
+                        Some(prev) => {
+                            gap_sum += t_emit.duration_since(prev).as_secs_f64();
+                            gaps += 1;
+                        }
+                    }
+                    last = Some(t_emit);
+                    t_done = t_done.max(t_emit);
+                }
+                Event::Finished(_) | Event::Rejected { .. } | Event::Started { .. } => {}
+            }
+        }
+    }
+    let secs = t_done.duration_since(t_submit).as_secs_f64();
+    let metrics = server.shutdown();
+    StreamSpeedResult {
+        model: cfg.name.to_string(),
+        variant,
+        requests,
+        tokens,
+        tokens_per_sec: tokens as f64 / secs.max(1e-12),
+        ttft_ms: ttft_sum / requests as f64 * 1e3,
+        inter_token_ms: if gaps == 0 { 0.0 } else { gap_sum / gaps as f64 * 1e3 },
+        cancelled: metrics.cancelled_total,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +453,20 @@ mod tests {
             assert_eq!(r.prompt_len, 12);
             assert_eq!(r.chunk, chunk);
             assert!(r.tokens_per_sec > 0.0 && r.ttft_ms >= 0.0, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn streaming_measurement_counts_every_token() {
+        let m = tiny_model();
+        for policy in [SchedulePolicyKind::Fixed, SchedulePolicyKind::Adaptive] {
+            let bm = build_variant(&m, SpeedVariant::Full, 1);
+            let r = measure_streaming(&m.cfg, bm, SpeedVariant::Full, 3, 4, 5, policy, 2);
+            assert_eq!(r.requests, 3);
+            assert_eq!(r.tokens, 3 * 5, "{policy:?}: EOS disabled, counts are exact");
+            assert!(r.tokens_per_sec > 0.0 && r.ttft_ms > 0.0);
+            assert!(r.inter_token_ms >= 0.0);
+            assert_eq!(r.cancelled, 0);
         }
     }
 

@@ -20,10 +20,27 @@
 //!   to HLO *text* artifacts.
 //! * **L3 — this crate**: the runtime system. Quantization library
 //!   ([`quant`]), CPU hot-path kernels ([`kernels`]), PJRT runtime
-//!   ([`runtime`], behind the `pjrt` feature), serving coordinator
-//!   ([`coordinator`]), synthetic data ([`data`]), model/weight substrate
-//!   ([`model`]), evaluation and experiment drivers ([`eval`]), and a
-//!   micro-bench harness ([`bench`]).
+//!   ([`runtime`], behind the `pjrt` feature), streaming serving
+//!   coordinator ([`coordinator`]), synthetic data ([`data`]),
+//!   model/weight substrate ([`model`]), evaluation and experiment
+//!   drivers ([`eval`]), and a micro-bench harness ([`bench`]).
+//!
+//! ## Serving surface: `Server` / `Backend` / `SchedulePolicy`
+//!
+//! The public serving API is the streaming session front-end
+//! [`coordinator::Server`]: it owns the engine on a dedicated thread,
+//! [`coordinator::Server::submit`] returns a channel-backed
+//! [`coordinator::RequestHandle`] that yields every generated token as
+//! an event the moment it is sampled, and handles support mid-flight
+//! cancellation (paged-KV blocks return to the pool immediately) and
+//! per-request deadlines. The engine itself is generic over the
+//! [`coordinator::Backend`] trait — [`coordinator::CpuBackend`] for
+//! the rust kernels below, [`coordinator::PjrtBackend`] for the XLA
+//! executables — and its per-tick prefill-chunk decision is a
+//! [`coordinator::SchedulePolicy`] object (fixed, or adaptive to
+//! decode occupancy to bound inter-token latency). Streamed tokens are
+//! bit-identical to offline `run_to_completion` serving under every
+//! backend and policy; `tests/engine_server.rs` pins it.
 //!
 //! ## Serving hot path: one chunk-major forward core
 //!
@@ -41,8 +58,9 @@
 //! private chunk-major core in `model::decode` flattens **per-sequence
 //! token chunks** into the same gemm calls, so prefill processes T
 //! prompt tokens per weight stream, the coordinator's `Engine::step`
-//! advances prefilling *and* decoding sequences in one forward per
-//! tick, and full-sequence evaluation ([`model::Model::forward`],
+//! advances prefilling *and* decoding sequences in one
+//! `Backend::forward_tick` per tick (chunk length chosen by the
+//! schedule policy), and full-sequence evaluation ([`model::Model::forward`],
 //! `eval ppl` — including through the quantized backends) is the
 //! degenerate one-chunk case. [`model::BackendModel::decode_step`],
 //! [`model::BackendModel::decode_batch`],

@@ -64,6 +64,12 @@ impl CompiledModel {
         })
     }
 
+    /// Max tokens one sequence may occupy on the device (the
+    /// coordinator's `Backend::capacity`).
+    pub fn kv_capacity(&self) -> usize {
+        self.meta.kv_len
+    }
+
     /// Replace the device weights (e.g. after quantization) — same ABI.
     pub fn upload_weights(&mut self, model: &Model) -> Result<()> {
         let mut bufs = Vec::new();

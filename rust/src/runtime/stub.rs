@@ -5,8 +5,8 @@
 //!
 //! The real implementation in `compiled.rs` needs the `xla` bindings
 //! crate and a libxla_extension install. This stub keeps every caller —
-//! the engine's `EngineBackend::Pjrt` variant, the CLI `serve --backend
-//! pjrt` path, and the `hlo_parity` integration tests — type-checking
+//! the coordinator's `PjrtBackend`, the CLI `serve --backend pjrt`
+//! path, and the `hlo_parity` integration tests — type-checking
 //! without them. [`Runtime::cpu`] fails with an explanatory error, and
 //! since that is the only way to obtain a [`CompiledModel`], the other
 //! methods are unreachable at runtime.
@@ -62,6 +62,12 @@ pub struct CompiledModel {
 }
 
 impl CompiledModel {
+    /// Max tokens one sequence may occupy on the device (the
+    /// coordinator's `Backend::capacity`).
+    pub fn kv_capacity(&self) -> usize {
+        self.meta.kv_len
+    }
+
     pub fn new_kv(&self) -> Result<DeviceKv> {
         Err(unavailable())
     }

@@ -2,7 +2,7 @@
 //! needed): corpus → calibration → GPTQT quantization → packed backends
 //! → coordinator serving → perplexity ordering.
 
-use gptqt::coordinator::{Engine, EngineBackend, EngineConfig, Request};
+use gptqt::coordinator::{CpuBackend, Engine, EngineConfig, Request};
 use gptqt::data::{CorpusGenerator, Dataset};
 use gptqt::eval::ppl::{calib_for, eval_for, eval_ppl, EvalConfig};
 use gptqt::model::init::random_weights;
@@ -44,7 +44,7 @@ fn quantize_then_serve_through_lut_backend() {
     assert!(bm.streamed_bytes_per_token() * 4 < dense_bytes);
 
     let mut engine = Engine::new(
-        EngineBackend::Cpu(bm),
+        CpuBackend(bm),
         EngineConfig { max_batch: 3, ..Default::default() },
     );
     let gen = CorpusGenerator::new(Dataset::WikiSyn, 256, 0);

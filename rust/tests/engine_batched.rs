@@ -3,7 +3,7 @@
 //! sequential per-sequence loop (greedy sampling), and the engine must
 //! actually batch (metrics record occupancy > 1).
 
-use gptqt::coordinator::{Engine, EngineBackend, EngineConfig, Request, SamplingParams};
+use gptqt::coordinator::{CpuBackend, Engine, EngineConfig, Request, SamplingParams};
 use gptqt::model::init::random_weights;
 use gptqt::model::{presets, BackendModel, Model};
 use gptqt::quant::{Method, QuantConfig};
@@ -16,9 +16,9 @@ fn test_model(seed: u64) -> Model {
     Model::new(cfg.clone(), random_weights(&cfg, seed))
 }
 
-fn dense_engine(model: &Model, max_batch: usize) -> Engine {
+fn dense_engine(model: &Model, max_batch: usize) -> Engine<CpuBackend> {
     Engine::new(
-        EngineBackend::Cpu(BackendModel::dense(model)),
+        CpuBackend(BackendModel::dense(model)),
         EngineConfig { max_batch, total_blocks: 128, block_size: 8, ..Default::default() },
     )
 }
@@ -34,7 +34,7 @@ fn requests(n: u64, prompt_len: usize, gen: usize) -> Vec<Request> {
         .collect()
 }
 
-fn serve(engine: &mut Engine, reqs: Vec<Request>) -> HashMap<u64, Vec<u32>> {
+fn serve(engine: &mut Engine<CpuBackend>, reqs: Vec<Request>) -> HashMap<u64, Vec<u32>> {
     for req in reqs {
         engine.submit(req).unwrap();
     }
@@ -101,7 +101,7 @@ fn batched_engine_matches_sequential_through_lut_backend() {
     };
     let mk_engine = |bm: BackendModel, max_batch: usize| {
         Engine::new(
-            EngineBackend::Cpu(bm),
+            CpuBackend(bm),
             EngineConfig { max_batch, total_blocks: 128, block_size: 8, ..Default::default() },
         )
     };

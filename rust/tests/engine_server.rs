@@ -1,0 +1,278 @@
+//! Streaming session API integration: the `Server` front-end over the
+//! `Backend`-trait engine must stream per-token events whose
+//! concatenation is bitwise identical to the offline
+//! `run_to_completion` responses (dense and gptqt-lut backends),
+//! cancellation must return every paged-KV block to the pool,
+//! deadlines must finish with the right reason, and the adaptive
+//! schedule policy must respect its chunk bound without changing a
+//! single token.
+
+use gptqt::coordinator::{
+    CpuBackend, Engine, EngineConfig, Event, FinishReason, Request, SamplingParams,
+    SchedulePolicyKind, Server,
+};
+use gptqt::eval::speed::{build_variant, SpeedVariant};
+use gptqt::model::init::random_weights;
+use gptqt::model::{presets, BackendModel, Model};
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn test_model(seed: u64) -> Model {
+    let mut cfg = presets::by_name("opt-nano").unwrap();
+    cfg.vocab = 64;
+    cfg.max_seq = 48;
+    Model::new(cfg.clone(), random_weights(&cfg, seed))
+}
+
+fn cfg(max_batch: usize) -> EngineConfig {
+    EngineConfig { max_batch, total_blocks: 128, block_size: 8, ..Default::default() }
+}
+
+/// Mixed greedy / seeded top-k requests (the "same seeds" of the
+/// bitwise-parity requirement).
+fn requests(n: u64, prompt_len: usize, gen: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..prompt_len as u32)
+                .map(|i| 3 + (5 * id as u32 + 7 * i) % 60)
+                .collect();
+            let req = Request::new(id, prompt, gen);
+            if id % 2 == 0 {
+                req
+            } else {
+                req.with_sampling(SamplingParams::TopK { k: 8, temperature: 1.0, seed: 100 + id })
+            }
+        })
+        .collect()
+}
+
+/// Offline reference: drive the engine directly, collect terminal
+/// responses.
+fn engine_reference(
+    bm: BackendModel,
+    max_batch: usize,
+    reqs: Vec<Request>,
+) -> HashMap<u64, Vec<u32>> {
+    let mut engine = Engine::new(CpuBackend(bm), cfg(max_batch));
+    for r in reqs {
+        engine.submit(r).unwrap();
+    }
+    let out = engine.run_to_completion().unwrap();
+    engine.check_invariants().unwrap();
+    out.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// Streaming path: spawn a server, concatenate each request's Token
+/// events, and cross-check them against its own terminal response.
+fn server_streamed(
+    bm: BackendModel,
+    max_batch: usize,
+    reqs: Vec<Request>,
+) -> HashMap<u64, Vec<u32>> {
+    let server = Server::spawn(CpuBackend(bm), cfg(max_batch));
+    let handles: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    let mut out = HashMap::new();
+    for h in handles {
+        let id = h.id();
+        let mut streamed: Vec<u32> = Vec::new();
+        let mut terminal = None;
+        for ev in h.events() {
+            match ev {
+                Event::Started { id: eid, queue_secs } => {
+                    assert_eq!(eid, id);
+                    assert!(queue_secs >= 0.0);
+                }
+                Event::Token { id: eid, token, .. } => {
+                    assert_eq!(eid, id, "token routed to the wrong handle");
+                    streamed.push(token);
+                }
+                Event::Finished(r) => terminal = Some(r),
+                Event::Rejected { error, .. } => panic!("request {id} rejected: {error:?}"),
+            }
+        }
+        let r = terminal.expect("stream must end with a terminal event");
+        assert_eq!(
+            r.tokens, streamed,
+            "request {id}: terminal response disagrees with its own token stream"
+        );
+        out.insert(id, streamed);
+    }
+    let m = server.shutdown();
+    assert_eq!(m.cancelled_total, 0);
+    out
+}
+
+#[test]
+fn streamed_tokens_bitwise_match_offline_dense() {
+    let model = test_model(42);
+    let reference = engine_reference(BackendModel::dense(&model), 4, requests(6, 5, 7));
+    let streamed = server_streamed(BackendModel::dense(&model), 4, requests(6, 5, 7));
+    assert_eq!(streamed.len(), 6);
+    for id in 0..6u64 {
+        assert_eq!(
+            streamed[&id], reference[&id],
+            "request {id}: streamed tokens diverged from run_to_completion"
+        );
+    }
+}
+
+#[test]
+fn streamed_tokens_bitwise_match_offline_lut() {
+    // the real serving configuration: packed binary-coded weights
+    // through the batched LUT-GEMM path
+    let model = test_model(44);
+    let variant = SpeedVariant::GptqtLut { bits: 3 };
+    let bm = build_variant(&model, variant, 7);
+    assert_eq!(bm.backend_label(), "gptqt-lut");
+    let reference = engine_reference(bm, 3, requests(4, 4, 6));
+    let streamed = server_streamed(build_variant(&model, variant, 7), 3, requests(4, 4, 6));
+    for id in 0..4u64 {
+        assert_eq!(
+            streamed[&id], reference[&id],
+            "request {id}: streamed LUT serving diverged from run_to_completion"
+        );
+    }
+}
+
+#[test]
+fn cancel_mid_decode_returns_every_kv_block() {
+    let model = test_model(45);
+    let mut engine = Engine::new(
+        CpuBackend(BackendModel::dense(&model)),
+        EngineConfig { eos_token: u32::MAX, ..cfg(4) },
+    );
+    let total_free = engine.kv().free_blocks();
+    for r in requests(4, 6, 30) {
+        engine.submit(r).unwrap();
+    }
+    // well into decode for every sequence
+    for _ in 0..5 {
+        engine.step().unwrap();
+    }
+    assert!(engine.kv().used_blocks() > 0);
+    // cancel every running sequence mid-decode
+    for id in 0..4u64 {
+        assert!(engine.cancel(id), "request {id} should be running");
+        engine.check_invariants().unwrap();
+    }
+    assert_eq!(
+        engine.kv().free_blocks(),
+        total_free,
+        "cancel must return every paged-KV block to the pool"
+    );
+    // terminal events drain with reason Cancelled and partial tokens
+    let mut cancelled = 0;
+    while engine.has_work() {
+        for ev in engine.step().unwrap() {
+            if let Event::Finished(r) = ev {
+                assert_eq!(r.finish, FinishReason::Cancelled);
+                assert!(!r.tokens.is_empty(), "mid-decode cancel keeps streamed tokens");
+                cancelled += 1;
+            }
+        }
+    }
+    assert_eq!(cancelled, 4);
+    assert_eq!(engine.metrics.cancelled_total, 4);
+    engine.check_invariants().unwrap();
+}
+
+#[test]
+fn server_cancel_queued_request_is_terminal() {
+    // max_batch 1 pins request 1 in the queue while request 0 runs, so
+    // the FIFO control channel makes the cancel deterministic
+    let model = test_model(46);
+    let server = Server::spawn(
+        CpuBackend(BackendModel::dense(&model)),
+        EngineConfig { eos_token: u32::MAX, ..cfg(1) },
+    );
+    let long = server.submit(Request::new(0, vec![4; 6], 40));
+    let doomed = server.submit(Request::new(1, vec![4; 6], 4));
+    doomed.cancel();
+    let r = doomed.wait().expect("cancelled stream still terminates");
+    assert_eq!(r.finish, FinishReason::Cancelled);
+    assert!(r.tokens.is_empty());
+    assert_eq!(long.wait().unwrap().finish, FinishReason::Length);
+    let m = server.shutdown();
+    assert_eq!(m.cancelled_total, 1);
+    assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn deadline_expiry_finishes_with_deadline_reason() {
+    let model = test_model(47);
+    // server level: an already-expired deadline is deterministic
+    let server = Server::spawn(CpuBackend(BackendModel::dense(&model)), cfg(2));
+    let h = server.submit(Request::new(1, vec![4; 5], 8).with_deadline(Duration::ZERO));
+    let r = h.wait().expect("expired stream still terminates");
+    assert_eq!(r.finish, FinishReason::DeadlineExpired);
+    assert!(r.tokens.is_empty());
+    let m = server.shutdown();
+    assert_eq!(m.expired_total, 1);
+
+    // engine level: expiry mid-generation after real tokens streamed
+    let mut engine = Engine::new(
+        CpuBackend(BackendModel::dense(&model)),
+        EngineConfig { eos_token: u32::MAX, ..cfg(2) },
+    );
+    engine
+        .submit(Request::new(1, vec![4; 5], 40).with_deadline(Duration::from_millis(25)))
+        .unwrap();
+    engine.step().unwrap();
+    std::thread::sleep(Duration::from_millis(35));
+    let out = engine.run_to_completion().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].finish, FinishReason::DeadlineExpired);
+    assert!(out[0].tokens.len() < 40);
+    engine.check_invariants().unwrap();
+    assert_eq!(engine.metrics.expired_total, 1);
+}
+
+#[test]
+fn adaptive_chunk_respects_bound_and_keeps_tokens() {
+    let model = test_model(49);
+    let serve = |policy: SchedulePolicyKind| {
+        let mut engine = Engine::new(
+            CpuBackend(BackendModel::dense(&model)),
+            EngineConfig { prefill_chunk: 8, policy, ..cfg(4) },
+        );
+        for r in requests(6, 20, 6) {
+            engine.submit(r).unwrap();
+        }
+        let out = engine.run_to_completion().unwrap();
+        engine.check_invariants().unwrap();
+        assert!(
+            engine.metrics.max_tick_chunk >= 1 && engine.metrics.max_tick_chunk <= 8,
+            "{policy:?}: tick chunk {} escaped the configured bound 8",
+            engine.metrics.max_tick_chunk
+        );
+        out.into_iter().map(|r| (r.id, r.tokens)).collect::<HashMap<_, _>>()
+    };
+    let fixed = serve(SchedulePolicyKind::Fixed);
+    let adaptive = serve(SchedulePolicyKind::Adaptive);
+    assert_eq!(fixed, adaptive, "schedule policy must never change generated tokens");
+}
+
+#[test]
+fn queue_wait_is_visible_in_started_events_and_metrics() {
+    let model = test_model(50);
+    let mut engine = Engine::new(
+        CpuBackend(BackendModel::dense(&model)),
+        EngineConfig { eos_token: u32::MAX, ..cfg(1) },
+    );
+    engine.submit(Request::new(0, vec![4; 4], 30)).unwrap();
+    engine.step().unwrap(); // request 0 takes the only slot
+    engine.submit(Request::new(1, vec![4; 4], 2).with_priority(2)).unwrap();
+    engine.submit(Request::new(2, vec![4; 4], 2).with_priority(0)).unwrap();
+    engine.submit(Request::new(3, vec![4; 4], 2).with_priority(1)).unwrap();
+    let mut started = Vec::new();
+    while engine.has_work() {
+        for ev in engine.step().unwrap() {
+            if let Event::Started { id, queue_secs } = ev {
+                assert!(queue_secs >= 0.0);
+                started.push(id);
+            }
+        }
+    }
+    assert_eq!(started, vec![2, 3, 1], "admission must follow priority, then FIFO");
+    assert!(engine.metrics.queue_time.count() >= 4, "queue waits recorded");
+}

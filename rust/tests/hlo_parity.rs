@@ -102,12 +102,12 @@ fn pjrt_engine_serves_requests() {
         eprintln!("SKIP: no artifacts (run `make artifacts`)");
         return;
     }
-    use gptqt::coordinator::{Engine, EngineBackend, EngineConfig, Request};
+    use gptqt::coordinator::{Engine, EngineConfig, PjrtBackend, Request};
     let (model, _) = load_or_init("opt-nano", &dir, 0).unwrap();
     let Some(rt) = runtime_or_skip() else { return };
     let compiled = rt.load_model(&dir, &model).unwrap();
     let mut engine = Engine::new(
-        EngineBackend::Pjrt(compiled),
+        PjrtBackend(compiled),
         EngineConfig { max_batch: 2, ..Default::default() },
     );
     for id in 0..3u64 {
