@@ -10,8 +10,10 @@
 //! that the bench-smoke CI job uploads as the perf-trajectory artifact.
 
 use gptqt::bench::{write_bench_json, BenchRecord, Suite};
+use gptqt::kernels::attn::{av_accumulate, av_accumulate_scalar, qk_dots, qk_dots_scalar};
 use gptqt::kernels::gemv_lut::gemm_lut_scalar;
 use gptqt::kernels::{gemv_f32, simd, Gemv};
+use gptqt::model::forward::softmax;
 use gptqt::quant::linear::{rtn_quantize, IntLayer};
 use gptqt::quant::pack::PackedBcLayer;
 use gptqt::tensor::Tensor;
@@ -138,6 +140,61 @@ fn main() {
             "  {} vs scalar at {rows}x{cols}x{planes} B={batch}: {ratio:.2}x",
             simd::tier().label()
         );
+    }
+
+    // ---- attention kernels: one decode row's (row, head) items over
+    // head-major strips — qk_dots + softmax + av_accumulate per head,
+    // dispatched vs pinned-scalar tier, context sweep. The bench-trend
+    // job tracks these records for attention regressions; the ratio is
+    // the acceptance line (dispatched must win from ctx ≥ 512).
+    let (heads, dh) = (8usize, 64usize);
+    let d_model = heads * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    for &ctx in &[128usize, 512, 2048] {
+        let mut suite = Suite::new(&format!(
+            "attention row ctx={ctx} heads={heads} dh={dh}: {} vs scalar tier",
+            simd::tier().label()
+        ));
+        let q: Vec<f32> = (0..d_model).map(|_| rng.normal_f32()).collect();
+        let kstrips: Vec<Vec<f32>> = (0..heads)
+            .map(|_| (0..ctx * dh).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let vstrips: Vec<Vec<f32>> = (0..heads)
+            .map(|_| (0..ctx * dh).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut scores = vec![0.0f32; ctx];
+        let mut out = vec![0.0f32; d_model];
+        let (aw, ai) = if smoke { (1, 4) } else { (3, 20) };
+        let disp_name = format!("attn row ctx={ctx} h={heads} dh={dh} {}", simd::tier().label());
+        let r = suite.run(&disp_name, aw, ai, || {
+            out.fill(0.0);
+            for h in 0..heads {
+                let qh = &q[h * dh..(h + 1) * dh];
+                qk_dots(qh, &kstrips[h], scale, 0.0, ctx - 1, &mut scores);
+                softmax(&mut scores);
+                av_accumulate(&scores, &vstrips[h], &mut out[h * dh..(h + 1) * dh]);
+            }
+            std::hint::black_box(&out);
+        });
+        records.push(r.to_record(ctx as f64));
+        let scalar_name = format!("attn row ctx={ctx} h={heads} dh={dh} scalar");
+        let r = suite.run(&scalar_name, aw, ai, || {
+            out.fill(0.0);
+            for h in 0..heads {
+                let qh = &q[h * dh..(h + 1) * dh];
+                qk_dots_scalar(qh, &kstrips[h], scale, 0.0, ctx - 1, &mut scores);
+                softmax(&mut scores);
+                av_accumulate_scalar(&scores, &vstrips[h], &mut out[h * dh..(h + 1) * dh]);
+            }
+            std::hint::black_box(&out);
+        });
+        records.push(r.to_record(ctx as f64));
+        if let Some(ratio) = suite.ratio(&scalar_name, &disp_name) {
+            println!(
+                "  attention {} vs scalar at ctx={ctx}: {ratio:.2}x",
+                simd::tier().label()
+            );
+        }
     }
 
     write_bench_json("BENCH_kernels.json", &records).expect("write BENCH_kernels.json");

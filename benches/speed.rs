@@ -6,8 +6,10 @@
 //!
 //! The prefill sweep at the end compares the chunk-major multi-token
 //! prefill against the legacy per-token loop over prompt ∈ {64, 256,
-//! 1024} × batch ∈ {1, 8}, reporting prefill tokens/sec and TTFT — the
-//! trajectory line for the chunking win and the SIMD inner loops.
+//! 1024, 2048} × batch ∈ {1, 8}, reporting prefill tokens/sec and TTFT
+//! — the trajectory line for the chunking win, the SIMD inner loops,
+//! and (at the 1024+ points) the vectorized head-major attention
+//! subsystem.
 //!
 //! `--fast` shrinks the ladder; `--smoke` is the CI profile (opt-nano
 //! only, a handful of tokens, deterministic seeds) and is what the
@@ -149,13 +151,18 @@ fn main() {
     // ---- prefill: chunked multi-token forward vs per-token loop --------
     // Prompt lengths exceed the preset max_seq (256), so the sweep runs a
     // widened KV capacity with random weights (timing only).
+    // The long-context points (1024+) are where the vectorized
+    // head-major attention dominates the tick: the per-position QK/AV
+    // loops are the O(prompt²) term chunked prefill cannot amortize
+    // away, so this sweep is the trajectory line for the attention
+    // subsystem (smoke keeps a 1024 point for the bench-trend job).
     let (prefill_model, chunk) = if fast { ("opt-nano", 16) } else { ("opt-sm", 32) };
     let prompt_lens: &[usize] = if smoke {
-        &[32]
+        &[32, 1024]
     } else if fast {
-        &[64, 256]
-    } else {
         &[64, 256, 1024]
+    } else {
+        &[64, 256, 1024, 2048]
     };
     let prefill_batches: &[usize] = if smoke { &[1, 4] } else { &[1, 8] };
     let mut cfg = presets::by_name(prefill_model).expect("preset");

@@ -17,7 +17,7 @@ use super::request::{FinishReason, Request, Response};
 use super::sampler::Sampler;
 use super::server::Event;
 use super::EngineConfig;
-use crate::model::{BackendModel, KvCache};
+use crate::model::{BackendModel, ForwardScratch, KvCache};
 use crate::runtime::{CompiledModel, DeviceKv};
 use anyhow::Result;
 use std::sync::Arc;
@@ -30,6 +30,14 @@ use std::time::Instant;
 pub trait Backend {
     /// Per-sequence attention-cache type this backend owns.
     type Kv;
+
+    /// Reusable forward workspace, owned by the engine and threaded
+    /// through every [`Backend::forward_tick`] — the CPU path persists
+    /// its activation buffers here so steady-state ticks allocate
+    /// nothing ([`crate::model::ForwardScratch`]). Backends without
+    /// buffer reuse use `()`. Contents never carry information between
+    /// ticks: reuse is an allocation optimization, not state.
+    type Scratch: Default + Send;
 
     /// Max tokens (prompt + generated) one sequence may occupy.
     fn capacity(&self) -> usize;
@@ -49,6 +57,7 @@ pub trait Backend {
         chunks: &[&[u32]],
         caches: &mut [&mut Self::Kv],
         need: &[bool],
+        scratch: &mut Self::Scratch,
     ) -> Result<Vec<Option<Vec<f32>>>>;
 
     /// Whether `forward_tick` amortizes one weight stream across the
@@ -70,6 +79,7 @@ pub struct CpuBackend(pub BackendModel);
 
 impl Backend for CpuBackend {
     type Kv = KvCache;
+    type Scratch = ForwardScratch;
 
     fn capacity(&self) -> usize {
         self.0.cfg.max_seq
@@ -84,8 +94,9 @@ impl Backend for CpuBackend {
         chunks: &[&[u32]],
         caches: &mut [&mut KvCache],
         need: &[bool],
+        scratch: &mut ForwardScratch,
     ) -> Result<Vec<Option<Vec<f32>>>> {
-        Ok(self.0.forward_chunks_masked(chunks, caches, need))
+        Ok(self.0.forward_chunks_masked_with(chunks, caches, need, scratch))
     }
 
     fn label(&self) -> &'static str {
@@ -101,6 +112,8 @@ pub struct PjrtBackend(pub CompiledModel);
 
 impl Backend for PjrtBackend {
     type Kv = DeviceKv;
+    /// The per-token fallback keeps no host-side activation buffers.
+    type Scratch = ();
 
     fn capacity(&self) -> usize {
         self.0.kv_capacity()
@@ -115,6 +128,7 @@ impl Backend for PjrtBackend {
         chunks: &[&[u32]],
         caches: &mut [&mut DeviceKv],
         need: &[bool],
+        _scratch: &mut (),
     ) -> Result<Vec<Option<Vec<f32>>>> {
         let mut out = Vec::with_capacity(chunks.len());
         for ((chunk, cache), &wanted) in chunks.iter().zip(caches.iter_mut()).zip(need) {
@@ -168,6 +182,10 @@ pub struct Engine<B: Backend> {
     /// Events produced outside `step` (cancellations), drained by the
     /// next `step` so every event still flows through one stream.
     pending: Vec<Event>,
+    /// Persistent forward workspace threaded through every
+    /// [`Backend::forward_tick`] — steady-state ticks reuse its buffers
+    /// instead of reallocating activations per layer per row.
+    scratch: B::Scratch,
 }
 
 impl<B: Backend> Engine<B> {
@@ -199,6 +217,7 @@ impl<B: Backend> Engine<B> {
             kv,
             metrics: Metrics::new(),
             pending: Vec::new(),
+            scratch: B::Scratch::default(),
         }
     }
 
@@ -377,7 +396,8 @@ impl<B: Backend> Engine<B> {
             let chunk_refs: Vec<&[u32]> = chunks.iter().map(|c| c.as_slice()).collect();
             let mut caches: Vec<&mut B::Kv> =
                 self.running.iter_mut().map(|r| &mut r.cache).collect();
-            let all_logits = self.backend.forward_tick(&chunk_refs, &mut caches, &need)?;
+            let all_logits =
+                self.backend.forward_tick(&chunk_refs, &mut caches, &need, &mut self.scratch)?;
             drop(caches);
 
             // sample: sequences that just completed their prompt emit

@@ -194,9 +194,11 @@ pub fn measure_decode_batch(
             *last = tok;
         }
     }
+    // one workspace across the timed steps — the zero-alloc steady state
+    let mut scratch = crate::model::ForwardScratch::new();
     let sw = Stopwatch::start();
     for _ in 0..gen_steps {
-        let logits = bm.decode_batch(&lasts, &mut caches);
+        let logits = bm.decode_batch_with(&lasts, &mut caches, &mut scratch);
         for (last, l) in lasts.iter_mut().zip(&logits) {
             *last = crate::coordinator::sampler::argmax(l);
         }

@@ -1,0 +1,250 @@
+//! Head-major attention kernels — the serving hot loop downstream of
+//! the GEMMs.
+//!
+//! With the three weight formats on SIMD-dispatched, pool-threaded
+//! [`super::Gemv`] kernels, attention is the Amdahl term that caps
+//! long-context prefill and high-occupancy decode. These primitives fix
+//! that, fed by the **head-major** KV layout
+//! (`layers × heads × max_seq × head_dim`,
+//! [`crate::model::KvCache`]): a head's cache positions are one
+//! contiguous strip, so the inner loop over the KV prefix streams
+//! memory instead of striding `d_model` floats per position.
+//!
+//! Two primitives cover one (row, head) attention work item:
+//!
+//! * [`qk_dots`] — one query head against a contiguous K strip:
+//!   `scores[j] = (Σ_d q[d]·k[j·dh+d])·scale + slope·(j − pos)`
+//!   (the `slope` term is ALiBi; 0 elsewhere).
+//! * [`av_accumulate`] — softmax-weighted V strip accumulation:
+//!   `out[d] += Σ_j w[j]·v[j·dh+d]`, `j` ascending.
+//!
+//! Both carry the same **bitwise** scalar↔AVX2 contract as the GEMM
+//! kernels ([`super::simd`]): the per-position dot uses the pinned
+//! 8-accumulator lane mapping, mul-then-add (no FMA), and the pinned
+//! tree reduction, so runtime dispatch can never change a served token;
+//! `av_accumulate` keeps the per-element `j` order of the scalar loop
+//! (lanes are independent across `d`), which also makes it
+//! order-identical to the pre-head-major implementation. Each entry
+//! point has a `*_scalar` twin; `tests/attn_parity.rs` pins the twins
+//! `assert_eq!`-equal across ragged head dims and context lengths.
+//!
+//! The (row, head) fan-out across [`crate::util::pool`] lives with the
+//! forward core (`model::decode`), which owns the caches; work items
+//! are independent and internally sequential, so threaded and
+//! single-threaded attention are bitwise identical too.
+
+use super::simd::{self, SimdTier};
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Scores of one query head against a contiguous K strip at the
+/// detected tier. `kstrip` holds `scores.len()` rows of `q.len()`
+/// contiguous floats (positions `0..scores.len()` of one head);
+/// `scores[j] = dot(q, k_j)·scale + slope·(j − pos)` where `pos` is the
+/// query's absolute position (the ALiBi bias is `≤ 0` over the past).
+#[inline]
+pub fn qk_dots(q: &[f32], kstrip: &[f32], scale: f32, slope: f32, pos: usize, scores: &mut [f32]) {
+    qk_dots_t(q, kstrip, scale, slope, pos, scores, simd::tier())
+}
+
+/// [`qk_dots`] forced onto the scalar tier — the parity reference the
+/// AVX2 tier must match bitwise (`tests/attn_parity.rs`).
+pub fn qk_dots_scalar(
+    q: &[f32],
+    kstrip: &[f32],
+    scale: f32,
+    slope: f32,
+    pos: usize,
+    scores: &mut [f32],
+) {
+    let dh = q.len();
+    debug_assert_eq!(kstrip.len(), scores.len() * dh);
+    let posf = pos as f32;
+    for (j, s) in scores.iter_mut().enumerate() {
+        let krow = &kstrip[j * dh..(j + 1) * dh];
+        *s = simd::dot_scalar(q, krow) * scale + slope * (j as f32 - posf);
+    }
+}
+
+/// [`qk_dots`] pinned to an explicit tier. `t` must not exceed the
+/// detected tier (the public wrapper guarantees this; the forward core
+/// hoists one `tier()` call per layer).
+#[inline]
+pub(crate) fn qk_dots_t(
+    q: &[f32],
+    kstrip: &[f32],
+    scale: f32,
+    slope: f32,
+    pos: usize,
+    scores: &mut [f32],
+    t: SimdTier,
+) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: callers only pass Avx2 when tier() reported it.
+        SimdTier::Avx2 => unsafe { qk_dots_avx2(q, kstrip, scale, slope, pos, scores) },
+        _ => qk_dots_scalar(q, kstrip, scale, slope, pos, scores),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn qk_dots_avx2(
+    q: &[f32],
+    kstrip: &[f32],
+    scale: f32,
+    slope: f32,
+    pos: usize,
+    scores: &mut [f32],
+) {
+    let dh = q.len();
+    debug_assert_eq!(kstrip.len(), scores.len() * dh);
+    let posf = pos as f32;
+    for (j, s) in scores.iter_mut().enumerate() {
+        // same pinned lane mapping + tree reduction as the scalar twin
+        let krow = kstrip.get_unchecked(j * dh..(j + 1) * dh);
+        *s = simd::dot_avx2(q, krow) * scale + slope * (j as f32 - posf);
+    }
+}
+
+/// Softmax-weighted V accumulation at the detected tier:
+/// `out[d] += Σ_j weights[j]·vstrip[j·dh+d]` with `j` ascending.
+/// `vstrip` holds `weights.len()` rows of `out.len()` contiguous floats.
+/// Accumulates **onto** `out` (callers zero it once per row).
+#[inline]
+pub fn av_accumulate(weights: &[f32], vstrip: &[f32], out: &mut [f32]) {
+    av_accumulate_t(weights, vstrip, out, simd::tier())
+}
+
+/// [`av_accumulate`] forced onto the scalar tier (parity reference).
+pub fn av_accumulate_scalar(weights: &[f32], vstrip: &[f32], out: &mut [f32]) {
+    let dh = out.len();
+    debug_assert_eq!(vstrip.len(), weights.len() * dh);
+    for (j, &w) in weights.iter().enumerate() {
+        simd::axpy_scalar(out, w, &vstrip[j * dh..(j + 1) * dh]);
+    }
+}
+
+/// [`av_accumulate`] pinned to an explicit tier.
+#[inline]
+pub(crate) fn av_accumulate_t(weights: &[f32], vstrip: &[f32], out: &mut [f32], t: SimdTier) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: callers only pass Avx2 when tier() reported it.
+        SimdTier::Avx2 => unsafe { av_accumulate_avx2(weights, vstrip, out) },
+        _ => av_accumulate_scalar(weights, vstrip, out),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn av_accumulate_avx2(weights: &[f32], vstrip: &[f32], out: &mut [f32]) {
+    let dh = out.len();
+    debug_assert_eq!(vstrip.len(), weights.len() * dh);
+    let n = weights.len();
+    let chunks = dh / 8;
+    let op = out.as_mut_ptr();
+    let vp = vstrip.as_ptr();
+    for j in 0..n {
+        // identical per-element j order to the scalar twin: lanes span
+        // the independent d axis, each element sees mul-then-add per j
+        let w = _mm256_set1_ps(*weights.get_unchecked(j));
+        let row = vp.add(j * dh);
+        for i in 0..chunks {
+            let o = i * 8;
+            let prod = _mm256_mul_ps(w, _mm256_loadu_ps(row.add(o)));
+            _mm256_storeu_ps(op.add(o), _mm256_add_ps(_mm256_loadu_ps(op.add(o)), prod));
+        }
+        let wj = *weights.get_unchecked(j);
+        for d in chunks * 8..dh {
+            *op.add(d) += wj * *row.add(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn qk_dots_tiers_match_bitwise_on_ragged_shapes() {
+        let mut rng = Rng::new(61);
+        for dh in [1usize, 4, 7, 8, 16, 31, 64] {
+            for ctx in [1usize, 2, 7, 64, 129] {
+                let q: Vec<f32> = (0..dh).map(|_| rng.normal_f32()).collect();
+                let kstrip: Vec<f32> = (0..ctx * dh).map(|_| rng.normal_f32()).collect();
+                let scale = 1.0 / (dh as f32).sqrt();
+                for slope in [0.0f32, -0.125] {
+                    let mut s_s = vec![0.0f32; ctx];
+                    let mut s_d = vec![0.0f32; ctx];
+                    qk_dots_scalar(&q, &kstrip, scale, slope, ctx - 1, &mut s_s);
+                    qk_dots(&q, &kstrip, scale, slope, ctx - 1, &mut s_d);
+                    for (j, (a, b)) in s_s.iter().zip(&s_d).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "dh={dh} ctx={ctx} slope={slope} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qk_dots_matches_per_position_pinned_dot() {
+        // the kernel is definitionally a strip of pinned dots plus the
+        // scale/ALiBi epilogue — pin that decomposition bitwise
+        let mut rng = Rng::new(62);
+        let (dh, ctx, pos) = (24usize, 17usize, 16usize);
+        let q: Vec<f32> = (0..dh).map(|_| rng.normal_f32()).collect();
+        let kstrip: Vec<f32> = (0..ctx * dh).map(|_| rng.normal_f32()).collect();
+        let (scale, slope) = (0.25f32, -0.5f32);
+        let mut scores = vec![0.0f32; ctx];
+        qk_dots(&q, &kstrip, scale, slope, pos, &mut scores);
+        for j in 0..ctx {
+            let expect = simd::dot_scalar(&q, &kstrip[j * dh..(j + 1) * dh]) * scale
+                + slope * (j as f32 - pos as f32);
+            assert_eq!(scores[j].to_bits(), expect.to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn av_accumulate_tiers_match_bitwise_and_accumulate() {
+        let mut rng = Rng::new(63);
+        for dh in [1usize, 5, 8, 13, 32, 64] {
+            for ctx in [1usize, 3, 9, 65] {
+                let w: Vec<f32> = (0..ctx).map(|_| rng.normal_f32()).collect();
+                let vstrip: Vec<f32> = (0..ctx * dh).map(|_| rng.normal_f32()).collect();
+                let base: Vec<f32> = (0..dh).map(|_| rng.normal_f32()).collect();
+                let mut out_s = base.clone();
+                let mut out_d = base.clone();
+                av_accumulate_scalar(&w, &vstrip, &mut out_s);
+                av_accumulate(&w, &vstrip, &mut out_d);
+                for (d, (a, b)) in out_s.iter().zip(&out_d).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dh={dh} ctx={ctx} d={d}");
+                }
+                // definitional check: j-ascending axpy onto the base
+                let mut expect = base.clone();
+                for (j, &wj) in w.iter().enumerate() {
+                    for d in 0..dh {
+                        expect[d] += wj * vstrip[j * dh + d];
+                    }
+                }
+                assert_eq!(out_s, expect, "dh={dh} ctx={ctx}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_context_is_a_noop() {
+        let q = [1.0f32; 8];
+        let mut scores: [f32; 0] = [];
+        qk_dots(&q, &[], 1.0, 0.0, 0, &mut scores);
+        let mut out = [2.5f32; 8];
+        av_accumulate(&[], &[], &mut out);
+        assert!(out.iter().all(|&v| v == 2.5));
+    }
+}

@@ -6,6 +6,13 @@
 //! | dense f32             | [`gemv_f32`]    | [`gemm_f32`]       | scalar / AVX2  | bitwise            | `full` (fp16)  |
 //! | packed int + dequant  | [`gemv_dequant`]| [`gemm_dequant`]   | scalar / AVX2  | bitwise            | `GPTQ`         |
 //! | fused binary coding   | [`gemv_lut`]    | [`gemm_lut`]       | scalar / AVX2  | bitwise            | `GPTQT` (LUT-GEMM) |
+//! | attention (head-major KV) | [`attn::qk_dots`] | [`attn::av_accumulate`] | scalar / AVX2 | bitwise     | serving context (all rows) |
+//!
+//! The attention row is not a weight format: it is the per-(row, head)
+//! score/context pair the forward core runs between the QKV and output
+//! GEMMs, fed by the head-major `KvCache` strips and fanned across the
+//! pool per (row, head) work item above [`PAR_MIN_WORK`]
+//! (see [`attn`] and `model::decode`).
 //!
 //! All three implement [`Gemv`], so the decode loop and the speed
 //! benchmarks swap formats without touching the model code. In the
@@ -64,6 +71,7 @@
 //! [`gemm_lut`]: gemv_lut::gemm_lut
 //! [`gemm_lut_scalar`]: gemv_lut::gemm_lut_scalar
 
+pub mod attn;
 pub mod gemv_dequant;
 pub mod gemv_lut;
 pub mod simd;

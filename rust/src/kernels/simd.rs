@@ -142,7 +142,7 @@ unsafe fn hsum_pinned(v: __m256) -> f32 {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
-unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 8;
@@ -159,6 +159,168 @@ unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
         tail += a[i] * b[i];
     }
     hsum_pinned(acc) + tail
+}
+
+// ------------------------------------------------- elementwise helpers
+
+/// `x[i] += a[i]` at the detected tier — the residual-add of the
+/// forward core. Lanes are independent (one add per element, in index
+/// order, on every tier), so dispatch is bitwise-invisible by
+/// construction; `tests/attn_parity.rs` pins it anyway.
+#[inline]
+pub fn add_assign(x: &mut [f32], a: &[f32]) {
+    add_assign_t(x, a, tier())
+}
+
+/// [`add_assign`] forced onto the scalar tier (parity reference).
+#[inline]
+pub fn add_assign_scalar(x: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(x.len(), a.len());
+    for (xv, &av) in x.iter_mut().zip(a) {
+        *xv += av;
+    }
+}
+
+/// [`add_assign`] pinned to an explicit tier.
+#[inline]
+pub(crate) fn add_assign_t(x: &mut [f32], a: &[f32], t: SimdTier) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: callers only pass Avx2 when tier() reported it.
+        SimdTier::Avx2 => unsafe { add_assign_avx2(x, a) },
+        _ => add_assign_scalar(x, a),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_assign_avx2(x: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(x.len(), a.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_mut_ptr();
+    let ap = a.as_ptr();
+    for i in 0..chunks {
+        let o = i * 8;
+        let v = _mm256_add_ps(_mm256_loadu_ps(xp.add(o)), _mm256_loadu_ps(ap.add(o)));
+        _mm256_storeu_ps(xp.add(o), v);
+    }
+    for i in chunks * 8..n {
+        *xp.add(i) += *ap.add(i);
+    }
+}
+
+/// `acc[i] += s·v[i]` at the detected tier — the weighted-accumulate
+/// under [`crate::kernels::attn::av_accumulate`]. Mul-then-add per
+/// element (no FMA), lanes independent, so scalar and AVX2 are bitwise
+/// identical.
+#[inline]
+pub fn axpy(acc: &mut [f32], s: f32, v: &[f32]) {
+    axpy_t(acc, s, v, tier())
+}
+
+/// [`axpy`] forced onto the scalar tier (parity reference).
+#[inline]
+pub fn axpy_scalar(acc: &mut [f32], s: f32, v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    for (o, &vv) in acc.iter_mut().zip(v) {
+        *o += s * vv;
+    }
+}
+
+/// [`axpy`] pinned to an explicit tier.
+#[inline]
+pub(crate) fn axpy_t(acc: &mut [f32], s: f32, v: &[f32], t: SimdTier) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: callers only pass Avx2 when tier() reported it.
+        SimdTier::Avx2 => unsafe { axpy_avx2(acc, s, v) },
+        _ => axpy_scalar(acc, s, v),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: &mut [f32], s: f32, v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    let n = acc.len();
+    let chunks = n / 8;
+    let op = acc.as_mut_ptr();
+    let vp = v.as_ptr();
+    let sv = _mm256_set1_ps(s);
+    for i in 0..chunks {
+        let o = i * 8;
+        let prod = _mm256_mul_ps(sv, _mm256_loadu_ps(vp.add(o)));
+        _mm256_storeu_ps(op.add(o), _mm256_add_ps(_mm256_loadu_ps(op.add(o)), prod));
+    }
+    for i in chunks * 8..n {
+        *op.add(i) += s * *vp.add(i);
+    }
+}
+
+// ---------------------------------------------------------- activations
+
+/// tanh-approximated GELU (jax.nn.gelu's default) — the canonical
+/// scalar form every tier evaluates.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// SiLU (swish) — Llama's gate activation, canonical scalar form.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// `gate[i] = silu(gate[i])·up[i]` — the Llama FFN gate fused with its
+/// up-projection multiply. Both tiers share the scalar loop: the
+/// transcendental (`exp`) has no bitwise-stable AVX2 formulation — any
+/// vector polynomial rounds differently from libm, which would break
+/// the parity contract the served-token guarantee rests on. The
+/// dispatch surface exists so a relaxed-contract vector tier can slot
+/// in later without touching the model code.
+#[inline]
+pub fn silu_mul(gate: &mut [f32], up: &[f32]) {
+    silu_mul_t(gate, up, tier())
+}
+
+/// [`silu_mul`] forced onto the scalar tier (parity reference).
+#[inline]
+pub fn silu_mul_scalar(gate: &mut [f32], up: &[f32]) {
+    debug_assert_eq!(gate.len(), up.len());
+    for (g, &u) in gate.iter_mut().zip(up) {
+        *g = silu(*g) * u;
+    }
+}
+
+/// [`silu_mul`] pinned to an explicit tier (both evaluate identically;
+/// see [`silu_mul`] for why).
+#[inline]
+pub(crate) fn silu_mul_t(gate: &mut [f32], up: &[f32], _t: SimdTier) {
+    silu_mul_scalar(gate, up);
+}
+
+/// `x[i] = gelu(x[i])` in place — same tier story as [`silu_mul`]
+/// (`tanh` pins both tiers to the shared scalar loop).
+#[inline]
+pub fn gelu_map(x: &mut [f32]) {
+    gelu_map_t(x, tier())
+}
+
+/// [`gelu_map`] forced onto the scalar tier (parity reference).
+#[inline]
+pub fn gelu_map_scalar(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// [`gelu_map`] pinned to an explicit tier.
+#[inline]
+pub(crate) fn gelu_map_t(x: &mut [f32], _t: SimdTier) {
+    gelu_map_scalar(x);
 }
 
 // ----------------------------------------------------------- code dot
@@ -379,6 +541,53 @@ mod tests {
             for (v, &c) in a.iter().zip(&codes) {
                 assert_eq!(*v, c as f32);
             }
+        }
+    }
+
+    #[test]
+    fn add_assign_and_axpy_tiers_match_bitwise() {
+        let mut rng = Rng::new(45);
+        for n in [0usize, 1, 7, 8, 9, 33, 257] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let s = rng.normal_f32();
+            let mut x_s = base.clone();
+            let mut x_d = base.clone();
+            add_assign_scalar(&mut x_s, &a);
+            add_assign(&mut x_d, &a);
+            for (u, v) in x_s.iter().zip(&x_d) {
+                assert_eq!(u.to_bits(), v.to_bits(), "add_assign n={n}");
+            }
+            let mut y_s = base.clone();
+            let mut y_d = base.clone();
+            axpy_scalar(&mut y_s, s, &a);
+            axpy(&mut y_d, s, &a);
+            for (u, v) in y_s.iter().zip(&y_d) {
+                assert_eq!(u.to_bits(), v.to_bits(), "axpy n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn activation_helpers_match_scalar_twins_bitwise() {
+        let mut rng = Rng::new(46);
+        for n in [1usize, 9, 64, 131] {
+            let up: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let mut g_s = base.clone();
+            let mut g_d = base.clone();
+            silu_mul_scalar(&mut g_s, &up);
+            silu_mul(&mut g_d, &up);
+            assert_eq!(g_s, g_d, "silu_mul n={n}");
+            // and against the per-element definition
+            for (g, (&b, &u)) in g_s.iter().zip(base.iter().zip(&up)) {
+                assert_eq!(*g, silu(b) * u);
+            }
+            let mut x_s = base.clone();
+            let mut x_d = base.clone();
+            gelu_map_scalar(&mut x_s);
+            gelu_map(&mut x_d);
+            assert_eq!(x_s, x_d, "gelu_map n={n}");
         }
     }
 

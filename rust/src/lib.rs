@@ -71,14 +71,28 @@
 //! logits — `tests/kernel_parity.rs`, `tests/chunked_prefill.rs`, and
 //! `tests/engine_batched.rs` pin it.
 //!
-//! Below the gemm calls, every inner accumulation runs at a
-//! runtime-dispatched SIMD tier ([`kernels::simd`]): explicit AVX2
+//! Between the QKV and output gemms the core runs the **vectorized
+//! attention subsystem** ([`kernels::attn`]): the per-sequence KV
+//! caches are stored head-major (`layers × heads × max_seq × head_dim`,
+//! [`model::KvCache`]), so each (row, head) work item streams one
+//! contiguous K strip through `qk_dots` and one contiguous V strip
+//! through `av_accumulate`, and ticks with enough attention work fan
+//! the items across the same thread pool the gemms use. Activations
+//! live in a per-engine [`model::ForwardScratch`] workspace threaded
+//! through every `Backend::forward_tick`, and linear/norm handles are
+//! resolved to indexed slots at `BackendModel` construction — a
+//! steady-state decode tick does no per-row-per-layer heap allocation
+//! and never hashes a layer name.
+//!
+//! Below the gemm and attention calls, every inner accumulation runs at
+//! a runtime-dispatched SIMD tier ([`kernels::simd`]): explicit AVX2
 //! (detected once via `is_x86_feature_detected!`) with a portable
 //! scalar fallback. The AVX2 tier keeps the scalar tier's lane →
 //! accumulator mapping, mul-then-add rounding (no FMA), and pinned
 //! tree reduction, so **scalar and SIMD are bitwise identical** for
-//! all three weight formats — dispatch can never change a served
-//! token; `tests/simd_parity.rs` pins the decision per kernel. The
+//! all three weight formats and the attention kernels — dispatch can
+//! never change a served token; `tests/simd_parity.rs` and
+//! `tests/attn_parity.rs` pin the decision per kernel. The
 //! smoke benches (`cargo bench --bench kernels -- --smoke`, same for
 //! `speed`) emit `BENCH_*.json` perf records that CI archives on every
 //! PR.

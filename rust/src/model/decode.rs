@@ -5,54 +5,93 @@
 //! fused binary-coded model — Table IV's three contenders — with
 //! identical math and different memory traffic.
 //!
-//! One private core, [`BackendModel::forward_core`], advances any mix of
+//! One private core, `BackendModel::forward_core`, advances any mix of
 //! per-sequence token chunks against their KV caches in a single pass
 //! per layer: every linear runs one batched [`Gemv::gemm`] over **all**
 //! chunk tokens of **all** sequences, so the weights stream once per
 //! (linear, tick) instead of once per token per sequence. Everything
-//! else is a thin view of that core:
+//! else is a thin view of that core — single-token decode
+//! ([`BackendModel::decode_step`], [`BackendModel::decode_batch`]),
+//! chunked prefill ([`BackendModel::prefill`],
+//! [`BackendModel::prefill_batch`]), and full-window evaluation
+//! ([`BackendModel::forward_chunk`], [`BackendModel::nll_window`],
+//! [`Model::forward`]).
 //!
-//! * single-token decode = B chunks of length 1 ([`BackendModel::decode_step`],
-//!   [`BackendModel::decode_batch`]),
-//! * chunked prefill = chunks of T prompt tokens ([`BackendModel::prefill`],
-//!   [`BackendModel::prefill_batch`]),
-//! * full-sequence evaluation = one chunk spanning the whole window
-//!   against an empty cache ([`BackendModel::forward_chunk`],
-//!   [`BackendModel::nll_window`] — and [`Model::forward`] delegates
-//!   here too).
+//! ## The attention subsystem
+//!
+//! Between the QKV and output GEMMs the core runs the vectorized
+//! attention kernels of [`crate::kernels::attn`] over the **head-major**
+//! [`KvCache`] (`layers × heads × max_seq × head_dim`): each (row, head)
+//! work item scores one query head against that head's contiguous K
+//! strip ([`crate::kernels::attn::qk_dots`]), softmaxes, and accumulates
+//! the matching V strip ([`crate::kernels::attn::av_accumulate`]) —
+//! streaming contiguous cache memory where the old `max_seq × d_model`
+//! layout strided `d_model` floats per position. When a tick carries
+//! enough total attention work the items fan out across
+//! [`crate::util::pool`]; items are independent and internally
+//! sequential, so threaded attention is bitwise identical to the
+//! sequential loop. The kernels carry the same pinned scalar↔AVX2
+//! bitwise contract as the GEMMs.
+//!
+//! ## The zero-alloc workspace
+//!
+//! The core's activation buffers (residual stream, norm outputs, QKV,
+//! attention context, FFN tiles, scores) live in a caller-owned
+//! [`ForwardScratch`] that persists across calls: the serving engine
+//! threads one workspace through every tick
+//! (`coordinator::Backend::forward_tick`), so steady-state decode does
+//! no per-row-per-layer heap allocation. Linear and norm handles are
+//! likewise resolved once at [`BackendModel`] construction into indexed
+//! slots — the layer loop never formats a name or hashes a string.
 //!
 //! Causality inside a chunk falls out of the iteration bound: the whole
 //! chunk's K/V rows are appended first, then token at position `p`
 //! attends over cache rows `0..=p` only. Per token the fp operation
 //! order is identical to the sequential single-token loop (the kernels
-//! pin `gemm == per-item gemv` bitwise), so chunked, batched, and
-//! sequential execution all produce bit-identical logits.
+//! pin `gemm == per-item gemv` bitwise), so chunked, batched, threaded,
+//! and sequential execution all produce bit-identical logits.
 
 use super::config::{Family, ModelConfig};
-use super::forward::{alibi_slopes, gelu, silu, softmax, LN_EPS};
+use super::forward::{alibi_slopes, softmax, LN_EPS};
 use super::weights::WeightStore;
 use super::Model;
-use crate::kernels::{DenseGemv, Gemv};
+use crate::kernels::{attn, simd, DenseGemv, Gemv};
 use crate::quant::QuantizedLayer;
 use crate::tensor::Tensor;
+use crate::util::pool;
 use std::collections::HashMap;
 
-/// Per-sequence attention cache: one (max_seq × d_model) K and V buffer
-/// per layer, head-major like the forward pass.
+/// Per-sequence attention cache in **head-major** layout: one
+/// `(heads·max_seq) × head_dim` K and one V tensor per layer, head `h`'s
+/// rows for positions `0..max_seq` stored contiguously starting at row
+/// `h·max_seq`. A head's cache prefix is therefore one contiguous strip
+/// ([`KvCache::k_strip`]) — what the [`crate::kernels::attn`] inner
+/// loops stream — where the previous `max_seq × d_model` layout strided
+/// `d_model` floats between positions of the same head.
 pub struct KvCache {
-    pub k: Vec<Tensor>,
-    pub v: Vec<Tensor>,
+    k: Vec<Tensor>,
+    v: Vec<Tensor>,
     pub len: usize,
     max_seq: usize,
+    heads: usize,
+    head_dim: usize,
 }
 
 impl KvCache {
     pub fn new(cfg: &ModelConfig) -> KvCache {
+        let heads = cfg.heads;
+        let dh = cfg.head_dim();
         KvCache {
-            k: (0..cfg.layers).map(|_| Tensor::zeros(cfg.max_seq, cfg.d_model)).collect(),
-            v: (0..cfg.layers).map(|_| Tensor::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            k: (0..cfg.layers)
+                .map(|_| Tensor::zeros(heads * cfg.max_seq, dh))
+                .collect(),
+            v: (0..cfg.layers)
+                .map(|_| Tensor::zeros(heads * cfg.max_seq, dh))
+                .collect(),
             len: 0,
             max_seq: cfg.max_seq,
+            heads,
+            head_dim: dh,
         }
     }
 
@@ -68,6 +107,158 @@ impl KvCache {
     pub fn bytes(&self) -> usize {
         self.k.iter().chain(&self.v).map(|t| t.len() * 4).sum()
     }
+
+    /// Append position `pos`'s K and V (`d_model` vectors, head-major
+    /// within the row), scattering each head's `head_dim` slice into
+    /// that head's contiguous strip.
+    #[inline]
+    pub fn write_kv(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        let dh = self.head_dim;
+        let ms = self.max_seq;
+        let kt = &mut self.k[layer];
+        for h in 0..self.heads {
+            kt.row_mut(h * ms + pos)
+                .copy_from_slice(&k_row[h * dh..(h + 1) * dh]);
+        }
+        let vt = &mut self.v[layer];
+        for h in 0..self.heads {
+            vt.row_mut(h * ms + pos)
+                .copy_from_slice(&v_row[h * dh..(h + 1) * dh]);
+        }
+    }
+
+    /// Head `head`'s K rows for positions `0..len` — one contiguous
+    /// `len·head_dim` strip (the point of the head-major layout).
+    #[inline]
+    pub fn k_strip(&self, layer: usize, head: usize, len: usize) -> &[f32] {
+        let dh = self.head_dim;
+        let base = head * self.max_seq * dh;
+        &self.k[layer].data()[base..base + len * dh]
+    }
+
+    /// Head `head`'s V rows for positions `0..len`, contiguous.
+    #[inline]
+    pub fn v_strip(&self, layer: usize, head: usize, len: usize) -> &[f32] {
+        let dh = self.head_dim;
+        let base = head * self.max_seq * dh;
+        &self.v[layer].data()[base..base + len * dh]
+    }
+
+    /// Gather position `pos`'s K back into `d_model` (head-major row)
+    /// order — tests and debugging; the hot path never materializes
+    /// this view.
+    pub fn k_row(&self, layer: usize, pos: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.heads * self.head_dim);
+        for h in 0..self.heads {
+            out.extend_from_slice(self.k[layer].row(h * self.max_seq + pos));
+        }
+        out
+    }
+
+    /// Gather position `pos`'s V into `d_model` order (see
+    /// [`KvCache::k_row`]).
+    pub fn v_row(&self, layer: usize, pos: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.heads * self.head_dim);
+        for h in 0..self.heads {
+            out.extend_from_slice(self.v[layer].row(h * self.max_seq + pos));
+        }
+        out
+    }
+}
+
+/// Reusable row-major buffer pool: `prepare(n, width)` hands back `n`
+/// rows of exactly `width` f32 each, growing (never shrinking) the
+/// backing allocations, so steady-state serving reuses the same heap
+/// blocks tick after tick. Rows are *not* cleared — every consumer
+/// fully overwrites its rows (the GEMMs write each output element).
+#[derive(Default)]
+struct RowBuf(Vec<Vec<f32>>);
+
+impl RowBuf {
+    fn prepare(&mut self, n: usize, width: usize) -> &mut [Vec<f32>] {
+        if self.0.len() < n {
+            self.0.resize_with(n, Vec::new);
+        }
+        let rows = &mut self.0[..n];
+        for row in rows.iter_mut() {
+            row.resize(width, 0.0);
+        }
+        rows
+    }
+}
+
+/// Persistent forward-pass workspace owned by `BackendModel`'s callers.
+///
+/// The serving engine keeps one per backend and threads it through
+/// every tick (`coordinator::Backend::forward_tick` →
+/// [`BackendModel::forward_chunks_masked_with`]), so the per-tick layer
+/// loop performs no heap allocation once the buffers have grown to the
+/// tick's working set. One-shot entry points construct a throwaway one.
+/// Buffer contents do not carry information between calls — reuse is
+/// purely an allocation optimization and cannot change any result.
+#[derive(Default)]
+pub struct ForwardScratch {
+    /// Residual stream, one `d_model` row per chunk token.
+    xs: RowBuf,
+    /// Norm outputs (ln1/ln2/final reuse the same rows).
+    hs: RowBuf,
+    qs: RowBuf,
+    ks: RowBuf,
+    vs: RowBuf,
+    /// Attention-output / FFN-down projection rows.
+    proj: RowBuf,
+    /// FFN gate tile (Llama) / up tile.
+    ffa: RowBuf,
+    ffb: RowBuf,
+    /// Vocab-sized projection rows.
+    logits: RowBuf,
+    /// Flat `nrows × d_model` attention context (flat so the threaded
+    /// (row, head) fan-out can write disjoint raw slices).
+    ctx: Vec<f32>,
+    /// Score buffer for the sequential attention path.
+    scores: Vec<f32>,
+    /// Flat row → chunk index / absolute position maps.
+    row_seq: Vec<usize>,
+    row_pos: Vec<usize>,
+}
+
+impl ForwardScratch {
+    pub fn new() -> ForwardScratch {
+        ForwardScratch::default()
+    }
+}
+
+/// Norm parameters resolved at construction (weight + optional bias —
+/// bias absent ⇒ RMSNorm, the Llama family).
+struct NormParams {
+    w: Tensor,
+    b: Option<Tensor>,
+}
+
+impl NormParams {
+    fn resolve(cfg: &ModelConfig, weights: &WeightStore, prefix: &str) -> NormParams {
+        NormParams {
+            w: weights.expect(&format!("{prefix}.w")).clone(),
+            b: (cfg.family != Family::Llama)
+                .then(|| weights.expect(&format!("{prefix}.b")).clone()),
+        }
+    }
+}
+
+/// Per-layer handles resolved once at [`BackendModel`] construction:
+/// norm parameters (cloned — `d_model`-sized) and slot indices into the
+/// linear backend table, so the per-tick layer loop never formats an
+/// `L{i}.…` name or hashes a string.
+struct LayerSlots {
+    ln1: NormParams,
+    ln2: NormParams,
+    q: usize,
+    k: usize,
+    v: usize,
+    o: usize,
+    gate: Option<usize>,
+    up: usize,
+    down: usize,
 }
 
 /// A model whose linears are pluggable compute backends.
@@ -75,29 +266,29 @@ pub struct BackendModel {
     pub cfg: ModelConfig,
     /// Norm + embedding parameters (never quantized).
     pub weights: WeightStore,
-    linears: HashMap<String, Box<dyn Gemv>>,
+    /// Linear backends in [`ModelConfig::all_linears`] order.
+    linears: Vec<Box<dyn Gemv>>,
+    layers: Vec<LayerSlots>,
+    final_norm: NormParams,
 }
 
 impl BackendModel {
     /// Dense f32 backends straight from a [`Model`] (the `full` row).
     pub fn dense(model: &Model) -> BackendModel {
-        let mut linears: HashMap<String, Box<dyn Gemv>> = HashMap::new();
-        for (name, _, _) in model.cfg.all_linears() {
-            linears.insert(
-                name.clone(),
-                Box::new(DenseGemv::new(model.weights.expect(&name).clone())),
-            );
-        }
-        BackendModel { cfg: model.cfg.clone(), weights: model.weights.clone(), linears }
+        let src = &model.weights;
+        Self::build(model.cfg.clone(), model.weights.clone(), |name| {
+            let backend: Box<dyn Gemv> = Box::new(DenseGemv::new(src.expect(name).clone()));
+            backend
+        })
     }
 
     /// Backends from quantized layers: packed binary coding if present
     /// (GPTQT/BCQ → LUT-GEMM), else int weights (GPTQ → dequant), else
     /// the dense dequantized tensor.
     pub fn quantized(model: &Model, mut layers: HashMap<String, QuantizedLayer>) -> BackendModel {
-        let mut linears: HashMap<String, Box<dyn Gemv>> = HashMap::new();
-        for (name, _, _) in model.cfg.all_linears() {
-            let backend: Box<dyn Gemv> = match layers.remove(&name) {
+        let src = &model.weights;
+        Self::build(model.cfg.clone(), model.weights.clone(), move |name| {
+            let backend: Box<dyn Gemv> = match layers.remove(name) {
                 Some(q) => {
                     if let Some(packed) = q.packed {
                         Box::new(packed)
@@ -107,75 +298,95 @@ impl BackendModel {
                         Box::new(DenseGemv::new(q.dequant))
                     }
                 }
-                None => Box::new(DenseGemv::new(model.weights.expect(&name).clone())),
+                None => Box::new(DenseGemv::new(src.expect(name).clone())),
             };
-            linears.insert(name, backend);
-        }
-        BackendModel { cfg: model.cfg.clone(), weights: model.weights.clone(), linears }
+            backend
+        })
     }
 
-    /// Batched linear: one weight stream serves every sequence in the
-    /// batch (see [`crate::kernels::Gemv::gemm`]). Batch 1 (the
-    /// [`BackendModel::decode_step`] path) hits each backend's `gemm`,
-    /// which is bitwise-identical to its `gemv`.
-    fn gemm(&self, name: &str, xs: &[&[f32]]) -> Vec<Vec<f32>> {
-        let b = self
-            .linears
-            .get(name)
-            .unwrap_or_else(|| panic!("no backend for {name}"));
-        let mut ys: Vec<Vec<f32>> = (0..xs.len()).map(|_| vec![0.0f32; b.rows()]).collect();
-        b.gemm(xs, &mut ys);
+    /// Shared constructor: materialize one backend per linear (in
+    /// [`ModelConfig::all_linears`] order) and resolve every per-layer
+    /// handle — linear slots and norm parameters — exactly once.
+    fn build(
+        cfg: ModelConfig,
+        weights: WeightStore,
+        mut backend_for: impl FnMut(&str) -> Box<dyn Gemv>,
+    ) -> BackendModel {
+        let mut linears: Vec<Box<dyn Gemv>> = Vec::new();
+        let mut slot_of: HashMap<String, usize> = HashMap::new();
+        for (name, _, _) in cfg.all_linears() {
+            slot_of.insert(name.clone(), linears.len());
+            linears.push(backend_for(&name));
+        }
+        let slot = |name: String| -> usize {
+            *slot_of
+                .get(&name)
+                .unwrap_or_else(|| panic!("no backend for {name}"))
+        };
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for i in 0..cfg.layers {
+            layers.push(LayerSlots {
+                ln1: NormParams::resolve(&cfg, &weights, &format!("L{i}.ln1")),
+                ln2: NormParams::resolve(&cfg, &weights, &format!("L{i}.ln2")),
+                q: slot(format!("L{i}.attn.q")),
+                k: slot(format!("L{i}.attn.k")),
+                v: slot(format!("L{i}.attn.v")),
+                o: slot(format!("L{i}.attn.o")),
+                gate: (cfg.family == Family::Llama).then(|| slot(format!("L{i}.ff.gate"))),
+                up: slot(format!("L{i}.ff.up")),
+                down: slot(format!("L{i}.ff.down")),
+            });
+        }
+        let final_norm = NormParams::resolve(&cfg, &weights, "final_ln");
+        BackendModel { cfg, weights, linears, layers, final_norm }
+    }
+
+    /// Batched linear through slot `slot`: one weight stream serves
+    /// every row (see [`Gemv::gemm`]); output rows come from the
+    /// scratch buffer (resized, never reallocated at steady state).
+    fn gemm_slot<'b>(&self, slot: usize, xs: &[&[f32]], buf: &'b mut RowBuf) -> &'b mut [Vec<f32>] {
+        let lin = &self.linears[slot];
+        let ys = buf.prepare(xs.len(), lin.rows());
+        lin.gemm(xs, ys);
         ys
     }
 
     /// Total weight bytes streamed per decoded token — the bandwidth
     /// model behind Table IV (embeddings excluded: shared by all rows).
     pub fn streamed_bytes_per_token(&self) -> usize {
-        self.linears.values().map(|b| b.streamed_bytes()).sum()
+        self.linears.iter().map(|b| b.streamed_bytes()).sum()
     }
 
     /// Label of the dominant backend (for reports).
     pub fn backend_label(&self) -> &'static str {
-        self.linears
-            .values()
-            .next()
-            .map(|b| b.label())
-            .unwrap_or("empty")
+        self.linears.first().map(|b| b.label()).unwrap_or("empty")
     }
 
-    fn norm(&self, prefix: &str, x: &[f32]) -> Vec<f32> {
+    /// Normalize `x` into `out` with resolved parameters: RMSNorm when
+    /// the bias is absent (Llama), LayerNorm otherwise. Same per-element
+    /// fp order as the historical string-keyed `norm`.
+    fn norm_into(&self, np: &NormParams, x: &[f32], out: &mut [f32]) {
         let d = x.len();
-        let w = self.weights.expect(&format!("{prefix}.w"));
-        match self.cfg.family {
-            Family::Llama => {
+        debug_assert_eq!(out.len(), d);
+        match &np.b {
+            None => {
                 let ms = x.iter().map(|&v| v * v).sum::<f32>() / d as f32;
                 let inv = 1.0 / (ms + LN_EPS).sqrt();
-                x.iter().zip(w.data()).map(|(&v, &wi)| v * inv * wi).collect()
+                for ((o, &v), &wi) in out.iter_mut().zip(x).zip(np.w.data()) {
+                    *o = v * inv * wi;
+                }
             }
-            _ => {
-                let b = self.weights.expect(&format!("{prefix}.b"));
+            Some(b) => {
                 let mean = x.iter().sum::<f32>() / d as f32;
                 let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
                 let inv = 1.0 / (var + LN_EPS).sqrt();
-                x.iter()
-                    .zip(w.data().iter().zip(b.data()))
-                    .map(|(&v, (&wi, &bi))| (v - mean) * inv * wi + bi)
-                    .collect()
+                for ((o, &v), (&wi, &bi)) in
+                    out.iter_mut().zip(x).zip(np.w.data().iter().zip(b.data()))
+                {
+                    *o = (v - mean) * inv * wi + bi;
+                }
             }
         }
-    }
-
-    /// Embed a single token at absolute position `pos`.
-    pub fn embed_one(&self, token: u32, pos: usize) -> Vec<f32> {
-        let tok = self.weights.expect("tok_emb");
-        let mut x = tok.row(token as usize % self.cfg.vocab).to_vec();
-        if self.cfg.family == Family::Opt {
-            let pemb = self.weights.expect("pos_emb");
-            for (v, &p) in x.iter_mut().zip(pemb.row(pos % self.cfg.max_seq)) {
-                *v += p;
-            }
-        }
-        x
     }
 
     /// Run one decode step: consume `token` at position `cache.len`,
@@ -205,8 +416,21 @@ impl BackendModel {
     /// arithmetic is identical to [`BackendModel::decode_step`], so
     /// greedy generation is token-identical to a sequential loop.
     pub fn decode_batch(&self, tokens: &[u32], caches: &mut [KvCache]) -> Vec<Vec<f32>> {
+        self.decode_batch_with(tokens, caches, &mut ForwardScratch::new())
+    }
+
+    /// [`BackendModel::decode_batch`] against a caller-owned
+    /// [`ForwardScratch`] — loops that decode many steps reuse the
+    /// workspace instead of reallocating it per step.
+    pub fn decode_batch_with(
+        &self,
+        tokens: &[u32],
+        caches: &mut [KvCache],
+        scratch: &mut ForwardScratch,
+    ) -> Vec<Vec<f32>> {
         let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
-        self.decode_batch_refs(tokens, &mut refs)
+        let chunks: Vec<&[u32]> = tokens.iter().map(std::slice::from_ref).collect();
+        self.forward_chunks_refs_with(&chunks, &mut refs, scratch)
     }
 
     /// [`BackendModel::decode_batch`] over borrowed caches — the form
@@ -231,7 +455,18 @@ impl BackendModel {
         chunks: &[&[u32]],
         caches: &mut [&mut KvCache],
     ) -> Vec<Vec<f32>> {
-        self.forward_core(chunks, caches, LogitsWanted::Last)
+        self.forward_chunks_refs_with(chunks, caches, &mut ForwardScratch::new())
+    }
+
+    /// [`BackendModel::forward_chunks_refs`] with a caller-owned
+    /// workspace.
+    pub fn forward_chunks_refs_with(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut KvCache],
+        scratch: &mut ForwardScratch,
+    ) -> Vec<Vec<f32>> {
+        self.forward_core(chunks, caches, LogitsWanted::Last, scratch)
             .into_iter()
             .map(|t| t.into_vec())
             .collect()
@@ -248,8 +483,22 @@ impl BackendModel {
         caches: &mut [&mut KvCache],
         need: &[bool],
     ) -> Vec<Option<Vec<f32>>> {
+        self.forward_chunks_masked_with(chunks, caches, need, &mut ForwardScratch::new())
+    }
+
+    /// [`BackendModel::forward_chunks_masked`] with a caller-owned
+    /// [`ForwardScratch`] — the serving tick entry point
+    /// (`coordinator::Backend::forward_tick` threads the engine's
+    /// persistent workspace through here).
+    pub fn forward_chunks_masked_with(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut KvCache],
+        need: &[bool],
+        scratch: &mut ForwardScratch,
+    ) -> Vec<Option<Vec<f32>>> {
         assert_eq!(chunks.len(), need.len(), "forward_chunks_masked need-mask length");
-        self.forward_core(chunks, caches, LogitsWanted::LastIf(need))
+        self.forward_core(chunks, caches, LogitsWanted::LastIf(need), scratch)
             .into_iter()
             .zip(need)
             .map(|(t, &k)| if k { Some(t.into_vec()) } else { None })
@@ -262,7 +511,7 @@ impl BackendModel {
     /// delegates here); with a warm cache it is multi-token continuation.
     pub fn forward_chunk(&self, tokens: &[u32], cache: &mut KvCache) -> Tensor {
         let mut caches = [cache];
-        self.forward_core(&[tokens], &mut caches, LogitsWanted::All)
+        self.forward_core(&[tokens], &mut caches, LogitsWanted::All, &mut ForwardScratch::new())
             .pop()
             .expect("forward_core returns one logits tensor per chunk")
     }
@@ -289,10 +538,12 @@ impl BackendModel {
     }
 
     /// [`BackendModel::prefill`] with an explicit chunk size (tests and
-    /// sweeps; `chunk >= tokens.len()` is a single pass).
+    /// sweeps; `chunk >= tokens.len()` is a single pass). One workspace
+    /// is reused across all chunk passes.
     pub fn prefill_chunked(&self, tokens: &[u32], cache: &mut KvCache, chunk: usize) -> Vec<f32> {
         assert!(!tokens.is_empty());
         assert!(chunk >= 1, "prefill chunk must be >= 1");
+        let mut scratch = ForwardScratch::new();
         let mut logits = Vec::new();
         let last_start = tokens.len() - 1 - (tokens.len() - 1) % chunk;
         for (ci, piece) in tokens.chunks(chunk).enumerate() {
@@ -300,7 +551,7 @@ impl BackendModel {
             let need = [ci * chunk == last_start];
             let mut caches = [&mut *cache];
             if let Some(l) = self
-                .forward_chunks_masked(&[piece], &mut caches, &need)
+                .forward_chunks_masked_with(&[piece], &mut caches, &need, &mut scratch)
                 .pop()
                 .expect("forward_chunks_masked returns one entry per chunk")
             {
@@ -324,6 +575,7 @@ impl BackendModel {
     ) -> Vec<Vec<f32>> {
         assert_eq!(prompts.len(), caches.len(), "prefill_batch prompt/cache mismatch");
         assert!(chunk >= 1, "prefill chunk must be >= 1");
+        let mut scratch = ForwardScratch::new();
         let nb = prompts.len();
         let mut out: Vec<Vec<f32>> = vec![Vec::new(); nb];
         let mut idx = vec![0usize; nb];
@@ -349,7 +601,8 @@ impl BackendModel {
                 .enumerate()
                 .filter_map(|(bi, c)| if pending[bi] { Some(c) } else { None })
                 .collect();
-            let logits = self.forward_chunks_masked(&chunks, &mut cache_refs, &need);
+            let logits =
+                self.forward_chunks_masked_with(&chunks, &mut cache_refs, &need, &mut scratch);
             for ((&bi, chunk_fed), l) in sel.iter().zip(&chunks).zip(logits) {
                 idx[bi] += chunk_fed.len();
                 if let Some(l) = l {
@@ -362,11 +615,14 @@ impl BackendModel {
     /// The chunk-major forward core every public entry point reduces to.
     ///
     /// `chunks[b]` is consumed at positions `caches[b].len ..`, all K/V
-    /// rows are appended, and each linear layer runs **one** batched
-    /// [`Gemv::gemm`] over the flattened token rows of every chunk — the
-    /// single place weights are streamed. Attention is per token over
-    /// cache rows `0..=pos` (causal by construction; intra-chunk tokens
-    /// see exactly the prefix a sequential loop would have written).
+    /// rows are appended head-major, and each linear layer runs **one**
+    /// batched [`Gemv::gemm`] over the flattened token rows of every
+    /// chunk — the single place weights are streamed. Attention runs the
+    /// [`crate::kernels::attn`] kernels per (row, head) over contiguous
+    /// cache strips, rows `0..=pos` (causal by construction; intra-chunk
+    /// tokens see exactly the prefix a sequential loop would have
+    /// written), fanning items across the pool when the tick carries
+    /// enough work. All activations live in `scratch`.
     ///
     /// Returns one logits tensor per chunk, per `wanted`: all T
     /// positions (evaluation), the last position only (serving — skips
@@ -378,6 +634,7 @@ impl BackendModel {
         chunks: &[&[u32]],
         caches: &mut [&mut KvCache],
         wanted: LogitsWanted,
+        scratch: &mut ForwardScratch,
     ) -> Vec<Tensor> {
         let cfg = &self.cfg;
         let nb = chunks.len();
@@ -385,19 +642,37 @@ impl BackendModel {
         if nb == 0 {
             return Vec::new();
         }
+        let d = cfg.d_model;
         let heads = cfg.heads;
         let dh = cfg.head_dim();
         let scale = 1.0 / (dh as f32).sqrt();
+        let tier = simd::tier();
         let slopes = if cfg.family == Family::Bloom {
             alibi_slopes(heads)
         } else {
             vec![0.0; heads]
         };
 
+        let ForwardScratch {
+            xs: xs_buf,
+            hs: hs_buf,
+            qs: qs_buf,
+            ks: ks_buf,
+            vs: vs_buf,
+            proj: proj_buf,
+            ffa: ffa_buf,
+            ffb: ffb_buf,
+            logits: logits_buf,
+            ctx,
+            scores,
+            row_seq,
+            row_pos,
+        } = scratch;
+
         // flat row layout: chunk 0's tokens, then chunk 1's, …
         let starts: Vec<usize> = caches.iter().map(|c| c.len).collect();
-        let mut row_seq: Vec<usize> = Vec::new(); // row → chunk index
-        let mut row_pos: Vec<usize> = Vec::new(); // row → absolute position
+        row_seq.clear();
+        row_pos.clear();
         for (bi, chunk) in chunks.iter().enumerate() {
             assert!(!chunk.is_empty(), "forward_core: empty chunk (seq {bi})");
             assert!(
@@ -413,21 +688,42 @@ impl BackendModel {
             }
         }
         let nrows = row_seq.len();
+        let row_seq: &[usize] = row_seq.as_slice();
+        let row_pos: &[usize] = row_pos.as_slice();
+        let max_ctx = row_pos.iter().map(|&p| p + 1).max().unwrap_or(0);
+        // the attention fan-out decision is the same for every layer
+        let total_ctx: usize = row_pos.iter().map(|&p| p + 1).sum();
+        let attn_work = total_ctx * dh * heads * 2; // qk + av mul-adds
+        let par = attn_work >= crate::kernels::PAR_MIN_WORK && pool::global().threads() > 1;
 
-        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(nrows);
-        for (bi, chunk) in chunks.iter().enumerate() {
-            for (t, &tok) in chunk.iter().enumerate() {
-                xs.push(self.embed_one(tok, starts[bi] + t));
+        // embeddings straight into the persistent residual buffer
+        let tok = self.weights.expect("tok_emb");
+        let pos_emb = (cfg.family == Family::Opt).then(|| self.weights.expect("pos_emb"));
+        let xs = xs_buf.prepare(nrows, d);
+        {
+            let mut r = 0usize;
+            for (bi, chunk) in chunks.iter().enumerate() {
+                for (t, &tokid) in chunk.iter().enumerate() {
+                    let x = &mut xs[r];
+                    x.copy_from_slice(tok.row(tokid as usize % cfg.vocab));
+                    if let Some(pe) = pos_emb {
+                        simd::add_assign_t(x, pe.row((starts[bi] + t) % cfg.max_seq), tier);
+                    }
+                    r += 1;
+                }
             }
         }
 
-        for i in 0..cfg.layers {
-            let hs: Vec<Vec<f32>> =
-                xs.iter().map(|x| self.norm(&format!("L{i}.ln1"), x)).collect();
+        for (li, layer) in self.layers.iter().enumerate() {
+            // pre-attention norm
+            let hs = hs_buf.prepare(nrows, d);
+            for (h, x) in hs.iter_mut().zip(xs.iter()) {
+                self.norm_into(&layer.ln1, x, h);
+            }
             let hrefs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
-            let mut qs = self.gemm(&format!("L{i}.attn.q"), &hrefs);
-            let mut ks = self.gemm(&format!("L{i}.attn.k"), &hrefs);
-            let vs = self.gemm(&format!("L{i}.attn.v"), &hrefs);
+            let qs = self.gemm_slot(layer.q, &hrefs, qs_buf);
+            let ks = self.gemm_slot(layer.k, &hrefs, ks_buf);
+            let vs = self.gemm_slot(layer.v, &hrefs, vs_buf);
             // rope + append the whole chunk's K/V before any attention
             for r in 0..nrows {
                 let (bi, p) = (row_seq[r], row_pos[r]);
@@ -435,80 +731,106 @@ impl BackendModel {
                     rope_vec(&mut qs[r], heads, p);
                     rope_vec(&mut ks[r], heads, p);
                 }
-                caches[bi].k[i].row_mut(p).copy_from_slice(&ks[r]);
-                caches[bi].v[i].row_mut(p).copy_from_slice(&vs[r]);
+                caches[bi].write_kv(li, p, &ks[r], &vs[r]);
             }
 
-            // attention stays per token: row at position p attends over
-            // cache rows 0..=p — prefix plus the intra-chunk past
-            let mut ctxs: Vec<Vec<f32>> = Vec::with_capacity(nrows);
-            for r in 0..nrows {
-                let (bi, p) = (row_seq[r], row_pos[r]);
-                let cache = &caches[bi];
-                let q = &qs[r];
-                let mut ctx = vec![0.0f32; cfg.d_model];
-                let mut scores = vec![0.0f32; p + 1];
-                for head in 0..heads {
-                    let base = head * dh;
-                    let qh = &q[base..base + dh];
-                    for (j, s) in scores.iter_mut().enumerate() {
-                        let krow = &cache.k[i].row(j)[base..base + dh];
-                        let mut dot = 0.0f32;
-                        for (a, b) in qh.iter().zip(krow) {
-                            dot += a * b;
-                        }
-                        *s = dot * scale + slopes[head] * (j as f32 - p as f32);
+            // attention: row at position p attends over cache rows 0..=p
+            // (prefix plus the intra-chunk past), one (row, head) work
+            // item per head-major strip pair. Items are independent and
+            // internally sequential, so the pool fan-out below is
+            // bitwise-identical to the sequential loop.
+            ctx.clear();
+            ctx.resize(nrows * d, 0.0);
+            if par {
+                let caches_ro: &[&mut KvCache] = &*caches;
+                let qs_ro: &[Vec<f32>] = qs;
+                let slopes_ro: &[f32] = &slopes;
+                let ctx_ptr = CtxWriter(ctx.as_mut_ptr());
+                pool::global().scope_chunks(nrows * heads, |range| {
+                    let mut local_scores = vec![0.0f32; max_ctx];
+                    for it in range {
+                        let r = it / heads;
+                        let head = it % heads;
+                        let (bi, p) = (row_seq[r], row_pos[r]);
+                        let cache: &KvCache = &*caches_ro[bi];
+                        let base = head * dh;
+                        let qh = &qs_ro[r][base..base + dh];
+                        let s = &mut local_scores[..p + 1];
+                        attn::qk_dots_t(
+                            qh,
+                            cache.k_strip(li, head, p + 1),
+                            scale,
+                            slopes_ro[head],
+                            p,
+                            s,
+                            tier,
+                        );
+                        softmax(s);
+                        // Safety: each (row, head) slice is written by
+                        // exactly one worker (disjoint item ranges), and
+                        // scope_chunks joins before `ctx` is used again.
+                        let out = unsafe {
+                            std::slice::from_raw_parts_mut(ctx_ptr.0.add(r * d + base), dh)
+                        };
+                        attn::av_accumulate_t(s, cache.v_strip(li, head, p + 1), out, tier);
                     }
-                    softmax(&mut scores);
-                    let out = &mut ctx[base..base + dh];
-                    for (j, &pw) in scores.iter().enumerate() {
-                        let vrow = &cache.v[i].row(j)[base..base + dh];
-                        for (o, &vv) in out.iter_mut().zip(vrow) {
-                            *o += pw * vv;
-                        }
+                });
+            } else {
+                scores.clear();
+                scores.resize(max_ctx, 0.0);
+                for r in 0..nrows {
+                    let (bi, p) = (row_seq[r], row_pos[r]);
+                    let cache: &KvCache = &*caches[bi];
+                    for head in 0..heads {
+                        let base = head * dh;
+                        let qh = &qs[r][base..base + dh];
+                        let s = &mut scores[..p + 1];
+                        attn::qk_dots_t(
+                            qh,
+                            cache.k_strip(li, head, p + 1),
+                            scale,
+                            slopes[head],
+                            p,
+                            s,
+                            tier,
+                        );
+                        softmax(s);
+                        let out = &mut ctx[r * d + base..r * d + base + dh];
+                        attn::av_accumulate_t(s, cache.v_strip(li, head, p + 1), out, tier);
                     }
-                }
-                ctxs.push(ctx);
-            }
-            let crefs: Vec<&[f32]> = ctxs.iter().map(|v| v.as_slice()).collect();
-            let attns = self.gemm(&format!("L{i}.attn.o"), &crefs);
-            for (x, a) in xs.iter_mut().zip(&attns) {
-                for (xv, &av) in x.iter_mut().zip(a) {
-                    *xv += av;
                 }
             }
 
-            let h2s: Vec<Vec<f32>> =
-                xs.iter().map(|x| self.norm(&format!("L{i}.ln2"), x)).collect();
-            let h2refs: Vec<&[f32]> = h2s.iter().map(|v| v.as_slice()).collect();
-            let ffs = match cfg.family {
-                Family::Llama => {
-                    let gates = self.gemm(&format!("L{i}.ff.gate"), &h2refs);
-                    let ups = self.gemm(&format!("L{i}.ff.up"), &h2refs);
-                    let acts: Vec<Vec<f32>> = gates
-                        .iter()
-                        .zip(&ups)
-                        .map(|(gate, up)| {
-                            gate.iter().zip(up).map(|(&g, &u)| silu(g) * u).collect()
-                        })
-                        .collect();
-                    let arefs: Vec<&[f32]> = acts.iter().map(|v| v.as_slice()).collect();
-                    self.gemm(&format!("L{i}.ff.down"), &arefs)
+            let crefs: Vec<&[f32]> = ctx.chunks_exact(d).collect();
+            let attns = self.gemm_slot(layer.o, &crefs, proj_buf);
+            for (x, a) in xs.iter_mut().zip(attns.iter()) {
+                simd::add_assign_t(x, a, tier);
+            }
+
+            // FFN
+            let hs = hs_buf.prepare(nrows, d);
+            for (h, x) in hs.iter_mut().zip(xs.iter()) {
+                self.norm_into(&layer.ln2, x, h);
+            }
+            let h2refs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
+            let ffs = if let Some(gate_slot) = layer.gate {
+                let gates = self.gemm_slot(gate_slot, &h2refs, ffa_buf);
+                let ups = self.gemm_slot(layer.up, &h2refs, ffb_buf);
+                for (g, u) in gates.iter_mut().zip(ups.iter()) {
+                    simd::silu_mul_t(g, u, tier);
                 }
-                _ => {
-                    let ups = self.gemm(&format!("L{i}.ff.up"), &h2refs);
-                    let acts: Vec<Vec<f32>> = ups
-                        .iter()
-                        .map(|up| up.iter().map(|&u| gelu(u)).collect())
-                        .collect();
-                    let arefs: Vec<&[f32]> = acts.iter().map(|v| v.as_slice()).collect();
-                    self.gemm(&format!("L{i}.ff.down"), &arefs)
+                let arefs: Vec<&[f32]> = gates.iter().map(|v| v.as_slice()).collect();
+                self.gemm_slot(layer.down, &arefs, proj_buf)
+            } else {
+                let ups = self.gemm_slot(layer.up, &h2refs, ffb_buf);
+                for u in ups.iter_mut() {
+                    simd::gelu_map_t(u, tier);
                 }
+                let arefs: Vec<&[f32]> = ups.iter().map(|v| v.as_slice()).collect();
+                self.gemm_slot(layer.down, &arefs, proj_buf)
             };
-            for (x, f) in xs.iter_mut().zip(&ffs) {
-                for (xv, &fv) in x.iter_mut().zip(f) {
-                    *xv += fv;
-                }
+            for (x, f) in xs.iter_mut().zip(ffs.iter()) {
+                simd::add_assign_t(x, f, tier);
             }
         }
         for (cache, chunk) in caches.iter_mut().zip(chunks) {
@@ -517,13 +839,14 @@ impl BackendModel {
 
         // tied-embedding logits through the batched dense kernel: the
         // (vocab × d_model) embedding streams once for the whole call
-        let tok = self.weights.expect("tok_emb");
         if let LogitsWanted::All = wanted {
-            let xfs: Vec<Vec<f32>> = xs.iter().map(|x| self.norm("final_ln", x)).collect();
-            let xrefs: Vec<&[f32]> = xfs.iter().map(|v| v.as_slice()).collect();
-            let mut ys: Vec<Vec<f32>> =
-                (0..nrows).map(|_| vec![0.0f32; cfg.vocab]).collect();
-            crate::kernels::gemm_f32(tok, &xrefs, &mut ys);
+            let hs = hs_buf.prepare(nrows, d);
+            for (h, x) in hs.iter_mut().zip(xs.iter()) {
+                self.norm_into(&self.final_norm, x, h);
+            }
+            let xrefs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
+            let ys = logits_buf.prepare(nrows, cfg.vocab);
+            crate::kernels::gemm_f32(tok, &xrefs, ys);
             let mut out = Vec::with_capacity(nb);
             let mut row = 0usize;
             for chunk in chunks {
@@ -556,17 +879,19 @@ impl BackendModel {
                 last_rows.push(row - 1);
             }
         }
-        let xfs: Vec<Vec<f32>> =
-            last_rows.iter().map(|&r| self.norm("final_ln", &xs[r])).collect();
-        let xrefs: Vec<&[f32]> = xfs.iter().map(|v| v.as_slice()).collect();
-        let mut ys: Vec<Vec<f32>> =
-            (0..last_rows.len()).map(|_| vec![0.0f32; cfg.vocab]).collect();
-        crate::kernels::gemm_f32(tok, &xrefs, &mut ys);
-        let mut ys_iter = ys.into_iter();
+        let hs = hs_buf.prepare(last_rows.len(), d);
+        for (h, &r) in hs.iter_mut().zip(&last_rows) {
+            self.norm_into(&self.final_norm, &xs[r], h);
+        }
+        let xrefs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
+        let ys = logits_buf.prepare(last_rows.len(), cfg.vocab);
+        crate::kernels::gemm_f32(tok, &xrefs, ys);
+        let mut ys_iter = ys.iter();
         keep.iter()
             .map(|&k| {
                 if k {
-                    Tensor::from_vec(1, cfg.vocab, ys_iter.next().expect("one per kept chunk"))
+                    let y = ys_iter.next().expect("one per kept chunk");
+                    Tensor::from_vec(1, cfg.vocab, y.clone())
                 } else {
                     Tensor::zeros(0, 0)
                 }
@@ -575,7 +900,13 @@ impl BackendModel {
     }
 }
 
-/// Which logits a [`BackendModel::forward_core`] call materializes.
+/// Raw write handle for the threaded attention fan-out: workers own
+/// disjoint `(row, head)` slices of the flat context buffer.
+struct CtxWriter(*mut f32);
+unsafe impl Send for CtxWriter {}
+unsafe impl Sync for CtxWriter {}
+
+/// Which logits a `BackendModel::forward_core` call materializes.
 #[derive(Clone, Copy)]
 enum LogitsWanted<'a> {
     /// Every position of every chunk (evaluation).
@@ -686,11 +1017,15 @@ mod tests {
                     bm.decode_step(t, &mut seq_caches[bi]);
                 }
             }
-            // two batched steps vs two sequential steps, greedy feedback
+            // two batched steps vs two sequential steps, greedy feedback —
+            // the batched side reuses one workspace across steps, which
+            // must be invisible in the tokens
+            let mut scratch = ForwardScratch::new();
             let mut batch_tokens: Vec<u32> = vec![11, 22, 33];
             let mut seq_tokens = batch_tokens.clone();
             for _ in 0..2 {
-                let batch_logits = bm.decode_batch(&batch_tokens, &mut batch_caches);
+                let batch_logits =
+                    bm.decode_batch_with(&batch_tokens, &mut batch_caches, &mut scratch);
                 for (bi, logits) in batch_logits.iter().enumerate() {
                     let seq_logits = bm.decode_step(seq_tokens[bi], &mut seq_caches[bi]);
                     assert_eq!(
@@ -718,6 +1053,26 @@ mod tests {
             let a = bm.decode_step(t, &mut c1);
             let b = bm.decode_batch(&[t], &mut c2).remove(0);
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn kv_cache_head_major_roundtrip() {
+        let m = tiny(Family::Opt);
+        let cfg = &m.cfg;
+        let (heads, dh) = (cfg.heads, cfg.head_dim());
+        let mut cache = KvCache::new(cfg);
+        let mut rng = crate::util::Rng::new(91);
+        let k: Vec<f32> = (0..cfg.d_model).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..cfg.d_model).map(|_| rng.normal_f32()).collect();
+        cache.write_kv(1, 3, &k, &v);
+        assert_eq!(cache.k_row(1, 3), k, "k scatter/gather roundtrip");
+        assert_eq!(cache.v_row(1, 3), v, "v scatter/gather roundtrip");
+        // the strip view of head h at position 3 is the head's row slice
+        for h in 0..heads {
+            let strip = cache.k_strip(1, h, 4);
+            assert_eq!(strip.len(), 4 * dh);
+            assert_eq!(&strip[3 * dh..4 * dh], &k[h * dh..(h + 1) * dh]);
         }
     }
 

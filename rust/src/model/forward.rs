@@ -27,18 +27,11 @@ use crate::tensor::Tensor;
 
 pub const LN_EPS: f32 = 1e-5;
 
-/// tanh-approximated GELU (jax.nn.gelu's default).
-#[inline]
-pub fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.797_884_56; // sqrt(2/π)
-    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
-}
-
-/// SiLU (swish) — Llama's gate activation.
-#[inline]
-pub fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
+// The scalar activation functions are canonical in the kernel layer
+// (the forward core's elementwise loops dispatch through
+// `kernels::simd`); re-exported here so calibration and model code keep
+// their historical paths.
+pub use crate::kernels::simd::{gelu, silu};
 
 /// Row-wise LayerNorm with weight+bias.
 pub fn layernorm(x: &Tensor, w: &[f32], b: &[f32]) -> Tensor {

@@ -14,7 +14,7 @@ pub mod quantize;
 pub mod weights;
 
 pub use config::{fmt_params, presets, Family, ModelConfig};
-pub use decode::{BackendModel, KvCache};
+pub use decode::{BackendModel, ForwardScratch, KvCache};
 pub use forward::Model;
 pub use weights::WeightStore;
 

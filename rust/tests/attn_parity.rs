@@ -1,0 +1,269 @@
+//! Attention-subsystem parity: the head-major KV layout, the
+//! scalar↔AVX2 attention kernels, the (row, head) pool fan-out, and the
+//! reusable forward workspace must all be invisible in served tokens.
+//!
+//! Three layers of pins:
+//! 1. kernel — `qk_dots`/`av_accumulate` scalar and dispatched tiers are
+//!    `assert_eq!`-bitwise across ragged head dims and context lengths;
+//! 2. threaded — a forward big enough to cross the attention
+//!    parallelism threshold is bitwise-identical to the sequential
+//!    per-token loop (which stays under it);
+//! 3. end-to-end — mixed prefill/decode ticks, RoPE (Llama) and ALiBi
+//!    (Bloom) families, dense and LUT backends, and workspace reuse
+//!    across ragged tick shapes all reproduce the sequential reference
+//!    exactly, with the head-major caches holding identical state.
+
+use gptqt::kernels::attn::{av_accumulate, av_accumulate_scalar, qk_dots, qk_dots_scalar};
+use gptqt::model::init::random_weights;
+use gptqt::model::{presets, BackendModel, Family, ForwardScratch, KvCache, Model};
+use gptqt::quant::{quantize_layer, Method, QuantConfig};
+use gptqt::tensor::Tensor;
+use gptqt::util::Rng;
+use std::collections::HashMap;
+
+fn tiny(family: Family, seed: u64) -> Model {
+    let mut cfg = presets::by_name("opt-nano").unwrap();
+    cfg.family = family;
+    cfg.vocab = 64;
+    cfg.max_seq = 48;
+    Model::new(cfg.clone(), random_weights(&cfg, seed))
+}
+
+/// GPTQT-quantize every linear so the LUT-GEMM kernels drive the core.
+fn lut_backend(model: &Model) -> BackendModel {
+    let mut rng = Rng::new(9);
+    let mut layers = HashMap::new();
+    for (name, _rows, cols) in model.cfg.all_linears() {
+        let acts = Tensor::randn(2 * cols, cols, 1.0, &mut rng);
+        let h = gptqt::quant::gptq::accumulate_hessian(&acts);
+        let qcfg = QuantConfig { explore_grid: 2, ..QuantConfig::with_bits(3) };
+        let q = quantize_layer(model.weights.expect(&name), &h, Method::Gptqt, &qcfg).unwrap();
+        layers.insert(name, q);
+    }
+    BackendModel::quantized(model, layers)
+}
+
+#[test]
+fn qk_dots_scalar_and_dispatched_are_bitwise_equal() {
+    let mut rng = Rng::new(71);
+    for dh in [3usize, 8, 12, 31, 32, 64, 96] {
+        for ctx in [1usize, 2, 9, 63, 128, 517] {
+            let q: Vec<f32> = (0..dh).map(|_| rng.normal_f32()).collect();
+            let kstrip: Vec<f32> = (0..ctx * dh).map(|_| rng.normal_f32()).collect();
+            let scale = 1.0 / (dh as f32).sqrt();
+            for (slope, pos) in [(0.0f32, ctx - 1), (-0.25, ctx + 3)] {
+                let mut s_scalar = vec![0.0f32; ctx];
+                let mut s_disp = vec![0.0f32; ctx];
+                qk_dots_scalar(&q, &kstrip, scale, slope, pos, &mut s_scalar);
+                qk_dots(&q, &kstrip, scale, slope, pos, &mut s_disp);
+                for (j, (a, b)) in s_scalar.iter().zip(&s_disp).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "qk_dots dh={dh} ctx={ctx} slope={slope} j={j}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn av_accumulate_scalar_and_dispatched_are_bitwise_equal() {
+    let mut rng = Rng::new(72);
+    for dh in [3usize, 8, 12, 31, 32, 64, 96] {
+        for ctx in [1usize, 2, 9, 63, 128, 517] {
+            let w: Vec<f32> = (0..ctx).map(|_| rng.normal_f32()).collect();
+            let vstrip: Vec<f32> = (0..ctx * dh).map(|_| rng.normal_f32()).collect();
+            let base: Vec<f32> = (0..dh).map(|_| rng.normal_f32()).collect();
+            let mut out_scalar = base.clone();
+            let mut out_disp = base;
+            av_accumulate_scalar(&w, &vstrip, &mut out_scalar);
+            av_accumulate(&w, &vstrip, &mut out_disp);
+            for (d, (a, b)) in out_scalar.iter().zip(&out_disp).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "av_accumulate dh={dh} ctx={ctx} d={d}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_attention_is_bitwise_identical_to_sequential() {
+    // One big prefill chunk whose attention work crosses the pool
+    // fan-out threshold (Σ(p+1)·dh·heads·2 ≈ 20M ≥ 2²¹ at 280 tokens on
+    // opt-mini), against a sequential per-token loop whose per-step
+    // attention stays far below it — so on multicore machines the two
+    // sides run the threaded and sequential paths respectively (and on
+    // single-core machines both run sequentially: same contract).
+    let mut cfg = presets::by_name("opt-mini").unwrap();
+    cfg.family = Family::Llama; // RoPE makes positions load-bearing
+    cfg.vocab = 64;
+    cfg.max_seq = 300;
+    let model = Model::new(cfg.clone(), random_weights(&cfg, 81));
+    let bm = BackendModel::dense(&model);
+    let tokens: Vec<u32> = (0..280u32).map(|i| 3 + (11 * i) % 60).collect();
+
+    let mut seq_cache = KvCache::new(&cfg);
+    let mut seq_last = Vec::new();
+    for &t in &tokens {
+        seq_last = bm.decode_step(t, &mut seq_cache);
+    }
+
+    let mut chunk_cache = KvCache::new(&cfg);
+    let logits = bm.forward_chunk(&tokens, &mut chunk_cache);
+    assert_eq!(chunk_cache.len, seq_cache.len);
+    assert_eq!(
+        logits.row(tokens.len() - 1),
+        seq_last.as_slice(),
+        "threaded chunk attention diverged from the sequential loop"
+    );
+    // and the head-major caches hold identical state
+    for layer in 0..cfg.layers {
+        for p in [0usize, 1, 137, 279] {
+            assert_eq!(
+                chunk_cache.k_row(layer, p),
+                seq_cache.k_row(layer, p),
+                "K layer {layer} pos {p}"
+            );
+            assert_eq!(
+                chunk_cache.v_row(layer, p),
+                seq_cache.v_row(layer, p),
+                "V layer {layer} pos {p}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_ticks_match_sequential_all_families_dense_and_lut() {
+    // The engine's tick shape: one decoding sequence (chunk len 1) and
+    // one prefilling sequence (chunk len 3) advance through a single
+    // masked forward per tick, reusing one workspace — tokens and KV
+    // state must be bitwise those of per-sequence sequential serving.
+    for fam in [Family::Opt, Family::Llama, Family::Bloom] {
+        let model = tiny(fam, 83);
+        for quantized in [false, true] {
+            let bm = if quantized {
+                lut_backend(&model)
+            } else {
+                BackendModel::dense(&model)
+            };
+            let prompt_a: Vec<u32> = (0..10u32).map(|i| 3 + (7 * i) % 60).collect();
+            let prompt_b: Vec<u32> = (0..9u32).map(|i| 5 + (13 * i) % 55).collect();
+
+            // sequential reference
+            let mut ref_a = KvCache::new(&model.cfg);
+            let mut ref_b = KvCache::new(&model.cfg);
+            let mut ref_logits_a = Vec::new();
+            for &t in &prompt_a {
+                ref_logits_a = bm.decode_step(t, &mut ref_a);
+            }
+            let mut ref_logits_b = Vec::new();
+            for &t in &prompt_b {
+                ref_logits_b = bm.decode_step(t, &mut ref_b);
+            }
+
+            // mixed ticks: a decodes (greedy), b prefills 3 tokens/tick
+            let mut scratch = ForwardScratch::new();
+            let mut cache_a = KvCache::new(&model.cfg);
+            let mut cache_b = KvCache::new(&model.cfg);
+            bm.prefill(&prompt_a, &mut cache_a);
+            // a's decode stream starts from the greedy continuation of
+            // its prompt (same on both sides by construction)
+            let mut a_tok = gptqt::coordinator::sampler::argmax(&ref_logits_a);
+            let mut fed = 0usize;
+            let mut last_b = Vec::new();
+            let mut seq_a_cache = ref_a; // continue the reference side by side
+            while fed < prompt_b.len() {
+                let end = (fed + 3).min(prompt_b.len());
+                let chunks: [&[u32]; 2] = [std::slice::from_ref(&a_tok), &prompt_b[fed..end]];
+                let need = [true, end == prompt_b.len()];
+                let mut caches: Vec<&mut KvCache> = vec![&mut cache_a, &mut cache_b];
+                let out = bm.forward_chunks_masked_with(&chunks, &mut caches, &need, &mut scratch);
+                // reference: the same decode step, alone
+                let seq_a_logits = bm.decode_step(a_tok, &mut seq_a_cache);
+                let got_a = out[0].as_ref().expect("decoding sequence has logits");
+                assert_eq!(
+                    got_a, &seq_a_logits,
+                    "{fam:?} quantized={quantized}: mixed-tick decode logits diverged"
+                );
+                a_tok = gptqt::coordinator::sampler::argmax(got_a);
+                if let Some(l) = &out[1] {
+                    last_b = l.clone();
+                }
+                fed = end;
+            }
+            assert_eq!(
+                last_b, ref_logits_b,
+                "{fam:?} quantized={quantized}: prefilled-in-ticks logits diverged"
+            );
+            assert_eq!(cache_b.len, prompt_b.len());
+            for layer in 0..model.cfg.layers {
+                for p in 0..cache_b.len {
+                    assert_eq!(
+                        cache_b.k_row(layer, p),
+                        ref_b.k_row(layer, p),
+                        "{fam:?} quantized={quantized}: K layer {layer} pos {p}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_across_ragged_shapes_is_invisible() {
+    // Grow the workspace on a wide call, then run narrower and wider
+    // calls through the same workspace — results must be bitwise those
+    // of fresh-workspace calls (buffer contents never leak through).
+    let model = tiny(Family::Opt, 85);
+    let bm = BackendModel::dense(&model);
+    let shapes: [&[&[u32]]; 3] = [
+        &[&[1, 2, 3, 4, 5, 6, 7], &[8, 9, 10], &[11, 12]],
+        &[&[13]],
+        &[&[14, 15], &[16, 17, 18, 19]],
+    ];
+    let mut reused = ForwardScratch::new();
+    let mut caches_reused: Vec<KvCache> = (0..4).map(|_| KvCache::new(&model.cfg)).collect();
+    let mut caches_fresh: Vec<KvCache> = (0..4).map(|_| KvCache::new(&model.cfg)).collect();
+    for chunks in shapes {
+        let nb = chunks.len();
+        let mut refs_r: Vec<&mut KvCache> = caches_reused.iter_mut().take(nb).collect();
+        let out_r = bm.forward_chunks_refs_with(chunks, &mut refs_r, &mut reused);
+        let mut refs_f: Vec<&mut KvCache> = caches_fresh.iter_mut().take(nb).collect();
+        let out_f = bm.forward_chunks_refs(chunks, &mut refs_f);
+        assert_eq!(out_r, out_f, "workspace reuse changed logits (batch {nb})");
+    }
+}
+
+#[test]
+fn prefill_chunked_stays_bitwise_on_head_major_cache() {
+    // the historical pin, re-run over the new layout for every family:
+    // chunked prefill == sequential decode, logits and cache state
+    for fam in [Family::Opt, Family::Llama, Family::Bloom] {
+        let model = tiny(fam, 87);
+        let bm = BackendModel::dense(&model);
+        let prompt: Vec<u32> = (0..23u32).map(|i| 2 + (5 * i) % 60).collect();
+        let mut seq_cache = KvCache::new(&model.cfg);
+        let mut seq_logits = Vec::new();
+        for &t in &prompt {
+            seq_logits = bm.decode_step(t, &mut seq_cache);
+        }
+        for chunk in [1usize, 4, 23] {
+            let mut cache = KvCache::new(&model.cfg);
+            let logits = bm.prefill_chunked(&prompt, &mut cache, chunk);
+            assert_eq!(logits, seq_logits, "{fam:?} chunk {chunk}");
+            for layer in 0..model.cfg.layers {
+                assert_eq!(
+                    cache.k_row(layer, prompt.len() - 1),
+                    seq_cache.k_row(layer, prompt.len() - 1),
+                    "{fam:?} chunk {chunk}: last K row"
+                );
+            }
+        }
+    }
+}

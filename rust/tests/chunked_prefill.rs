@@ -102,14 +102,18 @@ fn kv_cache_state_is_identical_after_ragged_chunks() {
         assert_eq!(cache.len, fed, "cache length after ragged chunk of {sz}");
     }
     assert_eq!(cache.len, seq_cache.len);
-    for (layer, (k, k_seq)) in cache.k.iter().zip(&seq_cache.k).enumerate() {
+    for layer in 0..m.cfg.layers {
         for p in 0..cache.len {
-            assert_eq!(k.row(p), k_seq.row(p), "K row {p} differs in layer {layer}");
-        }
-    }
-    for (layer, (v, v_seq)) in cache.v.iter().zip(&seq_cache.v).enumerate() {
-        for p in 0..cache.len {
-            assert_eq!(v.row(p), v_seq.row(p), "V row {p} differs in layer {layer}");
+            assert_eq!(
+                cache.k_row(layer, p),
+                seq_cache.k_row(layer, p),
+                "K row {p} differs in layer {layer}"
+            );
+            assert_eq!(
+                cache.v_row(layer, p),
+                seq_cache.v_row(layer, p),
+                "V row {p} differs in layer {layer}"
+            );
         }
     }
     // continuation from the chunk-built cache matches the sequential one
@@ -184,9 +188,13 @@ fn masked_forward_skips_logits_but_advances_caches_identically() {
     let a_logits = bm.decode_step(50, &mut ref_a);
     bm.forward_chunk(&prompt_b[..4], &mut ref_b);
     assert_eq!(masked[0].as_ref().unwrap(), &a_logits);
-    for (k, k_ref) in cache_b.k.iter().zip(&ref_b.k) {
+    for layer in 0..m.cfg.layers {
         for p in 0..4 {
-            assert_eq!(k.row(p), k_ref.row(p), "masked K row {p} diverged");
+            assert_eq!(
+                cache_b.k_row(layer, p),
+                ref_b.k_row(layer, p),
+                "masked K row {p} diverged in layer {layer}"
+            );
         }
     }
     // and the masked sequence continues bitwise-identically
