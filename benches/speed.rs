@@ -11,6 +11,11 @@
 //! and (at the 1024+ points) the vectorized head-major attention
 //! subsystem.
 //!
+//! The prefix-cache section serves one prompt twice through an engine
+//! (cache enabled) and records the named `serve prefix cold` /
+//! `serve prefix_hit` TTFT entries — the trend pair for the
+//! prefix-reuse win.
+//!
 //! `--fast` shrinks the ladder; `--smoke` is the CI profile (opt-nano
 //! only, a handful of tokens, deterministic seeds) and is what the
 //! bench-smoke job runs. Both normal and smoke runs write the
@@ -20,8 +25,8 @@
 use gptqt::bench::{write_bench_json, BenchRecord};
 use gptqt::coordinator::SchedulePolicyKind;
 use gptqt::eval::speed::{
-    build_variant, measure_decode, measure_decode_batch, measure_prefill, measure_streaming,
-    SpeedVariant,
+    build_variant, measure_decode, measure_decode_batch, measure_prefill, measure_prefix_ttft,
+    measure_streaming, SpeedVariant,
 };
 use gptqt::model::init::random_weights;
 use gptqt::model::{load_or_init, presets, Model};
@@ -235,6 +240,47 @@ fn main() {
         println!(
             "{:<10} {:>10.0} tok/s   ttft {:>8.2} ms   inter-token {:>7.3} ms   ({} tokens)",
             klabel, r.tokens_per_sec, r.ttft_ms, r.inter_token_ms, r.tokens,
+        );
+    }
+
+    // ---- prefix cache: cold vs hit TTFT through the engine -------------
+    // The same prompt served twice; the second admission adopts the
+    // cached paged-KV blocks and computes only the unmatched tail, so
+    // `serve prefix_hit` vs `serve prefix cold` is the trajectory pair
+    // for the prefix-cache win.
+    let (pc_model, pc_prompt, pc_gen) = if smoke {
+        ("opt-nano", 24, 4)
+    } else if fast {
+        ("opt-nano", 64, 8)
+    } else {
+        ("opt-mini", 128, 16)
+    };
+    let (model, _) = load_or_init(pc_model, "artifacts", 0).expect("preset");
+    println!(
+        "\n=== bench suite: prefix cache — cold vs hit TTFT ({pc_model}, prompt {pc_prompt}) ==="
+    );
+    for variant in [SpeedVariant::Full, SpeedVariant::GptqtLut { bits: 3 }] {
+        let bm = build_variant(&model, variant, 0);
+        let r = measure_prefix_ttft(&model.cfg, bm, variant, pc_prompt, pc_gen, 7);
+        records.push(BenchRecord {
+            name: format!("serve prefix cold {pc_model} {}", variant.label()),
+            tokens_per_sec: pc_prompt as f64 * 1e3 / r.cold_ttft_ms.max(1e-9),
+            ns_per_call: r.cold_ttft_ms * 1e6,
+        });
+        records.push(BenchRecord {
+            name: format!("serve prefix_hit {pc_model} {}", variant.label()),
+            tokens_per_sec: pc_prompt as f64 * 1e3 / r.hit_ttft_ms.max(1e-9),
+            ns_per_call: r.hit_ttft_ms * 1e6,
+        });
+        println!(
+            "{:<18} cold ttft {:>8.2} ms ({:>4} prefill toks)   hit ttft {:>8.2} ms \
+             ({:>2} prefill toks, hits {})",
+            variant.label(),
+            r.cold_ttft_ms,
+            r.prefill_tokens_cold,
+            r.hit_ttft_ms,
+            r.prefill_tokens_hit,
+            r.hits,
         );
     }
 

@@ -48,6 +48,24 @@ impl Batcher {
         running: usize,
         kv: &mut PagedKvManager,
     ) -> Vec<Request> {
+        self.admit_with(queue, running, kv, &mut |req, kv| {
+            kv.admit(req.id, req.prompt.len(), req.max_tokens())
+        })
+    }
+
+    /// [`Batcher::admit`] with a pluggable per-request KV admission
+    /// attempt — the engine passes a closure that consults the prefix
+    /// cache first (shared admission, pressure eviction) and falls back
+    /// to a cold [`PagedKvManager::admit`]. The closure must either
+    /// admit `req.id` into `kv` and return true, or leave `kv` untouched
+    /// for that sequence and return false.
+    pub fn admit_with(
+        &self,
+        queue: &RequestQueue,
+        running: usize,
+        kv: &mut PagedKvManager,
+        try_admit: &mut dyn FnMut(&Request, &mut PagedKvManager) -> bool,
+    ) -> Vec<Request> {
         let mut admitted = Vec::new();
         let mut prefill_budget = self.cfg.prefill_token_budget;
         while running + admitted.len() < self.cfg.max_batch {
@@ -57,7 +75,7 @@ impl Batcher {
                 let _ = queue.push(req);
                 break;
             }
-            if !kv.admit(req.id, req.prompt.len(), req.max_tokens()) {
+            if !try_admit(&req, kv) {
                 // no KV headroom: park it and stop admitting (anything
                 // later is same or lower priority)
                 let _ = queue.push(req);

@@ -12,6 +12,7 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::kv_pool::PagedKvManager;
 use super::metrics::Metrics;
 use super::policy::{SchedulePolicy, TickState};
+use super::prefix_cache::{AdmitOutcome, PrefixCache};
 use super::queue::{RequestQueue, SubmitError};
 use super::request::{FinishReason, Request, Response};
 use super::sampler::Sampler;
@@ -28,8 +29,10 @@ use std::time::Instant;
 /// CPU, a real batched PJRT ABI) plug in by implementing this trait —
 /// `engine.rs` does not change.
 pub trait Backend {
-    /// Per-sequence attention-cache type this backend owns.
-    type Kv;
+    /// Per-sequence attention-cache type this backend owns (`'static`
+    /// so the engine can recycle its borrow buffers across ticks and
+    /// the prefix cache can hold snapshots for arbitrary lifetimes).
+    type Kv: 'static;
 
     /// Reusable forward workspace, owned by the engine and threaded
     /// through every [`Backend::forward_tick`] — the CPU path persists
@@ -68,6 +71,23 @@ pub trait Backend {
         true
     }
 
+    /// Trimmed, standalone copy of the first `tokens` positions of a
+    /// cache — what the prefix cache retains after a prefill completes.
+    /// Backends that cannot export their KV (no readback path) keep the
+    /// default `None`, which disables prefix caching for them without
+    /// touching the engine.
+    fn snapshot_kv_prefix(&self, _cache: &Self::Kv, _tokens: usize) -> Option<Self::Kv> {
+        None
+    }
+
+    /// Import `tokens` positions from a snapshot into a freshly created
+    /// cache (prefix-cache hit). Must be bitwise — a hit stream has to
+    /// match a cold stream exactly. Returning `false` (the default)
+    /// makes the engine fall back to prefilling the whole prompt.
+    fn import_kv_prefix(&self, _dst: &mut Self::Kv, _src: &Self::Kv, _tokens: usize) -> bool {
+        false
+    }
+
     /// Human label (which Table-IV row this backend realizes).
     fn label(&self) -> &'static str;
 }
@@ -97,6 +117,18 @@ impl Backend for CpuBackend {
         scratch: &mut ForwardScratch,
     ) -> Result<Vec<Option<Vec<f32>>>> {
         Ok(self.0.forward_chunks_masked_with(chunks, caches, need, scratch))
+    }
+
+    fn snapshot_kv_prefix(&self, cache: &KvCache, tokens: usize) -> Option<KvCache> {
+        Some(cache.prefix_clone(tokens))
+    }
+
+    fn import_kv_prefix(&self, dst: &mut KvCache, src: &KvCache, tokens: usize) -> bool {
+        if dst.len != 0 || tokens > src.len || tokens > dst.remaining() {
+            return false;
+        }
+        dst.copy_prefix_from(src, tokens);
+        true
     }
 
     fn label(&self) -> &'static str {
@@ -154,11 +186,14 @@ struct Running<K> {
     req: Request,
     sampler: Sampler,
     cache: K,
-    /// next prompt index to feed (== prompt.len() once prefilled)
+    /// next prompt index to feed (== prompt.len() once prefilled); a
+    /// prefix-cache hit starts at its matched length instead of 0
     prompt_idx: usize,
     generated: Vec<u32>,
     admitted_at: Instant,
     first_token_at: Option<Instant>,
+    /// admitted via a prefix-cache hit (splits the TTFT histograms)
+    prefix_hit: bool,
 }
 
 impl<K> Running<K> {
@@ -178,6 +213,9 @@ pub struct Engine<B: Backend> {
     pub queue: Arc<RequestQueue>,
     running: Vec<Running<B::Kv>>,
     kv: PagedKvManager,
+    /// Content-addressed prompt-prefix cache; admission consults it so a
+    /// hit adopts cached blocks instead of re-prefilling.
+    prefix: PrefixCache<B::Kv>,
     pub metrics: Metrics,
     /// Events produced outside `step` (cancellations), drained by the
     /// next `step` so every event still flows through one stream.
@@ -186,6 +224,15 @@ pub struct Engine<B: Backend> {
     /// [`Backend::forward_tick`] — steady-state ticks reuse its buffers
     /// instead of reallocating activations per layer per row.
     scratch: B::Scratch,
+    /// Per-tick buffers, persisted so steady-state ticks allocate
+    /// nothing: token chunks, the needs-logits mask, and the borrow
+    /// vectors handed to [`Backend::forward_tick`]. The borrow vectors
+    /// are stored with a `'static` element type while empty and
+    /// re-borrowed per tick (see `take_slice_buf` / `take_mut_buf`).
+    tick_chunks: Vec<Vec<u32>>,
+    tick_need: Vec<bool>,
+    tick_chunk_refs: Vec<&'static [u32]>,
+    tick_caches: Vec<&'static mut B::Kv>,
 }
 
 impl<B: Backend> Engine<B> {
@@ -207,6 +254,7 @@ impl<B: Backend> Engine<B> {
             max_batch: cfg.max_batch,
             prefill_token_budget: cfg.block_size * cfg.max_batch * 4,
         });
+        let prefix = PrefixCache::new(cfg.prefix.clone());
         Engine {
             backend,
             cfg,
@@ -215,9 +263,14 @@ impl<B: Backend> Engine<B> {
             queue,
             running: Vec::new(),
             kv,
+            prefix,
             metrics: Metrics::new(),
             pending: Vec::new(),
             scratch: B::Scratch::default(),
+            tick_chunks: Vec::new(),
+            tick_need: Vec::new(),
+            tick_chunk_refs: Vec::new(),
+            tick_caches: Vec::new(),
         }
     }
 
@@ -330,11 +383,30 @@ impl<B: Backend> Engine<B> {
         }
 
         // ---- admission -------------------------------------------------
-        for req in self.batcher.admit(&self.queue, self.running.len(), &mut self.kv) {
+        // Cache-aware: the closure consults the prefix cache, which
+        // either admits sharing cached blocks (a hit — recorded as an
+        // import plan applied when the Running entry is built) or falls
+        // back to a cold admit, evicting LRU entries under pool
+        // pressure if the policy allows.
+        let mut plans: Vec<(u64, usize, Arc<B::Kv>)> = Vec::new();
+        let admitted = {
+            let Engine { batcher, queue, kv, prefix, metrics, running, .. } = &mut *self;
+            batcher.admit_with(&**queue, running.len(), kv, &mut |req, kv| {
+                match prefix.try_admit(req, kv, metrics) {
+                    AdmitOutcome::Rejected => false,
+                    AdmitOutcome::Cold => true,
+                    AdmitOutcome::Hit { matched, kv: snap } => {
+                        plans.push((req.id, matched, snap));
+                        true
+                    }
+                }
+            })
+        };
+        for req in admitted {
             let waited = req.arrived.elapsed();
             if req.deadline.is_some_and(|d| waited >= d) {
                 // expired while queued; admission committed KV blocks —
-                // hand them straight back
+                // hand them straight back (shared refs included)
                 self.kv.release(req.id);
                 self.metrics.record_expired();
                 events.push(Event::Finished(Response {
@@ -349,14 +421,29 @@ impl<B: Backend> Engine<B> {
             }
             self.metrics.record_queue(waited);
             events.push(Event::Started { id: req.id, queue_secs: waited.as_secs_f64() });
-            let cache = self.backend.new_cache()?;
+            let mut cache = self.backend.new_cache()?;
+            let mut prompt_idx = 0;
+            let mut prefix_hit = false;
+            if let Some(pos) = plans.iter().position(|(id, _, _)| *id == req.id) {
+                let (_, matched, snap) = plans.swap_remove(pos);
+                if self.backend.import_kv_prefix(&mut cache, &snap, matched) {
+                    // the matched prefix's KV is already in place:
+                    // prefill resumes at `matched`
+                    prompt_idx = matched;
+                    prefix_hit = true;
+                }
+                // else: backend cannot import — prefill everything; the
+                // shared block accounting still holds (physical KV is
+                // per-sequence, blocks are capacity bookkeeping)
+            }
             self.running.push(Running {
                 sampler: Sampler::new(req.sampling),
                 cache,
-                prompt_idx: 0,
+                prompt_idx,
                 generated: Vec::new(),
                 admitted_at: Instant::now(),
                 first_token_at: None,
+                prefix_hit,
                 req,
             });
         }
@@ -373,44 +460,81 @@ impl<B: Backend> Engine<B> {
             self.metrics.record_tick_chunk(chunk_len);
 
             let t0 = Instant::now();
-            let chunks: Vec<Vec<u32>> = self
+            // per-tick buffers persist across ticks: cleared and refilled
+            // in place, so a steady-state tick performs no heap
+            // allocation outside the kernels (pinned by
+            // eval::speed::measure_decode_batch's allocation probe)
+            let nb = self.running.len();
+            for c in &mut self.tick_chunks {
+                c.clear();
+            }
+            while self.tick_chunks.len() < nb {
+                self.tick_chunks.push(Vec::new());
+            }
+            self.tick_need.clear();
+            for (i, run) in self.running.iter().enumerate() {
+                let chunk = &mut self.tick_chunks[i];
+                if run.prefilling() {
+                    let end = (run.prompt_idx + chunk_len).min(run.req.prompt.len());
+                    chunk.extend_from_slice(&run.req.prompt[run.prompt_idx..end]);
+                } else {
+                    chunk.push(*run.generated.last().expect("decoding sequence has a token"));
+                }
+                // logits are needed only where something will sample:
+                // decoding sequences and prompts completing this tick
+                self.tick_need.push(run.prompt_idx + chunk.len() >= run.req.prompt.len());
+            }
+            // prompt tokens actually entering the forward pass this tick
+            // (prefix-cache hits start past their matched prefix, so the
+            // skipped fraction is visible as reused vs computed tokens)
+            let prefill_toks: u64 = self
                 .running
                 .iter()
-                .map(|run| {
-                    if run.prefilling() {
-                        let end = (run.prompt_idx + chunk_len).min(run.req.prompt.len());
-                        run.req.prompt[run.prompt_idx..end].to_vec()
-                    } else {
-                        vec![*run.generated.last().expect("decoding sequence has a token")]
-                    }
-                })
-                .collect();
-            // logits are needed only where something will sample:
-            // decoding sequences and prompts completing this tick
-            let need: Vec<bool> = self
-                .running
-                .iter()
-                .zip(&chunks)
-                .map(|(run, chunk)| run.prompt_idx + chunk.len() >= run.req.prompt.len())
-                .collect();
-            let chunk_refs: Vec<&[u32]> = chunks.iter().map(|c| c.as_slice()).collect();
-            let mut caches: Vec<&mut B::Kv> =
-                self.running.iter_mut().map(|r| &mut r.cache).collect();
-            let all_logits =
-                self.backend.forward_tick(&chunk_refs, &mut caches, &need, &mut self.scratch)?;
-            drop(caches);
+                .zip(&self.tick_chunks)
+                .filter(|(run, _)| run.prefilling())
+                .map(|(_, c)| c.len() as u64)
+                .sum();
+            self.metrics.prefill_tokens_computed += prefill_toks;
+
+            let mut chunk_refs = take_slice_buf(&mut self.tick_chunk_refs);
+            chunk_refs.extend(self.tick_chunks[..nb].iter().map(|c| c.as_slice()));
+            let mut caches = take_mut_buf(&mut self.tick_caches);
+            caches.extend(self.running.iter_mut().map(|r| &mut r.cache));
+            let result =
+                self.backend.forward_tick(&chunk_refs, &mut caches, &self.tick_need, &mut self.scratch);
+            stash_mut_buf(&mut self.tick_caches, caches);
+            stash_slice_buf(&mut self.tick_chunk_refs, chunk_refs);
+            let all_logits = result?;
 
             // sample: sequences that just completed their prompt emit
             // their first token, decoding ones their next — mid-prompt
             // sequences only advanced their KV cache
-            let seqs = chunks.len();
+            let seqs = nb;
             let mut emitted = 0usize;
-            for ((run, chunk), logits) in self.running.iter_mut().zip(&chunks).zip(&all_logits) {
+            for ((run, chunk), logits) in
+                self.running.iter_mut().zip(&self.tick_chunks).zip(&all_logits)
+            {
                 let sample_from = if run.prefilling() {
                     run.prompt_idx += chunk.len();
                     if run.prefilling() {
                         None
                     } else {
+                        // the prompt's KV is fully written and the first
+                        // decode token's is not yet — the exact state the
+                        // prefix cache snapshots
+                        if self.prefix.wants(&run.req.prompt) {
+                            if let Some(snap) =
+                                self.backend.snapshot_kv_prefix(&run.cache, run.req.prompt.len())
+                            {
+                                self.prefix.insert(
+                                    &run.req.prompt,
+                                    run.req.id,
+                                    &mut self.kv,
+                                    Arc::new(snap),
+                                    &mut self.metrics,
+                                );
+                            }
+                        }
                         Some(logits.as_ref().expect("completing chunk has logits"))
                     }
                 } else {
@@ -423,7 +547,9 @@ impl<B: Backend> Engine<B> {
                     let t_emit = Instant::now();
                     if run.first_token_at.is_none() {
                         run.first_token_at = Some(t_emit);
-                        self.metrics.record_ttft(t_emit.duration_since(run.req.arrived));
+                        let ttft = t_emit.duration_since(run.req.arrived);
+                        self.metrics.record_ttft(ttft);
+                        self.metrics.record_ttft_admission(ttft, run.prefix_hit);
                     }
                     events.push(Event::Token { id: run.req.id, token: tok, t_emit });
                     emitted += 1;
@@ -499,6 +625,18 @@ impl<B: Backend> Engine<B> {
         self.kv.check_invariants()
     }
 
+    /// The prompt-prefix cache (tests inspect entry counts).
+    pub fn prefix_cache(&self) -> &PrefixCache<B::Kv> {
+        &self.prefix
+    }
+
+    /// Drop every cached prefix, unpinning its blocks (tests assert the
+    /// pool drains back to full after churn).
+    pub fn clear_prefix_cache(&mut self) {
+        let Engine { prefix, kv, .. } = self;
+        prefix.clear(kv);
+    }
+
     /// Paged-KV pool accounting (tests assert cancelled sequences
     /// return every block).
     pub fn kv(&self) -> &PagedKvManager {
@@ -514,6 +652,43 @@ impl<B: Backend> Engine<B> {
     pub fn into_metrics(self) -> Metrics {
         self.metrics
     }
+}
+
+// ---- per-tick borrow-buffer recycling ---------------------------------
+//
+// `forward_tick` takes `&[&[u32]]` and `&mut [&mut Kv]` — vectors of
+// borrows whose lifetimes are local to one `step`. To avoid allocating
+// them every tick, the engine keeps the *allocations* alive in fields
+// typed with `'static` elements and re-borrows them per tick. The
+// transmutes only ever see **empty** vectors (asserted), so no reference
+// with the wrong lifetime ever exists — only a raw capacity is recycled
+// between two layout-identical types that differ in lifetime alone.
+
+fn take_slice_buf<'a>(buf: &mut Vec<&'static [u32]>) -> Vec<&'a [u32]> {
+    let v = std::mem::take(buf);
+    debug_assert!(v.is_empty());
+    // SAFETY: `v` is empty; `&'static [u32]` and `&'a [u32]` are
+    // layout-identical, so only the allocation is reinterpreted.
+    unsafe { std::mem::transmute::<Vec<&'static [u32]>, Vec<&'a [u32]>>(v) }
+}
+
+fn stash_slice_buf<'a>(buf: &mut Vec<&'static [u32]>, mut v: Vec<&'a [u32]>) {
+    v.clear();
+    // SAFETY: cleared above — no `'a` reference survives the transmute.
+    *buf = unsafe { std::mem::transmute::<Vec<&'a [u32]>, Vec<&'static [u32]>>(v) };
+}
+
+fn take_mut_buf<'a, K: 'static>(buf: &mut Vec<&'static mut K>) -> Vec<&'a mut K> {
+    let v = std::mem::take(buf);
+    debug_assert!(v.is_empty());
+    // SAFETY: `v` is empty; the element types differ only in lifetime.
+    unsafe { std::mem::transmute::<Vec<&'static mut K>, Vec<&'a mut K>>(v) }
+}
+
+fn stash_mut_buf<'a, K: 'static>(buf: &mut Vec<&'static mut K>, mut v: Vec<&'a mut K>) {
+    v.clear();
+    // SAFETY: cleared above — no `'a` reference survives the transmute.
+    *buf = unsafe { std::mem::transmute::<Vec<&'a mut K>, Vec<&'static mut K>>(v) };
 }
 
 #[cfg(test)]

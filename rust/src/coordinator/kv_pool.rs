@@ -1,14 +1,33 @@
-//! Paged KV-cache manager — vLLM-style block accounting.
+//! Paged KV-cache manager — vLLM-style block accounting with refcounted
+//! copy-on-write sharing.
 //!
 //! The pool owns `total_blocks` fixed-size blocks; a sequence holds a
-//! block table and grows it one block at a time as it decodes. Admission
-//! control asks [`PagedKvManager::can_admit`] with the request's worst-
-//! case token need so a decoding batch can never deadlock on blocks.
+//! block table and grows it one block at a time as it decodes. Blocks are
+//! refcounted so the prefix cache can share an already-prefilled prefix
+//! across sequences: [`PagedKvManager::admit_shared`] adopts cached
+//! blocks by reference, and a sequence that appends into a block whose
+//! refcount is above one copies it first (copy-on-write) so writers never
+//! alias. The prefix cache itself holds blocks alive through
+//! [`PagedKvManager::pin_prefix`] / [`PagedKvManager::unpin_prefix`].
 //!
-//! Invariants (property-tested below):
-//! * a block is owned by at most one sequence at a time,
-//! * `free + Σ allocated == total`,
-//! * freeing a sequence returns exactly its blocks.
+//! Admission control asks [`PagedKvManager::can_admit`] (or
+//! [`PagedKvManager::can_admit_shared`]) with the request's worst-case
+//! token need so a decoding batch can never deadlock on blocks. With
+//! sharing, "committed blocks" is no longer meaningful (a shared block is
+//! one allocation serving many tables), so the guarantee is kept in terms
+//! of *future allocations*: each sequence carries a `pending` budget — the
+//! number of free-list pops it may still perform (boundary growth plus at
+//! most one copy-on-write of a partially-filled shared tail block) — and
+//! the pool maintains `Σ pending ≤ free`. Every allocation decrements both
+//! sides, frees only grow the right side, and admission/pinning refuse
+//! whenever they would break the inequality, so a pending allocation can
+//! always be satisfied.
+//!
+//! Invariants (property-tested below, see [`PagedKvManager::check_invariants`]):
+//! * `refs[b] == (occurrences of b across tables) + pins[b]` for every block,
+//! * the free list holds exactly the blocks with `refs == 0`, each once,
+//! * `pending_total == Σ pending` and `pending_total ≤ free`,
+//! * releasing every sequence and unpinning every prefix frees the pool.
 
 use std::collections::HashMap;
 
@@ -19,12 +38,19 @@ pub type SeqId = u64;
 pub struct PagedKvManager {
     block_size: usize,
     free: Vec<u32>,
+    /// per-block reference count: table occurrences + pins
+    refs: Vec<u32>,
+    /// per-block prefix-cache pin count (subset of `refs`)
+    pins: Vec<u32>,
     tables: HashMap<SeqId, Vec<u32>>,
     /// tokens currently stored per sequence
     lens: HashMap<SeqId, usize>,
-    /// worst-case block commitment per sequence (admission guarantee)
+    /// worst-case table length (blocks) per sequence (admission guarantee)
     commits: HashMap<SeqId, usize>,
-    committed: usize,
+    /// free-list allocations each sequence may still perform
+    pending: HashMap<SeqId, usize>,
+    pending_total: usize,
+    cow_copies: u64,
     total: usize,
 }
 
@@ -34,10 +60,14 @@ impl PagedKvManager {
         PagedKvManager {
             block_size,
             free: (0..total_blocks as u32).rev().collect(),
+            refs: vec![0; total_blocks],
+            pins: vec![0; total_blocks],
             tables: HashMap::new(),
             lens: HashMap::new(),
             commits: HashMap::new(),
-            committed: 0,
+            pending: HashMap::new(),
+            pending_total: 0,
+            cow_copies: 0,
             total: total_blocks,
         }
     }
@@ -58,11 +88,71 @@ impl PagedKvManager {
         tokens.div_ceil(self.block_size)
     }
 
-    /// Worst-case admission check for a request needing `max_tokens` —
-    /// against *committed* blocks (every running sequence's worst case),
-    /// so an admitted batch can always decode to completion.
+    /// Number of blocks covering `tokens` tokens (public for the prefix
+    /// cache, which pins exactly the blocks covering a cached prompt).
+    pub fn blocks_covering(&self, tokens: usize) -> usize {
+        self.blocks_for(tokens)
+    }
+
+    /// Tokens currently accounted for a sequence.
+    pub fn seq_tokens(&self, seq: SeqId) -> Option<usize> {
+        self.lens.get(&seq).copied()
+    }
+
+    /// Total copy-on-write block copies performed so far.
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Reference count of a block (tables + pins). Test/debug aid.
+    pub fn block_refs(&self, block: u32) -> u32 {
+        self.refs[block as usize]
+    }
+
+    /// Number of distinct blocks currently pinned by the prefix cache.
+    pub fn pinned_blocks(&self) -> usize {
+        self.pins.iter().filter(|&&p| p > 0).count()
+    }
+
+    /// Worst-case admission check for a request needing `max_tokens`.
+    /// The request would add `blocks_for(max_tokens)` future allocations;
+    /// it fits iff the pool can still promise every pending allocation.
     pub fn can_admit(&self, max_tokens: usize) -> bool {
-        self.committed + self.blocks_for(max_tokens.max(1)) <= self.total
+        self.blocks_for(max_tokens.max(1)) + self.pending_total <= self.free.len()
+    }
+
+    /// Like [`Self::can_admit`] but for a request that will adopt a cached
+    /// prefix of `shared_tokens` tokens. Fully-shared blocks are never
+    /// written by the new sequence, so they cost it no allocations; a
+    /// partially-filled shared tail block still counts (it is copied on
+    /// write).
+    pub fn can_admit_shared(&self, max_tokens: usize, shared_tokens: usize) -> bool {
+        let worst = self.blocks_for(max_tokens.max(1));
+        let shared_full = shared_tokens / self.block_size;
+        worst.saturating_sub(shared_full) + self.pending_total <= self.free.len()
+    }
+
+    /// Pop a free block on behalf of `seq`, consuming one unit of its
+    /// pending-allocation budget. The `Σ pending ≤ free` invariant
+    /// guarantees the pop succeeds whenever the budget is positive.
+    fn take_free_for(&mut self, seq: SeqId) -> u32 {
+        let p = self.pending.get_mut(&seq).expect("seq has no allocation budget");
+        assert!(*p > 0, "seq {seq} exceeded its pending-allocation budget");
+        *p -= 1;
+        self.pending_total -= 1;
+        let b = self.free.pop().expect("pending accounting guarantees a free block");
+        debug_assert_eq!(self.refs[b as usize], 0);
+        self.refs[b as usize] = 1;
+        b
+    }
+
+    fn deref_block(&mut self, b: u32) {
+        let r = &mut self.refs[b as usize];
+        assert!(*r > 0, "block {b} refcount underflow");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(b);
+        }
     }
 
     /// Admit a sequence, committing its worst case and reserving blocks
@@ -75,40 +165,143 @@ impl PagedKvManager {
         }
         let worst = self.blocks_for(max_tokens.max(1));
         let need = self.blocks_for(prompt_tokens.max(1)).min(worst);
-        let blocks: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
-        self.committed += worst;
         self.commits.insert(seq, worst);
-        self.tables.insert(seq, blocks);
+        self.pending.insert(seq, worst);
+        self.pending_total += worst;
+        let mut table = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.take_free_for(seq);
+            table.push(b);
+        }
+        self.tables.insert(seq, table);
         self.lens.insert(seq, prompt_tokens);
         true
     }
 
-    /// Account one generated token; allocates a new block on boundary.
-    /// Returns false when the sequence would exceed its admission-time
-    /// commitment (the engine's length guard failed) — never on pool
-    /// exhaustion, which commitment accounting makes impossible.
-    pub fn append_token(&mut self, seq: SeqId) -> bool {
-        let len = self.lens.get_mut(&seq).expect("unknown seq");
-        let need = (*len + 1).div_ceil(self.block_size);
-        if need > self.commits[&seq] {
+    /// Admit a sequence that adopts `shared` — the cached blocks covering
+    /// the first `shared_tokens` tokens of its prompt — by reference.
+    /// Fully-covered shared blocks are read-only forever (prefill resumes
+    /// at `shared_tokens`); if the prompt extends into a partially-filled
+    /// shared tail block, that block is copied-on-write immediately so the
+    /// new sequence prefills into its own copy. Remaining prompt blocks
+    /// are reserved upfront as in [`Self::admit`]. Returns false (no side
+    /// effects) if the private worst case doesn't fit.
+    pub fn admit_shared(
+        &mut self,
+        seq: SeqId,
+        prompt_tokens: usize,
+        max_tokens: usize,
+        shared: &[u32],
+        shared_tokens: usize,
+    ) -> bool {
+        assert!(!self.tables.contains_key(&seq), "seq {seq} already admitted");
+        assert!(shared_tokens > 0 && shared_tokens <= prompt_tokens);
+        assert!(prompt_tokens <= max_tokens);
+        assert_eq!(shared.len(), self.blocks_for(shared_tokens));
+        if !self.can_admit_shared(max_tokens, shared_tokens) {
             return false;
         }
-        let table = self.tables.get_mut(&seq).unwrap();
+        let worst = self.blocks_for(max_tokens.max(1));
+        let shared_full = shared_tokens / self.block_size;
+        let mut table: Vec<u32> = shared.to_vec();
+        for &b in shared {
+            debug_assert!(self.refs[b as usize] > 0, "shared block {b} is free");
+            self.refs[b as usize] += 1;
+        }
+        self.commits.insert(seq, worst);
+        self.pending.insert(seq, worst - shared_full);
+        self.pending_total += worst - shared_full;
+        self.lens.insert(seq, prompt_tokens);
+        if prompt_tokens > shared_tokens && shared_tokens % self.block_size != 0 {
+            let old = *table.last().unwrap();
+            let nb = self.take_free_for(seq);
+            *table.last_mut().unwrap() = nb;
+            self.deref_block(old);
+            self.cow_copies += 1;
+        }
+        let need = self.blocks_for(prompt_tokens.max(1)).min(worst);
         while table.len() < need {
-            let b = self.free.pop().expect("commitment guarantees a free block");
+            let b = self.take_free_for(seq);
             table.push(b);
         }
-        *len += 1;
+        self.tables.insert(seq, table);
         true
     }
 
-    /// Release all blocks (and the worst-case commitment) of a sequence.
+    /// Account one generated token; allocates a new block on boundary and
+    /// copies the target block first when it is shared (refcount > 1).
+    /// Returns false when the sequence would exceed its admission-time
+    /// commitment (the engine's length guard failed) — never on pool
+    /// exhaustion, which the pending-allocation accounting makes
+    /// impossible.
+    pub fn append_token(&mut self, seq: SeqId) -> bool {
+        let len = *self.lens.get(&seq).expect("unknown seq");
+        let need = (len + 1).div_ceil(self.block_size);
+        if need > self.commits[&seq] {
+            return false;
+        }
+        if self.tables[&seq].len() < need {
+            let b = self.take_free_for(seq);
+            self.tables.get_mut(&seq).unwrap().push(b);
+        }
+        let write_idx = len / self.block_size;
+        let cur = self.tables[&seq][write_idx];
+        if self.refs[cur as usize] > 1 {
+            let nb = self.take_free_for(seq);
+            self.tables.get_mut(&seq).unwrap()[write_idx] = nb;
+            self.deref_block(cur);
+            self.cow_copies += 1;
+        }
+        *self.lens.get_mut(&seq).unwrap() = len + 1;
+        true
+    }
+
+    /// Pin a cached prefix's blocks so they survive the donor sequence's
+    /// release. `tail_grant` names the donor when it may later write into
+    /// the last pinned block (its prompt ends mid-block): pinning then
+    /// adds one copy-on-write allocation to the donor's budget, which is
+    /// only sound if the pool can still promise every pending allocation —
+    /// otherwise the pin is refused (no side effects) and the caller skips
+    /// caching. A grant for an already-released donor is ignored.
+    pub fn pin_prefix(&mut self, blocks: &[u32], tail_grant: Option<SeqId>) -> bool {
+        let grant = tail_grant.filter(|s| self.pending.contains_key(s));
+        if grant.is_some() && self.pending_total + 1 > self.free.len() {
+            return false;
+        }
+        for &b in blocks {
+            assert!(self.refs[b as usize] > 0, "cannot pin free block {b}");
+            self.pins[b as usize] += 1;
+            self.refs[b as usize] += 1;
+        }
+        if let Some(donor) = grant {
+            *self.pending.get_mut(&donor).unwrap() += 1;
+            self.pending_total += 1;
+        }
+        true
+    }
+
+    /// Drop the prefix cache's pins on `blocks` (eviction). Blocks whose
+    /// refcount reaches zero return to the free list.
+    pub fn unpin_prefix(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            assert!(self.pins[b as usize] > 0, "block {b} pin underflow");
+            self.pins[b as usize] -= 1;
+            self.deref_block(b);
+        }
+    }
+
+    /// Release all blocks (and the remaining allocation budget) of a
+    /// sequence. Shared blocks stay alive while other tables or pins
+    /// reference them.
     pub fn release(&mut self, seq: SeqId) {
         if let Some(blocks) = self.tables.remove(&seq) {
-            self.free.extend(blocks);
+            for b in blocks {
+                self.deref_block(b);
+            }
         }
-        if let Some(worst) = self.commits.remove(&seq) {
-            self.committed -= worst;
+        self.commits.remove(&seq);
+        if let Some(p) = self.pending.remove(&seq) {
+            self.pending_total -= p;
         }
         self.lens.remove(&seq);
     }
@@ -122,36 +315,89 @@ impl PagedKvManager {
         self.tables.len()
     }
 
-    /// Consistency check: every block owned exactly once.
+    /// Consistency check: refcounts match table occurrences plus pins, the
+    /// free list is exactly the zero-ref blocks, and the pending-allocation
+    /// promise holds.
     pub fn check_invariants(&self) -> Result<(), String> {
+        let mut occ = vec![0u32; self.total];
+        for (seq, table) in &self.tables {
+            let commit = *self
+                .commits
+                .get(seq)
+                .ok_or_else(|| format!("seq {seq} has a table but no commitment"))?;
+            if table.len() > commit {
+                return Err(format!(
+                    "seq {seq} table {} blocks beyond commitment {commit}",
+                    table.len()
+                ));
+            }
+            let len = *self
+                .lens
+                .get(seq)
+                .ok_or_else(|| format!("seq {seq} has a table but no length"))?;
+            if self.blocks_for(len).min(commit) > table.len() {
+                return Err(format!(
+                    "seq {seq} stores {len} tokens in {} blocks",
+                    table.len()
+                ));
+            }
+            for &b in table {
+                let slot = occ
+                    .get_mut(b as usize)
+                    .ok_or_else(|| format!("seq {seq} references unknown block {b}"))?;
+                *slot += 1;
+            }
+        }
+        for b in 0..self.total {
+            let expect = occ[b] + self.pins[b];
+            if self.refs[b] != expect {
+                return Err(format!(
+                    "block {b} refcount {} but {} table occurrences + {} pins",
+                    self.refs[b], occ[b], self.pins[b]
+                ));
+            }
+        }
         let mut seen = std::collections::HashSet::new();
         for &b in &self.free {
             if !seen.insert(b) {
                 return Err(format!("block {b} duplicated in free list"));
             }
-        }
-        for (seq, table) in &self.tables {
-            for &b in table {
-                if !seen.insert(b) {
-                    return Err(format!("block {b} double-owned (seq {seq})"));
-                }
+            if self.refs[b as usize] != 0 {
+                return Err(format!("block {b} on free list with refcount > 0"));
             }
         }
-        if seen.len() != self.total {
-            return Err(format!("{} blocks tracked, expected {}", seen.len(), self.total));
-        }
-        let committed: usize = self.commits.values().sum();
-        if committed != self.committed {
+        let zero_refs = self.refs.iter().filter(|&&r| r == 0).count();
+        if seen.len() != zero_refs {
             return Err(format!(
-                "commitment drift: {} recorded vs {} summed",
-                self.committed, committed
+                "free list holds {} blocks but {} have zero refs",
+                seen.len(),
+                zero_refs
             ));
         }
-        if self.used_blocks() > self.committed {
+        for seq in self.tables.keys() {
+            if !self.pending.contains_key(seq) {
+                return Err(format!("seq {seq} has a table but no pending budget"));
+            }
+        }
+        if self.pending.len() != self.tables.len() {
             return Err(format!(
-                "allocated {} blocks beyond commitment {}",
-                self.used_blocks(),
-                self.committed
+                "{} pending budgets vs {} tables",
+                self.pending.len(),
+                self.tables.len()
+            ));
+        }
+        let pending: usize = self.pending.values().sum();
+        if pending != self.pending_total {
+            return Err(format!(
+                "pending drift: {} recorded vs {} summed",
+                self.pending_total, pending
+            ));
+        }
+        if self.pending_total > self.free.len() {
+            return Err(format!(
+                "{} pending allocations promised but only {} free blocks",
+                self.pending_total,
+                self.free.len()
             ));
         }
         Ok(())
@@ -220,6 +466,114 @@ mod tests {
     }
 
     #[test]
+    fn boundary_prompt_plus_max_on_block_edge() {
+        let mut m = PagedKvManager::new(4, 8);
+        // prompt exactly one block, worst case exactly two blocks
+        assert!(m.admit(1, 8, 16));
+        assert_eq!(m.table(1).unwrap().len(), 1);
+        for i in 0..8 {
+            assert!(m.append_token(1), "append {i}");
+        }
+        assert_eq!(m.table(1).unwrap().len(), 2);
+        assert_eq!(m.seq_tokens(1), Some(16));
+        // token 17 would need a third block past the commitment
+        assert!(!m.append_token(1));
+        m.check_invariants().unwrap();
+        m.release(1);
+        assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
+    fn boundary_zero_length_prompt() {
+        let mut m = PagedKvManager::new(4, 4);
+        assert!(m.admit(1, 0, 4)); // still reserves one block
+        assert_eq!(m.table(1).unwrap().len(), 1);
+        assert_eq!(m.seq_tokens(1), Some(0));
+        for _ in 0..4 {
+            assert!(m.append_token(1));
+        }
+        assert_eq!(m.table(1).unwrap().len(), 1);
+        assert!(!m.append_token(1));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn boundary_block_size_one() {
+        let mut m = PagedKvManager::new(8, 1);
+        assert!(m.admit(1, 3, 5));
+        assert_eq!(m.table(1).unwrap().len(), 3);
+        assert!(m.append_token(1));
+        assert!(m.append_token(1));
+        assert_eq!(m.table(1).unwrap().len(), 5);
+        assert!(!m.append_token(1));
+        m.check_invariants().unwrap();
+        // remaining capacity: 3 free, 0 pending
+        assert!(m.admit(2, 1, 3));
+        assert!(!m.admit(3, 1, 1));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_admission_adopts_blocks_and_cows_tail() {
+        let mut m = PagedKvManager::new(16, 4);
+        // donor: 10-token prompt in 3 blocks, worst case 4
+        assert!(m.admit(1, 10, 14));
+        let donor_blocks: Vec<u32> = m.table(1).unwrap().to_vec();
+        assert_eq!(donor_blocks.len(), 3);
+        // cache pins the blocks covering the prompt; the donor ends
+        // mid-block (10 % 4 != 0) so it gets a CoW grant
+        assert!(m.pin_prefix(&donor_blocks, Some(1)));
+        m.check_invariants().unwrap();
+        assert_eq!(m.pinned_blocks(), 3);
+
+        // a new request sharing the full 10-token prefix
+        assert!(m.admit_shared(2, 12, 16, &donor_blocks, 10));
+        let t2: Vec<u32> = m.table(2).unwrap().to_vec();
+        assert_eq!(t2.len(), 3);
+        // full blocks adopted by reference, partial tail copied-on-write
+        assert_eq!(&t2[..2], &donor_blocks[..2]);
+        assert_ne!(t2[2], donor_blocks[2]);
+        assert_eq!(m.cow_copies(), 1);
+        m.check_invariants().unwrap();
+
+        // the donor's next append writes into its pinned tail → CoW
+        assert!(m.append_token(1));
+        let t1: Vec<u32> = m.table(1).unwrap().to_vec();
+        assert_ne!(t1[2], donor_blocks[2]);
+        assert_eq!(m.cow_copies(), 2);
+        assert_eq!(m.block_refs(donor_blocks[2]), 1); // pin only
+        m.check_invariants().unwrap();
+
+        // teardown: everything comes back
+        m.unpin_prefix(&donor_blocks);
+        m.release(1);
+        m.release(2);
+        assert_eq!(m.free_blocks(), 16);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pin_grant_refused_under_pressure() {
+        let mut m = PagedKvManager::new(4, 4);
+        assert!(m.admit(1, 2, 16)); // worst 4: 1 block held, 3 pending
+        let blocks: Vec<u32> = m.table(1).unwrap().to_vec();
+        // granting one more pending allocation would outrun the free list
+        assert!(!m.pin_prefix(&blocks, Some(1)));
+        assert_eq!(m.pinned_blocks(), 0);
+        m.check_invariants().unwrap();
+        // without a grant the pin is free of allocation promises
+        assert!(m.pin_prefix(&blocks, None));
+        assert_eq!(m.pinned_blocks(), 1);
+        // a grant for an unknown (already released) donor is ignored
+        assert!(m.pin_prefix(&blocks, Some(99)));
+        m.unpin_prefix(&blocks);
+        m.unpin_prefix(&blocks);
+        m.check_invariants().unwrap();
+        m.release(1);
+        assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
     fn property_random_workload_never_double_owns() {
         let mut rng = Rng::new(808);
         let mut m = PagedKvManager::new(32, 4);
@@ -252,6 +606,77 @@ mod tests {
             m.release(seq);
         }
         assert_eq!(m.free_blocks(), 32);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_shared_churn_preserves_invariants() {
+        let mut rng = Rng::new(4242);
+        let mut m = PagedKvManager::new(48, 4);
+        let mut live: Vec<SeqId> = Vec::new();
+        // pinned prefixes: (blocks, tokens covered)
+        let mut pinned: Vec<(Vec<u32>, usize)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..3000 {
+            match rng.below(14) {
+                0..=2 => {
+                    let prompt = rng.range(1, 16);
+                    let max = prompt + rng.range(0, 12);
+                    if m.admit(next_id, prompt, max) {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                3..=4 if !pinned.is_empty() => {
+                    // admit a request sharing a pinned prefix
+                    let (blocks, tokens) = pinned[rng.range(0, pinned.len())].clone();
+                    let prompt = tokens + rng.range(1, 8);
+                    let max = prompt + rng.range(0, 8);
+                    if m.admit_shared(next_id, prompt, max, &blocks, tokens) {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                5..=6 if !live.is_empty() => {
+                    // pin a live sequence's leading tokens (cache insert)
+                    let seq = live[rng.range(0, live.len())];
+                    let len = m.seq_tokens(seq).unwrap();
+                    if len > 0 {
+                        let tokens = rng.range(1, len + 1);
+                        let covering = m.blocks_covering(tokens);
+                        let blocks = m.table(seq).unwrap()[..covering].to_vec();
+                        let grant = (len / m.block_size() < covering).then_some(seq);
+                        if m.pin_prefix(&blocks, grant) {
+                            pinned.push((blocks, tokens));
+                        }
+                    }
+                }
+                7 if !pinned.is_empty() => {
+                    // evict a cached prefix
+                    let idx = rng.range(0, pinned.len());
+                    let (blocks, _) = pinned.swap_remove(idx);
+                    m.unpin_prefix(&blocks);
+                }
+                8..=11 if !live.is_empty() => {
+                    let idx = rng.range(0, live.len());
+                    let _ = m.append_token(live[idx]);
+                }
+                _ if !live.is_empty() => {
+                    let idx = rng.range(0, live.len());
+                    let seq = live.swap_remove(idx);
+                    m.release(seq);
+                }
+                _ => {}
+            }
+            m.check_invariants().unwrap();
+        }
+        for (blocks, _) in pinned {
+            m.unpin_prefix(&blocks);
+        }
+        for seq in live {
+            m.release(seq);
+        }
+        assert_eq!(m.free_blocks(), 48);
         m.check_invariants().unwrap();
     }
 }

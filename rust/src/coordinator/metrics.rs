@@ -29,6 +29,32 @@ pub struct Metrics {
     /// Largest per-tick prefill chunk the schedule policy chose —
     /// bounded by `EngineConfig::prefill_chunk` (tests pin this).
     pub max_tick_chunk: u64,
+    /// Admissions that shared a cached prompt prefix.
+    pub prefix_hits: u64,
+    /// Admissions that found no cached prefix (cache enabled only).
+    pub prefix_misses: u64,
+    /// Prefixes published into the cache after prefill completed.
+    pub prefix_insertions: u64,
+    /// Cache entries evicted (LRU capacity or pool pressure).
+    pub prefix_evictions: u64,
+    /// Prompt tokens admitted without re-prefilling (Σ matched lengths).
+    pub prefix_tokens_reused: u64,
+    /// Prompt tokens actually pushed through the forward pass — with the
+    /// cache on, `prefix_tokens_reused + prefill_tokens_computed` equals
+    /// total admitted prompt tokens, which is how tests assert a hit
+    /// skipped the matched fraction of prefill work.
+    pub prefill_tokens_computed: u64,
+    /// Gauge: blocks currently pinned by the prefix cache.
+    pub prefix_blocks_pinned: u64,
+    /// Gauge: most event sinks the server held at once.
+    pub sinks_peak: u64,
+    /// Gauge: sinks still registered when the server drained — any value
+    /// above zero is a leak (tests pin zero).
+    pub sinks_open_final: u64,
+    /// TTFT of requests admitted via a prefix-cache hit.
+    pub ttft_hit: Histogram,
+    /// TTFT of requests prefilled from scratch.
+    pub ttft_cold: Histogram,
     wall: Option<Stopwatch>,
 }
 
@@ -43,6 +69,16 @@ impl Metrics {
 
     pub fn record_ttft(&mut self, d: Duration) {
         self.ttft.record(d);
+    }
+
+    /// Record TTFT split by how the request was admitted: `hit` requests
+    /// skipped their matched prefix, cold requests prefilled everything.
+    pub fn record_ttft_admission(&mut self, d: Duration, hit: bool) {
+        if hit {
+            self.ttft_hit.record(d);
+        } else {
+            self.ttft_cold.record(d);
+        }
     }
 
     pub fn record_token(&mut self, d: Duration) {
@@ -122,8 +158,12 @@ impl Metrics {
             "completed={} cancelled={} expired={} rejected={} prompt_toks={} gen_toks={} \
              throughput={:.1} tok/s\n\
              batch   : calls={} mean_occupancy={:.2} max_occupancy={} max_tick_chunk={}\n\
+             prefix  : hits={} misses={} inserts={} evicts={} reused_toks={} \
+             prefill_toks={} pinned_blocks={}\n\
              queue   : {}\n\
              ttft    : {}\n\
+             ttft-hit: {}\n\
+             ttft-cold: {}\n\
              per-tok : {}\n\
              e2e     : {}",
             self.completed,
@@ -137,8 +177,17 @@ impl Metrics {
             self.mean_batch_occupancy(),
             self.max_batch_occupancy,
             self.max_tick_chunk,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_insertions,
+            self.prefix_evictions,
+            self.prefix_tokens_reused,
+            self.prefill_tokens_computed,
+            self.prefix_blocks_pinned,
             self.queue_time.summary(),
             self.ttft.summary(),
+            self.ttft_hit.summary(),
+            self.ttft_cold.summary(),
             self.per_token.summary(),
             self.e2e.summary(),
         )
@@ -197,6 +246,26 @@ mod tests {
         assert!(r.contains("cancelled=2"), "{r}");
         assert!(r.contains("expired=1"), "{r}");
         assert!(r.contains("max_tick_chunk=16"), "{r}");
+    }
+
+    #[test]
+    fn prefix_counters_surface_in_report() {
+        let mut m = Metrics::new();
+        m.prefix_hits = 3;
+        m.prefix_misses = 2;
+        m.prefix_insertions = 2;
+        m.prefix_evictions = 1;
+        m.prefix_tokens_reused = 40;
+        m.prefill_tokens_computed = 17;
+        m.record_ttft_admission(Duration::from_millis(2), true);
+        m.record_ttft_admission(Duration::from_millis(9), false);
+        assert_eq!(m.ttft_hit.count(), 1);
+        assert_eq!(m.ttft_cold.count(), 1);
+        let r = m.report();
+        assert!(r.contains("hits=3"), "{r}");
+        assert!(r.contains("reused_toks=40"), "{r}");
+        assert!(r.contains("prefill_toks=17"), "{r}");
+        assert!(r.contains("ttft-hit"), "{r}");
     }
 
     #[test]

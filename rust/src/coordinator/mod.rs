@@ -1,5 +1,5 @@
 //! Serving coordinator — the L3 runtime system around the quantized
-//! model, organized around three public abstractions:
+//! model, organized around four public abstractions:
 //!
 //! * [`Server`] — the streaming session front-end. It owns the engine
 //!   on a dedicated thread; [`Server::submit`] returns a
@@ -17,19 +17,60 @@
 //! * [`SchedulePolicy`] — the per-tick chunk decision.
 //!   [`policy::FixedChunk`] is the constant-chunk baseline;
 //!   [`policy::AdaptiveChunk`] shrinks prefill chunks as decode
-//!   occupancy rises to bound inter-token latency and grows them back
-//!   when a tick is prefill-only. Selected via
-//!   [`EngineConfig::policy`].
+//!   occupancy rises. Selected via [`EngineConfig::policy`].
+//! * [`PrefixCache`] — content-addressed reuse of completed prefills,
+//!   configured by [`EngineConfig::prefix`] and disabled by default.
+//!
+//! # Prefix cache + copy-on-write block lifecycle
+//!
+//! Most serving traffic shares a leading prompt (system preamble,
+//! few-shot scaffold); re-prefilling it through the quantized forward
+//! path on every request wastes exactly the compute the cheap 2/3-bit
+//! weights buy. The coordinator therefore refcounts KV blocks and
+//! shares them across sequences:
+//!
+//! 1. **Publish.** The tick a sequence finishes its prompt (its KV
+//!    holds exactly the prompt positions, the first sampled token not
+//!    yet written), the engine snapshots that prefix
+//!    ([`Backend::snapshot_kv_prefix`]) and the cache pins the blocks
+//!    covering it ([`PagedKvManager::pin_prefix`]). Pins keep blocks
+//!    alive after the donor retires. If the donor's prompt ends
+//!    mid-block it will later write into a pinned block, so the pin
+//!    grants it one extra copy-on-write allocation — refused (no cache
+//!    entry) when the pool cannot promise it.
+//! 2. **Hit.** Admission hashes the incoming prompt per full block
+//!    (chained FNV-1a), verifies tokens against the best entry, and
+//!    extends the match token-by-token into a partial tail block,
+//!    capped at `prompt.len() - 1` so one token still produces logits.
+//!    [`PagedKvManager::admit_shared`] then adopts the matched blocks
+//!    by reference: fully-covered blocks are read-only forever; a
+//!    shared partial tail is copied-on-write immediately (the new
+//!    sequence prefills its remaining prompt into the copy). The engine
+//!    imports the snapshot ([`Backend::import_kv_prefix`]) and resumes
+//!    prefill at the matched offset — bitwise-identical streams, with
+//!    the skipped work visible as `prefix_tokens_reused` vs
+//!    `prefill_tokens_computed` in [`Metrics`].
+//! 3. **Diverge.** Any sequence appending into a block whose refcount
+//!    exceeds one copies it first ([`PagedKvManager::append_token`]),
+//!    so writers never alias. Admission's no-deadlock guarantee is kept
+//!    in terms of *future allocations*: every sequence carries a
+//!    `pending` budget with the pool-wide invariant `Σ pending ≤ free`.
+//! 4. **Evict.** LRU by last hit, triggered by capacity
+//!    ([`PrefixCacheConfig::max_entries`] / `max_blocks`) or pool
+//!    pressure (`evict_on_pressure`; the alternative is refusing
+//!    admission). Evicting unpins; blocks free once their last
+//!    reference drops. The entry being shared from is never
+//!    pressure-evicted mid-admission.
 //!
 //! Underneath sit the same building blocks as before: a bounded
 //! priority+FIFO [`RequestQueue`], the continuous [`batcher`], the
 //! paged [`PagedKvManager`], per-sequence [`sampler`]s, and
-//! [`Metrics`] (now including per-request TTFT, queue wait,
-//! cancellation and deadline-expiry counts). The [`Engine`] itself is
-//! still a single-threaded scheduling loop — offline callers may
-//! drive [`Engine::step`] / [`Engine::run_to_completion`] directly,
-//! and the streamed token sequence of a request is bit-identical to
-//! its offline response (same forward core, same sampler state).
+//! [`Metrics`] (now including prefix hit/miss/evict counters and
+//! hit-vs-cold TTFT). The [`Engine`] itself is still a single-threaded
+//! scheduling loop — offline callers may drive [`Engine::step`] /
+//! [`Engine::run_to_completion`] directly, and the streamed token
+//! sequence of a request is bit-identical to its offline response
+//! (same forward core, same sampler state).
 //!
 //! Shape: a miniature vLLM-style router/engine. The paper measures
 //! per-token generation latency under low-concurrency serving (§III-E);
@@ -41,6 +82,7 @@ pub mod engine;
 pub mod kv_pool;
 pub mod metrics;
 pub mod policy;
+pub mod prefix_cache;
 pub mod queue;
 pub mod request;
 pub mod sampler;
@@ -50,6 +92,7 @@ pub use engine::{Backend, CpuBackend, Engine, PjrtBackend};
 pub use kv_pool::PagedKvManager;
 pub use metrics::Metrics;
 pub use policy::{AdaptiveChunk, FixedChunk, SchedulePolicy, SchedulePolicyKind, TickState};
+pub use prefix_cache::{PrefixCache, PrefixCacheConfig};
 pub use queue::{RequestQueue, SubmitError};
 pub use request::{FinishReason, Request, Response, SamplingParams};
 pub use server::{Event, RequestHandle, Server};
@@ -75,6 +118,9 @@ pub struct EngineConfig {
     /// `prefill_chunk` as its bound). Custom policy objects go through
     /// [`Engine::with_policy`] instead.
     pub policy: SchedulePolicyKind,
+    /// Prompt-prefix cache policy (admission sharing, LRU eviction).
+    /// Off by default; the serve CLI and benches switch it on.
+    pub prefix: PrefixCacheConfig,
 }
 
 impl Default for EngineConfig {
@@ -87,6 +133,7 @@ impl Default for EngineConfig {
             eos_token: crate::data::vocab::EOS,
             prefill_chunk: 16,
             policy: SchedulePolicyKind::Fixed,
+            prefix: PrefixCacheConfig::default(),
         }
     }
 }

@@ -1,0 +1,578 @@
+//! Prompt-prefix cache over the paged KV pool.
+//!
+//! Serving traffic is dominated by shared preambles (system prompts,
+//! few-shot scaffolding). Re-prefilling the same leading tokens through
+//! the quantized forward path on every request wastes exactly the compute
+//! GPTQT's cheap weights are supposed to save, so completed prefills are
+//! published here: an entry pins the donor sequence's blocks covering its
+//! prompt ([`PagedKvManager::pin_prefix`]) and keeps a trimmed snapshot of
+//! the physical KV (an `Arc` the engine imports into a fresh cache on a
+//! hit). Matching is content-based — a chained FNV-1a hash per full block
+//! for cheap rejection, then direct token comparison which also extends
+//! the match token-by-token into a partially-filled tail block. A hit
+//! admits through [`PagedKvManager::admit_shared`], adopting the matched
+//! blocks copy-on-write instead of re-prefilling them.
+//!
+//! Eviction is LRU by last hit. Under pool pressure the cache either
+//! evicts to make room for an incoming request
+//! ([`PrefixCacheConfig::evict_on_pressure`]) or lets admission refuse —
+//! the entry a request is about to share from is always protected from
+//! that pressure eviction, since unpinning it mid-admission could free
+//! blocks the new table is adopting.
+//!
+//! The matched length is capped at `prompt.len() - 1`: at least one
+//! prompt token must still flow through the forward pass so the engine
+//! has logits to sample the first new token from.
+
+use std::sync::Arc;
+
+use super::kv_pool::{PagedKvManager, SeqId};
+use super::metrics::Metrics;
+use super::request::Request;
+
+/// Prefix-cache policy, surfaced through `EngineConfig`.
+#[derive(Clone, Debug)]
+pub struct PrefixCacheConfig {
+    /// Master switch; disabled by default so small-pool tests keep exact
+    /// block accounting. The serve CLI and benches enable it.
+    pub enabled: bool,
+    /// Maximum cached prefixes; LRU-evicted beyond this.
+    pub max_entries: usize,
+    /// Maximum blocks the cache may pin (summed per entry; blocks shared
+    /// between overlapping entries count once per entry).
+    pub max_blocks: usize,
+    /// Prompts shorter than this are not cached and not matched.
+    pub min_tokens: usize,
+    /// Under pool pressure, evict LRU entries to admit a request (true)
+    /// or leave the cache intact and let admission refuse (false).
+    pub evict_on_pressure: bool,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> PrefixCacheConfig {
+        PrefixCacheConfig {
+            enabled: false,
+            max_entries: 32,
+            max_blocks: 128,
+            min_tokens: 1,
+            evict_on_pressure: true,
+        }
+    }
+}
+
+/// Outcome of a cache-aware admission attempt.
+pub enum AdmitOutcome<K> {
+    /// The pool cannot host the request's worst case right now.
+    Rejected,
+    /// Admitted with no cached prefix; full prefill required.
+    Cold,
+    /// Admitted sharing `matched` prompt tokens; the engine imports the
+    /// snapshot and prefills only tokens `matched..`.
+    Hit { matched: usize, kv: Arc<K> },
+}
+
+struct Entry<K> {
+    id: u64,
+    tokens: Vec<u32>,
+    /// chained FNV-1a hash per full block of `tokens`
+    block_hashes: Vec<u64>,
+    /// pool blocks covering `tokens`, pinned for this entry's lifetime
+    blocks: Vec<u32>,
+    /// trimmed physical KV snapshot (first `tokens.len()` positions)
+    kv: Arc<K>,
+    last_hit: u64,
+    hits: u64,
+}
+
+/// LRU prefix cache, generic over the backend's physical KV type.
+pub struct PrefixCache<K> {
+    cfg: PrefixCacheConfig,
+    entries: Vec<Entry<K>>,
+    clock: u64,
+    next_id: u64,
+}
+
+/// Chained FNV-1a hash of each full `block_size` chunk of `tokens`;
+/// hash `i` covers tokens `0..(i+1)*block_size`, so equal chains mean
+/// equal leading blocks.
+pub fn block_hash_chain(tokens: &[u32], block_size: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / block_size);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for chunk in tokens.chunks_exact(block_size) {
+        for &t in chunk {
+            for byte in t.to_le_bytes() {
+                h = (h ^ byte as u64).wrapping_mul(0x0100_0000_01b3);
+            }
+        }
+        out.push(h);
+    }
+    out
+}
+
+struct Candidate {
+    entry_idx: usize,
+    matched: usize,
+}
+
+impl<K> PrefixCache<K> {
+    pub fn new(cfg: PrefixCacheConfig) -> PrefixCache<K> {
+        PrefixCache { cfg, entries: Vec::new(), clock: 0, next_id: 0 }
+    }
+
+    pub fn config(&self) -> &PrefixCacheConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Blocks pinned across entries (an overlap-shared block counts once
+    /// per entry that pins it, matching the pool's pin counts).
+    pub fn pinned_blocks(&self) -> usize {
+        self.entries.iter().map(|e| e.blocks.len()).sum()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest cached match for `prompt`, capped at `prompt.len() - 1`.
+    fn best_match(&self, prompt: &[u32], block_size: usize) -> Option<Candidate> {
+        if prompt.len() < self.cfg.min_tokens.max(2) {
+            // a 1-token prompt can never share (cap leaves nothing)
+            return None;
+        }
+        let chain = block_hash_chain(prompt, block_size);
+        let mut best: Option<Candidate> = None;
+        for (idx, entry) in self.entries.iter().enumerate() {
+            // cheap reject: count leading full-block hash agreements
+            let full = entry
+                .block_hashes
+                .iter()
+                .zip(&chain)
+                .take_while(|(a, b)| a == b)
+                .count();
+            // verify against hash collisions, then extend token-by-token
+            // into the next (partial) block
+            let verified = entry
+                .tokens
+                .iter()
+                .zip(prompt)
+                .take(full * block_size)
+                .take_while(|(a, b)| a == b)
+                .count();
+            let mut matched = verified;
+            if verified == full * block_size {
+                matched += entry.tokens[verified..]
+                    .iter()
+                    .zip(&prompt[verified..])
+                    .take_while(|(a, b)| a == b)
+                    .count();
+            }
+            matched = matched.min(prompt.len() - 1);
+            if matched < self.cfg.min_tokens.max(1) {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    matched > b.matched
+                        || (matched == b.matched
+                            && entry.last_hit > self.entries[b.entry_idx].last_hit)
+                }
+            };
+            if better {
+                best = Some(Candidate { entry_idx: idx, matched });
+            }
+        }
+        best
+    }
+
+    /// Whether a completed prefill for `prompt` would be worth
+    /// snapshotting — a cheap pre-check so the engine can skip the KV
+    /// clone when the cache is off or an entry already covers the
+    /// prompt.
+    pub fn wants(&self, prompt: &[u32]) -> bool {
+        self.cfg.enabled
+            && !prompt.is_empty()
+            && prompt.len() >= self.cfg.min_tokens
+            && !self
+                .entries
+                .iter()
+                .any(|e| e.tokens.len() >= prompt.len() && e.tokens[..prompt.len()] == *prompt)
+    }
+
+    /// Cache-aware admission: look up `req.prompt`, evict under pressure
+    /// if the policy allows, and admit either sharing the matched blocks
+    /// or cold. The caller is responsible for importing the returned KV
+    /// snapshot before prefilling the remainder.
+    pub fn try_admit(
+        &mut self,
+        req: &Request,
+        kv: &mut PagedKvManager,
+        metrics: &mut Metrics,
+    ) -> AdmitOutcome<K> {
+        if !self.cfg.enabled {
+            return if kv.admit(req.id, req.prompt.len(), req.max_tokens()) {
+                AdmitOutcome::Cold
+            } else {
+                AdmitOutcome::Rejected
+            };
+        }
+        match self.best_match(&req.prompt, kv.block_size()) {
+            None => {
+                metrics.prefix_misses += 1;
+                if self.cfg.evict_on_pressure {
+                    while !kv.can_admit(req.max_tokens()) && self.evict_lru(kv, metrics, None) {}
+                }
+                if kv.admit(req.id, req.prompt.len(), req.max_tokens()) {
+                    AdmitOutcome::Cold
+                } else {
+                    AdmitOutcome::Rejected
+                }
+            }
+            Some(c) => {
+                let entry_id = self.entries[c.entry_idx].id;
+                if self.cfg.evict_on_pressure {
+                    // never evict the entry we are about to share from:
+                    // unpinning it could free the very blocks the new
+                    // table is adopting
+                    while !kv.can_admit_shared(req.max_tokens(), c.matched)
+                        && self.evict_lru(kv, metrics, Some(entry_id))
+                    {}
+                }
+                // the eviction loop cannot remove the protected entry, so
+                // the index is still valid
+                let entry = self
+                    .entries
+                    .iter_mut()
+                    .find(|e| e.id == entry_id)
+                    .expect("protected entry evicted");
+                let covering = c.matched.div_ceil(kv.block_size());
+                let shared = entry.blocks[..covering].to_vec();
+                let snapshot = Arc::clone(&entry.kv);
+                if kv.admit_shared(req.id, req.prompt.len(), req.max_tokens(), &shared, c.matched)
+                {
+                    metrics.prefix_hits += 1;
+                    metrics.prefix_tokens_reused += c.matched as u64;
+                    let now = self.tick();
+                    let entry = self
+                        .entries
+                        .iter_mut()
+                        .find(|e| e.id == entry_id)
+                        .expect("protected entry evicted");
+                    entry.last_hit = now;
+                    entry.hits += 1;
+                    AdmitOutcome::Hit { matched: c.matched, kv: snapshot }
+                } else {
+                    // a shared admit demands no more than a cold one, so
+                    // there is no fallback to try — refuse (head-of-line)
+                    AdmitOutcome::Rejected
+                }
+            }
+        }
+    }
+
+    /// Publish a freshly completed prefill: pin the donor's blocks
+    /// covering `prompt` and keep the trimmed KV snapshot. No-ops when
+    /// disabled, when the prompt is too short, when an existing entry
+    /// already covers it, or when pinning would outrun the pool.
+    pub fn insert(
+        &mut self,
+        prompt: &[u32],
+        donor: SeqId,
+        kv: &mut PagedKvManager,
+        snapshot: Arc<K>,
+        metrics: &mut Metrics,
+    ) {
+        if !self.cfg.enabled || prompt.is_empty() || prompt.len() < self.cfg.min_tokens {
+            return;
+        }
+        if let Some(existing) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.tokens.len() >= prompt.len() && e.tokens[..prompt.len()] == *prompt)
+        {
+            // already covered; refresh recency instead of duplicating pins
+            existing.last_hit = self.clock + 1;
+            self.clock += 1;
+            return;
+        }
+        let covering = kv.blocks_covering(prompt.len());
+        if covering > self.cfg.max_blocks {
+            return;
+        }
+        while self.entries.len() >= self.cfg.max_entries
+            || self.pinned_blocks() + covering > self.cfg.max_blocks
+        {
+            if !self.evict_lru(kv, metrics, None) {
+                return;
+            }
+        }
+        let Some(table) = kv.table(donor) else { return };
+        if table.len() < covering {
+            return;
+        }
+        let blocks = table[..covering].to_vec();
+        let Some(donor_len) = kv.seq_tokens(donor) else { return };
+        // the donor keeps decoding: if its next write lands inside the
+        // pinned span it will copy-on-write, which needs one extra
+        // allocation granted at pin time
+        let grant = (donor_len / kv.block_size() < covering).then_some(donor);
+        if !kv.pin_prefix(&blocks, grant) {
+            return;
+        }
+        let now = self.tick();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.entries.push(Entry {
+            id,
+            tokens: prompt.to_vec(),
+            block_hashes: block_hash_chain(prompt, kv.block_size()),
+            blocks,
+            kv: snapshot,
+            last_hit: now,
+            hits: 0,
+        });
+        metrics.prefix_insertions += 1;
+        metrics.prefix_blocks_pinned = self.pinned_blocks() as u64;
+    }
+
+    /// Evict the least-recently-hit entry (skipping `protect`), unpinning
+    /// its blocks. Returns false when nothing is evictable.
+    pub fn evict_lru(
+        &mut self,
+        kv: &mut PagedKvManager,
+        metrics: &mut Metrics,
+        protect: Option<u64>,
+    ) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| Some(e.id) != protect)
+            .min_by_key(|(_, e)| e.last_hit)
+            .map(|(i, _)| i);
+        let Some(idx) = victim else { return false };
+        let entry = self.entries.swap_remove(idx);
+        kv.unpin_prefix(&entry.blocks);
+        metrics.prefix_evictions += 1;
+        metrics.prefix_blocks_pinned = self.pinned_blocks() as u64;
+        true
+    }
+
+    /// Drop every entry, unpinning all blocks (tests and shutdown).
+    pub fn clear(&mut self, kv: &mut PagedKvManager) {
+        for entry in self.entries.drain(..) {
+            kv.unpin_prefix(&entry.blocks);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+
+    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request::new(id, prompt, max_new)
+    }
+
+    #[test]
+    fn hash_chain_is_per_full_block_and_prefix_stable() {
+        let a: Vec<u32> = (0..10).collect();
+        let b: Vec<u32> = (0..12).map(|t| if t < 10 { t } else { 99 }).collect();
+        let ca = block_hash_chain(&a, 4);
+        let cb = block_hash_chain(&b, 4);
+        assert_eq!(ca.len(), 2); // 10 tokens → 2 full blocks of 4
+        assert_eq!(cb.len(), 3);
+        assert_eq!(ca, cb[..2]); // shared full blocks hash identically
+        let c = block_hash_chain(&[0, 1, 2, 7, 4, 5, 6, 7], 4);
+        assert_ne!(c[0], ca[0]); // a differing token changes the block hash
+    }
+
+    #[test]
+    fn disabled_cache_admits_cold_and_never_matches() {
+        let mut cache: PrefixCache<u8> = PrefixCache::new(PrefixCacheConfig::default());
+        let mut kv = PagedKvManager::new(16, 4);
+        let mut metrics = Metrics::new();
+        let r = req(1, (0..8).collect(), 4);
+        assert!(matches!(
+            cache.try_admit(&r, &mut kv, &mut metrics),
+            AdmitOutcome::Cold
+        ));
+        cache.insert(&r.prompt, 1, &mut kv, Arc::new(0u8), &mut metrics);
+        assert!(cache.is_empty());
+        assert_eq!(metrics.prefix_misses, 0);
+        kv.release(1);
+        assert_eq!(kv.free_blocks(), 16);
+    }
+
+    #[test]
+    fn insert_then_hit_shares_blocks_and_counts_metrics() {
+        let cfg = PrefixCacheConfig { enabled: true, ..PrefixCacheConfig::default() };
+        let mut cache: PrefixCache<u8> = PrefixCache::new(cfg);
+        let mut kv = PagedKvManager::new(32, 4);
+        let mut metrics = Metrics::new();
+
+        let prompt: Vec<u32> = (100..112).collect(); // 12 tokens → 3 blocks
+        let r1 = req(1, prompt.clone(), 8);
+        assert!(matches!(
+            cache.try_admit(&r1, &mut kv, &mut metrics),
+            AdmitOutcome::Cold
+        ));
+        assert_eq!(metrics.prefix_misses, 1);
+        cache.insert(&prompt, 1, &mut kv, Arc::new(7u8), &mut metrics);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(metrics.prefix_insertions, 1);
+        assert_eq!(kv.pinned_blocks(), 3);
+        kv.check_invariants().unwrap();
+
+        // identical prompt: matches all but the last token
+        let r2 = req(2, prompt.clone(), 8);
+        match cache.try_admit(&r2, &mut kv, &mut metrics) {
+            AdmitOutcome::Hit { matched, kv: snap } => {
+                assert_eq!(matched, 11);
+                assert_eq!(*snap, 7u8);
+            }
+            _ => panic!("expected hit"),
+        }
+        assert_eq!(metrics.prefix_hits, 1);
+        assert_eq!(metrics.prefix_tokens_reused, 11);
+        // the two full shared blocks are adopted by reference
+        let t1 = kv.table(1).unwrap().to_vec();
+        let t2 = kv.table(2).unwrap().to_vec();
+        assert_eq!(&t1[..2], &t2[..2]);
+        assert_ne!(t1[2], t2[2]); // partial tail copied at admission
+        kv.check_invariants().unwrap();
+
+        // a prompt diverging inside the second block matches 5 tokens
+        let mut div = prompt.clone();
+        div[5] = 999;
+        let r3 = req(3, div, 8);
+        match cache.try_admit(&r3, &mut kv, &mut metrics) {
+            AdmitOutcome::Hit { matched, .. } => assert_eq!(matched, 5),
+            _ => panic!("expected partial hit"),
+        }
+        kv.check_invariants().unwrap();
+
+        kv.release(1);
+        kv.release(2);
+        kv.release(3);
+        cache.clear(&mut kv);
+        assert_eq!(kv.free_blocks(), 32);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_under_entry_cap_and_pressure() {
+        let cfg = PrefixCacheConfig {
+            enabled: true,
+            max_entries: 2,
+            max_blocks: 64,
+            ..PrefixCacheConfig::default()
+        };
+        let mut cache: PrefixCache<u8> = PrefixCache::new(cfg);
+        let mut kv = PagedKvManager::new(64, 4);
+        let mut metrics = Metrics::new();
+
+        for (seq, base) in [(1u64, 0u32), (2, 1000), (3, 2000)] {
+            let prompt: Vec<u32> = (base..base + 8).collect();
+            let r = req(seq, prompt.clone(), 4);
+            assert!(matches!(
+                cache.try_admit(&r, &mut kv, &mut metrics),
+                AdmitOutcome::Cold
+            ));
+            cache.insert(&prompt, seq, &mut kv, Arc::new(seq as u8), &mut metrics);
+            kv.release(seq);
+        }
+        // third insert evicted the oldest entry
+        assert_eq!(cache.len(), 2);
+        assert_eq!(metrics.prefix_evictions, 1);
+        // the first prefix no longer matches; the later ones do
+        let miss = req(10, (0..8).collect(), 4);
+        assert!(matches!(
+            cache.try_admit(&miss, &mut kv, &mut metrics),
+            AdmitOutcome::Cold
+        ));
+        kv.release(10);
+        let hit = req(11, (2000..2008).collect(), 4);
+        assert!(matches!(
+            cache.try_admit(&hit, &mut kv, &mut metrics),
+            AdmitOutcome::Hit { matched: 7, .. }
+        ));
+        kv.release(11);
+        cache.clear(&mut kv);
+        assert_eq!(kv.free_blocks(), 64);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_eviction_frees_pinned_blocks_for_admission() {
+        // pool of 8 blocks; a cached 16-token prefix pins 4 of them
+        let cfg = PrefixCacheConfig { enabled: true, ..PrefixCacheConfig::default() };
+        let mut cache: PrefixCache<u8> = PrefixCache::new(cfg);
+        let mut kv = PagedKvManager::new(8, 4);
+        let mut metrics = Metrics::new();
+        let prompt: Vec<u32> = (0..16).collect();
+        let r1 = req(1, prompt.clone(), 0);
+        assert!(matches!(
+            cache.try_admit(&r1, &mut kv, &mut metrics),
+            AdmitOutcome::Cold
+        ));
+        cache.insert(&prompt, 1, &mut kv, Arc::new(0u8), &mut metrics);
+        kv.release(1);
+        assert_eq!(kv.free_blocks(), 4);
+
+        // an unrelated 24-token request needs 6 blocks → pressure-evict
+        let r2 = req(2, (500..524).collect(), 0);
+        assert!(matches!(
+            cache.try_admit(&r2, &mut kv, &mut metrics),
+            AdmitOutcome::Cold
+        ));
+        assert_eq!(metrics.prefix_evictions, 1);
+        assert!(cache.is_empty());
+        kv.check_invariants().unwrap();
+        kv.release(2);
+        assert_eq!(kv.free_blocks(), 8);
+    }
+
+    #[test]
+    fn refuse_policy_keeps_cache_and_rejects() {
+        let cfg = PrefixCacheConfig {
+            enabled: true,
+            evict_on_pressure: false,
+            ..PrefixCacheConfig::default()
+        };
+        let mut cache: PrefixCache<u8> = PrefixCache::new(cfg);
+        let mut kv = PagedKvManager::new(8, 4);
+        let mut metrics = Metrics::new();
+        let prompt: Vec<u32> = (0..16).collect();
+        let r1 = req(1, prompt.clone(), 0);
+        assert!(matches!(
+            cache.try_admit(&r1, &mut kv, &mut metrics),
+            AdmitOutcome::Cold
+        ));
+        cache.insert(&prompt, 1, &mut kv, Arc::new(0u8), &mut metrics);
+        kv.release(1);
+        let r2 = req(2, (500..524).collect(), 0);
+        assert!(matches!(
+            cache.try_admit(&r2, &mut kv, &mut metrics),
+            AdmitOutcome::Rejected
+        ));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(metrics.prefix_evictions, 0);
+        cache.clear(&mut kv);
+        assert_eq!(kv.free_blocks(), 8);
+    }
+}

@@ -183,6 +183,11 @@ impl Drop for Server {
 /// and route every event to its request's channel.
 fn serve_loop<B: Backend>(mut engine: Engine<B>, ctl: mpsc::Receiver<Ctl>) -> Metrics {
     let mut sinks: HashMap<u64, mpsc::Sender<Event>> = HashMap::new();
+    // sink-lifecycle gauges: `sinks_peak` is the high-water mark,
+    // `sinks_open_final` must drain to zero — every sink is dropped the
+    // moment its terminal event routes, so the map cannot grow with
+    // server lifetime (pinned by `sink_map_drains_to_zero`)
+    let mut sinks_peak = 0usize;
     let mut draining = false;
     'serve: loop {
         // ---- control: non-blocking while busy, parked when idle --------
@@ -215,6 +220,7 @@ fn serve_loop<B: Backend>(mut engine: Engine<B>, ctl: mpsc::Receiver<Ctl>) -> Me
                         match engine.submit(*req) {
                             Ok(()) => {
                                 sinks.insert(id, tx);
+                                sinks_peak = sinks_peak.max(sinks.len());
                             }
                             Err(error) => {
                                 let _ = tx.send(Event::Rejected { id, error });
@@ -237,14 +243,14 @@ fn serve_loop<B: Backend>(mut engine: Engine<B>, ctl: mpsc::Receiver<Ctl>) -> Me
             Ok(events) => {
                 for ev in events {
                     let id = ev.id();
-                    let terminal = ev.is_terminal();
-                    let receiver_gone = match sinks.get(&id) {
-                        Some(tx) => tx.send(ev).is_err(),
-                        None => false,
-                    };
-                    if terminal {
-                        sinks.remove(&id);
-                    } else if receiver_gone {
+                    if ev.is_terminal() {
+                        // drop the sink *before* sending: the entry is
+                        // gone even if the receiver already hung up,
+                        // so the map can never grow with server lifetime
+                        if let Some(tx) = sinks.remove(&id) {
+                            let _ = tx.send(ev);
+                        }
+                    } else if sinks.get(&id).is_some_and(|tx| tx.send(ev).is_err()) {
                         // handle dropped: free the KV blocks and stop
                         // spending ticks on a stream nobody reads
                         sinks.remove(&id);
@@ -260,7 +266,10 @@ fn serve_loop<B: Backend>(mut engine: Engine<B>, ctl: mpsc::Receiver<Ctl>) -> Me
             }
         }
     }
-    engine.into_metrics()
+    let mut metrics = engine.into_metrics();
+    metrics.sinks_peak = sinks_peak as u64;
+    metrics.sinks_open_final = sinks.len() as u64;
+    metrics
 }
 
 #[cfg(test)]
@@ -370,6 +379,36 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.cancelled_total, 1);
         assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn sink_map_drains_to_zero() {
+        // N requests through every terminal path — natural finish,
+        // cancel, and reject — must leave no sink behind: the map is
+        // keyed per request and an entry that outlives its terminal
+        // event is a leak that grows with server lifetime
+        let server = Server::spawn(backend(6), cfg(4));
+        let mut handles = Vec::new();
+        for id in 0..8u64 {
+            handles.push(server.submit(Request::new(id, vec![4; 6], 8)));
+        }
+        // a couple of mid-flight / queued cancels
+        handles[2].cancel();
+        handles[5].cancel();
+        // one structurally rejected request (never gets a sink)
+        let rejected = server.submit(Request::new(100, vec![], 4));
+        assert!(rejected.wait().is_err());
+        for h in handles {
+            let _ = h.wait();
+        }
+        let m = server.shutdown();
+        assert!(m.sinks_peak >= 1, "submissions must register sinks");
+        assert_eq!(
+            m.sinks_open_final, 0,
+            "every terminal event must drop its sink (peak was {})",
+            m.sinks_peak
+        );
+        assert_eq!(m.completed + m.cancelled_total, 8);
     }
 
     #[test]

@@ -4,7 +4,7 @@ use super::ppl::{calib_for, eval_for, eval_ppl, eval_ppl_backend, EvalConfig};
 use super::tables::{self, ExpConfig};
 use crate::cli::Args;
 use crate::coordinator::{
-    Backend, CpuBackend, EngineConfig, PjrtBackend, Request, SamplingParams,
+    Backend, CpuBackend, EngineConfig, PjrtBackend, PrefixCacheConfig, Request, SamplingParams,
     SchedulePolicyKind, Server,
 };
 use crate::data::{CorpusGenerator, Dataset};
@@ -110,7 +110,7 @@ pub fn ppl(a: &Args) -> Result<()> {
 
 /// `gptqt serve --model <name> --quant <fp32|gptq2|gptqt3|gptqt2>
 ///              [--backend cpu|pjrt] [--policy fixed|adaptive]
-///              --requests <n> ...`
+///              [--prefix-cache on|off] --requests <n> ...`
 ///
 /// Serves through the streaming [`Server`] session API: requests are
 /// submitted up front, every token is consumed from the per-request
@@ -222,11 +222,23 @@ where
     let seed = a.get_u64("seed", 0);
     let policy = SchedulePolicyKind::parse(a.get_or("policy", "fixed"))
         .context("bad --policy (fixed|adaptive)")?;
+    // prompt-prefix reuse is on for the CLI (the library default is off);
+    // backends without KV snapshot support simply never populate it
+    let prefix_on = match a.get_or("prefix-cache", "on") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("bad --prefix-cache {other:?} (on|off)"),
+    };
     let (gen, vocab) = CorpusGenerator::with_vocab(Dataset::WikiSyn, cfg.vocab, seed);
     let stream = gen.generate(n_requests * prompt_len * 4 + 64, 9);
     let server = Server::spawn(
         backend,
-        EngineConfig { max_batch, policy, ..Default::default() },
+        EngineConfig {
+            max_batch,
+            policy,
+            prefix: PrefixCacheConfig { enabled: prefix_on, ..Default::default() },
+            ..Default::default()
+        },
     );
     eprintln!("serving {n_requests} requests on {} [{label}, {policy:?} scheduling]", cfg.name);
     let mut rng = crate::util::Rng::new(seed);

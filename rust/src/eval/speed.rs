@@ -23,7 +23,10 @@
 //! synthesized directly (RTN codes / random sign patterns) — this keeps
 //! the big timing-only ladder entries (opt-lg/xl) cheap to set up.
 
-use crate::coordinator::{CpuBackend, EngineConfig, Event, Request, SchedulePolicyKind, Server};
+use crate::coordinator::{
+    CpuBackend, Engine, EngineConfig, Event, PrefixCacheConfig, Request, SchedulePolicyKind,
+    Server,
+};
 use crate::model::{BackendModel, KvCache, Model, ModelConfig};
 use crate::quant::fuse::FusedRow;
 use crate::quant::linear::{rtn_quantize, IntLayer};
@@ -164,6 +167,12 @@ pub struct BatchSpeedResult {
     /// Weight MB streamed per *generated token*, amortized over the
     /// batch (`streamed_bytes_per_token / batch`).
     pub amortized_mb_per_token: f64,
+    /// Heap allocation events per timed step. Always 0 unless the
+    /// calling binary installs [`crate::util::alloc::CountingAllocator`]
+    /// as its global allocator (the steady-state regression test does);
+    /// under that allocator the figure is exact and must stay flat
+    /// across windows.
+    pub allocs_per_step: f64,
 }
 
 /// Measure batched decode throughput: prefill `batch` independent
@@ -196,6 +205,7 @@ pub fn measure_decode_batch(
     }
     // one workspace across the timed steps — the zero-alloc steady state
     let mut scratch = crate::model::ForwardScratch::new();
+    let a0 = crate::util::alloc::snapshot();
     let sw = Stopwatch::start();
     for _ in 0..gen_steps {
         let logits = bm.decode_batch_with(&lasts, &mut caches, &mut scratch);
@@ -204,6 +214,7 @@ pub fn measure_decode_batch(
         }
     }
     let secs = sw.elapsed_secs();
+    let a1 = crate::util::alloc::snapshot();
     let tokens = gen_steps * batch;
     BatchSpeedResult {
         model: cfg.name.to_string(),
@@ -213,6 +224,7 @@ pub fn measure_decode_batch(
         tokens_per_sec: tokens as f64 / secs.max(1e-12),
         tokens,
         amortized_mb_per_token: bm.streamed_bytes_per_token() as f64 / batch as f64 / 1e6,
+        allocs_per_step: a1.allocs_since(&a0) as f64 / gen_steps as f64,
     }
 }
 
@@ -393,6 +405,72 @@ pub fn measure_streaming(
     }
 }
 
+/// TTFT comparison for the prompt-prefix cache: the same prompt served
+/// twice through one [`Engine`], first cold (filling the cache), then as
+/// a prefix hit that adopts the cached KV blocks and computes only the
+/// unmatched tail.
+#[derive(Debug, Clone)]
+pub struct PrefixSpeedResult {
+    pub model: String,
+    pub variant: SpeedVariant,
+    pub prompt_len: usize,
+    /// TTFT of the cold, cache-filling request, ms.
+    pub cold_ttft_ms: f64,
+    /// TTFT of the identical follow-up request served from the cache, ms.
+    pub hit_ttft_ms: f64,
+    /// Prompt tokens the cold request pushed through the forward path.
+    pub prefill_tokens_cold: u64,
+    /// Prompt tokens the hit request still computed (its unmatched tail —
+    /// 1 for an exact repeat, since one token must produce logits).
+    pub prefill_tokens_hit: u64,
+    /// Prefix-cache hits recorded (1 when the cache worked).
+    pub hits: u64,
+}
+
+/// Measure cold-vs-hit TTFT: drive an [`Engine`] directly (prefix cache
+/// enabled, EOS disabled), serve a random prompt to completion, then
+/// serve the identical prompt again. The skipped work is visible in the
+/// prefill-token accounting, the latency win in the two TTFTs.
+pub fn measure_prefix_ttft(
+    cfg: &ModelConfig,
+    bm: BackendModel,
+    variant: SpeedVariant,
+    prompt_len: usize,
+    gen_tokens: usize,
+    seed: u64,
+) -> PrefixSpeedResult {
+    assert!(prompt_len >= 2 && gen_tokens >= 1);
+    assert!(prompt_len + gen_tokens <= cfg.max_seq, "exceeds KV capacity");
+    let mut rng = Rng::new(seed);
+    let prompt: Vec<u32> = (0..prompt_len)
+        .map(|_| 3 + rng.below((cfg.vocab - 3) as u64) as u32)
+        .collect();
+    let mut engine = Engine::new(
+        CpuBackend(bm),
+        EngineConfig {
+            eos_token: u32::MAX, // deterministic token counts
+            prefix: PrefixCacheConfig { enabled: true, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    engine.submit(Request::new(0, prompt.clone(), gen_tokens)).expect("queue accepts");
+    let cold = engine.run_to_completion().expect("cold request completes");
+    let prefill_cold = engine.metrics.prefill_tokens_computed;
+    engine.submit(Request::new(1, prompt, gen_tokens)).expect("queue accepts");
+    let hit = engine.run_to_completion().expect("hit request completes");
+    let m = engine.into_metrics();
+    PrefixSpeedResult {
+        model: cfg.name.to_string(),
+        variant,
+        prompt_len,
+        cold_ttft_ms: cold[0].ttft_secs * 1e3,
+        hit_ttft_ms: hit[0].ttft_secs * 1e3,
+        prefill_tokens_cold: prefill_cold,
+        prefill_tokens_hit: m.prefill_tokens_computed - prefill_cold,
+        hits: m.prefix_hits,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -470,6 +548,19 @@ mod tests {
             assert!(r.inter_token_ms >= 0.0);
             assert_eq!(r.cancelled, 0);
         }
+    }
+
+    #[test]
+    fn prefix_ttft_hit_skips_prefill_work() {
+        let m = tiny_model();
+        let bm = build_variant(&m, SpeedVariant::Full, 1);
+        let r = measure_prefix_ttft(&m.cfg, bm, SpeedVariant::Full, 12, 4, 7);
+        assert_eq!(r.hits, 1);
+        assert_eq!(r.prefill_tokens_cold, 12);
+        // exact repeat: only the final prompt token (capped out of the
+        // match so it can produce first-token logits) is recomputed
+        assert_eq!(r.prefill_tokens_hit, 1);
+        assert!(r.cold_ttft_ms > 0.0 && r.hit_ttft_ms > 0.0);
     }
 
     #[test]

@@ -164,6 +164,56 @@ impl KvCache {
         }
         out
     }
+
+    /// Standalone snapshot of the first `tokens` positions, sized to
+    /// exactly `tokens` (`max_seq == len == tokens`). The prefix cache
+    /// holds these; a hit imports one back with
+    /// [`KvCache::copy_prefix_from`]. Bitwise copies — no recompute.
+    pub fn prefix_clone(&self, tokens: usize) -> KvCache {
+        assert!(tokens <= self.len, "snapshot {tokens} of {} stored", self.len);
+        let dh = self.head_dim;
+        let mut k = Vec::with_capacity(self.k.len());
+        let mut v = Vec::with_capacity(self.v.len());
+        for layer in 0..self.k.len() {
+            let mut kt = Tensor::zeros(self.heads * tokens, dh);
+            let mut vt = Tensor::zeros(self.heads * tokens, dh);
+            for h in 0..self.heads {
+                let src = h * self.max_seq * dh;
+                let dst = h * tokens * dh;
+                kt.data_mut()[dst..dst + tokens * dh]
+                    .copy_from_slice(&self.k[layer].data()[src..src + tokens * dh]);
+                vt.data_mut()[dst..dst + tokens * dh]
+                    .copy_from_slice(&self.v[layer].data()[src..src + tokens * dh]);
+            }
+            k.push(kt);
+            v.push(vt);
+        }
+        KvCache { k, v, len: tokens, max_seq: tokens, heads: self.heads, head_dim: dh }
+    }
+
+    /// Import the first `tokens` positions of a snapshot into this empty
+    /// cache — the prefix-cache hit path; the engine then prefills only
+    /// positions `tokens..`. Bitwise per-head strip copies, so a hit
+    /// stream matches a cold stream exactly.
+    pub fn copy_prefix_from(&mut self, src: &KvCache, tokens: usize) {
+        assert_eq!(self.len, 0, "import into a non-empty cache");
+        assert!(tokens <= src.len && tokens <= self.max_seq);
+        assert_eq!(self.heads, src.heads);
+        assert_eq!(self.head_dim, src.head_dim);
+        assert_eq!(self.k.len(), src.k.len());
+        let dh = self.head_dim;
+        for layer in 0..self.k.len() {
+            for h in 0..self.heads {
+                let s = h * src.max_seq * dh;
+                let d = h * self.max_seq * dh;
+                self.k[layer].data_mut()[d..d + tokens * dh]
+                    .copy_from_slice(&src.k[layer].data()[s..s + tokens * dh]);
+                self.v[layer].data_mut()[d..d + tokens * dh]
+                    .copy_from_slice(&src.v[layer].data()[s..s + tokens * dh]);
+            }
+        }
+        self.len = tokens;
+    }
 }
 
 /// Reusable row-major buffer pool: `prepare(n, width)` hands back `n`
@@ -980,6 +1030,41 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn prefix_snapshot_roundtrips_bitwise() {
+        let m = tiny(Family::Opt);
+        let bm = BackendModel::dense(&m);
+        let tokens: Vec<u32> = vec![3, 9, 27, 44, 5, 13, 60, 2];
+        let mut cold = KvCache::new(&m.cfg);
+        for &t in &tokens {
+            bm.decode_step(t, &mut cold);
+        }
+        // snapshot the first 5 positions, import into a fresh cache,
+        // decode the remaining tokens — logits must match bitwise
+        let snap = cold.prefix_clone(5);
+        assert_eq!(snap.len, 5);
+        assert_eq!(snap.remaining(), 0);
+        for layer in 0..m.cfg.layers {
+            for pos in 0..5 {
+                assert_eq!(snap.k_row(layer, pos), cold.k_row(layer, pos));
+                assert_eq!(snap.v_row(layer, pos), cold.v_row(layer, pos));
+            }
+        }
+        let mut warm = KvCache::new(&m.cfg);
+        warm.copy_prefix_from(&snap, 5);
+        assert_eq!(warm.len, 5);
+        let mut cold2 = KvCache::new(&m.cfg);
+        let mut want = Vec::new();
+        for &t in &tokens {
+            want = bm.decode_step(t, &mut cold2);
+        }
+        let mut got = Vec::new();
+        for &t in &tokens[5..] {
+            got = bm.decode_step(t, &mut warm);
+        }
+        assert_eq!(want, got, "imported-prefix logits must match bitwise");
     }
 
     #[test]

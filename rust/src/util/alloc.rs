@@ -1,0 +1,88 @@
+//! Opt-in global-allocator instrumentation for steady-state
+//! zero-allocation checks.
+//!
+//! [`CountingAllocator`] wraps [`std::alloc::System`] and bumps atomic
+//! counters on every heap event. The library never installs it — a test
+//! binary opts in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: gptqt::util::alloc::CountingAllocator = CountingAllocator;
+//! ```
+//!
+//! and then compares [`snapshot`]s around the code under test. When no
+//! binary installs it the counters simply stay at zero, so library code
+//! (e.g. `eval::speed::measure_decode_batch`) can record
+//! allocations-per-step unconditionally: the figure is real under the
+//! instrumented test and inert zero everywhere else ([`enabled`] tells
+//! the two apart).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static FREES: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// `System` with relaxed-atomic event counting. Zero overhead beyond
+/// two relaxed `fetch_add`s per event.
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        FREES.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a growth counts as one allocation event — exactly what a
+        // steady-state check wants to catch
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Cumulative heap-event counts at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub allocs: u64,
+    pub frees: u64,
+    pub bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Allocation events between `earlier` and `self`.
+    pub fn allocs_since(&self, earlier: &AllocSnapshot) -> u64 {
+        self.allocs.saturating_sub(earlier.allocs)
+    }
+}
+
+/// Current counter values (all zero unless a binary installed
+/// [`CountingAllocator`] as its global allocator).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Ordering::Relaxed),
+        frees: FREES.load(Ordering::Relaxed),
+        bytes: BYTES.load(Ordering::Relaxed),
+    }
+}
+
+/// Whether the counting allocator is actually installed in this binary
+/// (heuristic: any recorded event — reaching any caller of this
+/// function has long since allocated something).
+pub fn enabled() -> bool {
+    ALLOCS.load(Ordering::Relaxed) > 0
+}

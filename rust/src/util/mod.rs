@@ -5,6 +5,7 @@
 //! deliberately small, tested, and tailored to what the quantization and
 //! serving paths need.
 
+pub mod alloc;
 pub mod hist;
 pub mod pool;
 pub mod rng;

@@ -1,0 +1,103 @@
+//! Steady-state allocation regression tests. This binary installs
+//! [`CountingAllocator`] as its global allocator, so every heap event in
+//! the process is counted; the engine's persistent per-tick buffers and
+//! the batched-decode workspace must hold allocation traffic flat from
+//! one decode window to the next (a per-tick leak or per-tick buffer
+//! rebuild shows up as window-over-window growth).
+
+use gptqt::coordinator::{CpuBackend, Engine, EngineConfig, Request};
+use gptqt::eval::speed::{build_variant, measure_decode_batch, SpeedVariant};
+use gptqt::model::init::random_weights;
+use gptqt::model::{presets, BackendModel, Model};
+use gptqt::util::alloc::{self, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+// the counters are process-global, so concurrent tests would pollute
+// each other's windows — take this for any measured region
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn test_model(seed: u64) -> Model {
+    let mut cfg = presets::by_name("opt-nano").unwrap();
+    cfg.vocab = 64;
+    cfg.max_seq = 48;
+    Model::new(cfg.clone(), random_weights(&cfg, seed))
+}
+
+/// Pure decode ticks through `Engine::step` with a full running set:
+/// after warmup, a window of ticks must allocate no more than the
+/// previous equal window — the per-tick chunk/need/borrow vectors are
+/// persistent state, not per-tick rebuilds.
+#[test]
+fn engine_step_decode_ticks_hold_allocations_flat() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let model = test_model(21);
+    let mut engine = Engine::new(
+        CpuBackend(BackendModel::dense(&model)),
+        EngineConfig {
+            max_batch: 4,
+            block_size: 8,
+            total_blocks: 64,
+            eos_token: u32::MAX, // run the full 40 decode ticks
+            ..Default::default()
+        },
+    );
+    for id in 0..4u64 {
+        let prompt: Vec<u32> = (0..6u32).map(|i| 3 + (5 * id as u32 + 7 * i) % 60).collect();
+        engine.submit(Request::new(id, prompt, 40)).unwrap();
+    }
+    // admission + prefill + a few decode ticks to settle every lazily
+    // grown structure (event vecs, sampler state, tick buffers)
+    for _ in 0..6 {
+        engine.step().unwrap();
+    }
+    assert!(alloc::enabled(), "counting allocator must be installed in this binary");
+    let s0 = alloc::snapshot();
+    for _ in 0..8 {
+        engine.step().unwrap();
+    }
+    let s1 = alloc::snapshot();
+    for _ in 0..8 {
+        engine.step().unwrap();
+    }
+    let s2 = alloc::snapshot();
+    let w1 = s1.allocs_since(&s0);
+    let w2 = s2.allocs_since(&s1);
+    assert!(w1 > 0, "decode ticks still produce logits/event allocations");
+    assert!(
+        w2 <= w1 + 4,
+        "second decode window allocated more than the first: {w2} vs {w1} \
+         (per-tick buffers are growing instead of being reused)"
+    );
+    // all four sequences must still be mid-generation, so both windows
+    // really were pure decode ticks
+    assert!(engine.has_work());
+    engine.run_to_completion().unwrap();
+    engine.check_invariants().unwrap();
+}
+
+/// `measure_decode_batch` reports its own allocation rate; under the
+/// counting allocator the figure must be real, small, and identical
+/// between two identical runs (the shared `ForwardScratch` workspace
+/// keeps the timed loop at its steady-state floor).
+#[test]
+fn measure_decode_batch_reports_steady_alloc_rate() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let model = test_model(22);
+    let bm = build_variant(&model, SpeedVariant::Full, 1);
+    let r1 = measure_decode_batch(&model.cfg, &bm, SpeedVariant::Full, 4, 4, 10, 2);
+    let r2 = measure_decode_batch(&model.cfg, &bm, SpeedVariant::Full, 4, 4, 10, 2);
+    assert!(r1.allocs_per_step > 0.0, "logits vectors alone allocate each step");
+    assert!(
+        r2.allocs_per_step <= r1.allocs_per_step + 2.0,
+        "repeat run allocated more per step: {} vs {}",
+        r2.allocs_per_step,
+        r1.allocs_per_step
+    );
+    assert!(
+        r2.allocs_per_step < 64.0,
+        "decode step allocation rate blew past the steady-state floor: {}",
+        r2.allocs_per_step
+    );
+}

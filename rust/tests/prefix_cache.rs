@@ -1,0 +1,191 @@
+//! Prefix-cache integration: a prefix hit must stream bitwise-identical
+//! tokens to a cold serve while provably skipping the matched prefill
+//! work; copy-on-write must isolate diverging sequences from the cached
+//! blocks; and the pool must survive eviction churn with concurrent
+//! cancels, draining back to fully free once the cache is cleared.
+
+use gptqt::coordinator::{CpuBackend, Engine, EngineConfig, PrefixCacheConfig, Request};
+use gptqt::eval::speed::{build_variant, SpeedVariant};
+use gptqt::model::init::random_weights;
+use gptqt::model::{presets, BackendModel, Model};
+use std::collections::HashMap;
+
+fn test_model(seed: u64) -> Model {
+    let mut cfg = presets::by_name("opt-nano").unwrap();
+    cfg.vocab = 64;
+    cfg.max_seq = 48;
+    Model::new(cfg.clone(), random_weights(&cfg, seed))
+}
+
+fn cfg_with_cache(enabled: bool) -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        block_size: 8,
+        total_blocks: 64,
+        eos_token: u32::MAX, // deterministic lengths
+        prefix: PrefixCacheConfig { enabled, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn prompt(id: u64, len: usize) -> Vec<u32> {
+    (0..len as u32).map(|i| 3 + (5 * id as u32 + 7 * i) % 60).collect()
+}
+
+fn serve(engine: &mut Engine<CpuBackend>, reqs: Vec<Request>) -> HashMap<u64, Vec<u32>> {
+    for req in reqs {
+        engine.submit(req).unwrap();
+    }
+    let out = engine.run_to_completion().unwrap();
+    engine.check_invariants().unwrap();
+    out.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// Hit streams must be bitwise-equal to cold serves, for both the dense
+/// and the packed LUT-GEMM backend, and the hit must skip exactly the
+/// matched prefill tokens (visible in the prefill accounting).
+#[test]
+fn prefix_hit_streams_bitwise_equal_to_cold() {
+    let model = test_model(42);
+    for variant in [SpeedVariant::Full, SpeedVariant::GptqtLut { bits: 3 }] {
+        let plen = 12usize;
+        let gen = 6usize;
+        // cold reference: cache disabled
+        let mut cold_engine =
+            Engine::new(CpuBackend(build_variant(&model, variant, 9)), cfg_with_cache(false));
+        let cold = serve(&mut cold_engine, vec![Request::new(0, prompt(1, plen), gen)]);
+
+        // cache enabled: first serve fills the cache, second hits it
+        let mut engine =
+            Engine::new(CpuBackend(build_variant(&model, variant, 9)), cfg_with_cache(true));
+        let first = serve(&mut engine, vec![Request::new(0, prompt(1, plen), gen)]);
+        let after_first = engine.metrics.prefill_tokens_computed;
+        assert_eq!(after_first, plen as u64, "{variant:?}: cold prefill computes every token");
+        let second = serve(&mut engine, vec![Request::new(1, prompt(1, plen), gen)]);
+
+        assert_eq!(first[&0], cold[&0], "{variant:?}: cache-filling serve diverged from cold");
+        assert_eq!(second[&1], cold[&0], "{variant:?}: prefix-hit stream diverged from cold");
+        assert_eq!(engine.metrics.prefix_hits, 1, "{variant:?}");
+        // matched is capped at plen - 1 (one token must produce logits),
+        // so the hit computes exactly one prompt token
+        let matched = engine.metrics.prefix_tokens_reused as usize;
+        assert_eq!(matched, plen - 1, "{variant:?}");
+        assert_eq!(
+            engine.metrics.prefill_tokens_computed - after_first,
+            (plen - matched) as u64,
+            "{variant:?}: hit prefill must compute exactly the unmatched tail"
+        );
+    }
+}
+
+/// A sequence that shares a prefix mid-block and then diverges must (a)
+/// copy the shared tail block rather than write into it, (b) produce
+/// the same stream a cold engine produces for its full prompt, and (c)
+/// leave the cached entry intact for later exact-match hits.
+#[test]
+fn cow_divergence_isolates_writers_from_cached_blocks() {
+    let model = test_model(43);
+    let base = prompt(2, 20); // blocks: [0..8), [8..16), [16..20) partial
+    let mut fork = base[..14].to_vec(); // diverges mid-block-1
+    fork.extend([61, 62, 60, 59, 58, 57]); // 20 tokens total, last 6 differ
+
+    // cold references for both prompts
+    let mut cold =
+        Engine::new(CpuBackend(BackendModel::dense(&model)), cfg_with_cache(false));
+    let cold_out = serve(
+        &mut cold,
+        vec![Request::new(0, base.clone(), 5), Request::new(1, fork.clone(), 5)],
+    );
+
+    let mut engine =
+        Engine::new(CpuBackend(BackendModel::dense(&model)), cfg_with_cache(true));
+    let a = serve(&mut engine, vec![Request::new(10, base.clone(), 5)]);
+    // the donor itself appends past its pinned prompt blocks, so its
+    // first generated token already forces one copy-on-write
+    assert!(engine.kv().cow_copies() >= 1, "donor append into pinned tail must CoW");
+    let cow_after_donor = engine.kv().cow_copies();
+
+    let b = serve(&mut engine, vec![Request::new(11, fork.clone(), 5)]);
+    assert!(
+        engine.kv().cow_copies() > cow_after_donor,
+        "partial-tail share must copy the shared block on divergence"
+    );
+    assert_eq!(engine.metrics.prefix_hits, 1, "mid-block fork still hits the cache");
+    assert_eq!(engine.metrics.prefix_tokens_reused, 14);
+
+    // exact repeat of the original prompt: the cached entry must be
+    // unscathed by the fork's writes
+    let c = serve(&mut engine, vec![Request::new(12, base.clone(), 5)]);
+
+    assert_eq!(a[&10], cold_out[&0], "donor stream diverged from cold");
+    assert_eq!(b[&11], cold_out[&1], "forked stream diverged from cold");
+    assert_eq!(c[&12], cold_out[&0], "post-fork exact hit diverged from cold");
+    assert_eq!(engine.metrics.prefix_hits, 2);
+}
+
+/// Eviction churn with concurrent cancels: a small pool and entry cap
+/// force both LRU and pressure evictions while requests cancel
+/// mid-flight; the pool invariants must hold throughout and every block
+/// must come home once the cache is cleared.
+#[test]
+fn eviction_churn_with_cancels_keeps_pool_invariants() {
+    let model = test_model(44);
+    let total_blocks = 32usize;
+    let cfg = EngineConfig {
+        max_batch: 4,
+        block_size: 4,
+        total_blocks,
+        eos_token: u32::MAX,
+        prefix: PrefixCacheConfig {
+            enabled: true,
+            max_entries: 3,
+            max_blocks: 12,
+            min_tokens: 1,
+            evict_on_pressure: true,
+        },
+        ..Default::default()
+    };
+    let mut engine = Engine::new(CpuBackend(BackendModel::dense(&model)), cfg);
+
+    let mut next_id = 0u64;
+    for wave in 0..6u64 {
+        let mut ids = Vec::new();
+        for fam in 0..3u64 {
+            // per-family shared prefix + per-request unique tail: some
+            // serves hit, some miss, inserts keep rotating the LRU set
+            let mut p = prompt(fam, 10 + 2 * fam as usize);
+            p.push(3 + (wave * 7 + fam) as u32 % 60);
+            p.push(3 + (wave * 11 + fam) as u32 % 60);
+            let id = next_id;
+            next_id += 1;
+            ids.push(id);
+            engine.submit(Request::new(id, p, 6)).unwrap();
+        }
+        // let prefill start, then cancel one member of the wave while
+        // the others keep running
+        engine.step().unwrap();
+        engine.cancel(ids[wave as usize % 3]);
+        engine.run_to_completion().unwrap();
+        engine.check_invariants().unwrap();
+    }
+
+    assert!(engine.metrics.prefix_insertions >= 3, "churn must publish entries");
+    assert!(engine.metrics.prefix_hits >= 1, "repeated family prefixes must hit");
+    assert!(
+        engine.metrics.prefix_evictions >= 1,
+        "entry cap of 3 under 18 rotating prompts must evict"
+    );
+    assert!(engine.metrics.cancelled_total >= 1);
+
+    // cache still holds pinned blocks; dropping it must drain the pool
+    assert!(engine.prefix_cache().len() > 0);
+    assert!(engine.kv().free_blocks() < total_blocks);
+    engine.clear_prefix_cache();
+    engine.check_invariants().unwrap();
+    assert_eq!(engine.prefix_cache().len(), 0);
+    assert_eq!(
+        engine.kv().free_blocks(),
+        total_blocks,
+        "every block must come home after churn + clear"
+    );
+}
