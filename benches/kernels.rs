@@ -6,13 +6,17 @@
 //! `--smoke` runs the CI profile: tiny dims, minimal iterations,
 //! deterministic seeds — plus the SIMD-vs-scalar headline at
 //! 4096×4096×3 planes, batch 8 — and always writes the machine-readable
-//! `BENCH_kernels.json` (`{name, tokens_per_sec, ns_per_call}` entries)
-//! that the bench-smoke CI job uploads as the perf-trajectory artifact.
+//! `BENCH_kernels.json` (`{name, tokens_per_sec, ns_per_call,
+//! simd_tier, numerics}` entries) that the bench-smoke CI job uploads
+//! as the perf-trajectory artifact. The attention sweep additionally
+//! races the Fast numerics tier (fused FMA online-softmax row) against
+//! the Exact pipeline.
 
 use gptqt::bench::{write_bench_json, BenchRecord, Suite};
 use gptqt::kernels::attn::{av_accumulate, av_accumulate_scalar, qk_dots, qk_dots_scalar};
+use gptqt::kernels::fast_math::attn_row_fast;
 use gptqt::kernels::gemv_lut::gemm_lut_scalar;
-use gptqt::kernels::{gemv_f32, simd, Gemv};
+use gptqt::kernels::{gemv_f32, simd, Gemv, NumericsMode};
 use gptqt::model::forward::softmax;
 use gptqt::quant::linear::{rtn_quantize, IntLayer};
 use gptqt::quant::pack::PackedBcLayer;
@@ -146,7 +150,10 @@ fn main() {
     // head-major strips — qk_dots + softmax + av_accumulate per head,
     // dispatched vs pinned-scalar tier, context sweep. The bench-trend
     // job tracks these records for attention regressions; the ratio is
-    // the acceptance line (dispatched must win from ctx ≥ 512).
+    // the acceptance line (dispatched must win from ctx ≥ 512). The
+    // third entrant is the Fast numerics tier's fused online-softmax
+    // kernel (attn_row_fast), raced against the Exact pipeline at the
+    // same shapes — its records are tagged "numerics": "fast".
     let (heads, dh) = (8usize, 64usize);
     let d_model = heads * dh;
     let scale = 1.0 / (dh as f32).sqrt();
@@ -194,6 +201,27 @@ fn main() {
                 "  attention {} vs scalar at ctx={ctx}: {ratio:.2}x",
                 simd::tier().label()
             );
+        }
+        // Fast tier: one fused flash-style call per head, no score buffer
+        let fast_name = format!("attn row ctx={ctx} h={heads} dh={dh} fast");
+        let r = suite.run(&fast_name, aw, ai, || {
+            for h in 0..heads {
+                let qh = &q[h * dh..(h + 1) * dh];
+                attn_row_fast(
+                    qh,
+                    &kstrips[h],
+                    &vstrips[h],
+                    scale,
+                    0.0,
+                    ctx - 1,
+                    &mut out[h * dh..(h + 1) * dh],
+                );
+            }
+            std::hint::black_box(&out);
+        });
+        records.push(r.to_record_mode(ctx as f64, NumericsMode::Fast));
+        if let Some(ratio) = suite.ratio(&disp_name, &fast_name) {
+            println!("  attention fast vs exact at ctx={ctx}: {ratio:.2}x");
         }
     }
 

@@ -16,11 +16,17 @@
 //! `serve prefix_hit` TTFT entries — the trend pair for the
 //! prefix-reuse win.
 //!
+//! The streaming-serve section races the two numerics tiers: every
+//! `serve stream` point is measured once per [`NumericsMode`] (engine
+//! configured via `EngineConfig::numerics`), so BENCH_speed.json holds
+//! an `exact`/`fast` pair per policy — the trend line for the Fast
+//! kernel tier's end-to-end win.
+//!
 //! `--fast` shrinks the ladder; `--smoke` is the CI profile (opt-nano
 //! only, a handful of tokens, deterministic seeds) and is what the
 //! bench-smoke job runs. Both normal and smoke runs write the
 //! machine-readable `BENCH_speed.json` (`{name, tokens_per_sec,
-//! ns_per_call}`) uploaded as a CI artifact.
+//! ns_per_call, simd_tier, numerics}`) uploaded as a CI artifact.
 
 use gptqt::bench::{write_bench_json, BenchRecord};
 use gptqt::coordinator::SchedulePolicyKind;
@@ -28,6 +34,7 @@ use gptqt::eval::speed::{
     build_variant, measure_decode, measure_decode_batch, measure_prefill, measure_prefix_ttft,
     measure_streaming, SpeedVariant,
 };
+use gptqt::kernels::NumericsMode;
 use gptqt::model::init::random_weights;
 use gptqt::model::{load_or_init, presets, Model};
 
@@ -66,11 +73,11 @@ fn main() {
         ] {
             let bm = build_variant(&model, variant, 0);
             let r = measure_decode(&model.cfg, &bm, variant, 8, gen_tokens, 7);
-            records.push(BenchRecord {
-                name: format!("decode {} {} B=1", name, variant.label()),
-                tokens_per_sec: 1e3 / r.ms_per_token.max(1e-12),
-                ns_per_call: r.ms_per_token * 1e6,
-            });
+            records.push(BenchRecord::new(
+                format!("decode {} {} B=1", name, variant.label()),
+                1e3 / r.ms_per_token.max(1e-12),
+                r.ms_per_token * 1e6,
+            ));
             ms.push(r.ms_per_token);
         }
         println!(
@@ -126,11 +133,11 @@ fn main() {
                 if batch == *batches.last().unwrap() {
                     tps_last = r.tokens_per_sec;
                 }
-                records.push(BenchRecord {
-                    name: format!("decode_batch {} {} B={}", name, variant.label(), batch),
-                    tokens_per_sec: r.tokens_per_sec,
-                    ns_per_call: r.ms_per_step * 1e6,
-                });
+                records.push(BenchRecord::new(
+                    format!("decode_batch {} {} B={}", name, variant.label(), batch),
+                    r.tokens_per_sec,
+                    r.ms_per_step * 1e6,
+                ));
                 println!(
                     "{:<12} {:<18} {:>6} {:>12.3} {:>14.0} {:>16.3}",
                     name,
@@ -190,11 +197,11 @@ fn main() {
                 let chunked = measure_prefill(&cfg, &bm, variant, batch, plen, chunk, 7);
                 let pname =
                     format!("prefill {} p={plen} B={batch} chunk={chunk}", variant.label());
-                records.push(BenchRecord {
-                    name: pname,
-                    tokens_per_sec: chunked.tokens_per_sec,
-                    ns_per_call: (batch * plen) as f64 * 1e9 / chunked.tokens_per_sec.max(1e-12),
-                });
+                records.push(BenchRecord::new(
+                    pname,
+                    chunked.tokens_per_sec,
+                    (batch * plen) as f64 * 1e9 / chunked.tokens_per_sec.max(1e-12),
+                ));
                 println!(
                     "{:<18} {:>7} {:>6} {:>15.0} {:>15.0} {:>11.2} {:>11.2} {:>8.2}x",
                     variant.label(),
@@ -227,20 +234,33 @@ fn main() {
         (SchedulePolicyKind::Adaptive, "adaptive"),
     ] {
         let variant = SpeedVariant::GptqtLut { bits: 3 };
-        let bm = build_variant(&model, variant, 0);
-        let r = measure_streaming(&model.cfg, bm, variant, n_reqs, 8, s_gen, kind, 7);
-        records.push(BenchRecord {
-            name: format!(
-                "serve stream {serve_model} {} R={n_reqs} policy={klabel}",
-                variant.label()
-            ),
-            tokens_per_sec: r.tokens_per_sec,
-            ns_per_call: r.ttft_ms * 1e6,
-        });
-        println!(
-            "{:<10} {:>10.0} tok/s   ttft {:>8.2} ms   inter-token {:>7.3} ms   ({} tokens)",
-            klabel, r.tokens_per_sec, r.ttft_ms, r.inter_token_ms, r.tokens,
-        );
+        let mut tps = [0.0f64; 2];
+        for (i, numerics) in [NumericsMode::Exact, NumericsMode::Fast].into_iter().enumerate() {
+            let bm = build_variant(&model, variant, 0);
+            let r =
+                measure_streaming(&model.cfg, bm, variant, n_reqs, 8, s_gen, kind, numerics, 7);
+            tps[i] = r.tokens_per_sec;
+            records.push(
+                BenchRecord::new(
+                    format!(
+                        "serve stream {serve_model} {} R={n_reqs} policy={klabel} {}",
+                        variant.label(),
+                        numerics.label()
+                    ),
+                    r.tokens_per_sec,
+                    r.ttft_ms * 1e6,
+                )
+                .with_numerics(numerics),
+            );
+            println!(
+                "{:<10} {:<6} {:>10.0} tok/s   ttft {:>8.2} ms   inter-token {:>7.3} ms   \
+                 ({} tokens)",
+                klabel, numerics.label(), r.tokens_per_sec, r.ttft_ms, r.inter_token_ms, r.tokens,
+            );
+        }
+        if tps[0] > 0.0 {
+            println!("  -> fast vs exact throughput ({klabel}): {:.2}x", tps[1] / tps[0]);
+        }
     }
 
     // ---- prefix cache: cold vs hit TTFT through the engine -------------
@@ -262,16 +282,16 @@ fn main() {
     for variant in [SpeedVariant::Full, SpeedVariant::GptqtLut { bits: 3 }] {
         let bm = build_variant(&model, variant, 0);
         let r = measure_prefix_ttft(&model.cfg, bm, variant, pc_prompt, pc_gen, 7);
-        records.push(BenchRecord {
-            name: format!("serve prefix cold {pc_model} {}", variant.label()),
-            tokens_per_sec: pc_prompt as f64 * 1e3 / r.cold_ttft_ms.max(1e-9),
-            ns_per_call: r.cold_ttft_ms * 1e6,
-        });
-        records.push(BenchRecord {
-            name: format!("serve prefix_hit {pc_model} {}", variant.label()),
-            tokens_per_sec: pc_prompt as f64 * 1e3 / r.hit_ttft_ms.max(1e-9),
-            ns_per_call: r.hit_ttft_ms * 1e6,
-        });
+        records.push(BenchRecord::new(
+            format!("serve prefix cold {pc_model} {}", variant.label()),
+            pc_prompt as f64 * 1e3 / r.cold_ttft_ms.max(1e-9),
+            r.cold_ttft_ms * 1e6,
+        ));
+        records.push(BenchRecord::new(
+            format!("serve prefix_hit {pc_model} {}", variant.label()),
+            pc_prompt as f64 * 1e3 / r.hit_ttft_ms.max(1e-9),
+            r.hit_ttft_ms * 1e6,
+        ));
         println!(
             "{:<18} cold ttft {:>8.2} ms ({:>4} prefill toks)   hit ttft {:>8.2} ms \
              ({:>2} prefill toks, hits {})",

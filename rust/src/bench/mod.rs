@@ -5,6 +5,7 @@
 //! and one-line reports. `cargo bench` runs the `benches/*.rs` binaries
 //! (`harness = false`), each of which drives this module.
 
+use crate::kernels::{simd, NumericsMode};
 use crate::util::time::fmt_secs;
 use crate::util::Stopwatch;
 
@@ -26,17 +27,21 @@ impl BenchResult {
 
     /// Convert to a machine-readable record; `tokens_per_call` is how
     /// many tokens (or other throughput units) one timed call produced.
+    /// Tagged with the detected SIMD tier and `exact` numerics — use
+    /// [`BenchResult::to_record_mode`] for `Fast`-tier measurements.
     pub fn to_record(&self, tokens_per_call: f64) -> BenchRecord {
         let tps = if self.median_ns > 0.0 {
             tokens_per_call * 1e9 / self.median_ns
         } else {
             0.0
         };
-        BenchRecord {
-            name: self.name.clone(),
-            tokens_per_sec: tps,
-            ns_per_call: self.median_ns,
-        }
+        BenchRecord::new(self.name.clone(), tps, self.median_ns)
+    }
+
+    /// [`BenchResult::to_record`] tagged with the numerics mode the
+    /// benched path ran under.
+    pub fn to_record_mode(&self, tokens_per_call: f64, mode: NumericsMode) -> BenchRecord {
+        self.to_record(tokens_per_call).with_numerics(mode)
     }
 
     pub fn report_line(&self) -> String {
@@ -87,6 +92,33 @@ pub struct BenchRecord {
     pub name: String,
     pub tokens_per_sec: f64,
     pub ns_per_call: f64,
+    /// Detected SIMD tier the process ran under
+    /// ([`simd::SimdTier::label`]) — lets the perf trajectory separate
+    /// machines by vector capability.
+    pub simd_tier: &'static str,
+    /// Numerics mode the benched kernels used
+    /// ([`NumericsMode::label`]): `exact` or `fast`.
+    pub numerics: &'static str,
+}
+
+impl BenchRecord {
+    /// Record tagged with the detected SIMD tier and `exact` numerics
+    /// (the default mode; see [`BenchRecord::with_numerics`]).
+    pub fn new(name: impl Into<String>, tokens_per_sec: f64, ns_per_call: f64) -> BenchRecord {
+        BenchRecord {
+            name: name.into(),
+            tokens_per_sec,
+            ns_per_call,
+            simd_tier: simd::tier().label(),
+            numerics: NumericsMode::Exact.label(),
+        }
+    }
+
+    /// Tag the record with the numerics mode the benched path ran under.
+    pub fn with_numerics(mut self, mode: NumericsMode) -> BenchRecord {
+        self.numerics = mode.label();
+        self
+    }
 }
 
 fn json_escape(s: &str) -> String {
@@ -117,10 +149,13 @@ pub fn bench_records_json(records: &[BenchRecord]) -> String {
     let mut s = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
-            "  {{\"name\": \"{}\", \"tokens_per_sec\": {}, \"ns_per_call\": {}}}{}\n",
+            "  {{\"name\": \"{}\", \"tokens_per_sec\": {}, \"ns_per_call\": {}, \
+             \"simd_tier\": \"{}\", \"numerics\": \"{}\"}}{}\n",
             json_escape(&r.name),
             json_num(r.tokens_per_sec),
             json_num(r.ns_per_call),
+            json_escape(r.simd_tier),
+            json_escape(r.numerics),
             if i + 1 < records.len() { "," } else { "" },
         ));
     }
@@ -183,12 +218,8 @@ mod tests {
     #[test]
     fn json_records_are_well_formed() {
         let records = vec![
-            BenchRecord {
-                name: "gemm_lut3 4096x4096 B=8 \"avx2\"".into(),
-                tokens_per_sec: 1234.5678,
-                ns_per_call: 9.9e6,
-            },
-            BenchRecord { name: "empty".into(), tokens_per_sec: f64::INFINITY, ns_per_call: 0.0 },
+            BenchRecord::new("gemm_lut3 4096x4096 B=8 \"avx2\"", 1234.5678, 9.9e6),
+            BenchRecord::new("empty", f64::INFINITY, 0.0).with_numerics(NumericsMode::Fast),
         ];
         let json = bench_records_json(&records);
         assert!(json.starts_with("[\n") && json.ends_with("]\n"), "{json}");
@@ -197,7 +228,29 @@ mod tests {
         assert!(json.contains("\"tokens_per_sec\": 0.0"), "non-finite sanitized: {json}");
         assert_eq!(json.matches('{').count(), 2);
         assert_eq!(json.matches("},").count(), 1, "comma between entries only: {json}");
+        // every record carries the tier + numerics tags
+        assert_eq!(json.matches("\"simd_tier\": ").count(), 2, "{json}");
+        assert!(json.contains("\"numerics\": \"exact\""), "{json}");
+        assert!(json.contains("\"numerics\": \"fast\""), "{json}");
         assert!(bench_records_json(&[]).contains("[\n]"), "empty array stays valid");
+    }
+
+    #[test]
+    fn record_constructor_tags_tier_and_mode() {
+        let r = BenchRecord::new("x", 1.0, 1.0);
+        assert_eq!(r.simd_tier, simd::tier().label());
+        assert_eq!(r.numerics, "exact");
+        assert_eq!(r.with_numerics(NumericsMode::Fast).numerics, "fast");
+        let res = BenchResult {
+            name: "y".into(),
+            iters: 1,
+            median_ns: 1e9,
+            mad_ns: 0.0,
+            mean_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert_eq!(res.to_record_mode(1.0, NumericsMode::Fast).numerics, "fast");
+        assert_eq!(res.to_record(1.0).numerics, "exact");
     }
 
     #[test]

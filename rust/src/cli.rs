@@ -87,10 +87,12 @@ COMMANDS:
                end-to-end; --dequant evaluates the dequantized dense
                weights instead (legacy path)
                --model <name> --dataset <wiki-syn|ptb-syn> --method <m> --bits <n>
+               --numerics <exact|fast>  kernel numerics tier (default exact)
     serve      Serve requests through the streaming session server
                --model <name> --quant <fp32|gptq2|gptqt3> --requests <n>
                --max-batch <n> --prompt-len <n> --gen-len <n>
                --backend <cpu|pjrt> --policy <fixed|adaptive>
+               --numerics <exact|fast>  kernel numerics tier (default exact)
     exp        Reproduce a paper experiment:
                table1|table2|table3|table4|table5|table6|fig4|all
     gen-corpus Write synthetic training corpora to artifacts/ (build step

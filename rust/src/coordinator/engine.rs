@@ -18,6 +18,7 @@ use super::request::{FinishReason, Request, Response};
 use super::sampler::Sampler;
 use super::server::Event;
 use super::EngineConfig;
+use crate::kernels::NumericsMode;
 use crate::model::{BackendModel, ForwardScratch, KvCache};
 use crate::runtime::{CompiledModel, DeviceKv};
 use anyhow::Result;
@@ -88,6 +89,12 @@ pub trait Backend {
         false
     }
 
+    /// Apply the engine's configured numerics tier
+    /// ([`EngineConfig::numerics`]) before serving starts — the engine
+    /// calls this once at construction, making the config the single
+    /// source of truth. Backends without a `Fast` tier ignore it.
+    fn set_numerics(&mut self, _mode: NumericsMode) {}
+
     /// Human label (which Table-IV row this backend realizes).
     fn label(&self) -> &'static str;
 }
@@ -129,6 +136,10 @@ impl Backend for CpuBackend {
         }
         dst.copy_prefix_from(src, tokens);
         true
+    }
+
+    fn set_numerics(&mut self, mode: NumericsMode) {
+        self.0.set_numerics(mode);
     }
 
     fn label(&self) -> &'static str {
@@ -244,10 +255,11 @@ impl<B: Backend> Engine<B> {
     /// Construct with a custom [`SchedulePolicy`] (anything beyond the
     /// [`super::SchedulePolicyKind`] presets).
     pub fn with_policy(
-        backend: B,
+        mut backend: B,
         cfg: EngineConfig,
         policy: Box<dyn SchedulePolicy>,
     ) -> Engine<B> {
+        backend.set_numerics(cfg.numerics);
         let queue = Arc::new(RequestQueue::new(cfg.max_queue));
         let kv = PagedKvManager::new(cfg.total_blocks, cfg.block_size);
         let batcher = Batcher::new(BatcherConfig {
@@ -255,6 +267,8 @@ impl<B: Backend> Engine<B> {
             prefill_token_budget: cfg.block_size * cfg.max_batch * 4,
         });
         let prefix = PrefixCache::new(cfg.prefix.clone());
+        let mut metrics = Metrics::new();
+        metrics.numerics_label = cfg.numerics.label();
         Engine {
             backend,
             cfg,
@@ -264,7 +278,7 @@ impl<B: Backend> Engine<B> {
             running: Vec::new(),
             kv,
             prefix,
-            metrics: Metrics::new(),
+            metrics,
             pending: Vec::new(),
             scratch: B::Scratch::default(),
             tick_chunks: Vec::new(),
@@ -794,6 +808,25 @@ mod tests {
             e.run_to_completion().unwrap().remove(0).tokens
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn numerics_config_reaches_backend_and_keeps_greedy_tokens() {
+        let run = |mode| {
+            let mut e = cpu_engine_cfg(EngineConfig {
+                max_batch: 2,
+                total_blocks: 64,
+                block_size: 8,
+                numerics: mode,
+                ..Default::default()
+            });
+            assert_eq!(e.backend().0.numerics(), mode, "engine must apply cfg.numerics");
+            assert_eq!(e.metrics.numerics_label, mode.label());
+            e.submit(req(1, 6, 8)).unwrap();
+            e.run_to_completion().unwrap().remove(0).tokens
+        };
+        // the Fast tier must not change a single greedy-served token
+        assert_eq!(run(NumericsMode::Exact), run(NumericsMode::Fast));
     }
 
     #[test]

@@ -55,12 +55,28 @@ pub struct Metrics {
     pub ttft_hit: Histogram,
     /// TTFT of requests prefilled from scratch.
     pub ttft_cold: Histogram,
+    /// Numerics tier the backend served under
+    /// ([`crate::kernels::NumericsMode::label`]); set from
+    /// `EngineConfig::numerics` at engine construction.
+    pub numerics_label: &'static str,
+    /// Detected SIMD tier ([`crate::kernels::simd::SimdTier::label`]).
+    pub simd_tier_label: &'static str,
+    /// Greedy-decode token divergences observed between the `Fast` and
+    /// `Exact` numerics tiers — recorded by the divergence harness
+    /// ([`Metrics::record_greedy_divergences`]); the acceptance tests
+    /// assert this stays 0.
+    pub greedy_divergences: u64,
     wall: Option<Stopwatch>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics { wall: Some(Stopwatch::start()), ..Default::default() }
+        Metrics {
+            wall: Some(Stopwatch::start()),
+            numerics_label: crate::kernels::NumericsMode::Exact.label(),
+            simd_tier_label: crate::kernels::simd::tier().label(),
+            ..Default::default()
+        }
     }
 
     pub fn record_queue(&mut self, d: Duration) {
@@ -100,6 +116,13 @@ impl Metrics {
     /// Record a deadline expiry.
     pub fn record_expired(&mut self) {
         self.expired_total += 1;
+    }
+
+    /// Record `n` greedy-decode token divergences between the `Fast`
+    /// and `Exact` numerics tiers (the eval harness's end-to-end
+    /// correctness check for [`crate::kernels::NumericsMode::Fast`]).
+    pub fn record_greedy_divergences(&mut self, n: u64) {
+        self.greedy_divergences += n;
     }
 
     /// Record the chunk length the schedule policy chose for one tick.
@@ -157,6 +180,7 @@ impl Metrics {
         format!(
             "completed={} cancelled={} expired={} rejected={} prompt_toks={} gen_toks={} \
              throughput={:.1} tok/s\n\
+             numerics: mode={} simd={} greedy_divergences={}\n\
              batch   : calls={} mean_occupancy={:.2} max_occupancy={} max_tick_chunk={}\n\
              prefix  : hits={} misses={} inserts={} evicts={} reused_toks={} \
              prefill_toks={} pinned_blocks={}\n\
@@ -173,6 +197,9 @@ impl Metrics {
             self.prompt_tokens,
             self.generated_tokens,
             self.throughput(),
+            self.numerics_label,
+            self.simd_tier_label,
+            self.greedy_divergences,
             self.decode_batches,
             self.mean_batch_occupancy(),
             self.max_batch_occupancy,
@@ -213,6 +240,22 @@ mod tests {
         let r = m.report();
         assert!(r.contains("completed=1"));
         assert!(r.contains("per-tok"));
+        // the active numerics mode + SIMD tier surface in the summary
+        assert!(r.contains("mode=exact"), "{r}");
+        assert!(r.contains("greedy_divergences=0"), "{r}");
+    }
+
+    #[test]
+    fn greedy_divergences_accumulate_and_surface() {
+        let mut m = Metrics::new();
+        assert_eq!(m.numerics_label, "exact");
+        m.numerics_label = crate::kernels::NumericsMode::Fast.label();
+        m.record_greedy_divergences(0);
+        m.record_greedy_divergences(2);
+        assert_eq!(m.greedy_divergences, 2);
+        let r = m.report();
+        assert!(r.contains("mode=fast"), "{r}");
+        assert!(r.contains("greedy_divergences=2"), "{r}");
     }
 
     #[test]

@@ -121,6 +121,13 @@ pub struct EngineConfig {
     /// Prompt-prefix cache policy (admission sharing, LRU eviction).
     /// Off by default; the serve CLI and benches switch it on.
     pub prefix: PrefixCacheConfig,
+    /// Numerics tier the backend serves under
+    /// ([`crate::kernels::NumericsMode`]): `Exact` (default) keeps the
+    /// bitwise kernel contract; `Fast` enables the FMA +
+    /// online-softmax kernels. Applied to the backend at engine
+    /// construction ([`Backend::set_numerics`]) — the single source of
+    /// truth for a serving session's numerics.
+    pub numerics: crate::kernels::NumericsMode,
 }
 
 impl Default for EngineConfig {
@@ -134,6 +141,7 @@ impl Default for EngineConfig {
             prefill_chunk: 16,
             policy: SchedulePolicyKind::Fixed,
             prefix: PrefixCacheConfig::default(),
+            numerics: crate::kernels::NumericsMode::Exact,
         }
     }
 }

@@ -8,6 +8,7 @@ use crate::coordinator::{
     SchedulePolicyKind, Server,
 };
 use crate::data::{CorpusGenerator, Dataset};
+use crate::kernels::NumericsMode;
 use crate::model::quantize::quantize_model;
 use crate::model::{load_or_init, presets, BackendModel};
 use crate::quant::{Method, QuantConfig};
@@ -21,6 +22,13 @@ fn qcfg_from(a: &Args) -> QuantConfig {
         explore_grid: a.get_usize("explore-grid", 6),
         ..Default::default()
     }
+}
+
+/// `--numerics exact|fast` (default `exact`) — which kernel numerics
+/// tier the forward passes run under ([`NumericsMode`]).
+fn numerics_from(a: &Args) -> Result<NumericsMode> {
+    let s = a.get_or("numerics", "exact");
+    NumericsMode::parse(s).with_context(|| format!("bad --numerics {s:?} (exact|fast)"))
 }
 
 fn eval_cfg_from(a: &Args) -> EvalConfig {
@@ -82,9 +90,17 @@ pub fn ppl(a: &Args) -> Result<()> {
     if !trained {
         eprintln!("WARNING: no trained artifact for {name}; using random init");
     }
+    let numerics = numerics_from(a)?;
     let windows = eval_for(&ecfg, dataset);
     let (ppl, via) = if method == Method::Full {
-        (eval_ppl(&model, &windows), "full".to_string())
+        if numerics == NumericsMode::Fast {
+            // the Fast tier lives in the serving kernels — route the
+            // dense model through BackendModel to reach it
+            let bm = BackendModel::dense(&model).with_numerics(numerics);
+            (eval_ppl_backend(&bm, &windows), "full kernels, fast numerics".to_string())
+        } else {
+            (eval_ppl(&model, &windows), "full".to_string())
+        }
     } else {
         let calib = calib_for(&ecfg, dataset);
         let qm = quantize_model(&model, &calib, method, &qcfg, false)?;
@@ -93,9 +109,12 @@ pub fn ppl(a: &Args) -> Result<()> {
             (eval_ppl(&qm.model, &windows), "dequant-dense".to_string())
         } else {
             // deployment path: the quantized serving kernels end-to-end
-            let bm = BackendModel::quantized(&model, qm.layers);
+            let bm = BackendModel::quantized(&model, qm.layers).with_numerics(numerics);
             let label = bm.backend_label().to_string();
-            (eval_ppl_backend(&bm, &windows), format!("{label} kernels"))
+            (
+                eval_ppl_backend(&bm, &windows),
+                format!("{label} kernels, {} numerics", numerics.label()),
+            )
         }
     };
     println!(
@@ -229,6 +248,7 @@ where
         "off" | "false" | "0" => false,
         other => anyhow::bail!("bad --prefix-cache {other:?} (on|off)"),
     };
+    let numerics = numerics_from(a)?;
     let (gen, vocab) = CorpusGenerator::with_vocab(Dataset::WikiSyn, cfg.vocab, seed);
     let stream = gen.generate(n_requests * prompt_len * 4 + 64, 9);
     let server = Server::spawn(
@@ -237,10 +257,15 @@ where
             max_batch,
             policy,
             prefix: PrefixCacheConfig { enabled: prefix_on, ..Default::default() },
+            numerics,
             ..Default::default()
         },
     );
-    eprintln!("serving {n_requests} requests on {} [{label}, {policy:?} scheduling]", cfg.name);
+    eprintln!(
+        "serving {n_requests} requests on {} [{label}, {policy:?} scheduling, {} numerics]",
+        cfg.name,
+        numerics.label()
+    );
     let mut rng = crate::util::Rng::new(seed);
     let mut handles = Vec::new();
     for id in 0..n_requests as u64 {

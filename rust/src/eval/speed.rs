@@ -27,6 +27,7 @@ use crate::coordinator::{
     CpuBackend, Engine, EngineConfig, Event, PrefixCacheConfig, Request, SchedulePolicyKind,
     Server,
 };
+use crate::kernels::NumericsMode;
 use crate::model::{BackendModel, KvCache, Model, ModelConfig};
 use crate::quant::fuse::FusedRow;
 use crate::quant::linear::{rtn_quantize, IntLayer};
@@ -334,6 +335,9 @@ pub struct StreamSpeedResult {
 /// TTFT and inter-token gaps are computed from the tokens' `t_emit`
 /// stamps, so buffering in the consumer loop does not distort them.
 /// EOS is disabled so each request streams exactly `gen_tokens`.
+/// `numerics` selects the kernel tier the engine serves under
+/// ([`EngineConfig::numerics`]) — the speed benches race `fast` vs
+/// `exact` through this.
 #[allow(clippy::too_many_arguments)]
 pub fn measure_streaming(
     cfg: &ModelConfig,
@@ -343,6 +347,7 @@ pub fn measure_streaming(
     prompt_len: usize,
     gen_tokens: usize,
     policy: SchedulePolicyKind,
+    numerics: NumericsMode,
     seed: u64,
 ) -> StreamSpeedResult {
     assert!(requests >= 1 && prompt_len >= 1 && gen_tokens >= 1);
@@ -354,6 +359,7 @@ pub fn measure_streaming(
             max_batch: requests,
             policy,
             eos_token: u32::MAX, // deterministic token counts
+            numerics,
             ..Default::default()
         },
     );
@@ -540,13 +546,16 @@ mod tests {
     fn streaming_measurement_counts_every_token() {
         let m = tiny_model();
         for policy in [SchedulePolicyKind::Fixed, SchedulePolicyKind::Adaptive] {
-            let bm = build_variant(&m, SpeedVariant::Full, 1);
-            let r = measure_streaming(&m.cfg, bm, SpeedVariant::Full, 3, 4, 5, policy, 2);
-            assert_eq!(r.requests, 3);
-            assert_eq!(r.tokens, 3 * 5, "{policy:?}: EOS disabled, counts are exact");
-            assert!(r.tokens_per_sec > 0.0 && r.ttft_ms > 0.0);
-            assert!(r.inter_token_ms >= 0.0);
-            assert_eq!(r.cancelled, 0);
+            for numerics in [NumericsMode::Exact, NumericsMode::Fast] {
+                let bm = build_variant(&m, SpeedVariant::Full, 1);
+                let r =
+                    measure_streaming(&m.cfg, bm, SpeedVariant::Full, 3, 4, 5, policy, numerics, 2);
+                assert_eq!(r.requests, 3);
+                assert_eq!(r.tokens, 3 * 5, "{policy:?}: EOS disabled, counts are exact");
+                assert!(r.tokens_per_sec > 0.0 && r.ttft_ms > 0.0);
+                assert!(r.inter_token_ms >= 0.0);
+                assert_eq!(r.cancelled, 0);
+            }
         }
     }
 

@@ -32,6 +32,13 @@
 //! forward core (`model::decode`), which owns the caches; work items
 //! are independent and internally sequential, so threaded and
 //! single-threaded attention are bitwise identical too.
+//!
+//! These two primitives (plus the materialized score buffer and libm
+//! softmax between them) are the **`Exact` numerics mode** of the
+//! attention row. The opt-in `Fast` mode replaces the whole pipeline
+//! with one fused flash-style kernel,
+//! [`super::fast_math::attn_row_fast`], which never materializes
+//! per-position scores — same work item, relaxed contract.
 
 use super::simd::{self, SimdTier};
 

@@ -1,0 +1,835 @@
+//! The **`Fast` numerics tier** — FMA kernels, a polynomial `exp`, and a
+//! flash-style online-softmax attention row.
+//!
+//! [`super::simd`] pins every kernel to a bitwise scalar↔AVX2 contract:
+//! no FMA, no reassociation, transcendentals on libm. That contract is
+//! the right default (it is what lets runtime dispatch never change a
+//! served token), but it caps the hot path. This module is the escape
+//! hatch: an explicitly *relaxed* tier selected per call by
+//! [`NumericsMode`], never silently.
+//!
+//! ## The relaxed contract
+//!
+//! `Fast` kernels do **not** promise bit-equality with their `Exact`
+//! twins. They promise, and `tests/numerics_tolerance.rs` enforces:
+//!
+//! 1. **Bounded drift.** Every `Fast` kernel stays within a small
+//!    relative tolerance of its `Exact` twin (FMA removes intermediate
+//!    roundings; [`exp_fast`] carries ~2 ULP vs libm).
+//! 2. **Determinism within the tier.** The scalar fallback uses
+//!    [`f32::mul_add`] — the same correctly-rounded fused operation
+//!    `_mm256_fmadd_ps` executes — with the identical pinned
+//!    8-accumulator shape and tree reduction as the vector path, so
+//!    scalar and AVX2+FMA `Fast` results are **bitwise identical to
+//!    each other**. Greedy decode under `Fast` is therefore still
+//!    machine-independent, and `tests/numerics_divergence.rs` can
+//!    assert token divergence vs `Exact` is exactly zero.
+//!
+//! The payoff: fused multiply-adds in every dot/axpy, a vectorized
+//! polynomial [`exp_fast`] (Cephes coefficients, Cody–Waite reduction)
+//! replacing per-element libm calls in silu/gelu/softmax, and
+//! [`attn_row_fast`] — one fused attention work item that blocks over
+//! the K/V strips with a running max/denominator so scores never
+//! materialize beyond a stack-resident [`ATTN_BLOCK`] buffer.
+//!
+//! Dispatch is probed once per process ([`fast_simd`]): AVX2 **and**
+//! FMA must both be present for the vector path (every AVX2 server CPU
+//! has FMA, but the probe keeps the fallback honest).
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Which numerics contract a forward pass runs under. Parallel to
+/// [`super::SimdTier`] (instruction selection), but orthogonal to it:
+/// the tier answers *how fast can this CPU go*, the mode answers *how
+/// much numeric drift did the caller opt into*.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum NumericsMode {
+    /// The bitwise contract of [`super::simd`]: scalar ≡ AVX2 on every
+    /// input, parity suites assert `to_bits()` equality. Default
+    /// everywhere.
+    #[default]
+    Exact,
+    /// This module's relaxed contract: FMA + polynomial exp + online
+    /// softmax, bounded drift vs `Exact`, deterministic within the
+    /// tier. Opt-in via `--numerics fast`.
+    Fast,
+}
+
+impl NumericsMode {
+    /// Parse a CLI value ("exact" / "fast").
+    pub fn parse(s: &str) -> Option<NumericsMode> {
+        match s {
+            "exact" => Some(NumericsMode::Exact),
+            "fast" => Some(NumericsMode::Fast),
+            _ => None,
+        }
+    }
+
+    /// Human label for bench/metrics output ("exact" / "fast").
+    pub fn label(self) -> &'static str {
+        match self {
+            NumericsMode::Exact => "exact",
+            NumericsMode::Fast => "fast",
+        }
+    }
+}
+
+/// Whether the vector `Fast` path (AVX2 + FMA) is available, probed
+/// once per process. When false the scalar [`f32::mul_add`] fallback
+/// runs — bitwise identical to the vector path by construction.
+pub fn fast_simd() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static FMA: once_cell::sync::Lazy<bool> = once_cell::sync::Lazy::new(|| {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        });
+        if *FMA {
+            return true;
+        }
+    }
+    false
+}
+
+// -------------------------------------------------------------- dot/axpy
+
+/// `Σ a[i]·b[i]` with fused multiply-adds. Same pinned 8-accumulator
+/// lane mapping and tree reduction as [`super::simd::dot`], so the only
+/// difference from `Exact` is the single rounding per FMA.
+#[inline]
+pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fast_simd() {
+            // Safety: fast_simd() verified avx2+fma.
+            return unsafe { dot_fma(a, b) };
+        }
+    }
+    dot_fast_scalar(a, b)
+}
+
+/// Scalar twin of [`dot_fast`] — [`f32::mul_add`] per element, so it is
+/// bitwise identical to the AVX2+FMA path (the `Fast`-tier determinism
+/// reference, pinned by this module's tests).
+#[inline]
+pub fn dot_fast_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 = a[o].mul_add(b[o], s0);
+        s1 = a[o + 1].mul_add(b[o + 1], s1);
+        s2 = a[o + 2].mul_add(b[o + 2], s2);
+        s3 = a[o + 3].mul_add(b[o + 3], s3);
+        s4 = a[o + 4].mul_add(b[o + 4], s4);
+        s5 = a[o + 5].mul_add(b[o + 5], s5);
+        s6 = a[o + 6].mul_add(b[o + 6], s6);
+        s7 = a[o + 7].mul_add(b[o + 7], s7);
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail = a[i].mul_add(b[i], tail);
+    }
+    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+/// Pinned-order horizontal sum — the same tree as
+/// `simd::hsum_pinned` / the scalar reduction above.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum_pinned(v: __m256) -> f32 {
+    let mut l = [0.0f32; 8];
+    _mm256_storeu_ps(l.as_mut_ptr(), v);
+    (l[0] + l[1]) + (l[2] + l[3]) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let o = i * 8;
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(o)), _mm256_loadu_ps(bp.add(o)), acc);
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail = a[i].mul_add(b[i], tail);
+    }
+    hsum_pinned(acc) + tail
+}
+
+/// `acc[i] += s·v[i]` with one fused rounding per element. Lanes are
+/// independent, so scalar mul_add and AVX2 fmadd agree bitwise.
+#[inline]
+pub fn axpy_fast(acc: &mut [f32], s: f32, v: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fast_simd() {
+            // Safety: fast_simd() verified avx2+fma.
+            unsafe { axpy_fma(acc, s, v) };
+            return;
+        }
+    }
+    axpy_fast_scalar(acc, s, v)
+}
+
+/// Scalar twin of [`axpy_fast`] (bitwise identical to the vector path).
+#[inline]
+pub fn axpy_fast_scalar(acc: &mut [f32], s: f32, v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    for (o, &vv) in acc.iter_mut().zip(v) {
+        *o = s.mul_add(vv, *o);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_fma(acc: &mut [f32], s: f32, v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    let n = acc.len();
+    let chunks = n / 8;
+    let op = acc.as_mut_ptr();
+    let vp = v.as_ptr();
+    let sv = _mm256_set1_ps(s);
+    for i in 0..chunks {
+        let o = i * 8;
+        let r = _mm256_fmadd_ps(sv, _mm256_loadu_ps(vp.add(o)), _mm256_loadu_ps(op.add(o)));
+        _mm256_storeu_ps(op.add(o), r);
+    }
+    for i in chunks * 8..n {
+        *op.add(i) = s.mul_add(*vp.add(i), *op.add(i));
+    }
+}
+
+/// `Σ codes[i]·x[i]` (codes widened `u8 → f32` exactly) with FMA — the
+/// `Fast` twin of `simd::code_dot_t`, same pinned shape.
+#[inline]
+pub(crate) fn code_dot_fast(codes: &[u8], x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fast_simd() {
+            // Safety: fast_simd() verified avx2+fma.
+            return unsafe { code_dot_fma(codes, x) };
+        }
+    }
+    code_dot_fast_scalar(codes, x)
+}
+
+#[inline]
+fn code_dot_fast_scalar(codes: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), x.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 = (codes[o] as f32).mul_add(x[o], s0);
+        s1 = (codes[o + 1] as f32).mul_add(x[o + 1], s1);
+        s2 = (codes[o + 2] as f32).mul_add(x[o + 2], s2);
+        s3 = (codes[o + 3] as f32).mul_add(x[o + 3], s3);
+        s4 = (codes[o + 4] as f32).mul_add(x[o + 4], s4);
+        s5 = (codes[o + 5] as f32).mul_add(x[o + 5], s5);
+        s6 = (codes[o + 6] as f32).mul_add(x[o + 6], s6);
+        s7 = (codes[o + 7] as f32).mul_add(x[o + 7], s7);
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail = (codes[i] as f32).mul_add(x[i], tail);
+    }
+    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn code_dot_fma(codes: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), x.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let cp = codes.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let o = i * 8;
+        let cw = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_loadl_epi64(
+            cp.add(o) as *const __m128i
+        )));
+        acc = _mm256_fmadd_ps(cw, _mm256_loadu_ps(xp.add(o)), acc);
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail = (codes[i] as f32).mul_add(x[i], tail);
+    }
+    hsum_pinned(acc) + tail
+}
+
+/// Pinned 8-accumulator sum (adds only). Deterministic everywhere —
+/// used where the `Fast` tier needs a reassociation-friendly shape that
+/// still reduces in one fixed order (softmax denominators).
+#[inline]
+pub(crate) fn sum_fast(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 += xs[o];
+        s1 += xs[o + 1];
+        s2 += xs[o + 2];
+        s3 += xs[o + 3];
+        s4 += xs[o + 4];
+        s5 += xs[o + 5];
+        s6 += xs[o + 6];
+        s7 += xs[o + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += xs[i];
+    }
+    (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7)) + tail
+}
+
+// ---------------------------------------------------------- fast exp
+
+// Cephes expf: exp(x) = 2^k · exp(r), |r| ≤ ½ln2, with a degree-5
+// minimax polynomial for exp(r) − 1 − r over the reduced range. The
+// decimal forms below are the published Cephes coefficients; rustc
+// rounds them to the nearest f32 (clippy's shortest-repr lint disagrees
+// with the citation, hence the allow).
+#[allow(clippy::excessive_precision)]
+mod exp_consts {
+    pub const P0: f32 = 1.9875691500e-4;
+    pub const P1: f32 = 1.3981999507e-3;
+    pub const P2: f32 = 8.3334519073e-3;
+    pub const P3: f32 = 4.1665795894e-2;
+    pub const P4: f32 = 1.6666665459e-1;
+    pub const P5: f32 = 5.0000001201e-1;
+    /// ln2 split hi+lo (Cody–Waite): `k·LN2_HI` is exact for |k| ≤ 127.
+    pub const LN2_HI: f32 = 0.693_359_375;
+    pub const LN2_LO: f32 = -2.121_944_4e-4;
+    /// Clamp bounds: exp(−87) sits just above the smallest normal,
+    /// and 88 keeps `k ≤ 127` so the exponent-bits scale stays finite.
+    pub const LO: f32 = -87.0;
+    pub const HI: f32 = 88.0;
+}
+
+/// Polynomial `exp` — ~2 ULP relative error vs libm, fully inlineable,
+/// and lane-matched to the AVX2 path: `round_ties_even` mirrors
+/// `_mm256_round_ps` (nearest), every fused step mirrors one `fmadd`,
+/// so scalar and vector evaluations are bitwise identical per element.
+#[inline]
+pub fn exp_fast(x: f32) -> f32 {
+    use exp_consts::*;
+    let x = x.max(LO).min(HI);
+    let k = (x * std::f32::consts::LOG2_E).round_ties_even();
+    let nk = -k;
+    let r = nk.mul_add(LN2_HI, x);
+    let r = nk.mul_add(LN2_LO, r);
+    let mut p = P0;
+    p = p.mul_add(r, P1);
+    p = p.mul_add(r, P2);
+    p = p.mul_add(r, P3);
+    p = p.mul_add(r, P4);
+    p = p.mul_add(r, P5);
+    let y = p.mul_add(r * r, r) + 1.0;
+    // 2^k via exponent bits; k ∈ [−126, 127] after the clamp.
+    let scale = f32::from_bits((((k as i32) + 127) << 23) as u32);
+    y * scale
+}
+
+/// Eight [`exp_fast`] evaluations — identical operation sequence per
+/// lane, so results match the scalar form bitwise.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn exp_fast8(x: __m256) -> __m256 {
+    use exp_consts::*;
+    let x = _mm256_min_ps(_mm256_max_ps(x, _mm256_set1_ps(LO)), _mm256_set1_ps(HI));
+    let k = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(_mm256_mul_ps(
+        x,
+        _mm256_set1_ps(std::f32::consts::LOG2_E),
+    ));
+    let nk = _mm256_xor_ps(k, _mm256_set1_ps(-0.0)); // IEEE negate, like scalar `-k`
+    let r = _mm256_fmadd_ps(nk, _mm256_set1_ps(LN2_HI), x);
+    let r = _mm256_fmadd_ps(nk, _mm256_set1_ps(LN2_LO), r);
+    let mut p = _mm256_set1_ps(P0);
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P1));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P2));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P3));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P4));
+    p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(P5));
+    let y = _mm256_add_ps(
+        _mm256_fmadd_ps(p, _mm256_mul_ps(r, r), r),
+        _mm256_set1_ps(1.0),
+    );
+    let ki = _mm256_cvtps_epi32(k); // exact: k is integral after round
+    let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+        ki,
+        _mm256_set1_epi32(127),
+    )));
+    _mm256_mul_ps(y, scale)
+}
+
+/// `xs[i] = exp_fast(xs[i])` in place, 8 lanes at a time where the
+/// vector path is up.
+#[inline]
+pub fn exp_map_fast(xs: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fast_simd() {
+            // Safety: fast_simd() verified avx2+fma.
+            unsafe { exp_map_fma(xs) };
+            return;
+        }
+    }
+    for v in xs.iter_mut() {
+        *v = exp_fast(*v);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn exp_map_fma(xs: &mut [f32]) {
+    let n = xs.len();
+    let chunks = n / 8;
+    let p = xs.as_mut_ptr();
+    for i in 0..chunks {
+        let o = i * 8;
+        _mm256_storeu_ps(p.add(o), exp_fast8(_mm256_loadu_ps(p.add(o))));
+    }
+    for i in chunks * 8..n {
+        *p.add(i) = exp_fast(*p.add(i));
+    }
+}
+
+// ------------------------------------------------------- activations
+
+/// `gate[i] = silu(gate[i])·up[i]` on the polynomial exp — the `Fast`
+/// twin of `simd::silu_mul` (which pins both tiers to libm).
+#[inline]
+pub fn silu_mul_fast(gate: &mut [f32], up: &[f32]) {
+    debug_assert_eq!(gate.len(), up.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fast_simd() {
+            // Safety: fast_simd() verified avx2+fma.
+            unsafe { silu_mul_fma(gate, up) };
+            return;
+        }
+    }
+    silu_mul_fast_scalar(gate, up)
+}
+
+/// Scalar twin of [`silu_mul_fast`] (bitwise identical to the vector
+/// path — each step below mirrors one intrinsic).
+#[inline]
+pub fn silu_mul_fast_scalar(gate: &mut [f32], up: &[f32]) {
+    debug_assert_eq!(gate.len(), up.len());
+    for (g, &u) in gate.iter_mut().zip(up) {
+        let x = *g;
+        let e = exp_fast(-x);
+        *g = x / (1.0 + e) * u;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn silu_mul_fma(gate: &mut [f32], up: &[f32]) {
+    let n = gate.len();
+    let chunks = n / 8;
+    let gp = gate.as_mut_ptr();
+    let up_ = up.as_ptr();
+    let one = _mm256_set1_ps(1.0);
+    let sign = _mm256_set1_ps(-0.0);
+    for i in 0..chunks {
+        let o = i * 8;
+        let x = _mm256_loadu_ps(gp.add(o));
+        let e = exp_fast8(_mm256_xor_ps(x, sign));
+        let v = _mm256_mul_ps(
+            _mm256_div_ps(x, _mm256_add_ps(one, e)),
+            _mm256_loadu_ps(up_.add(o)),
+        );
+        _mm256_storeu_ps(gp.add(o), v);
+    }
+    for i in chunks * 8..n {
+        let x = *gp.add(i);
+        let e = exp_fast(-x);
+        *gp.add(i) = x / (1.0 + e) * *up_.add(i);
+    }
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/π), as in simd::gelu
+const GELU_A: f32 = 0.044715;
+
+/// tanh-GELU on the polynomial exp, one element:
+/// `tanh(t) = 1 − 2/(exp(2t)+1)`. Operation order mirrors the vector
+/// path exactly.
+#[inline]
+pub fn gelu_fast(x: f32) -> f32 {
+    let x3 = x * x * x;
+    let t = GELU_A.mul_add(x3, x) * GELU_C;
+    let e = exp_fast(t + t);
+    let th = 1.0 - 2.0 / (e + 1.0);
+    0.5 * (x * (1.0 + th))
+}
+
+/// `x[i] = gelu(x[i])` in place on the polynomial exp — the `Fast`
+/// twin of `simd::gelu_map`.
+#[inline]
+pub fn gelu_map_fast(x: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fast_simd() {
+            // Safety: fast_simd() verified avx2+fma.
+            unsafe { gelu_map_fma(x) };
+            return;
+        }
+    }
+    for v in x.iter_mut() {
+        *v = gelu_fast(*v);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gelu_map_fma(xs: &mut [f32]) {
+    let n = xs.len();
+    let chunks = n / 8;
+    let p = xs.as_mut_ptr();
+    let one = _mm256_set1_ps(1.0);
+    let two = _mm256_set1_ps(2.0);
+    let half = _mm256_set1_ps(0.5);
+    let a = _mm256_set1_ps(GELU_A);
+    let c = _mm256_set1_ps(GELU_C);
+    for i in 0..chunks {
+        let o = i * 8;
+        let x = _mm256_loadu_ps(p.add(o));
+        let x3 = _mm256_mul_ps(_mm256_mul_ps(x, x), x);
+        let t = _mm256_mul_ps(_mm256_fmadd_ps(a, x3, x), c);
+        let e = exp_fast8(_mm256_add_ps(t, t));
+        let th = _mm256_sub_ps(one, _mm256_div_ps(two, _mm256_add_ps(e, one)));
+        let v = _mm256_mul_ps(half, _mm256_mul_ps(x, _mm256_add_ps(one, th)));
+        _mm256_storeu_ps(p.add(o), v);
+    }
+    for i in chunks * 8..n {
+        *p.add(i) = gelu_fast(*p.add(i));
+    }
+}
+
+/// In-place softmax on the polynomial exp: max-subtract, [`exp_map_fast`],
+/// pinned-order sum, scale. The `Fast` twin of
+/// `model::forward::softmax` (which stays the `Exact` reference).
+#[inline]
+pub fn softmax_fast(row: &mut [f32]) {
+    if row.is_empty() {
+        return;
+    }
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    for v in row.iter_mut() {
+        *v -= max;
+    }
+    exp_map_fast(row);
+    let inv = 1.0 / sum_fast(row);
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+// ------------------------------------- fused online-softmax attention
+
+/// Positions per online-softmax block: the score buffer lives on the
+/// stack and one block of K rows (`128 × head_dim` floats) stays
+/// L1/L2-resident while both passes (max + exp/accumulate) run over it.
+pub const ATTN_BLOCK: usize = 128;
+
+/// One fused attention work item — the `Fast` tier's replacement for
+/// the `qk_dots → softmax → av_accumulate` pipeline of
+/// [`super::attn`].
+///
+/// Flash-attention style over the head-major strips: K/V are walked in
+/// [`ATTN_BLOCK`]-position blocks with a running max `m` and
+/// denominator `l`; scores for a block live in a stack buffer and are
+/// folded into `out` before the next block streams in, so per-position
+/// scores never materialize. Per block:
+///
+/// 1. `s[j] = fma(dot_fast(q, k_j), scale, slope·(j − pos))`,
+/// 2. rescale the running state by `exp(m − m_new)` (0 when `m` is
+///    still −∞ — [`exp_fast`] clamps and would return a denormal-range
+///    value, not 0, so the first block is special-cased),
+/// 3. `p_j = exp_fast(s_j − m_new)`; `l += Σ p_j`;
+///    `out += p_j · v_j` via [`axpy_fast`].
+///
+/// Finally `out *= 1/l`. `out` is overwritten (no caller zeroing).
+/// Every primitive underneath is deterministic across the `Fast`
+/// scalar/vector paths, so the whole row is too.
+pub fn attn_row_fast(
+    q: &[f32],
+    kstrip: &[f32],
+    vstrip: &[f32],
+    scale: f32,
+    slope: f32,
+    pos: usize,
+    out: &mut [f32],
+) {
+    let dh = q.len();
+    debug_assert_eq!(out.len(), dh);
+    debug_assert_eq!(kstrip.len(), vstrip.len());
+    debug_assert_eq!(kstrip.len() % dh.max(1), 0);
+    let ctx = kstrip.len() / dh.max(1);
+    out.fill(0.0);
+    if ctx == 0 {
+        return;
+    }
+    let posf = pos as f32;
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut sbuf = [0.0f32; ATTN_BLOCK];
+    let mut b0 = 0;
+    while b0 < ctx {
+        let bn = (ctx - b0).min(ATTN_BLOCK);
+        let s = &mut sbuf[..bn];
+        let mut bmax = f32::NEG_INFINITY;
+        for (j, sj) in s.iter_mut().enumerate() {
+            let at = b0 + j;
+            let krow = &kstrip[at * dh..(at + 1) * dh];
+            let v = dot_fast(q, krow).mul_add(scale, slope * (at as f32 - posf));
+            *sj = v;
+            bmax = bmax.max(v);
+        }
+        let m_new = m.max(bmax);
+        // rescale previous blocks' contribution into the new frame
+        let c = if m > f32::NEG_INFINITY {
+            exp_fast(m - m_new)
+        } else {
+            0.0
+        };
+        if c != 1.0 {
+            l *= c;
+            for o in out.iter_mut() {
+                *o *= c;
+            }
+        }
+        for sj in s.iter_mut() {
+            *sj -= m_new;
+        }
+        exp_map_fast(s);
+        l += sum_fast(s);
+        for (j, &p) in s.iter().enumerate() {
+            let at = b0 + j;
+            axpy_fast(out, p, &vstrip[at * dh..(at + 1) * dh]);
+        }
+        m = m_new;
+        b0 += bn;
+    }
+    let inv = 1.0 / l;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{attn, simd};
+    use crate::util::Rng;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn mode_parses_and_labels() {
+        assert_eq!(NumericsMode::parse("exact"), Some(NumericsMode::Exact));
+        assert_eq!(NumericsMode::parse("fast"), Some(NumericsMode::Fast));
+        assert_eq!(NumericsMode::parse("warp"), None);
+        assert_eq!(NumericsMode::default(), NumericsMode::Exact);
+        assert_eq!(NumericsMode::Fast.label(), "fast");
+    }
+
+    #[test]
+    fn exp_fast_tracks_libm_closely() {
+        let mut rng = Rng::new(71);
+        for _ in 0..2000 {
+            let x = rng.normal_f32() * 8.0;
+            let want = (x as f64).exp();
+            let got = exp_fast(x) as f64;
+            assert!(
+                ((got - want) / want).abs() < 1e-5,
+                "x={x} got={got} want={want}"
+            );
+        }
+        // edges: clamps stay finite and positive
+        assert!(exp_fast(-1e30) > 0.0);
+        assert!(exp_fast(1e30).is_finite());
+        assert_eq!(exp_fast(0.0), 1.0);
+    }
+
+    #[test]
+    fn exp_map_matches_scalar_exp_bitwise() {
+        // vector lanes must reproduce the scalar evaluation exactly —
+        // the determinism half of the Fast contract
+        let mut rng = Rng::new(72);
+        for n in [1usize, 7, 8, 9, 64, 131] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 10.0).collect();
+            let mut mapped = xs.clone();
+            exp_map_fast(&mut mapped);
+            for (i, (&x, &y)) in xs.iter().zip(&mapped).enumerate() {
+                assert_eq!(exp_fast(x).to_bits(), y.to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_dot_and_axpy_match_scalar_twins_bitwise() {
+        let mut rng = Rng::new(73);
+        for n in [0usize, 1, 7, 8, 9, 33, 257, 1031] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            assert_eq!(
+                dot_fast(&a, &b).to_bits(),
+                dot_fast_scalar(&a, &b).to_bits(),
+                "dot n={n}"
+            );
+            let s = rng.normal_f32();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let mut y_v = base.clone();
+            let mut y_s = base.clone();
+            axpy_fast(&mut y_v, s, &a);
+            axpy_fast_scalar(&mut y_s, s, &a);
+            for (u, v) in y_s.iter().zip(&y_v) {
+                assert_eq!(u.to_bits(), v.to_bits(), "axpy n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_dot_stays_close_to_exact_dot() {
+        let mut rng = Rng::new(74);
+        for n in [1usize, 9, 128, 1031] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let exact = simd::dot_scalar(&a, &b);
+            let fast = dot_fast(&a, &b);
+            assert!(close(exact, fast, 1e-5), "n={n} exact={exact} fast={fast}");
+        }
+    }
+
+    #[test]
+    fn code_dot_fast_stays_close_to_exact() {
+        let mut rng = Rng::new(75);
+        for n in [1usize, 8, 77, 1031] {
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let exact = simd::code_dot_t(&codes, &x, simd::SimdTier::Scalar);
+            let fast = code_dot_fast(&codes, &x);
+            // code magnitudes reach 255, so compare relative to the
+            // accumulated magnitude rather than 1.0
+            let mag = codes
+                .iter()
+                .zip(&x)
+                .map(|(&c, &v)| (c as f32 * v).abs())
+                .sum::<f32>();
+            assert!(
+                (exact - fast).abs() <= 1e-5 * (1.0 + mag),
+                "n={n} exact={exact} fast={fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn activations_track_exact_forms() {
+        let mut rng = Rng::new(76);
+        for n in [1usize, 8, 13, 131] {
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 3.0).collect();
+            let up: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let mut g_fast = base.clone();
+            silu_mul_fast(&mut g_fast, &up);
+            for i in 0..n {
+                let want = simd::silu(base[i]) * up[i];
+                assert!(close(want, g_fast[i], 1e-5), "silu n={n} i={i}");
+            }
+            let mut x_fast = base.clone();
+            gelu_map_fast(&mut x_fast);
+            for i in 0..n {
+                let want = simd::gelu(base[i]);
+                assert!(close(want, x_fast[i], 1e-4), "gelu n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_fast_normalizes_and_tracks_exact() {
+        let mut rng = Rng::new(77);
+        for n in [1usize, 2, 9, 64, 300] {
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 5.0).collect();
+            let mut fast = base.clone();
+            softmax_fast(&mut fast);
+            let sum: f32 = fast.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "n={n} sum={sum}");
+            // exact reference: libm exp, sequential normalize
+            let max = base.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = base.iter().map(|&v| (v - max).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            for i in 0..n {
+                assert!(close(exps[i] / denom, fast[i], 1e-4), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn attn_row_fast_matches_exact_pipeline_within_tolerance() {
+        let mut rng = Rng::new(78);
+        for dh in [1usize, 8, 24, 64] {
+            // 300 crosses two ATTN_BLOCK boundaries → exercises rescale
+            for ctx in [1usize, 2, 17, 128, 129, 300] {
+                let q: Vec<f32> = (0..dh).map(|_| rng.normal_f32()).collect();
+                let kstrip: Vec<f32> = (0..ctx * dh).map(|_| rng.normal_f32()).collect();
+                let vstrip: Vec<f32> = (0..ctx * dh).map(|_| rng.normal_f32()).collect();
+                let scale = 1.0 / (dh as f32).sqrt();
+                for slope in [0.0f32, -0.125] {
+                    // exact pipeline: scores → libm softmax → weighted V
+                    let mut scores = vec![0.0f32; ctx];
+                    attn::qk_dots_scalar(&q, &kstrip, scale, slope, ctx - 1, &mut scores);
+                    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max).exp();
+                        sum += *s;
+                    }
+                    for s in scores.iter_mut() {
+                        *s /= sum;
+                    }
+                    let mut want = vec![0.0f32; dh];
+                    attn::av_accumulate_scalar(&scores, &vstrip, &mut want);
+
+                    let mut got = vec![0.0f32; dh];
+                    attn_row_fast(&q, &kstrip, &vstrip, scale, slope, ctx - 1, &mut got);
+                    for d in 0..dh {
+                        assert!(
+                            close(want[d], got[d], 2e-4),
+                            "dh={dh} ctx={ctx} slope={slope} d={d}: {} vs {}",
+                            want[d],
+                            got[d]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attn_row_fast_empty_context_zeroes_out() {
+        let q = [1.0f32; 8];
+        let mut out = [2.5f32; 8];
+        attn_row_fast(&q, &[], &[], 1.0, 0.0, 0, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -20,6 +20,7 @@
 //! items the widened tile at SIMD width — exact conversion, so still
 //! the same bits as per-item [`gemv_dequant`].
 
+use super::fast_math;
 use super::simd::{self, SimdTier};
 use crate::quant::linear::IntLayer;
 
@@ -44,6 +45,23 @@ fn gemv_dequant_t(layer: &IntLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
         let codes = &layer.codes[r * cols..(r + 1) * cols];
         let acc = simd::code_dot_t(codes, x, t);
         y[r] = s * acc + s * qz * sum_x;
+    }
+}
+
+/// `y = Ŵ·x` on the `Fast` numerics tier: FMA code-dot
+/// ([`fast_math::code_dot_fast`]) plus a fused dequant epilogue
+/// (`fma(s·qz, Σx, s·acc)`). Same row order and accumulator shape, so
+/// the result is deterministic across the `Fast` scalar/vector paths.
+pub fn gemv_dequant_fast(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), layer.cols);
+    assert_eq!(y.len(), layer.rows);
+    let sum_x: f32 = x.iter().sum();
+    let cols = layer.cols;
+    for r in 0..layer.rows {
+        let (s, qz) = layer.row_params[r];
+        let codes = &layer.codes[r * cols..(r + 1) * cols];
+        let acc = fast_math::code_dot_fast(codes, x);
+        y[r] = (s * qz).mul_add(sum_x, s * acc);
     }
 }
 
@@ -102,6 +120,52 @@ fn gemm_dequant_t(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdT
             for (bi, x) in xs.iter().enumerate() {
                 let acc = simd::dot_t(&wide, x, t);
                 ys[bi][r] = s * acc + s * qz * sum_x[bi];
+            }
+        }
+    }
+}
+
+/// Batched `ys[b] = Ŵ·xs[b]` on the `Fast` numerics tier — the same
+/// widen-once weight streaming and pool row-partition as
+/// [`gemm_dequant`], with [`fast_math::dot_fast`] against the widened
+/// tile and the fused epilogue of [`gemv_dequant_fast`]. Widening is
+/// exact and the FMA dot keeps the pinned shape, so
+/// `gemm_dequant_fast(B=1) == gemv_dequant_fast` per element.
+pub fn gemm_dequant_fast(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    assert_eq!(xs.len(), ys.len(), "gemm_dequant batch size mismatch");
+    for x in xs {
+        assert_eq!(x.len(), layer.cols);
+    }
+    for y in ys.iter() {
+        assert_eq!(y.len(), layer.rows);
+    }
+    let t = simd::tier();
+    let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
+    let cols = layer.cols;
+    if super::par_rows(layer.rows, cols, xs.len()) {
+        let writer = super::RowWriter::new(ys);
+        crate::util::pool::global().scope_chunks(layer.rows, |range| {
+            let mut wide = vec![0.0f32; cols];
+            for r in range {
+                let (s, qz) = layer.row_params[r];
+                let codes = &layer.codes[r * cols..(r + 1) * cols];
+                simd::widen_codes(codes, &mut wide, t);
+                for (bi, x) in xs.iter().enumerate() {
+                    let acc = fast_math::dot_fast(&wide, x);
+                    // Safety: each row lands in exactly one chunk.
+                    unsafe { writer.set(bi, r, (s * qz).mul_add(sum_x[bi], s * acc)) };
+                }
+            }
+        });
+    } else {
+        let mut wide = vec![0.0f32; cols];
+        for r in 0..layer.rows {
+            let (s, qz) = layer.row_params[r];
+            let codes = &layer.codes[r * cols..(r + 1) * cols];
+            simd::widen_codes(codes, &mut wide, t);
+            for (bi, x) in xs.iter().enumerate() {
+                let acc = fast_math::dot_fast(&wide, x);
+                ys[bi][r] = (s * qz).mul_add(sum_x[bi], s * acc);
             }
         }
     }

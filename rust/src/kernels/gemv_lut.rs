@@ -29,6 +29,7 @@
 //! results are bitwise identical (gathers are exact loads).
 
 use super::simd::{self, SimdTier};
+use super::NumericsMode;
 use crate::quant::pack::{PackedBcLayer, GROUP};
 
 /// Groups processed per accumulator pass. The `(rows × planes)` f32
@@ -90,6 +91,53 @@ fn gemv_lut_t(layer: &PackedBcLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
     }
 }
 
+/// `y = Ŵ·x` on the `Fast` numerics tier. The LUT build and per-slot
+/// gather-adds are *shared* with [`gemv_lut`] — they are add-only, so
+/// FMA has nothing to fuse and the bitwise cross-tier accumulation is
+/// already optimal — only the α-epilogue fuses its multiply-adds
+/// (`v = fma(α_p, acc_p, v)`). Deterministic across instruction tiers
+/// for the same reason the `Exact` kernel is.
+pub fn gemv_lut_fast(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
+    let t = simd::tier();
+    assert_eq!(x.len(), layer.cols);
+    assert_eq!(y.len(), layer.rows);
+    let rows = layer.rows;
+    let planes = layer.planes;
+    let sum_x: f32 = x.iter().sum();
+
+    let mut acc = vec![0.0f32; rows * planes];
+    let mut luts = [[0.0f32; 1 << GROUP]; GBLOCK];
+    let slots = rows * planes;
+
+    for gb in (0..layer.groups).step_by(GBLOCK) {
+        let gn = GBLOCK.min(layer.groups - gb);
+        for (g, lut) in luts.iter_mut().enumerate().take(gn) {
+            let base = (gb + g) * GROUP;
+            let mut xg = [0.0f32; GROUP];
+            for k in 0..GROUP.min(layer.cols - base) {
+                xg[k] = x[base + k];
+            }
+            build_lut(&xg, lut);
+        }
+        let codes = &layer.codes[gb * slots..(gb + gn) * slots];
+        let mut slices: [&[u8]; GBLOCK] = [&[]; GBLOCK];
+        for (g, sl) in slices.iter_mut().enumerate().take(gn) {
+            *sl = &codes[g * slots..(g + 1) * slots];
+        }
+        simd::lut_accumulate(&mut acc, &slices[..gn], &luts[..gn], t);
+    }
+
+    for r in 0..rows {
+        let mut v = layer.bias[r] * sum_x;
+        let arow = &layer.alphas[r * planes..(r + 1) * planes];
+        let crow = &acc[r * planes..(r + 1) * planes];
+        for (a, s) in arow.iter().zip(crow) {
+            v = a.mul_add(*s, v);
+        }
+        y[r] = v;
+    }
+}
+
 /// Batched `ys[b] = Ŵ·xs[b]` — the LUT-GEMM path with weight reuse.
 ///
 /// The per-group 256-entry LUTs are built once per batch item (that cost
@@ -111,15 +159,29 @@ fn gemv_lut_t(layer: &PackedBcLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
 /// is aligned to [`simd::BLOCK`] rows so every worker's slot range is a
 /// whole number of SIMD blocks (scalar tails only in the last chunk).
 pub fn gemm_lut(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
-    gemm_lut_t(layer, xs, ys, simd::tier());
+    gemm_lut_m(layer, xs, ys, simd::tier(), NumericsMode::Exact);
 }
 
 /// [`gemm_lut`] forced onto the scalar tier (bench/test reference).
 pub fn gemm_lut_scalar(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
-    gemm_lut_t(layer, xs, ys, SimdTier::Scalar);
+    gemm_lut_m(layer, xs, ys, SimdTier::Scalar, NumericsMode::Exact);
 }
 
-fn gemm_lut_t(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdTier) {
+/// Batched LUT matvec on the `Fast` numerics tier — identical
+/// accumulation to [`gemm_lut`] (see [`gemv_lut_fast`] for why the
+/// gather-adds are shared), fused α-epilogue per output element, so
+/// `gemm_lut_fast(B=1) == gemv_lut_fast` per element.
+pub fn gemm_lut_fast(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    gemm_lut_m(layer, xs, ys, simd::tier(), NumericsMode::Fast);
+}
+
+fn gemm_lut_m(
+    layer: &PackedBcLayer,
+    xs: &[&[f32]],
+    ys: &mut [Vec<f32>],
+    t: SimdTier,
+    mode: NumericsMode,
+) {
     let nb = xs.len();
     assert_eq!(nb, ys.len(), "gemm_lut batch size mismatch");
     for x in xs {
@@ -135,10 +197,10 @@ fn gemm_lut_t(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>], t: Simd
     let writer = super::RowWriter::new(ys);
     if super::par_rows(layer.rows, layer.cols, nb) {
         crate::util::pool::global().scope_chunks_aligned(layer.rows, simd::BLOCK, |range| {
-            gemm_lut_rows(layer, xs, &sum_x, range.start, range.end, &writer, t);
+            gemm_lut_rows(layer, xs, &sum_x, range.start, range.end, &writer, t, mode);
         });
     } else {
-        gemm_lut_rows(layer, xs, &sum_x, 0, layer.rows, &writer, t);
+        gemm_lut_rows(layer, xs, &sum_x, 0, layer.rows, &writer, t, mode);
     }
 }
 
@@ -154,6 +216,7 @@ fn gemm_lut_rows(
     rows_hi: usize,
     writer: &super::RowWriter,
     t: SimdTier,
+    mode: NumericsMode,
 ) {
     let nb = xs.len();
     let rows = layer.rows;
@@ -195,8 +258,17 @@ fn gemm_lut_rows(
             let mut v = layer.bias[r] * sum_x[bi];
             let arow = &layer.alphas[r * planes..(r + 1) * planes];
             let crow = &acc_b[(r - rows_lo) * planes..(r - rows_lo + 1) * planes];
-            for (a, s) in arow.iter().zip(crow) {
-                v += a * s;
+            match mode {
+                NumericsMode::Exact => {
+                    for (a, s) in arow.iter().zip(crow) {
+                        v += a * s;
+                    }
+                }
+                NumericsMode::Fast => {
+                    for (a, s) in arow.iter().zip(crow) {
+                        v = a.mul_add(*s, v);
+                    }
+                }
             }
             // Safety: each row lands in exactly one worker's range.
             unsafe { writer.set(bi, r, v) };

@@ -1,12 +1,12 @@
 //! Serving hot-path kernels — the CPU realization of the three weight
 //! formats the paper races in Table IV:
 //!
-//! | format                | gemv kernel     | batched gemm       | dispatch tiers | scalar↔SIMD parity | paper row      |
-//! |-----------------------|-----------------|--------------------|----------------|--------------------|----------------|
-//! | dense f32             | [`gemv_f32`]    | [`gemm_f32`]       | scalar / AVX2  | bitwise            | `full` (fp16)  |
-//! | packed int + dequant  | [`gemv_dequant`]| [`gemm_dequant`]   | scalar / AVX2  | bitwise            | `GPTQ`         |
-//! | fused binary coding   | [`gemv_lut`]    | [`gemm_lut`]       | scalar / AVX2  | bitwise            | `GPTQT` (LUT-GEMM) |
-//! | attention (head-major KV) | [`attn::qk_dots`] | [`attn::av_accumulate`] | scalar / AVX2 | bitwise     | serving context (all rows) |
+//! | format                | gemv kernel     | batched gemm       | dispatch tiers | numerics modes | parity contract per mode | paper row      |
+//! |-----------------------|-----------------|--------------------|----------------|----------------|--------------------------|----------------|
+//! | dense f32             | [`gemv_f32`]    | [`gemm_f32`]       | scalar / AVX2  | Exact / Fast (FMA dot) | bitwise / rel-tol + tier-deterministic | `full` (fp16)  |
+//! | packed int + dequant  | [`gemv_dequant`]| [`gemm_dequant`]   | scalar / AVX2  | Exact / Fast (FMA code-dot + epilogue) | bitwise / rel-tol + tier-deterministic | `GPTQ`         |
+//! | fused binary coding   | [`gemv_lut`]    | [`gemm_lut`]       | scalar / AVX2  | Exact / Fast (FMA α-epilogue; LUT adds shared) | bitwise / rel-tol + tier-deterministic | `GPTQT` (LUT-GEMM) |
+//! | attention (head-major KV) | [`attn::qk_dots`] | [`attn::av_accumulate`] | scalar / AVX2 | Exact / Fast ([`fast_math::attn_row_fast`] online softmax) | bitwise / rel-tol + tier-deterministic | serving context (all rows) |
 //!
 //! The attention row is not a weight format: it is the per-(row, head)
 //! score/context pair the forward core runs between the QKV and output
@@ -29,8 +29,21 @@
 //! the scalar tier, so dispatch can never change a served token. Each
 //! kernel has a `*_scalar` twin (e.g. [`gemm_lut_scalar`]) that forces
 //! the scalar tier; `tests/simd_parity.rs` asserts `assert_eq!` between
-//! the twins across ragged shapes and batch sizes. Compare the tiers
-//! locally with the smoke benches:
+//! the twins across ragged shapes and batch sizes.
+//!
+//! **Numerics modes.** Orthogonal to the instruction tier, every kernel
+//! carries a [`NumericsMode`] axis: `Exact` (the bitwise contract
+//! above, the default everywhere) and `Fast` — FMA dots, a polynomial
+//! `exp`, and fused online-softmax attention, all in [`fast_math`].
+//! `Fast` trades bit-equality with `Exact` for throughput under an
+//! explicit relaxed contract: bounded relative drift
+//! (`tests/numerics_tolerance.rs`) and bitwise determinism *within* the
+//! tier (the scalar `mul_add` fallback matches the AVX2+FMA path), so
+//! greedy decode stays machine-independent and token divergence vs
+//! `Exact` is asserted ≈0 end-to-end (`tests/numerics_divergence.rs`).
+//! The mode threads from the CLI (`--numerics`) through
+//! [`crate::model::BackendModel`] into [`Gemv::gemm_mode`] — never
+//! probed implicitly. Compare the tiers locally with the smoke benches:
 //!
 //! ```text
 //! cargo bench --bench kernels -- --smoke   # writes BENCH_kernels.json
@@ -72,10 +85,12 @@
 //! [`gemm_lut_scalar`]: gemv_lut::gemm_lut_scalar
 
 pub mod attn;
+pub mod fast_math;
 pub mod gemv_dequant;
 pub mod gemv_lut;
 pub mod simd;
 
+pub use fast_math::NumericsMode;
 pub use simd::SimdTier;
 
 use crate::quant::linear::IntLayer;
@@ -139,6 +154,23 @@ pub trait Gemv: Send + Sync {
             self.gemv(x, y);
         }
     }
+    /// Mode-dispatched matvec: `Exact` routes to [`Gemv::gemv`].
+    /// Backends with a `Fast` tier override this with their FMA kernels;
+    /// the default ignores the mode (running `Exact` under `Fast` is
+    /// always within the relaxed contract).
+    fn gemv_mode(&self, x: &[f32], y: &mut [f32], mode: NumericsMode) {
+        let _ = mode;
+        self.gemv(x, y);
+    }
+    /// Mode-dispatched batched matvec; same override story as
+    /// [`Gemv::gemv_mode`]. `Fast` implementations must keep the
+    /// weight-streaming shape of [`Gemv::gemm`] (one stream per batch)
+    /// and the per-item `gemm_mode(B=1) == gemv_mode` identity — the
+    /// engine's batched == sequential token guarantee holds per mode.
+    fn gemm_mode(&self, xs: &[&[f32]], ys: &mut [Vec<f32>], mode: NumericsMode) {
+        let _ = mode;
+        self.gemm(xs, ys);
+    }
     /// Bytes this layer streams from memory per matvec — the quantity
     /// that dominates decode latency (Table IV's bandwidth story). A
     /// batched gemm streams this once per batch, i.e. `streamed_bytes /
@@ -174,6 +206,20 @@ impl Gemv for DenseGemv {
 
     fn gemm(&self, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
         gemm_f32(&self.w, xs, ys);
+    }
+
+    fn gemv_mode(&self, x: &[f32], y: &mut [f32], mode: NumericsMode) {
+        match mode {
+            NumericsMode::Exact => gemv_f32(&self.w, x, y),
+            NumericsMode::Fast => gemv_f32_fast(&self.w, x, y),
+        }
+    }
+
+    fn gemm_mode(&self, xs: &[&[f32]], ys: &mut [Vec<f32>], mode: NumericsMode) {
+        match mode {
+            NumericsMode::Exact => gemm_f32(&self.w, xs, ys),
+            NumericsMode::Fast => gemm_f32_fast(&self.w, xs, ys),
+        }
     }
 
     fn streamed_bytes(&self) -> usize {
@@ -248,6 +294,51 @@ fn gemm_f32_t(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdTier) {
     }
 }
 
+/// Dense f32 matvec on the `Fast` numerics tier —
+/// [`fast_math::dot_fast`] (FMA) per row, otherwise [`gemv_f32`]'s
+/// shape. Row partition and per-row reduction order are unchanged, so
+/// the result is deterministic across the `Fast` scalar/vector paths.
+pub fn gemv_f32_fast(w: &Tensor, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.cols());
+    assert_eq!(y.len(), w.rows());
+    for (r, yr) in y.iter_mut().enumerate() {
+        *yr = fast_math::dot_fast(w.row(r), x);
+    }
+}
+
+/// Dense f32 batched matvec on the `Fast` numerics tier — the same
+/// weight-streaming and pool row-partition as [`gemm_f32`] with the FMA
+/// dot inside, so `gemm_f32_fast(B=1) == gemv_f32_fast` per element.
+pub fn gemm_f32_fast(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
+    assert_eq!(xs.len(), ys.len(), "gemm_f32 batch size mismatch");
+    for x in xs {
+        assert_eq!(x.len(), w.cols());
+    }
+    for y in ys.iter() {
+        assert_eq!(y.len(), w.rows());
+    }
+    let rows = w.rows();
+    if par_rows(rows, w.cols(), xs.len()) {
+        let writer = RowWriter::new(ys);
+        pool::global().scope_chunks(rows, |range| {
+            for r in range {
+                let row = w.row(r);
+                for (bi, x) in xs.iter().enumerate() {
+                    // Safety: each row lands in exactly one chunk.
+                    unsafe { writer.set(bi, r, fast_math::dot_fast(row, x)) };
+                }
+            }
+        });
+    } else {
+        for r in 0..rows {
+            let row = w.row(r);
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                y[r] = fast_math::dot_fast(row, x);
+            }
+        }
+    }
+}
+
 impl Gemv for IntLayer {
     fn rows(&self) -> usize {
         self.rows
@@ -263,6 +354,20 @@ impl Gemv for IntLayer {
 
     fn gemm(&self, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
         gemv_dequant::gemm_dequant(self, xs, ys);
+    }
+
+    fn gemv_mode(&self, x: &[f32], y: &mut [f32], mode: NumericsMode) {
+        match mode {
+            NumericsMode::Exact => gemv_dequant::gemv_dequant(self, x, y),
+            NumericsMode::Fast => gemv_dequant::gemv_dequant_fast(self, x, y),
+        }
+    }
+
+    fn gemm_mode(&self, xs: &[&[f32]], ys: &mut [Vec<f32>], mode: NumericsMode) {
+        match mode {
+            NumericsMode::Exact => gemv_dequant::gemm_dequant(self, xs, ys),
+            NumericsMode::Fast => gemv_dequant::gemm_dequant_fast(self, xs, ys),
+        }
     }
 
     fn streamed_bytes(&self) -> usize {
@@ -289,6 +394,20 @@ impl Gemv for PackedBcLayer {
 
     fn gemm(&self, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
         gemv_lut::gemm_lut(self, xs, ys);
+    }
+
+    fn gemv_mode(&self, x: &[f32], y: &mut [f32], mode: NumericsMode) {
+        match mode {
+            NumericsMode::Exact => gemv_lut::gemv_lut(self, x, y),
+            NumericsMode::Fast => gemv_lut::gemv_lut_fast(self, x, y),
+        }
+    }
+
+    fn gemm_mode(&self, xs: &[&[f32]], ys: &mut [Vec<f32>], mode: NumericsMode) {
+        match mode {
+            NumericsMode::Exact => gemv_lut::gemm_lut(self, xs, ys),
+            NumericsMode::Fast => gemv_lut::gemm_lut_fast(self, xs, ys),
+        }
     }
 
     fn streamed_bytes(&self) -> usize {
@@ -364,6 +483,42 @@ mod tests {
                     y,
                     &y_ref,
                     "{}: threaded gemm must stay bitwise identical to gemv",
+                    backend.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mode_dispatch_exact_matches_default_and_fast_is_consistent() {
+        let mut rng = Rng::new(308);
+        let (rows, cols) = (24usize, 77usize);
+        let w = Tensor::randn(rows, cols, 0.5, &mut rng);
+        let dense = DenseGemv::new(w.clone());
+        let (q, grids) = crate::quant::linear::rtn_quantize(&w, 3);
+        let il = IntLayer::encode(&q, &grids, 3);
+        let packed = PackedBcLayer::random(rows, cols, 3, 17);
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32()).collect();
+        let backends: [&dyn Gemv; 3] = [&dense, &il, &packed];
+        for backend in backends {
+            // Exact mode is exactly the unmoded entry point
+            let mut y_plain = vec![0.0f32; rows];
+            let mut y_exact = vec![0.0f32; rows];
+            backend.gemv(&x, &mut y_plain);
+            backend.gemv_mode(&x, &mut y_exact, NumericsMode::Exact);
+            assert_eq!(y_plain, y_exact, "{}", backend.label());
+            // Fast gemm(B=1) equals Fast gemv bitwise (per-mode identity)
+            let mut y_fast = vec![0.0f32; rows];
+            backend.gemv_mode(&x, &mut y_fast, NumericsMode::Fast);
+            let mut ys: Vec<Vec<f32>> = vec![vec![0.0f32; rows]];
+            backend.gemm_mode(&[&x], &mut ys, NumericsMode::Fast);
+            assert_eq!(ys[0], y_fast, "{}", backend.label());
+            // and Fast stays within the relaxed tolerance of Exact
+            for (r, (a, b)) in y_exact.iter().zip(&y_fast).enumerate() {
+                let tol = 1e-4 * (cols as f32).sqrt() * (1.0 + a.abs());
+                assert!(
+                    (a - b).abs() < tol,
+                    "{} row {r}: exact={a} fast={b}",
                     backend.label()
                 );
             }

@@ -34,6 +34,12 @@
 //! Conversions (`u8 → f32`) and LUT gathers are exact, so they cannot
 //! perturb parity. The upshot: `kernel_parity.rs` / `engine_batched.rs`
 //! keep their `assert_eq!` checks — no ULP tolerance anywhere.
+//!
+//! These rules define the **`Exact` numerics mode** — the default
+//! everywhere. Rule 3's FMA (and a vectorized `exp` for the
+//! transcendentals below) is exactly what the opt-in `Fast` mode buys
+//! back, under a relaxed tolerance contract of its own: see
+//! [`super::fast_math`].
 
 use crate::quant::pack::GROUP;
 

@@ -92,10 +92,29 @@
 //! tree reduction, so **scalar and SIMD are bitwise identical** for
 //! all three weight formats and the attention kernels — dispatch can
 //! never change a served token; `tests/simd_parity.rs` and
-//! `tests/attn_parity.rs` pin the decision per kernel. The
+//! `tests/attn_parity.rs` pin the decision per kernel.
+//!
+//! That bitwise discipline is one half of a **two-tier numerics
+//! contract** ([`kernels::NumericsMode`]). `Exact` — the default
+//! everywhere — is the tier above: identity is the spec, so results
+//! are reproducible across machines and dispatch tiers. `Fast`
+//! ([`kernels::fast_math`]) trades identity for throughput: FMA
+//! contraction in the dot/axpy/gemm epilogues, a vectorized polynomial
+//! `exp` behind silu/gelu/softmax, and a fused flash-style
+//! online-softmax attention row that never materializes per-position
+//! scores. Its spec is *tolerance* — per-kernel ULP/relative budgets
+//! pinned by `tests/numerics_tolerance.rs` — plus one serving-level
+//! guarantee: greedy decode emits the same tokens as `Exact`
+//! (`tests/numerics_divergence.rs` counts divergences through
+//! [`coordinator::Metrics`] and asserts zero). Within `Fast`, the
+//! scalar fallback mirrors the AVX2+FMA path `mul_add`-for-`fmadd`
+//! with the same pinned reduction tree, so the *relaxed* tier is still
+//! deterministic per machine. The mode is threaded from
+//! `EngineConfig::numerics` (CLI: `--numerics exact|fast`) through
+//! `Backend::set_numerics` into every kernel dispatch. The
 //! smoke benches (`cargo bench --bench kernels -- --smoke`, same for
-//! `speed`) emit `BENCH_*.json` perf records that CI archives on every
-//! PR.
+//! `speed`) emit `BENCH_*.json` perf records — tagged with SIMD tier
+//! and numerics mode — that CI archives on every PR.
 //!
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + trained weights once; the `gptqt` binary is

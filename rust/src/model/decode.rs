@@ -33,6 +33,14 @@
 //! sequential loop. The kernels carry the same pinned scalar↔AVX2
 //! bitwise contract as the GEMMs.
 //!
+//! Under the opt-in `Fast` numerics mode
+//! ([`BackendModel::with_numerics`]) the same (row, head) work items
+//! run the fused flash-style kernel
+//! [`crate::kernels::fast_math::attn_row_fast`] instead — scores are
+//! never materialized — the GEMMs take their FMA epilogues, and the
+//! FFN activations switch to the polynomial-exp forms. See
+//! [`crate::kernels::fast_math`] for the per-tier contract.
+//!
 //! ## The zero-alloc workspace
 //!
 //! The core's activation buffers (residual stream, norm outputs, QKV,
@@ -55,7 +63,7 @@ use super::config::{Family, ModelConfig};
 use super::forward::{alibi_slopes, softmax, LN_EPS};
 use super::weights::WeightStore;
 use super::Model;
-use crate::kernels::{attn, simd, DenseGemv, Gemv};
+use crate::kernels::{attn, fast_math, simd, DenseGemv, Gemv, NumericsMode};
 use crate::quant::QuantizedLayer;
 use crate::tensor::Tensor;
 use crate::util::pool;
@@ -320,6 +328,13 @@ pub struct BackendModel {
     linears: Vec<Box<dyn Gemv>>,
     layers: Vec<LayerSlots>,
     final_norm: NormParams,
+    /// Numerics tier every forward pass runs under: `Exact` (default)
+    /// keeps the bitwise scalar↔AVX2 contract end to end; `Fast` swaps
+    /// the GEMM epilogues, activations, and the whole attention row for
+    /// the FMA + online-softmax kernels of
+    /// [`crate::kernels::fast_math`]. Set with
+    /// [`BackendModel::with_numerics`].
+    numerics: NumericsMode,
 }
 
 impl BackendModel {
@@ -388,7 +403,35 @@ impl BackendModel {
             });
         }
         let final_norm = NormParams::resolve(&cfg, &weights, "final_ln");
-        BackendModel { cfg, weights, linears, layers, final_norm }
+        BackendModel {
+            cfg,
+            weights,
+            linears,
+            layers,
+            final_norm,
+            numerics: NumericsMode::Exact,
+        }
+    }
+
+    /// Select the numerics tier for every subsequent forward pass
+    /// (builder style; the constructors default to
+    /// [`NumericsMode::Exact`]). Switching modes never touches weights
+    /// or caches — only which kernels run.
+    pub fn with_numerics(mut self, mode: NumericsMode) -> BackendModel {
+        self.numerics = mode;
+        self
+    }
+
+    /// In-place form of [`BackendModel::with_numerics`] — the serving
+    /// engine applies [`crate::coordinator::EngineConfig`]'s mode to an
+    /// already-constructed backend through this.
+    pub fn set_numerics(&mut self, mode: NumericsMode) {
+        self.numerics = mode;
+    }
+
+    /// The numerics tier this model's forward passes run under.
+    pub fn numerics(&self) -> NumericsMode {
+        self.numerics
     }
 
     /// Batched linear through slot `slot`: one weight stream serves
@@ -397,7 +440,7 @@ impl BackendModel {
     fn gemm_slot<'b>(&self, slot: usize, xs: &[&[f32]], buf: &'b mut RowBuf) -> &'b mut [Vec<f32>] {
         let lin = &self.linears[slot];
         let ys = buf.prepare(xs.len(), lin.rows());
-        lin.gemm(xs, ys);
+        lin.gemm_mode(xs, ys, self.numerics);
         ys
     }
 
@@ -697,6 +740,7 @@ impl BackendModel {
         let dh = cfg.head_dim();
         let scale = 1.0 / (dh as f32).sqrt();
         let tier = simd::tier();
+        let fast = self.numerics == NumericsMode::Fast;
         let slopes = if cfg.family == Family::Bloom {
             alibi_slopes(heads)
         } else {
@@ -797,7 +841,9 @@ impl BackendModel {
                 let slopes_ro: &[f32] = &slopes;
                 let ctx_ptr = CtxWriter(ctx.as_mut_ptr());
                 pool::global().scope_chunks(nrows * heads, |range| {
-                    let mut local_scores = vec![0.0f32; max_ctx];
+                    // the Fast kernel never materializes scores
+                    let score_len = if fast { 0 } else { max_ctx };
+                    let mut local_scores = vec![0.0f32; score_len];
                     for it in range {
                         let r = it / heads;
                         let head = it % heads;
@@ -805,24 +851,36 @@ impl BackendModel {
                         let cache: &KvCache = &*caches_ro[bi];
                         let base = head * dh;
                         let qh = &qs_ro[r][base..base + dh];
-                        let s = &mut local_scores[..p + 1];
-                        attn::qk_dots_t(
-                            qh,
-                            cache.k_strip(li, head, p + 1),
-                            scale,
-                            slopes_ro[head],
-                            p,
-                            s,
-                            tier,
-                        );
-                        softmax(s);
                         // Safety: each (row, head) slice is written by
                         // exactly one worker (disjoint item ranges), and
                         // scope_chunks joins before `ctx` is used again.
                         let out = unsafe {
                             std::slice::from_raw_parts_mut(ctx_ptr.0.add(r * d + base), dh)
                         };
-                        attn::av_accumulate_t(s, cache.v_strip(li, head, p + 1), out, tier);
+                        if fast {
+                            fast_math::attn_row_fast(
+                                qh,
+                                cache.k_strip(li, head, p + 1),
+                                cache.v_strip(li, head, p + 1),
+                                scale,
+                                slopes_ro[head],
+                                p,
+                                out,
+                            );
+                        } else {
+                            let s = &mut local_scores[..p + 1];
+                            attn::qk_dots_t(
+                                qh,
+                                cache.k_strip(li, head, p + 1),
+                                scale,
+                                slopes_ro[head],
+                                p,
+                                s,
+                                tier,
+                            );
+                            softmax(s);
+                            attn::av_accumulate_t(s, cache.v_strip(li, head, p + 1), out, tier);
+                        }
                     }
                 });
             } else {
@@ -834,19 +892,31 @@ impl BackendModel {
                     for head in 0..heads {
                         let base = head * dh;
                         let qh = &qs[r][base..base + dh];
-                        let s = &mut scores[..p + 1];
-                        attn::qk_dots_t(
-                            qh,
-                            cache.k_strip(li, head, p + 1),
-                            scale,
-                            slopes[head],
-                            p,
-                            s,
-                            tier,
-                        );
-                        softmax(s);
                         let out = &mut ctx[r * d + base..r * d + base + dh];
-                        attn::av_accumulate_t(s, cache.v_strip(li, head, p + 1), out, tier);
+                        if fast {
+                            fast_math::attn_row_fast(
+                                qh,
+                                cache.k_strip(li, head, p + 1),
+                                cache.v_strip(li, head, p + 1),
+                                scale,
+                                slopes[head],
+                                p,
+                                out,
+                            );
+                        } else {
+                            let s = &mut scores[..p + 1];
+                            attn::qk_dots_t(
+                                qh,
+                                cache.k_strip(li, head, p + 1),
+                                scale,
+                                slopes[head],
+                                p,
+                                s,
+                                tier,
+                            );
+                            softmax(s);
+                            attn::av_accumulate_t(s, cache.v_strip(li, head, p + 1), out, tier);
+                        }
                     }
                 }
             }
@@ -867,14 +937,22 @@ impl BackendModel {
                 let gates = self.gemm_slot(gate_slot, &h2refs, ffa_buf);
                 let ups = self.gemm_slot(layer.up, &h2refs, ffb_buf);
                 for (g, u) in gates.iter_mut().zip(ups.iter()) {
-                    simd::silu_mul_t(g, u, tier);
+                    if fast {
+                        fast_math::silu_mul_fast(g, u);
+                    } else {
+                        simd::silu_mul_t(g, u, tier);
+                    }
                 }
                 let arefs: Vec<&[f32]> = gates.iter().map(|v| v.as_slice()).collect();
                 self.gemm_slot(layer.down, &arefs, proj_buf)
             } else {
                 let ups = self.gemm_slot(layer.up, &h2refs, ffb_buf);
                 for u in ups.iter_mut() {
-                    simd::gelu_map_t(u, tier);
+                    if fast {
+                        fast_math::gelu_map_fast(u);
+                    } else {
+                        simd::gelu_map_t(u, tier);
+                    }
                 }
                 let arefs: Vec<&[f32]> = ups.iter().map(|v| v.as_slice()).collect();
                 self.gemm_slot(layer.down, &arefs, proj_buf)
@@ -1196,6 +1274,39 @@ mod tests {
             .fold(0.0f32, f32::max);
         assert!(max_diff > 0.0, "quantization must change something");
         assert!(max_diff < 1.0, "logits diverged: {max_diff}");
+    }
+
+    #[test]
+    fn fast_numerics_decode_tracks_exact_logits() {
+        for fam in [Family::Opt, Family::Llama, Family::Bloom] {
+            let m = tiny(fam);
+            let exact = BackendModel::dense(&m);
+            let fast = BackendModel::dense(&m).with_numerics(NumericsMode::Fast);
+            assert_eq!(exact.numerics(), NumericsMode::Exact);
+            assert_eq!(fast.numerics(), NumericsMode::Fast);
+            let tokens: Vec<u32> = vec![3, 9, 27, 44, 5, 13, 60, 2];
+            let mut ce = KvCache::new(&m.cfg);
+            let mut cf = KvCache::new(&m.cfg);
+            let (mut le, mut lf) = (Vec::new(), Vec::new());
+            for &t in &tokens {
+                le = exact.decode_step(t, &mut ce);
+                lf = fast.decode_step(t, &mut cf);
+            }
+            let max_diff = le
+                .iter()
+                .zip(&lf)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_diff < 1e-2,
+                "{fam:?} fast-mode logits drifted from exact: {max_diff}"
+            );
+            assert_eq!(
+                crate::coordinator::sampler::argmax(&le),
+                crate::coordinator::sampler::argmax(&lf),
+                "{fam:?} greedy token diverged between numerics modes"
+            );
+        }
     }
 
     #[test]

@@ -68,6 +68,12 @@ pub fn rmsnorm(x: &Tensor, w: &[f32]) -> Tensor {
 }
 
 /// In-place numerically stable softmax over a slice.
+///
+/// This is the `Exact`-tier reference: libm `exp`, sequential
+/// accumulation — bitwise reproducible. The `Fast` numerics tier
+/// replaces it with `kernels::fast_math::softmax_fast` (vectorized
+/// polynomial exp, pinned 8-lane sum) under the relaxed tolerance
+/// contract.
 pub fn softmax(row: &mut [f32]) {
     let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let mut sum = 0.0;

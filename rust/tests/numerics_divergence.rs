@@ -1,0 +1,104 @@
+//! End-to-end greedy-decode divergence between the numerics tiers.
+//!
+//! The `Fast` tier is allowed to perturb logits within the tolerance
+//! contract (`numerics_tolerance.rs`), but the serving-level promise is
+//! stronger: on the shipped models, **greedy decode under `Fast` emits
+//! the same tokens as `Exact`** — argmax gaps dwarf the kernel error.
+//! This suite runs the full engine (batched scheduling, paged KV) in
+//! both modes over every weight format, counts positionwise token
+//! divergences, surfaces the count through
+//! [`Metrics::record_greedy_divergences`], and asserts it is zero.
+//!
+//! The `greedy-divergences-total:` line printed at the end is what the
+//! CI fast-numerics leg greps into the step summary.
+
+use gptqt::coordinator::{CpuBackend, Engine, EngineConfig, Metrics, Request};
+use gptqt::eval::speed::{build_variant, SpeedVariant};
+use gptqt::kernels::NumericsMode;
+use gptqt::model::init::random_weights;
+use gptqt::model::{presets, Model};
+use std::collections::HashMap;
+
+fn test_model(seed: u64) -> Model {
+    let mut cfg = presets::by_name("opt-nano").unwrap();
+    cfg.vocab = 64;
+    cfg.max_seq = 48;
+    Model::new(cfg.clone(), random_weights(&cfg, seed))
+}
+
+/// Greedy-only requests over distinct prompts (batched together, so the
+/// comparison covers the gemm + threaded-attention paths too).
+fn greedy_requests(n: u64, prompt_len: usize, gen: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..prompt_len as u32)
+                .map(|i| 3 + (5 * id as u32 + 7 * i) % 60)
+                .collect();
+            Request::new(id, prompt, gen)
+        })
+        .collect()
+}
+
+/// Run the engine to completion under `mode`; returns id → tokens.
+fn decode_tokens(
+    model: &Model,
+    variant: SpeedVariant,
+    mode: NumericsMode,
+) -> HashMap<u64, Vec<u32>> {
+    let bm = build_variant(model, variant, 11);
+    let mut engine = Engine::new(
+        CpuBackend(bm),
+        EngineConfig {
+            max_batch: 4,
+            total_blocks: 128,
+            block_size: 8,
+            eos_token: u32::MAX, // fixed-length outputs: counts comparable
+            numerics: mode,
+            ..Default::default()
+        },
+    );
+    assert_eq!(engine.metrics.numerics_label, mode.label());
+    for r in greedy_requests(4, 6, 10) {
+        engine.submit(r).unwrap();
+    }
+    let out = engine.run_to_completion().unwrap();
+    engine.check_invariants().unwrap();
+    out.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// Positionwise token mismatches between the two modes' outputs.
+fn count_divergences(exact: &HashMap<u64, Vec<u32>>, fast: &HashMap<u64, Vec<u32>>) -> u64 {
+    assert_eq!(exact.len(), fast.len());
+    let mut n = 0u64;
+    for (id, e) in exact {
+        let f = &fast[id];
+        assert_eq!(e.len(), f.len(), "req {id}: lengths must match (EOS disabled)");
+        n += e.iter().zip(f).filter(|(a, b)| a != b).count() as u64;
+    }
+    n
+}
+
+#[test]
+fn fast_greedy_decode_is_token_identical_to_exact() {
+    let model = test_model(5);
+    let mut metrics = Metrics::new();
+    metrics.numerics_label = NumericsMode::Fast.label();
+    let mut total = 0u64;
+    for variant in [
+        SpeedVariant::Full,
+        SpeedVariant::GptqInt { bits: 2 },
+        SpeedVariant::GptqtLut { bits: 3 },
+    ] {
+        let exact = decode_tokens(&model, variant, NumericsMode::Exact);
+        let fast = decode_tokens(&model, variant, NumericsMode::Fast);
+        let n = count_divergences(&exact, &fast);
+        metrics.record_greedy_divergences(n);
+        total += n;
+        assert_eq!(n, 0, "{variant:?}: Fast greedy decode diverged from Exact");
+    }
+    let report = metrics.report();
+    assert!(report.contains("mode=fast"), "{report}");
+    assert!(report.contains("greedy_divergences=0"), "{report}");
+    // the CI fast-numerics leg greps this into the step summary
+    println!("greedy-divergences-total: {total}");
+}

@@ -1,0 +1,219 @@
+//! Fast-vs-Exact numerics tolerance harness for the two-tier contract.
+//!
+//! The `Fast` tier trades the Exact tier's bitwise-pinned arithmetic
+//! for FMA contraction, polynomial `exp`, and fused online-softmax
+//! attention. Its accuracy contract is *tolerance*, not identity, and
+//! this suite pins that contract per kernel over a seeded sweep of
+//! ragged shapes (dims drawn from 1..=1031, LUT planes 2/3, batch
+//! 1/3/8 — the same alignment-hostile territory as `simd_parity.rs`).
+//!
+//! Budgets are per kernel, stated as relative error with a magnitude
+//! guard (`|a−b| ≤ tol·(1 + max|a|,|b|)`; 1 ulp ≈ 1.2e-7 relative):
+//!
+//! * gemv/gemm (all three formats): `1e-4` — one fused rounding per
+//!   multiply, same pinned accumulator tree, so error ~ n·ε over the
+//!   1031-wide rows.
+//! * activations (silu `1e-5`, gelu `1e-4`, softmax `1e-4`) — the
+//!   polynomial `exp_fast` is within `1e-5` relative of libm.
+//! * attention row: `2e-4` — online-softmax rescaling stacks a couple
+//!   of extra roundings on top of the exp budget.
+//!
+//! The second half is the **Exact-mode regression pin**: dispatching
+//! through `gemv_mode`/`gemm_mode` with [`NumericsMode::Exact`] must be
+//! *bitwise* the legacy `gemv`/`gemm` path — the existing parity suites
+//! (`simd_parity.rs`, `kernel_parity.rs`, `attn_parity.rs`) stay green
+//! untouched because Exact is untouched.
+
+use gptqt::kernels::fast_math::{attn_row_fast, gelu_map_fast, silu_mul_fast, softmax_fast};
+use gptqt::kernels::{attn, simd, DenseGemv, Gemv, NumericsMode};
+use gptqt::model::forward::softmax;
+use gptqt::quant::linear::{rtn_quantize, IntLayer};
+use gptqt::quant::pack::PackedBcLayer;
+use gptqt::tensor::Tensor;
+use gptqt::util::Rng;
+
+const BATCHES: [usize; 3] = [1, 3, 8];
+const GEMV_TOL: f32 = 1e-4;
+
+/// Relative closeness with a magnitude guard (fast_math's `close`).
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Seeded ragged sweep: corner shapes off every alignment (SIMD width
+/// 8, GROUP 8) plus draws from the full 1..=1031 range.
+fn ragged_shapes(rng: &mut Rng) -> Vec<(usize, usize)> {
+    let mut shapes = vec![(33, 1031), (7, 129), (1, 9), (1031, 1)];
+    for _ in 0..4 {
+        shapes.push((rng.below(96) as usize + 1, rng.below(1031) as usize + 1));
+    }
+    shapes
+}
+
+fn random_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn as_refs(xs: &[Vec<f32>]) -> Vec<&[f32]> {
+    xs.iter().map(|v| v.as_slice()).collect()
+}
+
+/// Every weight format the engine serves, over one ragged shape.
+fn layers_for(rows: usize, cols: usize, rng: &mut Rng) -> Vec<(String, Box<dyn Gemv>)> {
+    let w = Tensor::randn(rows, cols, 1.0, rng);
+    let mut layers: Vec<(String, Box<dyn Gemv>)> =
+        vec![("dense".into(), Box::new(DenseGemv::new(w.clone())))];
+    for bits in [2u32, 3] {
+        let (q, grids) = rtn_quantize(&w, bits);
+        layers.push((format!("dequant{bits}"), Box::new(IntLayer::encode(&q, &grids, bits))));
+    }
+    for planes in [2usize, 3] {
+        layers.push((
+            format!("lut{planes}"),
+            Box::new(PackedBcLayer::random(rows, cols, planes, rows as u64 + planes as u64)),
+        ));
+    }
+    layers
+}
+
+#[test]
+fn fast_gemv_tracks_exact_within_budget_on_ragged_shapes() {
+    let mut rng = Rng::new(9101);
+    for (rows, cols) in ragged_shapes(&mut rng) {
+        for (label, layer) in layers_for(rows, cols, &mut rng) {
+            let x = random_vec(cols, &mut rng);
+            let mut y_exact = vec![0.0f32; rows];
+            let mut y_fast = vec![0.0f32; rows];
+            layer.gemv_mode(&x, &mut y_exact, NumericsMode::Exact);
+            layer.gemv_mode(&x, &mut y_fast, NumericsMode::Fast);
+            for r in 0..rows {
+                assert!(
+                    close(y_exact[r], y_fast[r], GEMV_TOL),
+                    "{label} {rows}x{cols} row {r}: exact={} fast={}",
+                    y_exact[r],
+                    y_fast[r]
+                );
+            }
+            for &batch in &BATCHES {
+                let xs: Vec<Vec<f32>> = (0..batch).map(|_| random_vec(cols, &mut rng)).collect();
+                let refs = as_refs(&xs);
+                let mut ys_exact: Vec<Vec<f32>> = (0..batch).map(|_| vec![0.0; rows]).collect();
+                let mut ys_fast = ys_exact.clone();
+                layer.gemm_mode(&refs, &mut ys_exact, NumericsMode::Exact);
+                layer.gemm_mode(&refs, &mut ys_fast, NumericsMode::Fast);
+                for b in 0..batch {
+                    // tolerance vs Exact...
+                    for r in 0..rows {
+                        assert!(
+                            close(ys_exact[b][r], ys_fast[b][r], GEMV_TOL),
+                            "{label} {rows}x{cols} B={batch} item {b} row {r}"
+                        );
+                    }
+                    // ...and the per-mode determinism pin: batched Fast
+                    // must be bitwise the single-item Fast gemv (the
+                    // batched == sequential token guarantee, per mode)
+                    let mut single = vec![0.0f32; rows];
+                    layer.gemv_mode(&xs[b], &mut single, NumericsMode::Fast);
+                    assert_eq!(
+                        single, ys_fast[b],
+                        "{label} {rows}x{cols} B={batch} item {b}: fast gemm != gemv"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_activations_track_exact_within_budget() {
+    let mut rng = Rng::new(9102);
+    for _ in 0..6 {
+        let n = rng.below(1031) as usize + 1;
+        let gate = random_vec(n, &mut rng).iter().map(|v| v * 3.0).collect::<Vec<_>>();
+        let up = random_vec(n, &mut rng);
+
+        let mut g_exact = gate.clone();
+        simd::silu_mul(&mut g_exact, &up);
+        let mut g_fast = gate.clone();
+        silu_mul_fast(&mut g_fast, &up);
+        for i in 0..n {
+            assert!(close(g_exact[i], g_fast[i], 1e-5), "silu n={n} i={i}");
+        }
+
+        let mut u_exact = gate.clone();
+        simd::gelu_map(&mut u_exact);
+        let mut u_fast = gate.clone();
+        gelu_map_fast(&mut u_fast);
+        for i in 0..n {
+            assert!(close(u_exact[i], u_fast[i], 1e-4), "gelu n={n} i={i}");
+        }
+
+        let mut s_exact = gate.clone();
+        softmax(&mut s_exact);
+        let mut s_fast = gate.clone();
+        softmax_fast(&mut s_fast);
+        let sum: f32 = s_fast.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "softmax n={n} sum={sum}");
+        for i in 0..n {
+            assert!(close(s_exact[i], s_fast[i], 1e-4), "softmax n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn fast_attention_row_tracks_exact_pipeline_on_ragged_contexts() {
+    let mut rng = Rng::new(9103);
+    // dh off the vector width, ctx crossing ATTN_BLOCK boundaries and
+    // reaching the full 1..=1031 sweep range
+    for &dh in &[3usize, 8, 61] {
+        for _ in 0..3 {
+            let ctx = rng.below(1031) as usize + 1;
+            let q = random_vec(dh, &mut rng);
+            let kstrip = random_vec(ctx * dh, &mut rng);
+            let vstrip = random_vec(ctx * dh, &mut rng);
+            let scale = 1.0 / (dh as f32).sqrt();
+            for slope in [0.0f32, -0.0625] {
+                let mut scores = vec![0.0f32; ctx];
+                attn::qk_dots(&q, &kstrip, scale, slope, ctx - 1, &mut scores);
+                softmax(&mut scores);
+                let mut want = vec![0.0f32; dh];
+                attn::av_accumulate(&scores, &vstrip, &mut want);
+
+                let mut got = vec![0.0f32; dh];
+                attn_row_fast(&q, &kstrip, &vstrip, scale, slope, ctx - 1, &mut got);
+                for d in 0..dh {
+                    assert!(
+                        close(want[d], got[d], 2e-4),
+                        "dh={dh} ctx={ctx} slope={slope} d={d}: exact={} fast={}",
+                        want[d],
+                        got[d]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_mode_dispatch_is_bitwise_the_legacy_path() {
+    let mut rng = Rng::new(9104);
+    for (rows, cols) in ragged_shapes(&mut rng) {
+        for (label, layer) in layers_for(rows, cols, &mut rng) {
+            let x = random_vec(cols, &mut rng);
+            let mut y_legacy = vec![0.0f32; rows];
+            let mut y_mode = vec![0.0f32; rows];
+            layer.gemv(&x, &mut y_legacy);
+            layer.gemv_mode(&x, &mut y_mode, NumericsMode::Exact);
+            assert_eq!(y_legacy, y_mode, "{label} {rows}x{cols}: Exact dispatch drifted");
+            for &batch in &BATCHES {
+                let xs: Vec<Vec<f32>> = (0..batch).map(|_| random_vec(cols, &mut rng)).collect();
+                let refs = as_refs(&xs);
+                let mut ys_legacy: Vec<Vec<f32>> = (0..batch).map(|_| vec![0.0; rows]).collect();
+                let mut ys_mode = ys_legacy.clone();
+                layer.gemm(&refs, &mut ys_legacy);
+                layer.gemm_mode(&refs, &mut ys_mode, NumericsMode::Exact);
+                assert_eq!(ys_legacy, ys_mode, "{label} {rows}x{cols} B={batch}");
+            }
+        }
+    }
+}
