@@ -1,14 +1,26 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_*.json artifacts and flag tokens_per_sec regressions.
+"""Diff two BENCH_*.json artifacts and flag performance regressions.
 
 Usage: bench_trend.py PREVIOUS.json CURRENT.json [--threshold PCT]
 
-Writes a markdown table to $GITHUB_STEP_SUMMARY (stdout when unset)
-and emits GitHub `::warning::` annotations on stdout for entries whose
-tokens_per_sec dropped by more than the threshold (default 10%).
-Always exits 0 — the trend job is a non-blocking signal, not a gate
-(smoke benches run on shared CI runners, so single-run noise is
-expected; the trajectory across PRs is the information).
+Compares every metric the records carry, not just throughput:
+
+* ``tokens_per_sec`` — lower is worse (warn below -threshold%).
+* ``ns_per_call``    — *higher* is worse (warn above +threshold%).
+* ``acceptance_rate``— speculative-decoding draft acceptance; only
+  present on ``serve spec`` records; lower is worse.
+
+Writes a markdown table to $GITHUB_STEP_SUMMARY (stdout when unset) and
+emits GitHub ``::warning::`` annotations for regressions beyond the
+threshold (default 10%). Regressions never fail the job — smoke benches
+on shared runners are noisy, the trajectory across PRs is the signal.
+Records present in only one run are reported (``new`` / gone list) but
+never fatal, so benchmarks can be added and retired freely.
+
+Exit status: 0 when the previous file is absent (first run, expired
+artifact) or the diff ran; **1 with a ``::error::`` annotation when
+either file exists but is not a well-formed record array** — a silently
+unparseable stream would otherwise disable the trend signal forever.
 """
 
 import json
@@ -17,8 +29,33 @@ import sys
 
 
 def load(path):
+    """Parse a bench-record array; raises ValueError on malformed input."""
     with open(path) as f:
-        return {r["name"]: r for r in json.load(f)}
+        records = json.load(f)
+    if not isinstance(records, list):
+        raise ValueError(f"{path}: expected a JSON array of records")
+    by_name = {}
+    for i, r in enumerate(records):
+        if not isinstance(r, dict) or "name" not in r:
+            raise ValueError(f"{path}: record {i} has no 'name'")
+        by_name[r["name"]] = r
+    return by_name
+
+
+def metric(rec, key):
+    """A finite positive metric value, or None when absent/unusable."""
+    v = rec.get(key)
+    if isinstance(v, (int, float)) and v == v and v > 0:
+        return float(v)
+    return None
+
+
+# (key, regression sign): -1 = lower is worse, +1 = higher is worse.
+METRICS = [
+    ("tokens_per_sec", -1),
+    ("ns_per_call", +1),
+    ("acceptance_rate", -1),
+]
 
 
 def main(argv):
@@ -29,36 +66,45 @@ def main(argv):
     if "--threshold" in argv:
         threshold = float(argv[argv.index("--threshold") + 1])
 
-    summary_lines = []
+    if not os.path.exists(argv[1]):
+        print(f"no previous record at {argv[1]}; nothing to diff")
+        return 0
     try:
         prev = load(argv[1])
-    except (OSError, ValueError, KeyError, TypeError) as e:
-        print(f"no usable previous record ({e}); nothing to diff")
-        return 0
+    except (OSError, ValueError) as e:
+        print(f"::error::bench-trend: previous record malformed ({e})")
+        return 1
     try:
         cur = load(argv[2])
-    except (OSError, ValueError, KeyError, TypeError) as e:
-        print(f"::warning::bench-trend: current record unreadable ({e})")
-        return 0
+    except (OSError, ValueError) as e:
+        print(f"::error::bench-trend: current record unreadable ({e})")
+        return 1
 
-    summary_lines.append(f"### Bench trend (tokens/sec, warn at −{threshold:.0f}%)")
-    summary_lines.append("")
-    summary_lines.append("| benchmark | previous | current | Δ |")
-    summary_lines.append("|---|---:|---:|---:|")
+    summary_lines = [
+        f"### Bench trend ({argv[2]}, warn at {threshold:.0f}%)",
+        "",
+        "| benchmark | metric | previous | current | Δ |",
+        "|---|---|---:|---:|---:|",
+    ]
     regressions = []
     for name, c in cur.items():
         p = prev.get(name)
-        if p is None or not p.get("tokens_per_sec"):
-            summary_lines.append(f"| {name} | — | {c['tokens_per_sec']:.1f} | new |")
-            continue
-        delta = (c["tokens_per_sec"] / p["tokens_per_sec"] - 1.0) * 100.0
-        mark = " ⚠️" if delta < -threshold else ""
-        summary_lines.append(
-            f"| {name} | {p['tokens_per_sec']:.1f} | "
-            f"{c['tokens_per_sec']:.1f} | {delta:+.1f}%{mark} |"
-        )
-        if delta < -threshold:
-            regressions.append((name, delta))
+        for key, sign in METRICS:
+            cv = metric(c, key)
+            if cv is None:
+                continue  # metric not carried by this record
+            pv = metric(p, key) if p is not None else None
+            if pv is None:
+                summary_lines.append(f"| {name} | {key} | — | {cv:.3g} | new |")
+                continue
+            delta = (cv / pv - 1.0) * 100.0
+            regressed = sign * delta > threshold
+            mark = " ⚠️" if regressed else ""
+            summary_lines.append(
+                f"| {name} | {key} | {pv:.3g} | {cv:.3g} | {delta:+.1f}%{mark} |"
+            )
+            if regressed:
+                regressions.append((name, key, delta))
     dropped = [n for n in prev if n not in cur]
     if dropped:
         summary_lines.append("")
@@ -68,8 +114,10 @@ def main(argv):
         )
     summary_lines.append("")
     if regressions:
-        names = ", ".join(f"`{n}`" for n, _ in regressions)
-        summary_lines.append(f"⚠️ {len(regressions)} regression(s) beyond {threshold:.0f}%: {names}")
+        names = ", ".join(f"`{n}`/{k}" for n, k, _ in regressions)
+        summary_lines.append(
+            f"⚠️ {len(regressions)} regression(s) beyond {threshold:.0f}%: {names}"
+        )
     else:
         summary_lines.append(f"No regression beyond {threshold:.0f}%.")
 
@@ -79,9 +127,9 @@ def main(argv):
         with open(step_summary, "a") as f:
             f.write(summary)
     print(summary)
-    for name, delta in regressions:
+    for name, key, delta in regressions:
         print(
-            f"::warning::bench-trend: `{name}` tokens_per_sec "
+            f"::warning::bench-trend: `{name}` {key} "
             f"regressed {delta:+.1f}% vs previous run"
         )
     return 0

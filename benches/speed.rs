@@ -22,6 +22,13 @@
 //! an `exact`/`fast` pair per policy — the trend line for the Fast
 //! kernel tier's end-to-end win.
 //!
+//! The speculative-serve section drives the draft/verify protocol
+//! end-to-end for the two pairs GPTQT gets for free (`lut2->lut3`,
+//! `lut2->dense`): each `serve spec` record carries effective
+//! tokens/sec *and* the acceptance rate (`acceptance_rate` key, only
+//! present on these records) — the trend pair for the speculative
+//! decoding win, diffed by bench_trend.py alongside the timing keys.
+//!
 //! `--fast` shrinks the ladder; `--smoke` is the CI profile (opt-nano
 //! only, a handful of tokens, deterministic seeds) and is what the
 //! bench-smoke job runs. Both normal and smoke runs write the
@@ -32,7 +39,7 @@ use gptqt::bench::{write_bench_json, BenchRecord};
 use gptqt::coordinator::SchedulePolicyKind;
 use gptqt::eval::speed::{
     build_variant, measure_decode, measure_decode_batch, measure_prefill, measure_prefix_ttft,
-    measure_streaming, SpeedVariant,
+    measure_spec_streaming, measure_streaming, SpeedVariant,
 };
 use gptqt::kernels::NumericsMode;
 use gptqt::model::init::random_weights;
@@ -261,6 +268,59 @@ fn main() {
         if tps[0] > 0.0 {
             println!("  -> fast vs exact throughput ({klabel}): {:.2}x", tps[1] / tps[0]);
         }
+    }
+
+    // ---- speculative serve: draft/verify effective throughput ----------
+    // The two-step quantization's free draft model (2-bit binary coding)
+    // proposes k tokens per round; the served target verifies them in
+    // one chunk-major forward. Greedy output is token-identical to the
+    // target-only `serve stream` runs above, so tokens/sec here divided
+    // by the matching target-only number is the pure speculation win.
+    let (sp_model, sp_reqs, sp_gen) = if smoke {
+        ("opt-nano", 4, 6)
+    } else if fast {
+        ("opt-nano", 8, 12)
+    } else {
+        ("opt-mini", 16, 24)
+    };
+    let spec_k = 4usize;
+    let (model, _) = load_or_init(sp_model, "artifacts", 0).expect("preset");
+    println!(
+        "\n=== bench suite: speculative serve — {sp_model}, {sp_reqs} requests, k={spec_k} ==="
+    );
+    for (target_variant, pair) in [
+        (SpeedVariant::GptqtLut { bits: 3 }, "lut2->lut3"),
+        (SpeedVariant::Full, "lut2->dense"),
+    ] {
+        let draft = build_variant(&model, SpeedVariant::GptqtLut { bits: 2 }, 0);
+        let target = build_variant(&model, target_variant, 0);
+        let r = measure_spec_streaming(
+            &model.cfg,
+            draft,
+            target,
+            pair,
+            sp_reqs,
+            8,
+            sp_gen,
+            spec_k,
+            NumericsMode::Exact,
+            7,
+        );
+        records.push(
+            BenchRecord::new(
+                format!("serve spec {sp_model} {pair} k={spec_k} R={sp_reqs}"),
+                r.tokens_per_sec,
+                1e9 / r.tokens_per_sec.max(1e-12),
+            )
+            .with_numerics(NumericsMode::Exact)
+            .with_acceptance(r.acceptance_rate),
+        );
+        println!(
+            "{:<14} {:>10.0} tok/s   accept {:>5.3}   tok/round {:>5.2}   \
+             (drafted {} accepted {} rolled_back {})",
+            pair, r.tokens_per_sec, r.acceptance_rate, r.tokens_per_round, r.drafted, r.accepted,
+            r.rolled_back,
+        );
     }
 
     // ---- prefix cache: cold vs hit TTFT through the engine -------------

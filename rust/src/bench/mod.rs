@@ -99,6 +99,11 @@ pub struct BenchRecord {
     /// Numerics mode the benched kernels used
     /// ([`NumericsMode::label`]): `exact` or `fast`.
     pub numerics: &'static str,
+    /// Draft-token acceptance rate for speculative-serving records
+    /// (`serve spec …`), in `[0, 1]`. `None` for every other bench —
+    /// the JSON writer omits the key entirely so existing records are
+    /// byte-identical.
+    pub acceptance_rate: Option<f64>,
 }
 
 impl BenchRecord {
@@ -111,12 +116,20 @@ impl BenchRecord {
             ns_per_call,
             simd_tier: simd::tier().label(),
             numerics: NumericsMode::Exact.label(),
+            acceptance_rate: None,
         }
     }
 
     /// Tag the record with the numerics mode the benched path ran under.
     pub fn with_numerics(mut self, mode: NumericsMode) -> BenchRecord {
         self.numerics = mode.label();
+        self
+    }
+
+    /// Tag a speculative-serving record with its draft acceptance rate
+    /// (clamped to `[0, 1]`; non-finite values sanitize to 0).
+    pub fn with_acceptance(mut self, rate: f64) -> BenchRecord {
+        self.acceptance_rate = Some(if rate.is_finite() { rate.clamp(0.0, 1.0) } else { 0.0 });
         self
     }
 }
@@ -148,14 +161,19 @@ fn json_num(v: f64) -> String {
 pub fn bench_records_json(records: &[BenchRecord]) -> String {
     let mut s = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
+        let acceptance = match r.acceptance_rate {
+            Some(rate) => format!(", \"acceptance_rate\": {}", json_num(rate)),
+            None => String::new(),
+        };
         s.push_str(&format!(
             "  {{\"name\": \"{}\", \"tokens_per_sec\": {}, \"ns_per_call\": {}, \
-             \"simd_tier\": \"{}\", \"numerics\": \"{}\"}}{}\n",
+             \"simd_tier\": \"{}\", \"numerics\": \"{}\"{}}}{}\n",
             json_escape(&r.name),
             json_num(r.tokens_per_sec),
             json_num(r.ns_per_call),
             json_escape(r.simd_tier),
             json_escape(r.numerics),
+            acceptance,
             if i + 1 < records.len() { "," } else { "" },
         ));
     }
@@ -182,7 +200,13 @@ impl Suite {
     }
 
     /// Run + record + print one benchmark.
-    pub fn run<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) -> &BenchResult {
+    pub fn run<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        f: F,
+    ) -> &BenchResult {
         let r = bench(name, warmup, iters, f);
         println!("{}", r.report_line());
         self.results.push(r);
@@ -232,7 +256,26 @@ mod tests {
         assert_eq!(json.matches("\"simd_tier\": ").count(), 2, "{json}");
         assert!(json.contains("\"numerics\": \"exact\""), "{json}");
         assert!(json.contains("\"numerics\": \"fast\""), "{json}");
+        // acceptance_rate is opt-in: absent unless with_acceptance tagged it
+        assert!(!json.contains("acceptance_rate"), "{json}");
         assert!(bench_records_json(&[]).contains("[\n]"), "empty array stays valid");
+    }
+
+    #[test]
+    fn acceptance_rate_serializes_only_when_tagged() {
+        let records = vec![
+            BenchRecord::new("serve spec lut2->lut3", 100.0, 1e7).with_acceptance(0.8125),
+            BenchRecord::new("serve stream", 50.0, 2e7),
+            BenchRecord::new("nan-guard", 1.0, 1.0).with_acceptance(f64::NAN),
+            BenchRecord::new("clamped", 1.0, 1.0).with_acceptance(1.5),
+        ];
+        let json = bench_records_json(&records);
+        assert_eq!(json.matches("\"acceptance_rate\": ").count(), 3, "{json}");
+        assert!(json.contains("\"acceptance_rate\": 0.812"), "{json}");
+        assert!(json.contains("\"acceptance_rate\": 0.0"), "NaN sanitized: {json}");
+        assert!(json.contains("\"acceptance_rate\": 1.000"), "clamped to 1: {json}");
+        // the untagged record's object still closes right after numerics
+        assert!(json.contains("\"numerics\": \"exact\"},"), "{json}");
     }
 
     #[test]

@@ -93,6 +93,14 @@ COMMANDS:
                --max-batch <n> --prompt-len <n> --gen-len <n>
                --backend <cpu|pjrt> --policy <fixed|adaptive>
                --numerics <exact|fast>  kernel numerics tier (default exact)
+               --speculative            self-speculative decoding: a cheap
+                                        draft model proposes, the served
+                                        target verifies (cpu backend only;
+                                        greedy output is token-identical)
+               --spec-k <n>             draft tokens per round (default 4)
+               --draft <lut2|lut3|dense> draft weight format (default lut2)
+               --greedy                 greedy sampling (speculation engages
+                                        on greedy sequences)
     exp        Reproduce a paper experiment:
                table1|table2|table3|table4|table5|table6|fig4|all
     gen-corpus Write synthetic training corpora to artifacts/ (build step

@@ -14,9 +14,10 @@ use super::metrics::Metrics;
 use super::policy::{SchedulePolicy, TickState};
 use super::prefix_cache::{AdmitOutcome, PrefixCache};
 use super::queue::{RequestQueue, SubmitError};
-use super::request::{FinishReason, Request, Response};
+use super::request::{FinishReason, Request, Response, SamplingParams};
 use super::sampler::Sampler;
 use super::server::Event;
+use super::speculative::{SpecConfig, SpecOutcome};
 use super::EngineConfig;
 use crate::kernels::NumericsMode;
 use crate::model::{BackendModel, ForwardScratch, KvCache};
@@ -94,6 +95,40 @@ pub trait Backend {
     /// calls this once at construction, making the config the single
     /// source of truth. Backends without a `Fast` tier ignore it.
     fn set_numerics(&mut self, _mode: NumericsMode) {}
+
+    /// Whether this backend implements the speculative draft/verify
+    /// protocol ([`Backend::spec_tick`]). When `true`, the engine
+    /// routes greedy decoding sequences through `spec_tick` instead of
+    /// the one-token-per-tick [`Backend::forward_tick`] path.
+    fn speculates(&self) -> bool {
+        false
+    }
+
+    /// Apply the engine's speculative config ([`EngineConfig::spec`])
+    /// before serving starts — called once at construction, exactly
+    /// like [`Backend::set_numerics`]. Non-speculating backends ignore
+    /// it.
+    fn set_spec(&mut self, _cfg: &SpecConfig) {}
+
+    /// One speculative round for a batch of greedy decoding sequences:
+    /// draft candidate tokens with the cheap model, verify them all in
+    /// one chunk-major target forward, truncate both caches past the
+    /// accept point, and return each sequence's emitted tokens.
+    /// `last[b]` is sequence `b`'s newest sampled (not yet fed) token,
+    /// `budgets[b]` its remaining generation budget (≥ 1); every
+    /// outcome must emit between 1 and `budgets[b]` tokens and leave
+    /// the cache exactly as if those tokens had been served one normal
+    /// tick at a time. Backends that don't speculate keep the default
+    /// `None`.
+    fn spec_tick(
+        &self,
+        _last: &[u32],
+        _caches: &mut [&mut Self::Kv],
+        _budgets: &[usize],
+        _scratch: &mut Self::Scratch,
+    ) -> Option<Result<Vec<SpecOutcome>>> {
+        None
+    }
 
     /// Human label (which Table-IV row this backend realizes).
     fn label(&self) -> &'static str;
@@ -244,6 +279,15 @@ pub struct Engine<B: Backend> {
     tick_need: Vec<bool>,
     tick_chunk_refs: Vec<&'static [u32]>,
     tick_caches: Vec<&'static mut B::Kv>,
+    /// Per-tick partition of `running` (indices, ascending): greedy
+    /// decoding sequences routed through [`Backend::spec_tick`] vs
+    /// everything else (prefilling, non-greedy, or a non-speculating
+    /// backend — then `tick_spec_idx` stays empty).
+    tick_spec_idx: Vec<usize>,
+    tick_normal_idx: Vec<usize>,
+    /// Speculative-round inputs, persisted like the chunk buffers.
+    tick_last: Vec<u32>,
+    tick_budgets: Vec<usize>,
 }
 
 impl<B: Backend> Engine<B> {
@@ -260,6 +304,7 @@ impl<B: Backend> Engine<B> {
         policy: Box<dyn SchedulePolicy>,
     ) -> Engine<B> {
         backend.set_numerics(cfg.numerics);
+        backend.set_spec(&cfg.spec);
         let queue = Arc::new(RequestQueue::new(cfg.max_queue));
         let kv = PagedKvManager::new(cfg.total_blocks, cfg.block_size);
         let batcher = Batcher::new(BatcherConfig {
@@ -285,6 +330,10 @@ impl<B: Backend> Engine<B> {
             tick_need: Vec::new(),
             tick_chunk_refs: Vec::new(),
             tick_caches: Vec::new(),
+            tick_spec_idx: Vec::new(),
+            tick_normal_idx: Vec::new(),
+            tick_last: Vec::new(),
+            tick_budgets: Vec::new(),
         }
     }
 
@@ -462,11 +511,34 @@ impl<B: Backend> Engine<B> {
             });
         }
 
-        // ---- one unified chunked forward over the running set ----------
-        if !self.running.is_empty() {
+        // ---- partition the running set ---------------------------------
+        // Greedy decoding sequences take the speculative draft/verify
+        // path when the backend offers one; prefilling and non-greedy
+        // sequences (the acceptance rule is argmax-based) take the
+        // normal chunked tick. Non-speculating backends put everything
+        // in the normal set, so this partition is behavior-free for
+        // them.
+        self.tick_spec_idx.clear();
+        self.tick_normal_idx.clear();
+        let speculates = self.backend.speculates();
+        for (i, run) in self.running.iter().enumerate() {
+            if speculates
+                && !run.prefilling()
+                && matches!(run.req.sampling, SamplingParams::Greedy)
+            {
+                self.tick_spec_idx.push(i);
+            } else {
+                self.tick_normal_idx.push(i);
+            }
+        }
+
+        // ---- one unified chunked forward over the normal subset --------
+        if !self.tick_normal_idx.is_empty() {
+            let n_pre =
+                self.tick_normal_idx.iter().filter(|&&i| self.running[i].prefilling()).count();
             let tick = TickState {
-                prefilling: self.running.iter().filter(|r| r.prefilling()).count(),
-                decoding: self.running.iter().filter(|r| !r.prefilling()).count(),
+                prefilling: n_pre,
+                decoding: self.tick_normal_idx.len() - n_pre,
                 queued: self.queue.len(),
             };
             let bound = self.cfg.prefill_chunk.max(1);
@@ -478,7 +550,7 @@ impl<B: Backend> Engine<B> {
             // in place, so a steady-state tick performs no heap
             // allocation outside the kernels (pinned by
             // eval::speed::measure_decode_batch's allocation probe)
-            let nb = self.running.len();
+            let nb = self.tick_normal_idx.len();
             for c in &mut self.tick_chunks {
                 c.clear();
             }
@@ -486,8 +558,9 @@ impl<B: Backend> Engine<B> {
                 self.tick_chunks.push(Vec::new());
             }
             self.tick_need.clear();
-            for (i, run) in self.running.iter().enumerate() {
-                let chunk = &mut self.tick_chunks[i];
+            for (j, &i) in self.tick_normal_idx.iter().enumerate() {
+                let run = &self.running[i];
+                let chunk = &mut self.tick_chunks[j];
                 if run.prefilling() {
                     let end = (run.prompt_idx + chunk_len).min(run.req.prompt.len());
                     chunk.extend_from_slice(&run.req.prompt[run.prompt_idx..end]);
@@ -502,10 +575,10 @@ impl<B: Backend> Engine<B> {
             // (prefix-cache hits start past their matched prefix, so the
             // skipped fraction is visible as reused vs computed tokens)
             let prefill_toks: u64 = self
-                .running
+                .tick_normal_idx
                 .iter()
                 .zip(&self.tick_chunks)
-                .filter(|(run, _)| run.prefilling())
+                .filter(|(&i, _)| self.running[i].prefilling())
                 .map(|(_, c)| c.len() as u64)
                 .sum();
             self.metrics.prefill_tokens_computed += prefill_toks;
@@ -513,9 +586,21 @@ impl<B: Backend> Engine<B> {
             let mut chunk_refs = take_slice_buf(&mut self.tick_chunk_refs);
             chunk_refs.extend(self.tick_chunks[..nb].iter().map(|c| c.as_slice()));
             let mut caches = take_mut_buf(&mut self.tick_caches);
-            caches.extend(self.running.iter_mut().map(|r| &mut r.cache));
-            let result =
-                self.backend.forward_tick(&chunk_refs, &mut caches, &self.tick_need, &mut self.scratch);
+            {
+                let mut want = self.tick_normal_idx.iter().peekable();
+                for (i, run) in self.running.iter_mut().enumerate() {
+                    if want.peek() == Some(&&i) {
+                        want.next();
+                        caches.push(&mut run.cache);
+                    }
+                }
+            }
+            let result = self.backend.forward_tick(
+                &chunk_refs,
+                &mut caches,
+                &self.tick_need,
+                &mut self.scratch,
+            );
             stash_mut_buf(&mut self.tick_caches, caches);
             stash_slice_buf(&mut self.tick_chunk_refs, chunk_refs);
             let all_logits = result?;
@@ -525,9 +610,10 @@ impl<B: Backend> Engine<B> {
             // sequences only advanced their KV cache
             let seqs = nb;
             let mut emitted = 0usize;
-            for ((run, chunk), logits) in
-                self.running.iter_mut().zip(&self.tick_chunks).zip(&all_logits)
+            for ((&i, chunk), logits) in
+                self.tick_normal_idx.iter().zip(&self.tick_chunks).zip(&all_logits)
             {
+                let run = &mut self.running[i];
                 let sample_from = if run.prefilling() {
                     run.prompt_idx += chunk.len();
                     if run.prefilling() {
@@ -579,6 +665,70 @@ impl<B: Backend> Engine<B> {
                     self.metrics.record_batch_step(t0.elapsed(), 1, 1);
                 }
             }
+        }
+
+        // ---- one speculative draft/verify round over the spec subset ---
+        if !self.tick_spec_idx.is_empty() {
+            let t0 = Instant::now();
+            self.tick_last.clear();
+            self.tick_budgets.clear();
+            for &i in &self.tick_spec_idx {
+                let run = &self.running[i];
+                self.tick_last.push(*run.generated.last().expect("decoding sequence has a token"));
+                // remaining budget is ≥ 1: exhausted sequences retired
+                // at the end of the tick that exhausted them
+                self.tick_budgets.push(run.req.max_new_tokens - run.generated.len());
+            }
+            let mut caches = take_mut_buf(&mut self.tick_caches);
+            {
+                let mut want = self.tick_spec_idx.iter().peekable();
+                for (i, run) in self.running.iter_mut().enumerate() {
+                    if want.peek() == Some(&&i) {
+                        want.next();
+                        caches.push(&mut run.cache);
+                    }
+                }
+            }
+            let result = self
+                .backend
+                .spec_tick(&self.tick_last, &mut caches, &self.tick_budgets, &mut self.scratch);
+            stash_mut_buf(&mut self.tick_caches, caches);
+            let outcomes = result.expect("speculating backend must implement spec_tick")?;
+
+            let mut emitted = 0usize;
+            for (&i, outcome) in self.tick_spec_idx.iter().zip(&outcomes) {
+                let run = &mut self.running[i];
+                // Pool bookkeeping mirrors the physical overshoot: the
+                // round transiently occupied `drafted + 1` positions
+                // past the pre-round length, then the backend rolled the
+                // caches back. Appending them all and truncating to the
+                // emitted history exercises the same accept-with-
+                // rollback path on the paged pool, re-crediting the
+                // blocks the rejected tail had claimed.
+                let written = outcome.drafted + 1;
+                for _ in 0..written {
+                    // within the admission-time commitment: the draft
+                    // allotment is clamped to budget − 1
+                    let ok = self.kv.append_token(run.req.id);
+                    assert!(ok, "speculative round exceeded its KV commitment");
+                }
+                // emission stops at EOS — tokens past it were verified
+                // but must never surface (the sequence retires below)
+                let mut emit_n = outcome.tokens.len();
+                if let Some(pos) = outcome.tokens.iter().position(|&t| t == self.cfg.eos_token) {
+                    emit_n = pos + 1;
+                }
+                let t_emit = Instant::now();
+                for &tok in &outcome.tokens[..emit_n] {
+                    run.generated.push(tok);
+                    events.push(Event::Token { id: run.req.id, token: tok, t_emit });
+                }
+                self.kv.truncate_to(run.req.id, run.req.prompt.len() + run.generated.len());
+                self.metrics
+                    .record_spec(outcome.drafted, outcome.accepted, written - emit_n, emit_n);
+                emitted += emit_n;
+            }
+            self.metrics.record_batch_step(t0.elapsed(), self.tick_spec_idx.len(), emitted);
         }
 
         // ---- finish checks + retire ------------------------------------

@@ -256,6 +256,51 @@ impl PagedKvManager {
         true
     }
 
+    /// Roll a sequence back to `tokens` stored tokens, returning the
+    /// blocks past the new boundary to the free list and re-crediting
+    /// them to the sequence's pending-allocation budget (the commitment
+    /// is unchanged — the sequence may still grow back to its worst
+    /// case, so `Σ pending ≤ free` is preserved by construction: every
+    /// freed block grows both sides by one).
+    ///
+    /// This is the speculative-decode reject path, and it only ever cuts
+    /// into the sequence's **privately-owned decode tail** — the drafted
+    /// positions lie past the prompt, and any block covering drafted
+    /// tokens was either freshly allocated or already copied-on-write
+    /// (`append_token` CoWs before writing a shared block). Popping a
+    /// block that is still shared or pinned would corrupt another
+    /// sequence's table, so that is asserted, not handled.
+    pub fn truncate_to(&mut self, seq: SeqId, tokens: usize) {
+        let len = *self.lens.get(&seq).expect("unknown seq");
+        assert!(tokens <= len, "truncate_to({tokens}) beyond stored {len}");
+        if tokens == len {
+            return;
+        }
+        // same floor as admit(): even an empty sequence keeps one block
+        let need = self.blocks_for(tokens.max(1));
+        let table = self.tables.get_mut(&seq).expect("unknown seq");
+        let mut freed = 0usize;
+        while table.len() > need {
+            let b = table.pop().expect("table shorter than its own accounting");
+            assert_eq!(
+                self.pins[b as usize], 0,
+                "rollback popped pinned block {b} — truncation cut into a published prefix"
+            );
+            assert_eq!(
+                self.refs[b as usize], 1,
+                "rollback popped shared block {b} — truncation cut into a shared prefix"
+            );
+            self.refs[b as usize] = 0;
+            self.free.push(b);
+            freed += 1;
+        }
+        if freed > 0 {
+            *self.pending.get_mut(&seq).expect("unknown seq") += freed;
+            self.pending_total += freed;
+        }
+        *self.lens.get_mut(&seq).unwrap() = tokens;
+    }
+
     /// Pin a cached prefix's blocks so they survive the donor sequence's
     /// release. `tail_grant` names the donor when it may later write into
     /// the last pinned block (its prompt ends mid-block): pinning then
@@ -574,6 +619,60 @@ mod tests {
     }
 
     #[test]
+    fn truncate_frees_blocks_and_recredits_pending() {
+        let mut m = PagedKvManager::new(8, 4);
+        assert!(m.admit(1, 4, 24)); // 1 block held, commitment 6
+        for _ in 0..12 {
+            assert!(m.append_token(1)); // 16 tokens → 4 blocks
+        }
+        assert_eq!(m.table(1).unwrap().len(), 4);
+        let free_before = m.free_blocks();
+        // reject a 7-token draft: roll back to 9 tokens (3 blocks)
+        m.truncate_to(1, 9);
+        assert_eq!(m.seq_tokens(1), Some(9));
+        assert_eq!(m.table(1).unwrap().len(), 3);
+        assert_eq!(m.free_blocks(), free_before + 1);
+        m.check_invariants().unwrap();
+        // the freed block was re-credited: the sequence can still grow
+        // back to its full commitment (24 tokens)
+        for _ in 0..15 {
+            assert!(m.append_token(1));
+        }
+        assert!(!m.append_token(1), "commitment unchanged by rollback");
+        m.check_invariants().unwrap();
+        m.release(1);
+        assert_eq!(m.free_blocks(), 8);
+    }
+
+    #[test]
+    fn truncate_within_block_moves_no_blocks() {
+        let mut m = PagedKvManager::new(4, 8);
+        assert!(m.admit(1, 3, 16));
+        for _ in 0..4 {
+            assert!(m.append_token(1)); // 7 tokens, still 1 block
+        }
+        let table = m.table(1).unwrap().to_vec();
+        m.truncate_to(1, 4);
+        assert_eq!(m.table(1).unwrap(), table.as_slice(), "same single block");
+        assert_eq!(m.seq_tokens(1), Some(4));
+        // no-op truncation is allowed
+        m.truncate_to(1, 4);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "pinned block")]
+    fn truncate_into_pinned_prefix_is_a_bug() {
+        let mut m = PagedKvManager::new(8, 4);
+        assert!(m.admit(1, 8, 12));
+        let blocks = m.table(1).unwrap().to_vec();
+        assert!(m.pin_prefix(&blocks, None));
+        // cutting into the published prefix violates the engine's
+        // floor contract — the pool refuses loudly
+        m.truncate_to(1, 2);
+    }
+
+    #[test]
     fn property_random_workload_never_double_owns() {
         let mut rng = Rng::new(808);
         let mut m = PagedKvManager::new(32, 4);
@@ -606,6 +705,110 @@ mod tests {
             m.release(seq);
         }
         assert_eq!(m.free_blocks(), 32);
+        m.check_invariants().unwrap();
+    }
+
+    /// Speculative draft/verify churn: sequences repeatedly append a
+    /// drafted burst and roll back to a random accept point, interleaved
+    /// with prefix-cache pins, shared admissions, and mid-draft cancels.
+    /// Each sequence carries a rollback floor (its prompt — which also
+    /// bounds every pin and shared adoption, exactly the engine's
+    /// contract), so `truncate_to` only ever cuts the private decode
+    /// tail. Invariants hold at every step and the pool drains to full.
+    #[test]
+    fn property_speculative_rollback_churn_preserves_invariants() {
+        let mut rng = Rng::new(9109);
+        let mut m = PagedKvManager::new(48, 4);
+        // (seq, floor): floor = prompt tokens — never truncated past
+        let mut live: Vec<(SeqId, usize)> = Vec::new();
+        let mut pinned: Vec<(Vec<u32>, usize)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..3000 {
+            match rng.below(12) {
+                0..=1 => {
+                    let prompt = rng.range(1, 14);
+                    let max = prompt + rng.range(2, 14);
+                    if m.admit(next_id, prompt, max) {
+                        live.push((next_id, prompt));
+                    }
+                    next_id += 1;
+                }
+                2 if !pinned.is_empty() => {
+                    // prefix-cache hit: adopt a pinned prefix by reference
+                    let (blocks, tokens) = pinned[rng.range(0, pinned.len())].clone();
+                    let prompt = tokens + rng.range(1, 6);
+                    let max = prompt + rng.range(2, 10);
+                    if m.admit_shared(next_id, prompt, max, &blocks, tokens) {
+                        live.push((next_id, prompt));
+                    }
+                    next_id += 1;
+                }
+                3 if !live.is_empty() => {
+                    // publish a prompt prefix (pin only up to the floor,
+                    // as the engine does at prompt completion)
+                    let (seq, floor) = live[rng.range(0, live.len())];
+                    let covering = m.blocks_covering(floor);
+                    let blocks = m.table(seq).unwrap();
+                    if blocks.len() >= covering {
+                        let blocks = blocks[..covering].to_vec();
+                        let grant = (floor % m.block_size() != 0).then_some(seq);
+                        if m.pin_prefix(&blocks, grant) {
+                            pinned.push((blocks, floor));
+                        }
+                    }
+                }
+                4 if !pinned.is_empty() => {
+                    let (blocks, _) = pinned.swap_remove(rng.range(0, pinned.len()));
+                    m.unpin_prefix(&blocks);
+                }
+                5..=8 if !live.is_empty() => {
+                    // one speculative tick: draft a burst, then accept a
+                    // prefix of it (roll the rest back) — or cancel
+                    // mid-draft with the rejected tokens still in place
+                    let idx = rng.range(0, live.len());
+                    let (seq, _) = live[idx];
+                    let before = m.seq_tokens(seq).unwrap();
+                    let mut appended = 0usize;
+                    for _ in 0..rng.range(1, 6) {
+                        if m.append_token(seq) {
+                            appended += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    if rng.below(8) == 0 {
+                        // mid-draft cancel: release before any rollback
+                        m.release(seq);
+                        live.swap_remove(idx);
+                    } else {
+                        let accepted = rng.range(0, appended + 1);
+                        m.truncate_to(seq, before + accepted);
+                    }
+                }
+                9 if !live.is_empty() => {
+                    // full reject all the way down to the floor
+                    let (seq, floor) = live[rng.range(0, live.len())];
+                    let len = m.seq_tokens(seq).unwrap();
+                    if floor <= len {
+                        m.truncate_to(seq, floor);
+                    }
+                }
+                _ if !live.is_empty() => {
+                    let idx = rng.range(0, live.len());
+                    let (seq, _) = live.swap_remove(idx);
+                    m.release(seq);
+                }
+                _ => {}
+            }
+            m.check_invariants().unwrap();
+        }
+        for (blocks, _) in pinned {
+            m.unpin_prefix(&blocks);
+        }
+        for (seq, _) in live {
+            m.release(seq);
+        }
+        assert_eq!(m.free_blocks(), 48, "rollback churn leaked blocks");
         m.check_invariants().unwrap();
     }
 

@@ -66,6 +66,20 @@ pub struct Metrics {
     /// ([`Metrics::record_greedy_divergences`]); the acceptance tests
     /// assert this stays 0.
     pub greedy_divergences: u64,
+    /// Speculative draft/verify rounds executed (one per sequence per
+    /// speculating tick).
+    pub spec_ticks: u64,
+    /// Tokens proposed by the draft model across all rounds.
+    pub spec_drafted_total: u64,
+    /// Drafted tokens the target model accepted (agreed with by argmax).
+    pub spec_accepted_total: u64,
+    /// KV positions written during drafting and then rolled back
+    /// (rejected draft tokens plus any unused bonus position).
+    pub spec_rolled_back_total: u64,
+    /// Tokens emitted by speculative rounds — accepted draft tokens plus
+    /// the target's correction/bonus token each round; `emitted / ticks`
+    /// is the effective tokens-per-verify-pass multiplier.
+    pub spec_emitted_total: u64,
     wall: Option<Stopwatch>,
 }
 
@@ -125,6 +139,35 @@ impl Metrics {
         self.greedy_divergences += n;
     }
 
+    /// Record one speculative draft/verify round for one sequence:
+    /// `drafted` tokens proposed, `accepted` of them agreed with the
+    /// target, `rolled_back` KV positions were truncated away, and
+    /// `emitted` tokens actually streamed (accepted + correction/bonus,
+    /// possibly cut short by EOS).
+    pub fn record_spec(
+        &mut self,
+        drafted: usize,
+        accepted: usize,
+        rolled_back: usize,
+        emitted: usize,
+    ) {
+        self.spec_ticks += 1;
+        self.spec_drafted_total += drafted as u64;
+        self.spec_accepted_total += accepted as u64;
+        self.spec_rolled_back_total += rolled_back as u64;
+        self.spec_emitted_total += emitted as u64;
+    }
+
+    /// Fraction of drafted tokens the target accepted (0 when nothing
+    /// was drafted) — the headline speculative-decoding quality number.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_drafted_total == 0 {
+            0.0
+        } else {
+            self.spec_accepted_total as f64 / self.spec_drafted_total as f64
+        }
+    }
+
     /// Record the chunk length the schedule policy chose for one tick.
     pub fn record_tick_chunk(&mut self, chunk: usize) {
         self.max_tick_chunk = self.max_tick_chunk.max(chunk as u64);
@@ -181,6 +224,8 @@ impl Metrics {
             "completed={} cancelled={} expired={} rejected={} prompt_toks={} gen_toks={} \
              throughput={:.1} tok/s\n\
              numerics: mode={} simd={} greedy_divergences={}\n\
+             spec    : ticks={} drafted={} accepted={} rolled_back={} emitted={} \
+             accept_rate={:.3}\n\
              batch   : calls={} mean_occupancy={:.2} max_occupancy={} max_tick_chunk={}\n\
              prefix  : hits={} misses={} inserts={} evicts={} reused_toks={} \
              prefill_toks={} pinned_blocks={}\n\
@@ -200,6 +245,12 @@ impl Metrics {
             self.numerics_label,
             self.simd_tier_label,
             self.greedy_divergences,
+            self.spec_ticks,
+            self.spec_drafted_total,
+            self.spec_accepted_total,
+            self.spec_rolled_back_total,
+            self.spec_emitted_total,
+            self.spec_acceptance_rate(),
             self.decode_batches,
             self.mean_batch_occupancy(),
             self.max_batch_occupancy,
@@ -309,6 +360,25 @@ mod tests {
         assert!(r.contains("reused_toks=40"), "{r}");
         assert!(r.contains("prefill_toks=17"), "{r}");
         assert!(r.contains("ttft-hit"), "{r}");
+    }
+
+    #[test]
+    fn spec_counters_accumulate_and_surface() {
+        let mut m = Metrics::new();
+        assert_eq!(m.spec_acceptance_rate(), 0.0, "no drafts yet");
+        // round 1: k=4 drafted, 2 accepted → correction token, rollback 2
+        m.record_spec(4, 2, 2, 3);
+        // round 2: full accept → bonus token, nothing rolled back
+        m.record_spec(4, 4, 0, 5);
+        assert_eq!(m.spec_ticks, 2);
+        assert_eq!(m.spec_drafted_total, 8);
+        assert_eq!(m.spec_accepted_total, 6);
+        assert_eq!(m.spec_rolled_back_total, 2);
+        assert_eq!(m.spec_emitted_total, 8);
+        assert!((m.spec_acceptance_rate() - 0.75).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("spec    : ticks=2 drafted=8 accepted=6"), "{r}");
+        assert!(r.contains("accept_rate=0.750"), "{r}");
     }
 
     #[test]

@@ -72,6 +72,37 @@
 //! sequence of a request is bit-identical to its offline response
 //! (same forward core, same sampler state).
 //!
+//! # Self-speculative decoding (draft → verify → accept/rollback)
+//!
+//! GPTQT quantizes twice, so every served model has a cheap sibling
+//! for free: the 2-bit binary-coding backend drafts, the 3-bit (or
+//! dense) target verifies. [`SpeculativeBackend`] packages the pair as
+//! one [`Backend`]; per tick the engine routes greedy decoding
+//! sequences through [`Backend::spec_tick`]:
+//!
+//! 1. **Draft.** The cheap model decodes up to `k` tokens
+//!    autoregressively (batched across sequences, greedy argmax).
+//! 2. **Verify.** The target consumes `[last, d₁..d_k]` in **one**
+//!    chunk-major forward — k+1 positions of logits per weight stream,
+//!    which is exactly the batched forward core's amortization.
+//! 3. **Accept.** Drafted tokens agreeing with the target argmax are
+//!    accepted left to right; the first disagreement emits the
+//!    target's correction token instead; a full agreement earns the
+//!    position-k argmax as a bonus. Every round emits `accepted + 1`
+//!    tokens — precisely the tokens target-only greedy decoding would
+//!    emit, so speculation changes latency, never output.
+//! 4. **Rollback.** Both KV caches truncate past the accept point
+//!    ([`crate::model::KvCache::truncate_to`]) and the paged pool
+//!    re-credits the rejected tail's blocks
+//!    ([`PagedKvManager::truncate_to`]) — accept-with-rollback on the
+//!    same refcounted pool the prefix cache shares.
+//!
+//! Prefilling and non-greedy sequences (the acceptance rule is
+//! argmax-based) ride the normal tick, with both caches advanced in
+//! lockstep and the target's logits served. Configured by
+//! [`EngineConfig::spec`] / `gptqt serve --speculative`; acceptance
+//! counters surface in [`Metrics`] and the `serve spec` bench records.
+//!
 //! Shape: a miniature vLLM-style router/engine. The paper measures
 //! per-token generation latency under low-concurrency serving (§III-E);
 //! this module is the system that measurement runs in, plus the
@@ -87,6 +118,7 @@ pub mod queue;
 pub mod request;
 pub mod sampler;
 pub mod server;
+pub mod speculative;
 
 pub use engine::{Backend, CpuBackend, Engine, PjrtBackend};
 pub use kv_pool::PagedKvManager;
@@ -96,6 +128,7 @@ pub use prefix_cache::{PrefixCache, PrefixCacheConfig};
 pub use queue::{RequestQueue, SubmitError};
 pub use request::{FinishReason, Request, Response, SamplingParams};
 pub use server::{Event, RequestHandle, Server};
+pub use speculative::{DraftFormat, SpecCapable, SpecConfig, SpecOutcome, SpeculativeBackend};
 
 /// Engine configuration knobs.
 #[derive(Debug, Clone)]
@@ -128,6 +161,12 @@ pub struct EngineConfig {
     /// construction ([`Backend::set_numerics`]) — the single source of
     /// truth for a serving session's numerics.
     pub numerics: crate::kernels::NumericsMode,
+    /// Self-speculative decoding knobs ([`SpecConfig`]): draft depth
+    /// `k` and draft weight format. Disabled by default; applied to
+    /// the backend at engine construction ([`Backend::set_spec`]).
+    /// Only meaningful for speculating backends
+    /// ([`SpeculativeBackend`]) — others ignore it.
+    pub spec: SpecConfig,
 }
 
 impl Default for EngineConfig {
@@ -142,6 +181,7 @@ impl Default for EngineConfig {
             policy: SchedulePolicyKind::Fixed,
             prefix: PrefixCacheConfig::default(),
             numerics: crate::kernels::NumericsMode::Exact,
+            spec: SpecConfig::default(),
         }
     }
 }

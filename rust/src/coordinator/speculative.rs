@@ -1,0 +1,622 @@
+//! Self-speculative decoding — GPTQT's two quantization steps as a
+//! draft/target pair.
+//!
+//! GPTQT quantizes twice: a higher-bit linear stage, then a low-bit
+//! binary re-encoding. Every served model therefore ships with a cheap
+//! sibling for free — the 2-bit binary-coding backend drafts, the 3-bit
+//! (or dense) target verifies. [`SpeculativeBackend`] packages the pair
+//! as one [`Backend`], so the engine, server, prefix cache, and metrics
+//! all work unchanged.
+//!
+//! # Draft → verify → accept/rollback (one round per tick)
+//!
+//! For a decoding sequence whose last sampled token is `x₀`:
+//!
+//! 1. **Draft.** The draft model decodes `k` tokens `d₁..d_k`
+//!    autoregressively by greedy argmax, starting from `x₀` (batched
+//!    across sequences — one cheap weight stream per round).
+//! 2. **Verify.** The target model consumes the chunk `[x₀, d₁..d_k]`
+//!    in **one** chunk-major forward
+//!    ([`crate::model::BackendModel::forward_chunks_all_with`]) and
+//!    returns every position's logits — `k+1` target distributions for
+//!    the cost of one weight stream, which is exactly what the batched
+//!    forward core of PRs 1–2 was built to amortize.
+//! 3. **Accept.** Position `i`'s target argmax `t_{i+1}` is compared to
+//!    the drafted `d_{i+1}`: agreeing tokens are accepted left to
+//!    right; the first disagreement emits `t` as the **correction**
+//!    token and stops; if all `k` agree, position `k`'s argmax is a
+//!    free **bonus** token. Every round therefore emits
+//!    `accepted + 1 ∈ 1..=k+1` tokens, all of them exactly the tokens
+//!    target-only greedy decoding would have produced — speculation
+//!    changes latency, never output (pinned by `tests/speculative.rs`).
+//! 4. **Rollback.** Both KV caches are truncated back to the accepted
+//!    history ([`SpecCapable::truncate_kv`]); the engine mirrors the
+//!    rollback into the paged pool
+//!    ([`super::kv_pool::PagedKvManager::truncate_to`]), re-crediting
+//!    the freed blocks. On a full accept the draft cache instead
+//!    catches up by one position (the bonus token's predecessor was
+//!    never fed to it).
+//!
+//! The wrapper keeps the two caches in lockstep everywhere else:
+//! [`Backend::forward_tick`] (prefill and non-greedy decode) advances
+//! both, and prefix-cache snapshot/import carry both or neither.
+
+use super::engine::Backend;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Which weight format the draft model is quantized to — GPTQT's cheap
+/// second-step encodings, or dense for ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftFormat {
+    /// 2-bit binary coding (LUT-GEMM) — the paper-native draft.
+    Lut2,
+    /// 3-bit binary coding.
+    Lut3,
+    /// Unquantized f32 (ablation baseline; drafts are free of
+    /// quantization error but stream full-width weights).
+    Dense,
+}
+
+impl DraftFormat {
+    /// Parse a CLI spelling (`lut2` / `lut3` / `dense`).
+    pub fn parse(s: &str) -> Result<DraftFormat, String> {
+        match s {
+            "lut2" => Ok(DraftFormat::Lut2),
+            "lut3" => Ok(DraftFormat::Lut3),
+            "dense" => Ok(DraftFormat::Dense),
+            other => Err(format!("unknown draft format '{other}' (expected lut2|lut3|dense)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DraftFormat::Lut2 => "lut2",
+            DraftFormat::Lut3 => "lut3",
+            DraftFormat::Dense => "dense",
+        }
+    }
+}
+
+/// Speculative-decoding knobs, threaded through
+/// [`super::EngineConfig::spec`] and `gptqt serve --speculative`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Whether the serving stack should build/drive a draft model at
+    /// all. Off by default — speculation is an opt-in speed multiplier.
+    pub enabled: bool,
+    /// Draft tokens proposed per round (clamped per sequence so the
+    /// round never overruns the request's generation budget).
+    pub k: usize,
+    /// Weight format the draft model is built in.
+    pub draft_format: DraftFormat,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { enabled: false, k: 4, draft_format: DraftFormat::Lut2 }
+    }
+}
+
+/// Result of one draft/verify round for one sequence. `tokens` is what
+/// the sequence emits this round (accepted drafts + correction/bonus,
+/// `accepted + 1` of them); `drafted`/`accepted` feed the metrics.
+#[derive(Debug, Clone)]
+pub struct SpecOutcome {
+    pub tokens: Vec<u32>,
+    pub drafted: usize,
+    pub accepted: usize,
+}
+
+/// Extra surface a backend must expose beyond [`Backend`] to take part
+/// in draft/verify: all-position logits for a chunk (the verify
+/// kernel), KV truncation (the rollback), and the current KV length
+/// (the rollback anchor).
+pub trait SpecCapable: Backend {
+    /// Advance each chunk against its cache and return **every**
+    /// position's logits (`Tᵦ × vocab` per chunk) — must be per-token
+    /// bitwise identical to feeding the tokens one at a time.
+    fn forward_chunk_all(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut Self::Kv],
+        scratch: &mut Self::Scratch,
+    ) -> Result<Vec<Tensor>>;
+
+    /// Forget every cached position at index `len` and beyond.
+    fn truncate_kv(&self, cache: &mut Self::Kv, len: usize);
+
+    /// Number of positions currently stored in `cache`.
+    fn kv_len(&self, cache: &Self::Kv) -> usize;
+}
+
+impl SpecCapable for super::engine::CpuBackend {
+    fn forward_chunk_all(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut crate::model::KvCache],
+        scratch: &mut crate::model::ForwardScratch,
+    ) -> Result<Vec<Tensor>> {
+        Ok(self.0.forward_chunks_all_with(chunks, caches, scratch))
+    }
+
+    fn truncate_kv(&self, cache: &mut crate::model::KvCache, len: usize) {
+        cache.truncate_to(len);
+    }
+
+    fn kv_len(&self, cache: &crate::model::KvCache) -> usize {
+        cache.len
+    }
+}
+
+/// Paired draft/target KV state for one sequence. The two caches cover
+/// the same token history at all times outside a `spec_tick` round.
+pub struct SpecKv<DK, TK> {
+    pub draft: DK,
+    pub target: TK,
+}
+
+/// Paired forward workspaces (contents carry nothing between ticks).
+#[derive(Default)]
+pub struct SpecScratch<DS, TS> {
+    draft: DS,
+    target: TS,
+}
+
+/// Two models, one [`Backend`]: the draft decodes cheap candidate
+/// tokens, the target verifies them in one chunk-major pass. Greedy
+/// output is token-identical to serving the target alone; the draft
+/// only decides how many target weight streams that output costs.
+pub struct SpeculativeBackend<D: SpecCapable, T: SpecCapable> {
+    draft: D,
+    target: T,
+    k: usize,
+}
+
+impl<D: SpecCapable, T: SpecCapable> SpeculativeBackend<D, T> {
+    /// Pair a draft with a target. Both must share one tokenizer/vocab
+    /// (the acceptance rule compares token ids) — the construction sites
+    /// (`eval::cmd::serve`, `eval::speed`) build both from the same
+    /// [`crate::model::Model`], which guarantees it.
+    pub fn new(draft: D, target: T, k: usize) -> SpeculativeBackend<D, T> {
+        assert!(k >= 1, "speculative k must be at least 1");
+        SpeculativeBackend { draft, target, k }
+    }
+
+    /// Draft tokens proposed per round.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The verifying (served) model.
+    pub fn target(&self) -> &T {
+        &self.target
+    }
+
+    /// The drafting model.
+    pub fn draft(&self) -> &D {
+        &self.draft
+    }
+
+    /// One draft/verify/accept/rollback round for every sequence.
+    /// `last[b]` is sequence `b`'s newest sampled (not yet fed) token
+    /// and `budgets[b]` its remaining generation budget (≥ 1). See the
+    /// module docs for the protocol; the length bookkeeping invariant
+    /// is: both caches enter at `len = L` (token `last` unfed) and
+    /// leave at `len = L + outcome.tokens.len()` (newest emitted token
+    /// unfed), exactly as if the emitted tokens had been served one
+    /// normal tick at a time.
+    fn run_round(
+        &self,
+        last: &[u32],
+        caches: &mut [&mut SpecKv<D::Kv, T::Kv>],
+        budgets: &[usize],
+        scratch: &mut SpecScratch<D::Scratch, T::Scratch>,
+    ) -> Result<Vec<SpecOutcome>> {
+        let nb = last.len();
+        debug_assert_eq!(caches.len(), nb);
+        debug_assert_eq!(budgets.len(), nb);
+        let base: Vec<usize> = caches.iter().map(|c| self.target.kv_len(&c.target)).collect();
+        // per-sequence draft allotment: a round emits accepted + 1
+        // tokens, so drafting more than budget − 1 could overrun the
+        // request's max_new_tokens on a full accept
+        let ks: Vec<usize> = budgets.iter().map(|&b| self.k.min(b.saturating_sub(1))).collect();
+
+        // ---- draft phase: batched greedy decode on the cheap model ----
+        let mut drafts: Vec<Vec<u32>> = vec![Vec::new(); nb];
+        let mut cur: Vec<u32> = last.to_vec();
+        let kmax = ks.iter().copied().max().unwrap_or(0);
+        let mut sel: Vec<usize> = Vec::new();
+        let mut toks: Vec<u32> = Vec::new();
+        for round in 0..kmax {
+            sel.clear();
+            toks.clear();
+            for b in 0..nb {
+                if round < ks[b] {
+                    sel.push(b);
+                    toks.push(cur[b]);
+                }
+            }
+            if sel.is_empty() {
+                break;
+            }
+            let chunks: Vec<&[u32]> = toks.iter().map(std::slice::from_ref).collect();
+            let need = vec![true; sel.len()];
+            let mut dcaches: Vec<&mut D::Kv> = Vec::with_capacity(sel.len());
+            let mut want = sel.iter().peekable();
+            for (b, c) in caches.iter_mut().enumerate() {
+                if want.peek() == Some(&&b) {
+                    want.next();
+                    dcaches.push(&mut c.draft);
+                }
+            }
+            let logits =
+                self.draft.forward_tick(&chunks, &mut dcaches, &need, &mut scratch.draft)?;
+            for (si, &b) in sel.iter().enumerate() {
+                let l = logits[si].as_ref().expect("draft round requested logits");
+                let t = super::sampler::argmax(l);
+                drafts[b].push(t);
+                cur[b] = t;
+            }
+        }
+
+        // ---- verify phase: one chunk-major target forward -------------
+        // chunk b = [last, d₁..d_k]: position i's logits are the target
+        // distribution after i accepted tokens — k+1 verdicts per weight
+        // stream (k = 0 degenerates to plain single-token decode)
+        let vstore: Vec<Vec<u32>> = (0..nb)
+            .map(|b| {
+                let mut v = Vec::with_capacity(1 + drafts[b].len());
+                v.push(last[b]);
+                v.extend_from_slice(&drafts[b]);
+                v
+            })
+            .collect();
+        let vchunks: Vec<&[u32]> = vstore.iter().map(|v| v.as_slice()).collect();
+        let mut tcaches: Vec<&mut T::Kv> = caches.iter_mut().map(|c| &mut c.target).collect();
+        let all = self.target.forward_chunk_all(&vchunks, &mut tcaches, &mut scratch.target)?;
+        drop(tcaches);
+
+        // ---- accept + rollback ----------------------------------------
+        let mut out: Vec<SpecOutcome> = Vec::with_capacity(nb);
+        let mut full_accept = vec![false; nb];
+        for b in 0..nb {
+            let k_b = drafts[b].len();
+            let logits = &all[b];
+            let mut tokens = Vec::with_capacity(k_b + 1);
+            let mut accepted = 0usize;
+            for i in 0..k_b {
+                let t = super::sampler::argmax(logits.row(i));
+                tokens.push(t);
+                if t != drafts[b][i] {
+                    break; // correction token: target overrules the draft
+                }
+                accepted += 1;
+            }
+            if accepted == k_b {
+                // every draft agreed (or k = 0): the last position's
+                // argmax is the bonus / plain-decode token
+                tokens.push(super::sampler::argmax(logits.row(k_b)));
+                full_accept[b] = true;
+            }
+            debug_assert_eq!(tokens.len(), accepted + 1);
+            // roll the target back past the rejected tail: it consumed
+            // k_b + 1 positions but only `last` + accepted drafts are
+            // real history
+            self.target.truncate_kv(&mut caches[b].target, base[b] + 1 + accepted);
+            if !full_accept[b] {
+                // the draft consumed k_b positions (last, d₁..d_{k-1});
+                // keep the same accepted history
+                self.draft.truncate_kv(&mut caches[b].draft, base[b] + 1 + accepted);
+            }
+            out.push(SpecOutcome { tokens, drafted: k_b, accepted });
+        }
+
+        // ---- draft catch-up for full accepts --------------------------
+        // the draft never fed its own final token d_k (or, at k = 0,
+        // `last`): feed it now, logits unneeded, so both caches leave at
+        // base + accepted + 1 with the newest emitted token unfed
+        sel.clear();
+        toks.clear();
+        for b in 0..nb {
+            if full_accept[b] {
+                sel.push(b);
+                toks.push(*vstore[b].last().expect("verify chunk is never empty"));
+            }
+        }
+        if !sel.is_empty() {
+            let chunks: Vec<&[u32]> = toks.iter().map(std::slice::from_ref).collect();
+            let need = vec![false; sel.len()];
+            let mut dcaches: Vec<&mut D::Kv> = Vec::with_capacity(sel.len());
+            let mut want = sel.iter().peekable();
+            for (b, c) in caches.iter_mut().enumerate() {
+                if want.peek() == Some(&&b) {
+                    want.next();
+                    dcaches.push(&mut c.draft);
+                }
+            }
+            self.draft.forward_tick(&chunks, &mut dcaches, &need, &mut scratch.draft)?;
+        }
+
+        if cfg!(debug_assertions) {
+            for (b, c) in caches.iter().enumerate() {
+                debug_assert_eq!(
+                    self.target.kv_len(&c.target),
+                    base[b] + out[b].tokens.len(),
+                    "target cache out of lockstep after round"
+                );
+                debug_assert_eq!(
+                    self.draft.kv_len(&c.draft),
+                    base[b] + out[b].tokens.len(),
+                    "draft cache out of lockstep after round"
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl<D: SpecCapable, T: SpecCapable> Backend for SpeculativeBackend<D, T> {
+    type Kv = SpecKv<D::Kv, T::Kv>;
+    type Scratch = SpecScratch<D::Scratch, T::Scratch>;
+
+    fn capacity(&self) -> usize {
+        self.draft.capacity().min(self.target.capacity())
+    }
+
+    fn new_cache(&self) -> Result<Self::Kv> {
+        Ok(SpecKv { draft: self.draft.new_cache()?, target: self.target.new_cache()? })
+    }
+
+    /// The non-speculative path (prefill chunks, non-greedy decode):
+    /// advance **both** caches with the same tokens so they stay in
+    /// lockstep, and serve the **target's** logits — sampling always
+    /// follows the verifying model, so non-greedy requests too are
+    /// distributed exactly as target-only serving.
+    fn forward_tick(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut Self::Kv],
+        need: &[bool],
+        scratch: &mut Self::Scratch,
+    ) -> Result<Vec<Option<Vec<f32>>>> {
+        let no_need = vec![false; chunks.len()];
+        {
+            let mut dcaches: Vec<&mut D::Kv> = caches.iter_mut().map(|c| &mut c.draft).collect();
+            self.draft.forward_tick(chunks, &mut dcaches, &no_need, &mut scratch.draft)?;
+        }
+        let mut tcaches: Vec<&mut T::Kv> = caches.iter_mut().map(|c| &mut c.target).collect();
+        self.target.forward_tick(chunks, &mut tcaches, need, &mut scratch.target)
+    }
+
+    fn batch_amortized(&self) -> bool {
+        self.target.batch_amortized()
+    }
+
+    fn snapshot_kv_prefix(&self, cache: &Self::Kv, tokens: usize) -> Option<Self::Kv> {
+        Some(SpecKv {
+            draft: self.draft.snapshot_kv_prefix(&cache.draft, tokens)?,
+            target: self.target.snapshot_kv_prefix(&cache.target, tokens)?,
+        })
+    }
+
+    fn import_kv_prefix(&self, dst: &mut Self::Kv, src: &Self::Kv, tokens: usize) -> bool {
+        if !self.draft.import_kv_prefix(&mut dst.draft, &src.draft, tokens) {
+            return false;
+        }
+        if !self.target.import_kv_prefix(&mut dst.target, &src.target, tokens) {
+            // keep the pair consistent: forget the draft-side import so
+            // the engine's cold-prefill fallback refills both from zero
+            self.draft.truncate_kv(&mut dst.draft, 0);
+            return false;
+        }
+        true
+    }
+
+    fn set_numerics(&mut self, mode: crate::kernels::NumericsMode) {
+        self.draft.set_numerics(mode);
+        self.target.set_numerics(mode);
+    }
+
+    fn speculates(&self) -> bool {
+        true
+    }
+
+    fn set_spec(&mut self, cfg: &SpecConfig) {
+        if cfg.enabled {
+            self.k = cfg.k.max(1);
+        }
+    }
+
+    fn spec_tick(
+        &self,
+        last: &[u32],
+        caches: &mut [&mut Self::Kv],
+        budgets: &[usize],
+        scratch: &mut Self::Scratch,
+    ) -> Option<Result<Vec<SpecOutcome>>> {
+        Some(self.run_round(last, caches, budgets, scratch))
+    }
+
+    fn label(&self) -> &'static str {
+        "speculative"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{CpuBackend, Engine};
+    use crate::coordinator::request::SamplingParams;
+    use crate::coordinator::{EngineConfig, Request};
+    use crate::model::init::random_weights;
+    use crate::model::{presets, BackendModel, Model};
+
+    fn tiny_model(seed: u64) -> Model {
+        let mut cfg = presets::by_name("opt-nano").unwrap();
+        cfg.vocab = 64;
+        cfg.max_seq = 64;
+        Model::new(cfg.clone(), random_weights(&cfg, seed))
+    }
+
+    fn cfg_no_eos(max_batch: usize) -> EngineConfig {
+        EngineConfig {
+            max_batch,
+            total_blocks: 128,
+            block_size: 8,
+            eos_token: u32::MAX,
+            ..Default::default()
+        }
+    }
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
+        Request::new(id, (0..prompt_len as u32).map(|i| 3 + i % 60).collect(), gen)
+    }
+
+    type SpecCpu = SpeculativeBackend<CpuBackend, CpuBackend>;
+
+    /// Draft and target are *different* models (different random
+    /// weights), so drafts get rejected — and greedy output must still
+    /// be token-identical to serving the target alone.
+    #[test]
+    fn speculative_greedy_matches_target_only() {
+        let target = tiny_model(42);
+        let draft = tiny_model(1042);
+        let serve = |spec: bool| {
+            let mut out = if spec {
+                let be: SpecCpu = SpeculativeBackend::new(
+                    CpuBackend(BackendModel::dense(&draft)),
+                    CpuBackend(BackendModel::dense(&target)),
+                    4,
+                );
+                let mut e = Engine::new(be, cfg_no_eos(4));
+                for id in 0..4 {
+                    e.submit(req(id, 4 + id as usize, 12)).unwrap();
+                }
+                let out = e.run_to_completion().unwrap();
+                assert!(e.metrics.spec_ticks > 0, "speculative path never ran");
+                assert!(e.metrics.spec_drafted_total > 0);
+                e.check_invariants().unwrap();
+                assert_eq!(e.kv().used_blocks(), 0, "rollback leaked pool blocks");
+                out
+            } else {
+                let mut e = Engine::new(CpuBackend(BackendModel::dense(&target)), cfg_no_eos(4));
+                for id in 0..4 {
+                    e.submit(req(id, 4 + id as usize, 12)).unwrap();
+                }
+                e.run_to_completion().unwrap()
+            };
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(serve(true), serve(false), "speculation changed greedy output");
+    }
+
+    /// An identical draft/target pair agrees everywhere: every round
+    /// accepts all k drafts and emits k + 1 tokens.
+    #[test]
+    fn identical_pair_accepts_every_draft() {
+        let m = tiny_model(7);
+        let be: SpecCpu = SpeculativeBackend::new(
+            CpuBackend(BackendModel::dense(&m)),
+            CpuBackend(BackendModel::dense(&m)),
+            3,
+        );
+        let mut e = Engine::new(be, cfg_no_eos(2));
+        e.submit(req(1, 5, 13)).unwrap();
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens.len(), 13);
+        assert_eq!(e.metrics.spec_acceptance_rate(), 1.0);
+        assert_eq!(e.metrics.spec_rolled_back_total, 0);
+        assert_eq!(
+            e.metrics.spec_emitted_total,
+            e.metrics.spec_drafted_total + e.metrics.spec_ticks,
+            "full accepts emit drafted + bonus every round"
+        );
+        e.check_invariants().unwrap();
+    }
+
+    /// The per-round draft allotment is clamped so a full accept never
+    /// overruns `max_new_tokens`, including max_new = 1 (k = 0: plain
+    /// decode through the verify path).
+    #[test]
+    fn respects_generation_budget() {
+        let m = tiny_model(9);
+        for gen in [1usize, 2, 3, 5] {
+            let be: SpecCpu = SpeculativeBackend::new(
+                CpuBackend(BackendModel::dense(&m)),
+                CpuBackend(BackendModel::dense(&m)),
+                4,
+            );
+            let mut e = Engine::new(be, cfg_no_eos(2));
+            e.submit(req(1, 4, gen)).unwrap();
+            let out = e.run_to_completion().unwrap();
+            assert_eq!(out[0].tokens.len(), gen, "budget {gen} overrun");
+            e.check_invariants().unwrap();
+        }
+    }
+
+    /// Non-greedy requests bypass speculation (the acceptance rule is
+    /// argmax-based) but share the engine with speculating ones; their
+    /// seeded sampling must match target-only serving exactly.
+    #[test]
+    fn mixed_greedy_and_topk_batch_matches_target_only() {
+        let target = tiny_model(52);
+        let draft = tiny_model(1052);
+        let topk = SamplingParams::TopK { k: 8, temperature: 1.0, seed: 99 };
+        let submit_all = |e: &mut dyn FnMut(Request)| {
+            e(req(1, 5, 10));
+            e(req(2, 6, 10).with_sampling(topk));
+            e(req(3, 4, 10));
+        };
+        let spec = {
+            let be: SpecCpu = SpeculativeBackend::new(
+                CpuBackend(BackendModel::dense(&draft)),
+                CpuBackend(BackendModel::dense(&target)),
+                4,
+            );
+            let mut e = Engine::new(be, cfg_no_eos(4));
+            submit_all(&mut |r| e.submit(r).unwrap());
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            assert!(e.metrics.spec_ticks > 0);
+            e.check_invariants().unwrap();
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let plain = {
+            let mut e = Engine::new(CpuBackend(BackendModel::dense(&target)), cfg_no_eos(4));
+            submit_all(&mut |r| e.submit(r).unwrap());
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(spec, plain, "mixed batch diverged from target-only serving");
+    }
+
+    #[test]
+    fn engine_config_spec_k_overrides_constructor() {
+        let m = tiny_model(3);
+        let be: SpecCpu = SpeculativeBackend::new(
+            CpuBackend(BackendModel::dense(&m)),
+            CpuBackend(BackendModel::dense(&m)),
+            4,
+        );
+        let cfg = EngineConfig {
+            spec: SpecConfig { enabled: true, k: 2, draft_format: DraftFormat::Dense },
+            ..cfg_no_eos(2)
+        };
+        let e = Engine::new(be, cfg);
+        assert_eq!(e.backend().k(), 2, "EngineConfig::spec.k must reach the backend");
+    }
+
+    #[test]
+    fn draft_format_parses_and_labels() {
+        assert_eq!(DraftFormat::parse("lut2"), Ok(DraftFormat::Lut2));
+        assert_eq!(DraftFormat::parse("lut3"), Ok(DraftFormat::Lut3));
+        assert_eq!(DraftFormat::parse("dense"), Ok(DraftFormat::Dense));
+        assert!(DraftFormat::parse("int8").is_err());
+        assert_eq!(DraftFormat::Lut2.label(), "lut2");
+        assert_eq!(SpecConfig::default().k, 4);
+        assert!(!SpecConfig::default().enabled);
+    }
+}

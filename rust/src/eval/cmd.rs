@@ -4,8 +4,8 @@ use super::ppl::{calib_for, eval_for, eval_ppl, eval_ppl_backend, EvalConfig};
 use super::tables::{self, ExpConfig};
 use crate::cli::Args;
 use crate::coordinator::{
-    Backend, CpuBackend, EngineConfig, PjrtBackend, PrefixCacheConfig, Request, SamplingParams,
-    SchedulePolicyKind, Server,
+    Backend, CpuBackend, DraftFormat, EngineConfig, PjrtBackend, PrefixCacheConfig, Request,
+    SamplingParams, SchedulePolicyKind, Server, SpecConfig, SpeculativeBackend,
 };
 use crate::data::{CorpusGenerator, Dataset};
 use crate::kernels::NumericsMode;
@@ -29,6 +29,29 @@ fn qcfg_from(a: &Args) -> QuantConfig {
 fn numerics_from(a: &Args) -> Result<NumericsMode> {
     let s = a.get_or("numerics", "exact");
     NumericsMode::parse(s).with_context(|| format!("bad --numerics {s:?} (exact|fast)"))
+}
+
+/// `--quant gptq2|gptq3|gptqt2|gptqt3` → (method, bits).
+fn parse_quant(q: &str) -> Result<(Method, u32)> {
+    Ok(match q {
+        "gptq2" => (Method::Gptq, 2),
+        "gptq3" => (Method::Gptq, 3),
+        "gptqt2" => (Method::Gptqt, 2),
+        "gptqt3" => (Method::Gptqt, 3),
+        other => bail!("bad --quant {other} (fp32|gptq2|gptq3|gptqt2|gptqt3)"),
+    })
+}
+
+/// Speculative-decoding knobs (`--speculative --spec-k <n>
+/// --draft <lut2|lut3|dense>`), single source for [`EngineConfig::spec`]
+/// and the draft-model build.
+fn spec_from(a: &Args) -> Result<SpecConfig> {
+    Ok(SpecConfig {
+        enabled: a.has_flag("speculative"),
+        k: a.get_usize("spec-k", 4).max(1),
+        draft_format: DraftFormat::parse(a.get_or("draft", "lut2"))
+            .map_err(|e| anyhow::anyhow!(e))?,
+    })
 }
 
 fn eval_cfg_from(a: &Args) -> EvalConfig {
@@ -129,12 +152,17 @@ pub fn ppl(a: &Args) -> Result<()> {
 
 /// `gptqt serve --model <name> --quant <fp32|gptq2|gptqt3|gptqt2>
 ///              [--backend cpu|pjrt] [--policy fixed|adaptive]
-///              [--prefix-cache on|off] --requests <n> ...`
+///              [--prefix-cache on|off] [--speculative --spec-k <n>
+///              --draft <lut2|lut3|dense>] --requests <n> ...`
 ///
 /// Serves through the streaming [`Server`] session API: requests are
 /// submitted up front, every token is consumed from the per-request
 /// event streams as it is produced, and the engine-thread metrics are
-/// reported at shutdown.
+/// reported at shutdown. `--speculative` builds a second, cheaper model
+/// in the `--draft` format and serves through a [`SpeculativeBackend`]
+/// draft/verify pair — greedy output stays token-identical to serving
+/// the target alone, and the metrics report gains the acceptance
+/// counters.
 pub fn serve(a: &Args) -> Result<()> {
     let name = a.get_or("model", "opt-mini");
     let quant = a.get_or("quant", "gptqt3");
@@ -151,6 +179,60 @@ pub fn serve(a: &Args) -> Result<()> {
         eprintln!("WARNING: serving a random-init {name} (run `make artifacts`)");
     }
 
+    // --- speculative serving: draft/target pair as one backend --------
+    let spec = spec_from(a)?;
+    if spec.enabled {
+        if backend_kind != "cpu" {
+            bail!("--speculative requires --backend cpu (no batched PJRT verify ABI yet)");
+        }
+        let calib = calib_for(&ecfg, Dataset::WikiSyn);
+        let target_bm = match quant {
+            "fp32" | "full" => BackendModel::dense(&model),
+            q => {
+                let (method, bits) = parse_quant(q)?;
+                eprintln!("quantizing {name} with {} {bits}-bit (target) …", method.name());
+                let qm =
+                    quantize_model(&model, &calib, method, &QuantConfig::with_bits(bits), false)?;
+                BackendModel::quantized(&model, qm.layers)
+            }
+        };
+        let target_label = target_bm.backend_label().to_string();
+        // the draft comes from the same weights — GPTQT's second
+        // quantization step is the cheap sibling speculation drafts with
+        let draft_bm = match spec.draft_format {
+            DraftFormat::Dense => BackendModel::dense(&model),
+            DraftFormat::Lut2 | DraftFormat::Lut3 => {
+                let bits = if spec.draft_format == DraftFormat::Lut2 { 2 } else { 3 };
+                eprintln!("quantizing {name} with gptqt {bits}-bit (draft) …");
+                let qm = quantize_model(
+                    &model,
+                    &calib,
+                    Method::Gptqt,
+                    &QuantConfig::with_bits(bits),
+                    false,
+                )?;
+                BackendModel::quantized(&model, qm.layers)
+            }
+        };
+        if !a.has_flag("greedy") {
+            eprintln!(
+                "note: speculation engages for greedy sequences only — pass --greedy to see it"
+            );
+        }
+        let label =
+            format!("spec {}->{target_label} k={} (cpu)", spec.draft_format.label(), spec.k);
+        return serve_with_backend(
+            a,
+            SpeculativeBackend::new(CpuBackend(draft_bm), CpuBackend(target_bm), spec.k),
+            &model.cfg,
+            n_requests,
+            prompt_len,
+            gen_len,
+            max_batch,
+            &label,
+        );
+    }
+
     // --- build the quantized (or full) model --------------------------
     let (served, label): (crate::model::Model, String) = match quant {
         "fp32" | "full" => (
@@ -158,13 +240,7 @@ pub fn serve(a: &Args) -> Result<()> {
             "full fp32".into(),
         ),
         q => {
-            let (method, bits) = match q {
-                "gptq2" => (Method::Gptq, 2),
-                "gptq3" => (Method::Gptq, 3),
-                "gptqt2" => (Method::Gptqt, 2),
-                "gptqt3" => (Method::Gptqt, 3),
-                other => bail!("bad --quant {other} (fp32|gptq2|gptq3|gptqt2|gptqt3)"),
-            };
+            let (method, bits) = parse_quant(q)?;
             let qcfg = QuantConfig::with_bits(bits);
             let calib = calib_for(&ecfg, Dataset::WikiSyn);
             eprintln!("quantizing {name} with {} {bits}-bit for serving …", method.name());
@@ -249,6 +325,7 @@ where
         other => anyhow::bail!("bad --prefix-cache {other:?} (on|off)"),
     };
     let numerics = numerics_from(a)?;
+    let spec = spec_from(a)?;
     let (gen, vocab) = CorpusGenerator::with_vocab(Dataset::WikiSyn, cfg.vocab, seed);
     let stream = gen.generate(n_requests * prompt_len * 4 + 64, 9);
     let server = Server::spawn(
@@ -258,6 +335,7 @@ where
             policy,
             prefix: PrefixCacheConfig { enabled: prefix_on, ..Default::default() },
             numerics,
+            spec,
             ..Default::default()
         },
     );

@@ -25,7 +25,7 @@
 
 use crate::coordinator::{
     CpuBackend, Engine, EngineConfig, Event, PrefixCacheConfig, Request, SchedulePolicyKind,
-    Server,
+    Server, SpeculativeBackend,
 };
 use crate::kernels::NumericsMode;
 use crate::model::{BackendModel, KvCache, Model, ModelConfig};
@@ -411,6 +411,101 @@ pub fn measure_streaming(
     }
 }
 
+/// Timing result for the speculative-serving protocol: effective
+/// throughput plus the acceptance counters that explain it.
+#[derive(Debug, Clone)]
+pub struct SpecStreamResult {
+    pub model: String,
+    /// Draft/target pair label (e.g. `"lut2->lut3"`).
+    pub pair: String,
+    pub requests: usize,
+    /// Total tokens streamed across all requests.
+    pub tokens: usize,
+    /// Streamed tokens per wall-clock second — the *effective* rate
+    /// speculation is judged by (each verify pass emits 1..=k+1
+    /// tokens for one target weight stream).
+    pub tokens_per_sec: f64,
+    /// Fraction of drafted tokens the target accepted.
+    pub acceptance_rate: f64,
+    pub drafted: u64,
+    pub accepted: u64,
+    pub rolled_back: u64,
+    /// Mean emitted tokens per draft/verify round (≥ 1; the weight-
+    /// stream amortization factor speculation achieved).
+    pub tokens_per_round: f64,
+}
+
+/// Measure end-to-end speculative streaming: spawn a [`Server`] over a
+/// [`SpeculativeBackend`] draft/target pair and stream greedy requests
+/// (speculation only engages for greedy sampling — the acceptance rule
+/// is argmax-based). Reports effective tokens/sec plus the acceptance
+/// counters; compare against [`measure_streaming`] over the same
+/// target model to see what the draft bought. Greedy output is
+/// token-identical to the target-only run by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_spec_streaming(
+    cfg: &ModelConfig,
+    draft: BackendModel,
+    target: BackendModel,
+    pair: &str,
+    requests: usize,
+    prompt_len: usize,
+    gen_tokens: usize,
+    k: usize,
+    numerics: NumericsMode,
+    seed: u64,
+) -> SpecStreamResult {
+    assert!(requests >= 1 && prompt_len >= 1 && gen_tokens >= 1 && k >= 1);
+    assert!(prompt_len + gen_tokens <= cfg.max_seq, "exceeds KV capacity");
+    let mut rng = Rng::new(seed);
+    let server = Server::spawn(
+        SpeculativeBackend::new(CpuBackend(draft), CpuBackend(target), k),
+        EngineConfig {
+            max_batch: requests,
+            eos_token: u32::MAX, // deterministic token counts
+            numerics,
+            ..Default::default()
+        },
+    );
+    let t_submit = Instant::now();
+    let handles: Vec<_> = (0..requests as u64)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..prompt_len)
+                .map(|_| 3 + rng.below((cfg.vocab - 3) as u64) as u32)
+                .collect();
+            server.submit(Request::new(id, prompt, gen_tokens))
+        })
+        .collect();
+    let mut tokens = 0usize;
+    let mut t_done = t_submit;
+    for h in handles {
+        for ev in h.events() {
+            if let Event::Token { t_emit, .. } = ev {
+                tokens += 1;
+                t_done = t_done.max(t_emit);
+            }
+        }
+    }
+    let secs = t_done.duration_since(t_submit).as_secs_f64();
+    let m = server.shutdown();
+    SpecStreamResult {
+        model: cfg.name.to_string(),
+        pair: pair.to_string(),
+        requests,
+        tokens,
+        tokens_per_sec: tokens as f64 / secs.max(1e-12),
+        acceptance_rate: m.spec_acceptance_rate(),
+        drafted: m.spec_drafted_total,
+        accepted: m.spec_accepted_total,
+        rolled_back: m.spec_rolled_back_total,
+        tokens_per_round: if m.spec_ticks == 0 {
+            0.0
+        } else {
+            m.spec_emitted_total as f64 / m.spec_ticks as f64
+        },
+    }
+}
+
 /// TTFT comparison for the prompt-prefix cache: the same prompt served
 /// twice through one [`Engine`], first cold (filling the cache), then as
 /// a prefix hit that adopts the cached KV blocks and computes only the
@@ -557,6 +652,32 @@ mod tests {
                 assert_eq!(r.cancelled, 0);
             }
         }
+    }
+
+    #[test]
+    fn spec_streaming_counts_tokens_and_acceptance() {
+        let m = tiny_model();
+        let draft = build_variant(&m, SpeedVariant::GptqtLut { bits: 2 }, 1);
+        let target = build_variant(&m, SpeedVariant::Full, 1);
+        let r = measure_spec_streaming(
+            &m.cfg,
+            draft,
+            target,
+            "lut2->dense",
+            3,
+            4,
+            6,
+            4,
+            NumericsMode::Exact,
+            2,
+        );
+        assert_eq!(r.requests, 3);
+        assert_eq!(r.tokens, 3 * 6, "EOS disabled, counts are exact");
+        assert!(r.tokens_per_sec > 0.0);
+        assert!((0.0..=1.0).contains(&r.acceptance_rate));
+        assert!(r.accepted + r.rolled_back >= r.drafted);
+        assert!(r.tokens_per_round >= 1.0, "every round emits at least one token");
+        assert_eq!(r.pair, "lut2->dense");
     }
 
     #[test]

@@ -50,6 +50,13 @@
 //! cargo bench --bench speed   -- --smoke   # writes BENCH_speed.json
 //! ```
 //!
+//! The speed bench's `serve spec` records time the self-speculative
+//! serving protocol built on these kernels (2-bit binary-coding draft,
+//! 3-bit LUT or dense verify — see
+//! [`crate::coordinator::SpeculativeBackend`]); each record carries
+//! effective tokens/sec plus an `acceptance_rate` key, both diffed by
+//! the CI bench-trend job.
+//!
 //! **Batched weight reuse.** A server decoding B concurrent sequences
 //! would stream the weights B times through the gemv path; the batched
 //! [`Gemv::gemm`] entry point streams each weight row/byte **once per

@@ -116,6 +116,27 @@
 //! `speed`) emit `BENCH_*.json` perf records — tagged with SIMD tier
 //! and numerics mode — that CI archives on every PR.
 //!
+//! The two quantization steps also buy a serving-level speedup beyond
+//! cheap weights: **self-speculative decoding**
+//! ([`coordinator::SpeculativeBackend`]). The 2-bit binary-coding
+//! encode of a model is a natural draft for its 3-bit (or dense)
+//! target — same vocabulary, same calibration, no second training run.
+//! Per engine tick the draft decodes `k` tokens autoregressively, the
+//! target verifies all of them in **one** chunk-major batched forward
+//! (k+1 positions of logits per weight stream — exactly the
+//! amortization the forward core above exists for), and the engine
+//! accepts the longest agreeing prefix plus the target's correction
+//! token, rolling the paged KV back past the accept point
+//! ([`model::KvCache::truncate_to`] +
+//! [`coordinator::PagedKvManager::truncate_to`]). The acceptance rule
+//! is argmax-based, so greedy output is **token-identical** to
+//! target-only decoding — `tests/speculative.rs` pins it across
+//! draft/target pairs and both numerics tiers, and the CI spec-parity
+//! lane gates on its `spec-divergences-total: 0` line. Configured via
+//! `EngineConfig::spec` (CLI: `gptqt serve --speculative`); acceptance
+//! counters surface in [`coordinator::Metrics`] and the `serve spec`
+//! bench records.
+//!
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + trained weights once; the `gptqt` binary is
 //! self-contained afterwards.

@@ -199,6 +199,17 @@ impl KvCache {
         KvCache { k, v, len: tokens, max_seq: tokens, heads: self.heads, head_dim: dh }
     }
 
+    /// Roll the cache back to its first `len` positions — the
+    /// speculative-decode reject path: drafted-but-refused positions are
+    /// simply forgotten. Rows past `len` are never read before being
+    /// overwritten (every consumer bounds its strips by `len`), so
+    /// lowering the length *is* the rollback; a later re-append at the
+    /// same position overwrites bitwise.
+    pub fn truncate_to(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate_to({len}) beyond stored {}", self.len);
+        self.len = len;
+    }
+
     /// Import the first `tokens` positions of a snapshot into this empty
     /// cache — the prefix-cache hit path; the engine then prefills only
     /// positions `tokens..`. Bitwise per-head strip copies, so a hit
@@ -607,6 +618,23 @@ impl BackendModel {
         self.forward_core(&[tokens], &mut caches, LogitsWanted::All, &mut ForwardScratch::new())
             .pop()
             .expect("forward_core returns one logits tensor per chunk")
+    }
+
+    /// Batched multi-chunk forward returning **every** position's logits
+    /// per chunk (one `Tᵦ × vocab` tensor each) — the speculative-decode
+    /// verify kernel: the target model scores a drafted k-token chunk in
+    /// one chunk-major pass and the acceptance rule reads the argmax at
+    /// every position. Per position the logits are bitwise identical to
+    /// feeding the same tokens one at a time (the forward-core parity
+    /// contract), which is what makes accept-by-argmax equivalent to
+    /// target-only greedy decoding.
+    pub fn forward_chunks_all_with(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [&mut KvCache],
+        scratch: &mut ForwardScratch,
+    ) -> Vec<Tensor> {
+        self.forward_core(chunks, caches, LogitsWanted::All, scratch)
     }
 
     /// Teacher-forced `(Σ nll, count)` over a window — [`Model::nll_window`]
@@ -1143,6 +1171,84 @@ mod tests {
             got = bm.decode_step(t, &mut warm);
         }
         assert_eq!(want, got, "imported-prefix logits must match bitwise");
+    }
+
+    #[test]
+    fn truncate_to_restores_pre_draft_state_bitwise() {
+        let m = tiny(Family::Opt);
+        let bm = BackendModel::dense(&m);
+        let prompt: Vec<u32> = vec![3, 9, 27, 44, 5];
+        let mut cache = KvCache::new(&m.cfg);
+        for &t in &prompt {
+            bm.decode_step(t, &mut cache);
+        }
+        let pre_len = cache.len;
+        let pre_k: Vec<Vec<f32>> = (0..m.cfg.layers)
+            .map(|l| (0..pre_len).flat_map(|p| cache.k_row(l, p)).collect())
+            .collect();
+        let pre_v: Vec<Vec<f32>> = (0..m.cfg.layers)
+            .map(|l| (0..pre_len).flat_map(|p| cache.v_row(l, p)).collect())
+            .collect();
+        // speculate: feed 3 draft tokens, then reject them all
+        for &t in &[13u32, 60, 2] {
+            bm.decode_step(t, &mut cache);
+        }
+        cache.truncate_to(pre_len);
+        assert_eq!(cache.len, pre_len);
+        for l in 0..m.cfg.layers {
+            let k_now: Vec<f32> = (0..pre_len).flat_map(|p| cache.k_row(l, p)).collect();
+            let v_now: Vec<f32> = (0..pre_len).flat_map(|p| cache.v_row(l, p)).collect();
+            assert_eq!(k_now, pre_k[l], "layer {l}: K rows changed under rollback");
+            assert_eq!(v_now, pre_v[l], "layer {l}: V rows changed under rollback");
+        }
+        // continuing after rollback is bitwise identical to a cache that
+        // never saw the rejected tokens
+        let mut fresh = KvCache::new(&m.cfg);
+        for &t in &prompt {
+            bm.decode_step(t, &mut fresh);
+        }
+        let got = bm.decode_step(99, &mut cache);
+        let want = bm.decode_step(99, &mut fresh);
+        assert_eq!(got, want, "post-rollback logits must match a clean history");
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate_to")]
+    fn truncate_beyond_len_panics() {
+        let m = tiny(Family::Opt);
+        let mut cache = KvCache::new(&m.cfg);
+        cache.truncate_to(1);
+    }
+
+    #[test]
+    fn forward_chunks_all_matches_sequential_decode_per_position() {
+        let m = tiny(Family::Opt);
+        let bm = BackendModel::dense(&m);
+        // two sequences with warm caches at different positions — the
+        // verify call shape: [last_accepted, d1, d2, ...] per sequence
+        let histories: [&[u32]; 2] = [&[3, 9, 27], &[44, 5]];
+        let verify: [&[u32]; 2] = [&[7, 11, 21], &[8, 2, 33, 4]];
+        let mut caches: Vec<KvCache> = (0..2).map(|_| KvCache::new(&m.cfg)).collect();
+        let mut seq_caches: Vec<KvCache> = (0..2).map(|_| KvCache::new(&m.cfg)).collect();
+        for bi in 0..2 {
+            for &t in histories[bi] {
+                bm.decode_step(t, &mut caches[bi]);
+                bm.decode_step(t, &mut seq_caches[bi]);
+            }
+        }
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        let all = bm.forward_chunks_all_with(&verify, &mut refs, &mut ForwardScratch::new());
+        for bi in 0..2 {
+            assert_eq!(all[bi].shape(), (verify[bi].len(), m.cfg.vocab));
+            for (t, &tok) in verify[bi].iter().enumerate() {
+                let want = bm.decode_step(tok, &mut seq_caches[bi]);
+                assert_eq!(
+                    all[bi].row(t),
+                    want.as_slice(),
+                    "seq {bi} position {t}: batched verify logits diverged"
+                );
+            }
+        }
     }
 
     #[test]

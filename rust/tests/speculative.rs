@@ -1,0 +1,223 @@
+//! End-to-end speculative-decoding parity: greedy output through
+//! [`SpeculativeBackend`] must be **token-identical** to target-only
+//! decoding, for every draft/target pair the two-step quantization
+//! yields and under both numerics tiers.
+//!
+//! The acceptance rule is argmax-based (accept a drafted token iff it
+//! equals the target's argmax at that position, emit the target's
+//! correction at the first disagreement), so identity holds by
+//! construction — this suite pins it through the full engine: batched
+//! scheduling, paged KV with accept-with-rollback, prefix-cache hits,
+//! and mid-decode cancellation.
+//!
+//! The `spec-divergences-total:` / `spec-acceptance-rate:` lines
+//! printed at the end are what the CI spec-parity lane greps into the
+//! step summary, mirroring the fast-numerics divergence gate.
+
+use gptqt::coordinator::{
+    CpuBackend, Engine, EngineConfig, Event, FinishReason, PrefixCacheConfig, Request, SpecConfig,
+    SpeculativeBackend, SubmitError,
+};
+use gptqt::eval::speed::{build_variant, SpeedVariant};
+use gptqt::kernels::NumericsMode;
+use gptqt::model::init::random_weights;
+use gptqt::model::{presets, Model};
+use std::collections::HashMap;
+
+fn test_model(seed: u64) -> Model {
+    let mut cfg = presets::by_name("opt-nano").unwrap();
+    cfg.vocab = 64;
+    cfg.max_seq = 48;
+    Model::new(cfg.clone(), random_weights(&cfg, seed))
+}
+
+/// The two draft/target pairs GPTQT's two quantization steps yield for
+/// free: the 2-bit binary-coding draft against the 3-bit LUT target and
+/// against the dense (fp32) target.
+const PAIRS: [(SpeedVariant, &str); 2] = [
+    (SpeedVariant::GptqtLut { bits: 3 }, "lut2->lut3"),
+    (SpeedVariant::Full, "lut2->dense"),
+];
+
+fn engine_cfg(mode: NumericsMode) -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        total_blocks: 128,
+        block_size: 8,
+        eos_token: u32::MAX, // fixed-length outputs: counts comparable
+        numerics: mode,
+        spec: SpecConfig::default(),
+        ..Default::default()
+    }
+}
+
+/// Greedy-only requests over distinct prompts (batched together, so the
+/// comparison covers the batched verify forward too).
+fn greedy_requests(n: u64, prompt_len: usize, gen: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..prompt_len as u32)
+                .map(|i| 3 + (5 * id as u32 + 7 * i) % 60)
+                .collect();
+            Request::new(id, prompt, gen)
+        })
+        .collect()
+}
+
+fn target_only_engine(
+    model: &Model,
+    variant: SpeedVariant,
+    cfg: EngineConfig,
+) -> Engine<CpuBackend> {
+    let bm = build_variant(model, variant, 11);
+    Engine::new(CpuBackend(bm), cfg)
+}
+
+fn spec_engine(
+    model: &Model,
+    variant: SpeedVariant,
+    k: usize,
+    cfg: EngineConfig,
+) -> Engine<SpeculativeBackend<CpuBackend, CpuBackend>> {
+    let draft = build_variant(model, SpeedVariant::GptqtLut { bits: 2 }, 11);
+    let target = build_variant(model, variant, 11);
+    Engine::new(SpeculativeBackend::new(CpuBackend(draft), CpuBackend(target), k), cfg)
+}
+
+fn run_requests<B: gptqt::coordinator::Backend>(
+    engine: &mut Engine<B>,
+    reqs: Vec<Request>,
+) -> HashMap<u64, Vec<u32>> {
+    for r in reqs {
+        engine.submit(r).unwrap();
+    }
+    let out = engine.run_to_completion().unwrap();
+    engine.check_invariants().unwrap();
+    out.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// Positionwise token mismatches between the two runs' outputs.
+fn count_divergences(base: &HashMap<u64, Vec<u32>>, spec: &HashMap<u64, Vec<u32>>) -> u64 {
+    assert_eq!(base.len(), spec.len());
+    let mut n = 0u64;
+    for (id, b) in base {
+        let s = &spec[id];
+        assert_eq!(b.len(), s.len(), "req {id}: lengths must match (EOS disabled)");
+        n += b.iter().zip(s).filter(|(a, c)| a != c).count() as u64;
+    }
+    n
+}
+
+#[test]
+fn speculative_greedy_is_token_identical_across_pairs() {
+    let model = test_model(5);
+    let mut total = 0u64;
+    let mut drafted = 0u64;
+    let mut accepted = 0u64;
+    let mut lines = Vec::new();
+    for (variant, pair) in PAIRS {
+        for mode in [NumericsMode::Exact, NumericsMode::Fast] {
+            let mut base = target_only_engine(&model, variant, engine_cfg(mode));
+            let baseline = run_requests(&mut base, greedy_requests(4, 6, 12));
+            let mut eng = spec_engine(&model, variant, 4, engine_cfg(mode));
+            let spec = run_requests(&mut eng, greedy_requests(4, 6, 12));
+            let n = count_divergences(&baseline, &spec);
+            total += n;
+            assert_eq!(n, 0, "{pair} {}: speculative greedy diverged", mode.label());
+            let m = &eng.metrics;
+            assert!(m.spec_ticks > 0, "{pair}: speculation never engaged");
+            assert!(m.spec_drafted_total > 0, "{pair}: nothing drafted");
+            assert_eq!(
+                m.spec_accepted_total + m.spec_rolled_back_total,
+                m.spec_drafted_total,
+                "{pair}: every drafted token is accepted or rolled back"
+            );
+            assert_eq!(eng.kv().used_blocks(), 0, "{pair}: rollback leaked blocks");
+            drafted += m.spec_drafted_total;
+            accepted += m.spec_accepted_total;
+            lines.push(format!(
+                "spec-pair: {pair} {} accept_rate={:.3}",
+                mode.label(),
+                m.spec_acceptance_rate()
+            ));
+        }
+    }
+    for line in &lines {
+        println!("{line}");
+    }
+    // the CI spec-parity lane greps these two into the step summary
+    println!("spec-acceptance-rate: {:.3}", accepted as f64 / drafted.max(1) as f64);
+    println!("spec-divergences-total: {total}");
+}
+
+#[test]
+fn speculative_identity_holds_through_prefix_cache_hits() {
+    // The same prompt served twice with the prefix cache on: the second
+    // request adopts shared KV blocks, so speculative rollback now runs
+    // against refcounted state. Output must still match a target-only
+    // engine with the identical cache configuration.
+    let model = test_model(9);
+    let cached = || {
+        let mut cfg = engine_cfg(NumericsMode::Exact);
+        cfg.prefix = PrefixCacheConfig { enabled: true, ..Default::default() };
+        cfg
+    };
+    let repeat = |tag: u64| {
+        let prompt: Vec<u32> = (0..16u32).map(|i| 3 + (11 * i) % 60).collect();
+        Request::new(tag, prompt, 8)
+    };
+    for (variant, pair) in PAIRS {
+        let mut base = target_only_engine(&model, variant, cached());
+        let mut eng = spec_engine(&model, variant, 4, cached());
+        for tag in 0..2u64 {
+            let b = run_requests(&mut base, vec![repeat(tag)]);
+            let s = run_requests(&mut eng, vec![repeat(tag)]);
+            assert_eq!(count_divergences(&b, &s), 0, "{pair} request {tag}");
+        }
+        assert!(eng.metrics.prefix_hits >= 1, "{pair}: second request must hit the cache");
+        eng.clear_prefix_cache();
+        assert_eq!(eng.kv().used_blocks(), 0, "{pair}: unpinned pool must drain fully");
+    }
+}
+
+#[test]
+fn cancelled_spec_request_emits_one_terminal_and_blocks_resubmit_until_drain() {
+    // Regression: a speculative request cancelled between rounds must
+    // emit exactly one terminal event; its id stays reserved
+    // (DuplicateId) until that event drains, then resubmits cleanly.
+    let model = test_model(7);
+    let mut e = spec_engine(
+        &model,
+        SpeedVariant::GptqtLut { bits: 3 },
+        4,
+        engine_cfg(NumericsMode::Exact),
+    );
+    e.submit(Request::new(1, vec![3, 4, 5, 6], 20)).unwrap();
+    e.step().unwrap(); // prefill: first token via the normal path
+    e.step().unwrap(); // a full draft/verify/rollback round
+    assert!(e.metrics.spec_ticks >= 1, "second tick must speculate");
+    assert!(e.cancel(1));
+    // terminal event still pending: the id is not reusable yet
+    assert_eq!(
+        e.submit(Request::new(1, vec![3, 4, 5, 6], 4)),
+        Err(SubmitError::DuplicateId)
+    );
+    let evs = e.step().unwrap(); // drains the pending Finished(Cancelled)
+    let terminals: Vec<_> = evs
+        .iter()
+        .filter(|ev| matches!(ev, Event::Finished(r) if r.id == 1))
+        .collect();
+    assert_eq!(terminals.len(), 1, "exactly one terminal event for the cancelled id");
+    match terminals[0] {
+        Event::Finished(r) => assert_eq!(r.finish, FinishReason::Cancelled),
+        _ => unreachable!(),
+    }
+    e.submit(Request::new(1, vec![3, 4, 5, 6], 4)).unwrap();
+    let out = e.run_to_completion().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].finish, FinishReason::Length);
+    assert_eq!(out[0].tokens.len(), 4);
+    assert_eq!(e.metrics.cancelled_total, 1);
+    e.check_invariants().unwrap();
+    assert_eq!(e.kv().used_blocks(), 0, "cancelled + finished: pool fully drained");
+}
