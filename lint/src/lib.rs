@@ -1,0 +1,841 @@
+//! `gptqt-lint` — repo-contract static analysis for the gptqt tree.
+//!
+//! rustc and clippy cannot see the invariants this codebase's value rests
+//! on: the Exact tier's bitwise contract (pinned 8-lane tree reduction,
+//! mul-then-add, no FMA outside `fast_math.rs`), the zero-alloc serving hot
+//! path, the scalar-twin parity discipline, and the rule that every counter
+//! in `Metrics` actually surfaces in its `report()`. This crate enforces
+//! them at diff time with a dependency-free line/character scanner — no
+//! `syn`, no proc macros, nothing to download.
+//!
+//! Rules (stable IDs, each with an inline escape hatch
+//! `// lint:allow(<rule-id>) <reason>` on the flagged line or in the
+//! comment/attribute block immediately above it):
+//!
+//! | rule id             | contract                                          |
+//! |---------------------|---------------------------------------------------|
+//! | `safety-comment`    | every `unsafe` is preceded by `// SAFETY:`        |
+//! | `exact-tier-purity` | no `mul_add`/`.sum()`/`.fold(`/`_mm256_fmadd` in  |
+//! |                     | `kernels/*.rs` outside `fast_math.rs`             |
+//! | `hot-path-no-alloc` | no allocation tokens in kernel modules or the     |
+//! |                     | `forward_core`/`forward_tick`/`spec_tick`/`step`  |
+//! |                     | serving hot path                                  |
+//! | `scalar-twin`       | every dispatched `pub fn f(` in `kernels/` has an |
+//! |                     | `f_scalar` twin and is named under `rust/tests/`  |
+//! | `metrics-report`    | every `pub` counter field of `Metrics` appears in |
+//! |                     | `report()`                                        |
+//!
+//! The scanner works on a "code view" of each file: comments and
+//! string/char-literal contents are blanked to spaces (newlines kept), so
+//! token searches never fire inside prose, and `#[cfg(test)]` modules are
+//! masked out for the rules that only constrain shipping code.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub const RULE_SAFETY: &str = "safety-comment";
+pub const RULE_PURITY: &str = "exact-tier-purity";
+pub const RULE_ALLOC: &str = "hot-path-no-alloc";
+pub const RULE_TWIN: &str = "scalar-twin";
+pub const RULE_METRICS: &str = "metrics-report";
+
+pub const ALL_RULES: [&str; 5] = [
+    RULE_SAFETY,
+    RULE_PURITY,
+    RULE_ALLOC,
+    RULE_TWIN,
+    RULE_METRICS,
+];
+
+/// Tokens that reassociate or fuse floating-point arithmetic and therefore
+/// break the Exact tier's bitwise scalar↔AVX2↔gemm parity.
+const PURITY_TOKENS: [&str; 4] = ["mul_add", ".sum()", ".fold(", "_mm256_fmadd"];
+
+/// Tokens that allocate. The serving hot path must stay flat after warmup
+/// (pinned dynamically by `tests/alloc_steady.rs`); this catches new
+/// allocation sites at diff time instead.
+const ALLOC_TOKENS: [&str; 7] = [
+    "Vec::new",
+    "vec![",
+    ".to_vec",
+    "format!",
+    "Box::new",
+    ".collect",
+    "with_capacity",
+];
+
+/// Hot functions outside `kernels/` whose bodies are allocation-free zones.
+/// (`kernels/*.rs` files are hot in their entirety.)
+const HOT_FNS: [(&str, &[&str]); 2] = [
+    ("rust/src/model/decode.rs", &["forward_core"]),
+    (
+        "rust/src/coordinator/engine.rs",
+        &["forward_tick", "spec_tick", "step"],
+    ),
+];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One source file handed to the linter (path is repo-relative; rule
+/// applicability is decided from it).
+pub struct FileInput {
+    pub path: String,
+    pub source: String,
+}
+
+// ---------------------------------------------------------------------------
+// Source scanning
+// ---------------------------------------------------------------------------
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank comments and string/char-literal contents to spaces, preserving
+/// the line structure exactly, so token scans only ever see code.
+fn code_view(src: &str) -> String {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = chars.clone();
+    let mut i = 0usize;
+
+    fn blank(out: &mut [char], from: usize, to: usize) {
+        for slot in out[from..to].iter_mut() {
+            if *slot != '\n' {
+                *slot = ' ';
+            }
+        }
+    }
+
+    while i < n {
+        let c = chars[i];
+        let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            blank(&mut out, start, i);
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            i += 2;
+            let mut depth = 1;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i);
+        } else if c == '"' {
+            let start = i;
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else if chars[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i.min(n));
+        } else if !prev_ident
+            && (c == 'r' || c == 'b')
+            && raw_string_len(&chars, i).is_some()
+        {
+            let len = raw_string_len(&chars, i).unwrap();
+            blank(&mut out, i, (i + len).min(n));
+            i += len;
+        } else if !prev_ident && c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+            // Byte string: reuse the plain-string scan from the quote.
+            let start = i;
+            i += 2;
+            while i < n {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else if chars[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i.min(n));
+        } else if !prev_ident && c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+            let start = i;
+            i += 1;
+            i += char_literal_len(&chars, i);
+            blank(&mut out, start, i.min(n));
+        } else if c == '\'' {
+            // Char literal vs lifetime: a literal is `'\...'` or `'x'`.
+            let escaped = i + 1 < n && chars[i + 1] == '\\';
+            let short = i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'';
+            if escaped || short {
+                let start = i;
+                i += char_literal_len(&chars, i);
+                blank(&mut out, start, i.min(n));
+            } else {
+                i += 1; // lifetime — leave as code
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Length (in chars, from the opening `'`) of a char/byte-char literal.
+fn char_literal_len(chars: &[char], start: usize) -> usize {
+    let n = chars.len();
+    let mut i = start + 1;
+    if i < n && chars[i] == '\\' {
+        i += 2; // backslash + escaped char (first char of `x41`/`u{..}`)
+        while i < n && chars[i] != '\'' {
+            i += 1;
+        }
+        i += 1; // closing quote
+    } else {
+        i += 2; // payload char + closing quote
+    }
+    i.saturating_sub(start)
+}
+
+/// If `chars[start..]` begins a raw (byte) string `r"…"`, `r#"…"#`,
+/// `br"…"`, returns its total length in chars.
+fn raw_string_len(chars: &[char], start: usize) -> Option<usize> {
+    let n = chars.len();
+    let mut i = start;
+    if i < n && chars[i] == 'b' {
+        i += 1;
+    }
+    if i >= n || chars[i] != 'r' {
+        return None;
+    }
+    i += 1;
+    let mut hashes = 0usize;
+    while i < n && chars[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i >= n || chars[i] != '"' {
+        return None;
+    }
+    i += 1;
+    while i < n {
+        if chars[i] == '"' {
+            let mut j = i + 1;
+            let mut seen = 0usize;
+            while j < n && seen < hashes && chars[j] == '#' {
+                seen += 1;
+                j += 1;
+            }
+            if seen == hashes {
+                return Some(j - start);
+            }
+        }
+        i += 1;
+    }
+    Some(n - start)
+}
+
+/// Case-sensitive word search: the match must not touch identifier
+/// characters on either side (`dot` matches `simd::dot(`, not `qk_dots`).
+fn contains_word(hay: &str, needle: &str) -> bool {
+    if needle.is_empty() {
+        return false;
+    }
+    let hb = hay.as_bytes();
+    let mut start = 0usize;
+    while start <= hay.len() {
+        let Some(pos) = hay[start..].find(needle) else {
+            return false;
+        };
+        let at = start + pos;
+        let end = at + needle.len();
+        let before_ok = at == 0 || !is_ident_byte(hb[at - 1]);
+        let after_ok = end >= hb.len() || !is_ident_byte(hb[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + hay[at..].chars().next().map(char::len_utf8).unwrap_or(1);
+    }
+    false
+}
+
+/// Per-file scan state shared by the rules.
+struct Analysis<'a> {
+    raw_lines: Vec<&'a str>,
+    code_lines: Vec<String>,
+    /// Lines inside a `#[cfg(test)]` module (attribute through closing brace).
+    in_test: Vec<bool>,
+}
+
+fn analyze(src: &str) -> Analysis<'_> {
+    let raw_lines: Vec<&str> = src.split('\n').collect();
+    let view = code_view(src);
+    let code_lines: Vec<String> = view.split('\n').map(|s| s.to_string()).collect();
+    debug_assert_eq!(raw_lines.len(), code_lines.len());
+    let in_test = test_mask(&code_lines);
+    Analysis {
+        raw_lines,
+        code_lines,
+        in_test,
+    }
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item (by brace tracking on
+/// the code view). Items without a body (`;` before any `{`) end there.
+fn test_mask(code_lines: &[String]) -> Vec<bool> {
+    let n = code_lines.len();
+    let mut mask = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if !code_lines[i].trim_start().starts_with("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        mask[i] = true;
+        let mut depth: i64 = 0;
+        let mut started = false;
+        let mut j = i + 1;
+        while j < n {
+            mask[j] = true;
+            let mut done = false;
+            for ch in code_lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if started && depth == 0 {
+                            done = true;
+                        }
+                    }
+                    ';' if !started => done = true,
+                    _ => {}
+                }
+            }
+            if done {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// True when the flagged line, or the contiguous comment/attribute block
+/// immediately above it, contains one of `needles`. This is how both
+/// `// SAFETY:` discipline and `// lint:allow(<rule>)` escapes resolve.
+fn annotated(raw_lines: &[&str], idx: usize, needles: &[&str]) -> bool {
+    let hit = |line: &str| needles.iter().any(|n| line.contains(n));
+    if hit(raw_lines[idx]) {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = raw_lines[i].trim();
+        let is_annotation = t.starts_with("//")
+            || t.starts_with("#[")
+            || t.starts_with("#!")
+            || t.starts_with("/*")
+            || t.starts_with('*')
+            || t.ends_with("*/");
+        if !is_annotation {
+            return false;
+        }
+        if hit(raw_lines[i]) {
+            return true;
+        }
+    }
+    false
+}
+
+fn allow_needle(rule: &str) -> String {
+    format!("lint:allow({rule})")
+}
+
+/// Find `fn <name>(` declarations and return their body line ranges
+/// (inclusive, 0-based; a bodyless trait signature yields `None`).
+fn fn_decl_positions(code_lines: &[String], name: &str) -> Vec<(usize, usize)> {
+    let needle = format!("fn {name}(");
+    let mut out = Vec::new();
+    for (idx, line) in code_lines.iter().enumerate() {
+        let mut search = 0usize;
+        while let Some(pos) = line[search..].find(&needle) {
+            let at = search + pos;
+            if at == 0 || !is_ident_byte(line.as_bytes()[at - 1]) {
+                out.push((idx, at));
+                break;
+            }
+            search = at + 1;
+        }
+    }
+    out
+}
+
+/// From a declaration at (line, col), find the body's last line by brace
+/// tracking; `None` when a `;` terminates the item before any `{` opens.
+fn body_end(code_lines: &[String], decl: (usize, usize)) -> Option<usize> {
+    let (start, col) = decl;
+    let n = code_lines.len();
+    let mut depth: i64 = 0;
+    let mut started = false;
+    for j in start..n {
+        let s: &str = if j == start {
+            &code_lines[j][col..]
+        } else {
+            &code_lines[j]
+        };
+        for ch in s.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if started && depth == 0 {
+                        return Some(j);
+                    }
+                }
+                ';' if !started => return None,
+                _ => {}
+            }
+        }
+    }
+    Some(n.saturating_sub(1))
+}
+
+/// Identifier immediately following `prefix` on `line`, if any.
+fn ident_after<'a>(line: &'a str, prefix: &str, from: usize) -> Option<(&'a str, usize)> {
+    let at = from + line[from..].find(prefix)?;
+    if at > 0 && is_ident_byte(line.as_bytes()[at - 1]) {
+        return None;
+    }
+    let rest = &line[at + prefix.len()..];
+    let end = rest
+        .char_indices()
+        .find(|(_, c)| !is_ident_char(*c))
+        .map(|(i, _)| i)
+        .unwrap_or(rest.len());
+    if end == 0 {
+        None
+    } else {
+        Some((&rest[..end], at))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Path classification
+// ---------------------------------------------------------------------------
+
+fn is_kernel_path(path: &str) -> bool {
+    path.contains("rust/src/kernels/")
+}
+
+fn is_fast_math(path: &str) -> bool {
+    path.ends_with("kernels/fast_math.rs")
+}
+
+fn is_metrics_path(path: &str) -> bool {
+    path.ends_with("coordinator/metrics.rs")
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+fn rule_safety(file: &FileInput, a: &Analysis<'_>, diags: &mut Vec<Diagnostic>) {
+    let allow = allow_needle(RULE_SAFETY);
+    for (idx, code) in a.code_lines.iter().enumerate() {
+        if !contains_word(code, "unsafe") {
+            continue;
+        }
+        if annotated(&a.raw_lines, idx, &[&allow]) {
+            continue;
+        }
+        if annotated(&a.raw_lines, idx, &["SAFETY:", "# Safety"]) {
+            continue;
+        }
+        diags.push(Diagnostic {
+            file: file.path.clone(),
+            line: idx + 1,
+            rule: RULE_SAFETY,
+            msg: "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+        });
+    }
+}
+
+fn rule_purity(file: &FileInput, a: &Analysis<'_>, diags: &mut Vec<Diagnostic>) {
+    let allow = allow_needle(RULE_PURITY);
+    for (idx, code) in a.code_lines.iter().enumerate() {
+        if a.in_test[idx] {
+            continue;
+        }
+        for tok in PURITY_TOKENS {
+            if !code.contains(tok) {
+                continue;
+            }
+            if annotated(&a.raw_lines, idx, &[&allow]) {
+                continue;
+            }
+            diags.push(Diagnostic {
+                file: file.path.clone(),
+                line: idx + 1,
+                rule: RULE_PURITY,
+                msg: format!(
+                    "`{tok}` in an Exact-tier kernel module (reassociation/FMA \
+                     breaks the bitwise contract; Fast-tier code lives in fast_math.rs)"
+                ),
+            });
+        }
+    }
+}
+
+fn rule_alloc_lines<I: Iterator<Item = usize>>(
+    file: &FileInput,
+    a: &Analysis<'_>,
+    lines: I,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let allow = allow_needle(RULE_ALLOC);
+    for idx in lines {
+        if a.in_test[idx] {
+            continue;
+        }
+        let code = &a.code_lines[idx];
+        for tok in ALLOC_TOKENS {
+            if !code.contains(tok) {
+                continue;
+            }
+            if annotated(&a.raw_lines, idx, &[&allow]) {
+                continue;
+            }
+            diags.push(Diagnostic {
+                file: file.path.clone(),
+                line: idx + 1,
+                rule: RULE_ALLOC,
+                msg: format!(
+                    "`{tok}` in a serving hot path (steady state must stay \
+                     allocation-free; see tests/alloc_steady.rs)"
+                ),
+            });
+        }
+    }
+}
+
+fn rule_alloc(file: &FileInput, a: &Analysis<'_>, diags: &mut Vec<Diagnostic>) {
+    if is_kernel_path(&file.path) {
+        rule_alloc_lines(file, a, 0..a.code_lines.len(), diags);
+        return;
+    }
+    for (suffix, fns) in HOT_FNS {
+        if !file.path.ends_with(suffix) {
+            continue;
+        }
+        for name in fns {
+            for decl in fn_decl_positions(&a.code_lines, name) {
+                if let Some(end) = body_end(&a.code_lines, decl) {
+                    rule_alloc_lines(file, a, decl.0..=end, diags);
+                }
+            }
+        }
+    }
+}
+
+fn collect_fn_names(a: &Analysis<'_>, out: &mut BTreeSet<String>) {
+    for (idx, line) in a.code_lines.iter().enumerate() {
+        if a.in_test[idx] {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some((name, at)) = ident_after(line, "fn ", from) {
+            out.insert(name.to_string());
+            from = at + 3;
+        }
+    }
+}
+
+fn rule_twin(
+    file: &FileInput,
+    a: &Analysis<'_>,
+    kernel_fns: &BTreeSet<String>,
+    tests_text: &str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let allow = allow_needle(RULE_TWIN);
+    for (idx, line) in a.code_lines.iter().enumerate() {
+        if a.in_test[idx] {
+            continue;
+        }
+        let Some((name, at)) = ident_after(line, "pub fn ", 0) else {
+            continue;
+        };
+        let name = name.to_string();
+        if name.ends_with("_scalar") {
+            continue;
+        }
+        // "Dispatched" = the body consults the runtime SIMD/numerics tier.
+        let Some(end) = body_end(&a.code_lines, (idx, at)) else {
+            continue;
+        };
+        let mut dispatched = false;
+        for (j, body_line) in a.code_lines[idx..=end].iter().enumerate() {
+            // On the declaration line, skip past the fn's own name so
+            // `pub fn tier()` / `pub fn fast_simd()` don't match themselves.
+            let text: &str = if j == 0 {
+                &body_line[at + "pub fn ".len() + name.len()..]
+            } else {
+                body_line
+            };
+            if text.contains("tier()") || text.contains("fast_simd()") {
+                dispatched = true;
+                break;
+            }
+        }
+        if !dispatched {
+            continue;
+        }
+        if annotated(&a.raw_lines, idx, &[&allow]) {
+            continue;
+        }
+        let twin = format!("{name}_scalar");
+        if !kernel_fns.contains(&twin) {
+            diags.push(Diagnostic {
+                file: file.path.clone(),
+                line: idx + 1,
+                rule: RULE_TWIN,
+                msg: format!(
+                    "dispatched kernel `{name}` has no `{twin}` twin \
+                     (the parity contract needs a reference implementation)"
+                ),
+            });
+        }
+        if !contains_word(tests_text, &name) {
+            diags.push(Diagnostic {
+                file: file.path.clone(),
+                line: idx + 1,
+                rule: RULE_TWIN,
+                msg: format!(
+                    "dispatched kernel `{name}` is not exercised by any test \
+                     under rust/tests/"
+                ),
+            });
+        }
+    }
+}
+
+fn rule_metrics(file: &FileInput, a: &Analysis<'_>, diags: &mut Vec<Diagnostic>) {
+    let allow = allow_needle(RULE_METRICS);
+    // Locate `pub struct Metrics` and collect its pub fields.
+    let mut fields: Vec<(String, usize)> = Vec::new();
+    for (idx, line) in a.code_lines.iter().enumerate() {
+        if a.in_test[idx] || !contains_word(line, "struct") || !contains_word(line, "Metrics") {
+            continue;
+        }
+        let Some(col) = line.find("struct") else {
+            continue;
+        };
+        let Some(end) = body_end(&a.code_lines, (idx, col)) else {
+            continue;
+        };
+        for (j, body_line) in a.code_lines[idx..=end].iter().enumerate() {
+            let t = body_line.trim_start();
+            if !t.starts_with("pub ") || !t.contains(':') {
+                continue;
+            }
+            if let Some((name, _)) = ident_after(t, "pub ", 0) {
+                fields.push((name.to_string(), idx + j));
+            }
+        }
+        break;
+    }
+    // The report body every counter must surface in.
+    let mut report_body = String::new();
+    for decl in fn_decl_positions(&a.code_lines, "report") {
+        if let Some(end) = body_end(&a.code_lines, decl) {
+            for line in &a.code_lines[decl.0..=end] {
+                report_body.push_str(line);
+                report_body.push('\n');
+            }
+            break;
+        }
+    }
+    if report_body.is_empty() {
+        return;
+    }
+    for (name, idx) in fields {
+        if contains_word(&report_body, &name) {
+            continue;
+        }
+        if annotated(&a.raw_lines, idx, &[&allow]) {
+            continue;
+        }
+        diags.push(Diagnostic {
+            file: file.path.clone(),
+            line: idx + 1,
+            rule: RULE_METRICS,
+            msg: format!("`Metrics` counter `{name}` never surfaces in `report()`"),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers
+// ---------------------------------------------------------------------------
+
+/// Lint a set of in-memory files. `tests_text` is the concatenated source
+/// of everything under `rust/tests/` (rule `scalar-twin` checks coverage
+/// against it).
+pub fn lint_files(files: &[FileInput], tests_text: &str) -> Vec<Diagnostic> {
+    let analyses: Vec<Analysis<'_>> = files.iter().map(|f| analyze(&f.source)).collect();
+
+    let mut kernel_fns: BTreeSet<String> = BTreeSet::new();
+    for (file, a) in files.iter().zip(&analyses) {
+        if is_kernel_path(&file.path) {
+            collect_fn_names(a, &mut kernel_fns);
+        }
+    }
+
+    let mut diags = Vec::new();
+    for (file, a) in files.iter().zip(&analyses) {
+        rule_safety(file, a, &mut diags);
+        if is_kernel_path(&file.path) && !is_fast_math(&file.path) {
+            rule_purity(file, a, &mut diags);
+        }
+        rule_alloc(file, a, &mut diags);
+        if is_kernel_path(&file.path) {
+            rule_twin(file, a, &kernel_fns, tests_text, &mut diags);
+        }
+        if is_metrics_path(&file.path) {
+            rule_metrics(file, a, &mut diags);
+        }
+    }
+    diags.sort_by(|x, y| {
+        (&x.file, x.line, x.rule, &x.msg).cmp(&(&y.file, y.line, y.rule, &y.msg))
+    });
+    diags
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the repository rooted at `root`: every `.rs` under `rust/src`,
+/// with `rust/tests` as the coverage corpus.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut src_paths = Vec::new();
+    walk(&root.join("rust").join("src"), &mut src_paths)?;
+    src_paths.sort();
+    let mut files = Vec::with_capacity(src_paths.len());
+    for p in &src_paths {
+        let source = fs::read_to_string(p)?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(FileInput { path: rel, source });
+    }
+
+    let mut test_paths = Vec::new();
+    walk(&root.join("rust").join("tests"), &mut test_paths)?;
+    test_paths.sort();
+    let mut tests_text = String::new();
+    for p in &test_paths {
+        tests_text.push_str(&fs::read_to_string(p)?);
+        tests_text.push('\n');
+    }
+
+    Ok(lint_files(&files, &tests_text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_view_blanks_comments_and_strings() {
+        let src = "let a = \"unsafe\"; // unsafe in comment\nlet b = 'x';\n";
+        let view = code_view(src);
+        assert!(!view.contains("unsafe"));
+        assert!(view.contains("let a ="));
+        assert_eq!(src.split('\n').count(), view.split('\n').count());
+    }
+
+    #[test]
+    fn code_view_keeps_lifetimes_handles_raw_strings() {
+        let src = "fn f<'a>(x: &'a str) { let s = r#\"vec![\"#; let c = '\\''; }";
+        let view = code_view(src);
+        assert!(view.contains("fn f<'a>(x: &'a str)"));
+        assert!(!view.contains("vec!["));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("simd::dot(a, b)", "dot"));
+        assert!(!contains_word("qk_dots(a, b)", "dot"));
+        assert!(!contains_word("dot_scalar(a)", "dot"));
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let a = analyze(src);
+        assert!(!a.in_test[0]);
+        assert!(a.in_test[1] && a.in_test[2] && a.in_test[3] && a.in_test[4]);
+        assert!(!a.in_test[5]);
+    }
+
+    #[test]
+    fn annotated_scans_through_attributes() {
+        let lines = vec![
+            "// SAFETY: callers checked the tier.",
+            "#[target_feature(enable = \"avx2\")]",
+            "unsafe fn dot_avx2() {}",
+        ];
+        assert!(annotated(&lines, 2, &["SAFETY:"]));
+        assert!(!annotated(&lines, 2, &["lint:allow(safety-comment)"]));
+    }
+}

@@ -1,0 +1,74 @@
+//! CLI driver: `cargo run -p gptqt-lint [repo-root]`.
+//!
+//! Prints one `file:line: [rule-id] message` diagnostic per violation and a
+//! final `lint-violations: N` line (the CI gate greps for it). Exit code 0
+//! when clean, 1 on violations, 2 on usage/I/O failure.
+//!
+//! A second form lints a single file under a synthetic repo-relative path
+//! (which decides rule applicability — kernel module, metrics file, …):
+//!
+//! ```text
+//! cargo run -p gptqt-lint -- --file rust/src/kernels/fixture.rs \
+//!     lint/tests/fixtures/purity_fail.rs
+//! ```
+//!
+//! That is how the failure fixtures are exercised from the command line;
+//! `lint/tests/lint_rules.rs` pins the same behavior in-process.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use gptqt_lint::{lint_files, lint_tree, Diagnostic, FileInput};
+
+fn report(diags: &[Diagnostic]) -> ExitCode {
+    for d in diags {
+        println!("{d}");
+    }
+    println!("lint-violations: {}", diags.len());
+    if diags.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+
+    if args.first().map(String::as_str) == Some("--file") {
+        let [_, synthetic_path, real_path] = &args[..] else {
+            eprintln!("usage: gptqt-lint --file <repo-relative-path-as> <file>");
+            return ExitCode::from(2);
+        };
+        let source = match std::fs::read_to_string(real_path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("gptqt-lint: failed to read {real_path}: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let files = [FileInput {
+            path: synthetic_path.clone(),
+            source,
+        }];
+        return report(&lint_files(&files, ""));
+    }
+
+    let root = match args.first() {
+        Some(p) => PathBuf::from(p),
+        // CARGO_MANIFEST_DIR is lint/; the repo root is its parent, so the
+        // binary works from any working directory under `cargo run`.
+        None => Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("lint/ sits under the repo root")
+            .to_path_buf(),
+    };
+    let diags = match lint_tree(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("gptqt-lint: failed to read tree under {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    report(&diags)
+}

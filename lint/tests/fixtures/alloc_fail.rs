@@ -1,0 +1,3 @@
+pub fn widen(xs: &[u8]) -> Vec<f32> {
+    xs.iter().map(|&b| b as f32).collect()
+}

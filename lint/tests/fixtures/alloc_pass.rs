@@ -1,0 +1,5 @@
+pub fn widen_into(xs: &[u8], out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(xs) {
+        *o = b as f32;
+    }
+}

@@ -1,0 +1,10 @@
+pub struct Metrics {
+    pub ticks: u64,
+    pub dropped: u64,
+}
+
+impl Metrics {
+    pub fn report(&self) -> String {
+        format!("ticks={}", self.ticks)
+    }
+}

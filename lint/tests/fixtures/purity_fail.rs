@@ -1,0 +1,7 @@
+pub fn dot_contracted(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s = x.mul_add(*y, s);
+    }
+    s
+}

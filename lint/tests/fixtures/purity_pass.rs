@@ -1,0 +1,8 @@
+pub fn dot_pinned(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    // lint:allow(exact-tier-purity) fixture: documented escape hatch.
+    s.mul_add(1.0, 0.0)
+}

@@ -1,0 +1,3 @@
+pub fn read_first(xs: &[f32]) -> f32 {
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,4 @@
+pub fn read_first(xs: &[f32]) -> f32 {
+    // SAFETY: caller guarantees `xs` is non-empty.
+    unsafe { *xs.as_ptr() }
+}

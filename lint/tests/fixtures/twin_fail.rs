@@ -1,0 +1,7 @@
+pub fn frobnicate(xs: &mut [f32]) {
+    if super::simd::tier() as usize > 0 {
+        for v in xs.iter_mut() {
+            *v += 1.0;
+        }
+    }
+}

@@ -1,0 +1,10 @@
+pub fn frobnicate(xs: &mut [f32]) {
+    let _ = super::simd::tier();
+    frobnicate_scalar(xs);
+}
+
+pub fn frobnicate_scalar(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v += 1.0;
+    }
+}

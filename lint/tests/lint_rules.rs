@@ -1,0 +1,189 @@
+//! Fixture-driven rule tests.
+//!
+//! Each rule has a failing snippet that must produce exactly its
+//! diagnostic — stable rule ID *and* line number — and a passing twin
+//! that must come back clean. The snippets live under `fixtures/` (a
+//! subdirectory, so cargo never compiles them as test code) and are fed
+//! to [`lint_files`] under synthetic repo-relative paths that put them
+//! in the right rule scope (kernel module, metrics file, …).
+//!
+//! The last test runs the real tree: the linter must report zero
+//! violations on the repository it ships in.
+
+use gptqt_lint::{
+    lint_files, lint_tree, Diagnostic, FileInput, RULE_ALLOC, RULE_METRICS, RULE_PURITY,
+    RULE_SAFETY, RULE_TWIN,
+};
+
+/// Lint one in-memory fixture under a synthetic path.
+fn lint_one(path: &str, source: &str, tests_text: &str) -> Vec<Diagnostic> {
+    let files = [FileInput {
+        path: path.to_string(),
+        source: source.to_string(),
+    }];
+    lint_files(&files, tests_text)
+}
+
+/// Assert the fixture yields exactly `expect` as `(line, rule)` pairs.
+fn expect_diags(diags: &[Diagnostic], expect: &[(usize, &str)]) {
+    let got: Vec<(usize, &str)> = diags.iter().map(|d| (d.line, d.rule)).collect();
+    assert_eq!(got, expect, "diagnostics: {diags:?}");
+}
+
+#[test]
+fn safety_comment_rule_flags_unannotated_unsafe() {
+    let diags = lint_one(
+        "rust/src/util/fixture.rs",
+        include_str!("fixtures/safety_fail.rs"),
+        "",
+    );
+    expect_diags(&diags, &[(2, RULE_SAFETY)]);
+}
+
+#[test]
+fn safety_comment_rule_accepts_safety_comment() {
+    let diags = lint_one(
+        "rust/src/util/fixture.rs",
+        include_str!("fixtures/safety_pass.rs"),
+        "",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn exact_tier_purity_rule_flags_mul_add_in_kernels() {
+    let diags = lint_one(
+        "rust/src/kernels/fixture.rs",
+        include_str!("fixtures/purity_fail.rs"),
+        "",
+    );
+    expect_diags(&diags, &[(4, RULE_PURITY)]);
+}
+
+#[test]
+fn exact_tier_purity_rule_honors_lint_allow() {
+    let diags = lint_one(
+        "rust/src/kernels/fixture.rs",
+        include_str!("fixtures/purity_pass.rs"),
+        "",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn exact_tier_purity_rule_exempts_fast_math() {
+    // The same contracted dot is legal in the Fast-tier home module.
+    let diags = lint_one(
+        "rust/src/kernels/fast_math.rs",
+        include_str!("fixtures/purity_fail.rs"),
+        "",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn hot_path_no_alloc_rule_flags_collect_in_kernels() {
+    let diags = lint_one(
+        "rust/src/kernels/fixture.rs",
+        include_str!("fixtures/alloc_fail.rs"),
+        "",
+    );
+    expect_diags(&diags, &[(2, RULE_ALLOC)]);
+}
+
+#[test]
+fn hot_path_no_alloc_rule_accepts_in_place_code() {
+    let diags = lint_one(
+        "rust/src/kernels/fixture.rs",
+        include_str!("fixtures/alloc_pass.rs"),
+        "",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn hot_path_no_alloc_rule_ignores_cold_modules() {
+    // The identical allocating snippet is fine outside the hot set.
+    let diags = lint_one(
+        "rust/src/util/fixture.rs",
+        include_str!("fixtures/alloc_fail.rs"),
+        "",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn scalar_twin_rule_flags_dispatched_kernel_without_twin_or_test() {
+    let diags = lint_one(
+        "rust/src/kernels/fixture.rs",
+        include_str!("fixtures/twin_fail.rs"),
+        "",
+    );
+    // Both halves of the contract fail: no `_scalar` twin, no coverage.
+    expect_diags(&diags, &[(1, RULE_TWIN), (1, RULE_TWIN)]);
+    assert!(diags[0].msg.contains("frobnicate_scalar"), "{}", diags[0]);
+    assert!(diags[1].msg.contains("not exercised"), "{}", diags[1]);
+}
+
+#[test]
+fn scalar_twin_rule_accepts_twinned_and_tested_kernel() {
+    let diags = lint_one(
+        "rust/src/kernels/fixture.rs",
+        include_str!("fixtures/twin_pass.rs"),
+        "frobnicate(&mut xs); frobnicate_scalar(&mut ys);",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn scalar_twin_rule_needs_word_boundary_coverage() {
+    // `refrobnicate` must not count as coverage of `frobnicate`.
+    let diags = lint_one(
+        "rust/src/kernels/fixture.rs",
+        include_str!("fixtures/twin_pass.rs"),
+        "refrobnicate(&mut xs);",
+    );
+    expect_diags(&diags, &[(1, RULE_TWIN)]);
+}
+
+#[test]
+fn metrics_report_rule_flags_unreported_counter() {
+    let diags = lint_one(
+        "rust/src/coordinator/metrics.rs",
+        include_str!("fixtures/metrics_fail.rs"),
+        "",
+    );
+    expect_diags(&diags, &[(3, RULE_METRICS)]);
+    assert!(diags[0].msg.contains("dropped"), "{}", diags[0]);
+}
+
+#[test]
+fn metrics_report_rule_accepts_full_report() {
+    let diags = lint_one(
+        "rust/src/coordinator/metrics.rs",
+        include_str!("fixtures/metrics_pass.rs"),
+        "",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn repository_tree_is_lint_clean() {
+    // The linter gates CI on the tree it lives in; keep that invariant
+    // visible from `cargo test` too.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("lint/ lives under the repo root")
+        .to_path_buf();
+    let diags = lint_tree(&root).expect("walk rust/src + rust/tests");
+    assert!(
+        diags.is_empty(),
+        "repo has {} lint violations:\n{}",
+        diags.len(),
+        diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
