@@ -26,6 +26,8 @@ use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::util::time::now;
+
 /// What executes the model math. The engine body never matches on a
 /// concrete implementation: new backends (NEON tier builds, sharded
 /// CPU, a real batched PJRT ABI) plug in by implementing this trait —
@@ -208,8 +210,11 @@ impl Backend for PjrtBackend {
         need: &[bool],
         _scratch: &mut (),
     ) -> Result<Vec<Option<Vec<f32>>>> {
+        // lint:allow(hot-path-no-alloc) reference per-token backend — the
+        // production chunk-major backend reuses ForwardScratch instead.
         let mut out = Vec::with_capacity(chunks.len());
         for ((chunk, cache), &wanted) in chunks.iter().zip(caches.iter_mut()).zip(need) {
+            // lint:allow(hot-path-no-alloc) reference backend, see above.
             let mut logits = Vec::new();
             for &tok in chunk.iter() {
                 logits = self.0.decode(&mut **cache, tok)?;
@@ -430,13 +435,13 @@ impl<B: Backend> Engine<B> {
         let mut events = std::mem::take(&mut self.pending);
 
         // ---- deadline expiry (queued + running) ------------------------
-        let now = Instant::now();
-        self.expire_queued(now, &mut events);
+        let t_tick = now();
+        self.expire_queued(t_tick, &mut events);
         let mut idx = 0;
         while idx < self.running.len() {
             let deadline = self.running[idx].req.deadline;
             let arrived = self.running[idx].req.arrived;
-            if deadline.is_some_and(|d| now.duration_since(arrived) >= d) {
+            if deadline.is_some_and(|d| t_tick.duration_since(arrived) >= d) {
                 self.metrics.record_expired();
                 let resp = self.retire(idx, FinishReason::DeadlineExpired);
                 events.push(Event::Finished(resp));
@@ -451,6 +456,8 @@ impl<B: Backend> Engine<B> {
         // import plan applied when the Running entry is built) or falls
         // back to a cold admit, evicting LRU entries under pool
         // pressure if the policy allows.
+        // lint:allow(hot-path-no-alloc) admission-only: the empty Vec
+        // allocates nothing until a prefix hit actually admits.
         let mut plans: Vec<(u64, usize, Arc<B::Kv>)> = Vec::new();
         let admitted = {
             let Engine { batcher, queue, kv, prefix, metrics, running, .. } = &mut *self;
@@ -474,6 +481,8 @@ impl<B: Backend> Engine<B> {
                 self.metrics.record_expired();
                 events.push(Event::Finished(Response {
                     id: req.id,
+                    // lint:allow(hot-path-no-alloc) empty Vec — rare
+                    // deadline-expiry control path, no allocation.
                     tokens: Vec::new(),
                     finish: FinishReason::DeadlineExpired,
                     queue_secs: waited.as_secs_f64(),
@@ -503,8 +512,10 @@ impl<B: Backend> Engine<B> {
                 sampler: Sampler::new(req.sampling),
                 cache,
                 prompt_idx,
+                // lint:allow(hot-path-no-alloc) admission-only; grows with
+                // the generation, not per tick.
                 generated: Vec::new(),
-                admitted_at: Instant::now(),
+                admitted_at: now(),
                 first_token_at: None,
                 prefix_hit,
                 req,
@@ -545,7 +556,7 @@ impl<B: Backend> Engine<B> {
             let chunk_len = self.policy.chunk_for_tick(tick).clamp(1, bound);
             self.metrics.record_tick_chunk(chunk_len);
 
-            let t0 = Instant::now();
+            let t0 = now();
             // per-tick buffers persist across ticks: cleared and refilled
             // in place, so a steady-state tick performs no heap
             // allocation outside the kernels (pinned by
@@ -555,6 +566,9 @@ impl<B: Backend> Engine<B> {
                 c.clear();
             }
             while self.tick_chunks.len() < nb {
+                // lint:allow(hot-path-no-alloc) grows the persistent tick
+                // buffers to peak batch size once; flat thereafter
+                // (tests/alloc_steady.rs pins it).
                 self.tick_chunks.push(Vec::new());
             }
             self.tick_need.clear();
@@ -644,7 +658,7 @@ impl<B: Backend> Engine<B> {
                     let tok = run.sampler.sample(logits);
                     run.generated.push(tok);
                     self.kv.append_token(run.req.id);
-                    let t_emit = Instant::now();
+                    let t_emit = now();
                     if run.first_token_at.is_none() {
                         run.first_token_at = Some(t_emit);
                         let ttft = t_emit.duration_since(run.req.arrived);
@@ -669,7 +683,7 @@ impl<B: Backend> Engine<B> {
 
         // ---- one speculative draft/verify round over the spec subset ---
         if !self.tick_spec_idx.is_empty() {
-            let t0 = Instant::now();
+            let t0 = now();
             self.tick_last.clear();
             self.tick_budgets.clear();
             for &i in &self.tick_spec_idx {
@@ -718,7 +732,7 @@ impl<B: Backend> Engine<B> {
                 if let Some(pos) = outcome.tokens.iter().position(|&t| t == self.cfg.eos_token) {
                     emit_n = pos + 1;
                 }
-                let t_emit = Instant::now();
+                let t_emit = now();
                 for &tok in &outcome.tokens[..emit_n] {
                     run.generated.push(tok);
                     events.push(Event::Token { id: run.req.id, token: tok, t_emit });

@@ -226,9 +226,11 @@ impl Metrics {
              numerics: mode={} simd={} greedy_divergences={}\n\
              spec    : ticks={} drafted={} accepted={} rolled_back={} emitted={} \
              accept_rate={:.3}\n\
-             batch   : calls={} mean_occupancy={:.2} max_occupancy={} max_tick_chunk={}\n\
+             batch   : calls={} batch_toks={} mean_occupancy={:.2} max_occupancy={} \
+             max_tick_chunk={}\n\
              prefix  : hits={} misses={} inserts={} evicts={} reused_toks={} \
              prefill_toks={} pinned_blocks={}\n\
+             server  : sinks_peak={} sinks_open_final={}\n\
              queue   : {}\n\
              ttft    : {}\n\
              ttft-hit: {}\n\
@@ -252,6 +254,7 @@ impl Metrics {
             self.spec_emitted_total,
             self.spec_acceptance_rate(),
             self.decode_batches,
+            self.decode_batch_tokens,
             self.mean_batch_occupancy(),
             self.max_batch_occupancy,
             self.max_tick_chunk,
@@ -262,6 +265,8 @@ impl Metrics {
             self.prefix_tokens_reused,
             self.prefill_tokens_computed,
             self.prefix_blocks_pinned,
+            self.sinks_peak,
+            self.sinks_open_final,
             self.queue_time.summary(),
             self.ttft.summary(),
             self.ttft_hit.summary(),

@@ -179,6 +179,7 @@ impl RequestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::time::now;
 
     fn req(id: u64, prio: u8) -> Request {
         Request::new(id, vec![1], 4).with_priority(prio)
@@ -242,7 +243,7 @@ mod tests {
         q.push(req(1, 0)).unwrap();
         q.push(req(2, 0).with_deadline(std::time::Duration::ZERO)).unwrap();
         q.push(req(3, 1).with_deadline(std::time::Duration::from_secs(3600))).unwrap();
-        let expired = q.remove_expired(Instant::now());
+        let expired = q.remove_expired(now());
         assert_eq!(expired.len(), 1);
         assert_eq!(expired[0].id, 2);
         assert_eq!(q.len(), 2);
@@ -251,7 +252,7 @@ mod tests {
         assert_eq!(q.try_pop().unwrap().id, 3);
         // swept id is free for reuse
         q.push(req(2, 0)).unwrap();
-        assert!(q.remove_expired(Instant::now()).is_empty());
+        assert!(q.remove_expired(now()).is_empty());
     }
 
     #[test]

@@ -2,6 +2,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::time::now;
+
 /// How to pick the next token from the logits.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SamplingParams {
@@ -42,7 +44,7 @@ impl Request {
             sampling: SamplingParams::Greedy,
             priority: 0,
             deadline: None,
-            arrived: Instant::now(),
+            arrived: now(),
         }
     }
 

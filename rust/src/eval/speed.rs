@@ -33,6 +33,7 @@ use crate::quant::fuse::FusedRow;
 use crate::quant::linear::{rtn_quantize, IntLayer};
 use crate::quant::pack::PackedBcLayer;
 use crate::quant::QuantizedLayer;
+use crate::util::time::now;
 use crate::util::{Rng, Stopwatch};
 use std::collections::HashMap;
 use std::time::Instant;
@@ -363,7 +364,7 @@ pub fn measure_streaming(
             ..Default::default()
         },
     );
-    let t_submit = Instant::now();
+    let t_submit = now();
     let handles: Vec<_> = (0..requests as u64)
         .map(|id| {
             let prompt: Vec<u32> = (0..prompt_len)
@@ -467,7 +468,7 @@ pub fn measure_spec_streaming(
             ..Default::default()
         },
     );
-    let t_submit = Instant::now();
+    let t_submit = now();
     let handles: Vec<_> = (0..requests as u64)
         .map(|id| {
             let prompt: Vec<u32> = (0..prompt_len)

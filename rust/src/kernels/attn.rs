@@ -89,7 +89,7 @@ pub(crate) fn qk_dots_t(
 ) {
     match t {
         #[cfg(target_arch = "x86_64")]
-        // Safety: callers only pass Avx2 when tier() reported it.
+        // SAFETY: callers only pass Avx2 when tier() reported it.
         SimdTier::Avx2 => unsafe { qk_dots_avx2(q, kstrip, scale, slope, pos, scores) },
         _ => qk_dots_scalar(q, kstrip, scale, slope, pos, scores),
     }
@@ -97,6 +97,9 @@ pub(crate) fn qk_dots_t(
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2 and `kstrip.len() == n_keys * dh` (the
+// dispatcher asserts it); every `get_unchecked` row below stays inside
+// that bound, and the per-row dot goes through `dot_avx2`'s chunk bound.
 unsafe fn qk_dots_avx2(
     q: &[f32],
     kstrip: &[f32],
@@ -138,7 +141,7 @@ pub fn av_accumulate_scalar(weights: &[f32], vstrip: &[f32], out: &mut [f32]) {
 pub(crate) fn av_accumulate_t(weights: &[f32], vstrip: &[f32], out: &mut [f32], t: SimdTier) {
     match t {
         #[cfg(target_arch = "x86_64")]
-        // Safety: callers only pass Avx2 when tier() reported it.
+        // SAFETY: callers only pass Avx2 when tier() reported it.
         SimdTier::Avx2 => unsafe { av_accumulate_avx2(weights, vstrip, out) },
         _ => av_accumulate_scalar(weights, vstrip, out),
     }
@@ -146,6 +149,9 @@ pub(crate) fn av_accumulate_t(weights: &[f32], vstrip: &[f32], out: &mut [f32], 
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2 and `vstrip.len() == weights.len() * dh`
+// (the dispatcher asserts it); row slices and 8-lane loads/stores below
+// stay inside that bound, tail handled element-wise.
 unsafe fn av_accumulate_avx2(weights: &[f32], vstrip: &[f32], out: &mut [f32]) {
     let dh = out.len();
     debug_assert_eq!(vstrip.len(), weights.len() * dh);

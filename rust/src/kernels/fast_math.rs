@@ -101,7 +101,7 @@ pub fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     {
         if fast_simd() {
-            // Safety: fast_simd() verified avx2+fma.
+            // SAFETY: fast_simd() verified avx2+fma.
             return unsafe { dot_fma(a, b) };
         }
     }
@@ -140,6 +140,8 @@ pub fn dot_fast_scalar(a: &[f32], b: &[f32]) -> f32 {
 /// `simd::hsum_pinned` / the scalar reduction above.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: `unsafe` only for #[target_feature]; pure register math plus an
+// 8-lane stack spill. Caller ensures AVX2+FMA (`fast_simd()`).
 unsafe fn hsum_pinned(v: __m256) -> f32 {
     let mut l = [0.0f32; 8];
     _mm256_storeu_ps(l.as_mut_ptr(), v);
@@ -148,6 +150,8 @@ unsafe fn hsum_pinned(v: __m256) -> f32 {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: caller must ensure AVX2+FMA. All loads go through
+// `as_ptr().add(o)` with `o + 8 <= len` by the chunk bound.
 unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
@@ -173,7 +177,7 @@ pub fn axpy_fast(acc: &mut [f32], s: f32, v: &[f32]) {
     #[cfg(target_arch = "x86_64")]
     {
         if fast_simd() {
-            // Safety: fast_simd() verified avx2+fma.
+            // SAFETY: fast_simd() verified avx2+fma.
             unsafe { axpy_fma(acc, s, v) };
             return;
         }
@@ -192,6 +196,8 @@ pub fn axpy_fast_scalar(acc: &mut [f32], s: f32, v: &[f32]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: caller must ensure AVX2+FMA. Loads/stores stay inside
+// `acc`/`v`: `o + 8 <= len` per chunk, tail handled element-wise.
 unsafe fn axpy_fma(acc: &mut [f32], s: f32, v: &[f32]) {
     debug_assert_eq!(acc.len(), v.len());
     let n = acc.len();
@@ -216,7 +222,7 @@ pub(crate) fn code_dot_fast(codes: &[u8], x: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     {
         if fast_simd() {
-            // Safety: fast_simd() verified avx2+fma.
+            // SAFETY: fast_simd() verified avx2+fma.
             return unsafe { code_dot_fma(codes, x) };
         }
     }
@@ -250,6 +256,8 @@ fn code_dot_fast_scalar(codes: &[u8], x: &[f32]) -> f32 {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: caller must ensure AVX2+FMA. 8-byte code loads and 8-lane
+// f32 loads both satisfy `o + 8 <= len` by the chunk bound.
 unsafe fn code_dot_fma(codes: &[u8], x: &[f32]) -> f32 {
     debug_assert_eq!(codes.len(), x.len());
     let n = x.len();
@@ -350,6 +358,8 @@ pub fn exp_fast(x: f32) -> f32 {
 /// lane, so results match the scalar form bitwise.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: `unsafe` only for #[target_feature]; register-only polynomial
+// evaluation, no memory access. Caller ensures AVX2+FMA.
 unsafe fn exp_fast8(x: __m256) -> __m256 {
     use exp_consts::*;
     let x = _mm256_min_ps(_mm256_max_ps(x, _mm256_set1_ps(LO)), _mm256_set1_ps(HI));
@@ -385,11 +395,18 @@ pub fn exp_map_fast(xs: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     {
         if fast_simd() {
-            // Safety: fast_simd() verified avx2+fma.
+            // SAFETY: fast_simd() verified avx2+fma.
             unsafe { exp_map_fma(xs) };
             return;
         }
     }
+    exp_map_fast_scalar(xs)
+}
+
+/// Scalar twin of [`exp_map_fast`]: the same polynomial per element, in
+/// index order (the vector path evaluates identical lane math).
+#[inline]
+pub fn exp_map_fast_scalar(xs: &mut [f32]) {
     for v in xs.iter_mut() {
         *v = exp_fast(*v);
     }
@@ -397,6 +414,8 @@ pub fn exp_map_fast(xs: &mut [f32]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: caller must ensure AVX2+FMA. In-place 8-lane loads/stores with
+// `o + 8 <= len` per chunk; tail handled by the scalar polynomial.
 unsafe fn exp_map_fma(xs: &mut [f32]) {
     let n = xs.len();
     let chunks = n / 8;
@@ -420,7 +439,7 @@ pub fn silu_mul_fast(gate: &mut [f32], up: &[f32]) {
     #[cfg(target_arch = "x86_64")]
     {
         if fast_simd() {
-            // Safety: fast_simd() verified avx2+fma.
+            // SAFETY: fast_simd() verified avx2+fma.
             unsafe { silu_mul_fma(gate, up) };
             return;
         }
@@ -442,6 +461,8 @@ pub fn silu_mul_fast_scalar(gate: &mut [f32], up: &[f32]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: caller must ensure AVX2+FMA and equal lengths (the dispatcher
+// asserts); `o + 8 <= len` bounds every load/store.
 unsafe fn silu_mul_fma(gate: &mut [f32], up: &[f32]) {
     let n = gate.len();
     let chunks = n / 8;
@@ -488,11 +509,18 @@ pub fn gelu_map_fast(x: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
     {
         if fast_simd() {
-            // Safety: fast_simd() verified avx2+fma.
+            // SAFETY: fast_simd() verified avx2+fma.
             unsafe { gelu_map_fma(x) };
             return;
         }
     }
+    gelu_map_fast_scalar(x)
+}
+
+/// Scalar twin of [`gelu_map_fast`]: [`gelu_fast`] per element, in index
+/// order (the vector path evaluates identical lane math).
+#[inline]
+pub fn gelu_map_fast_scalar(x: &mut [f32]) {
     for v in x.iter_mut() {
         *v = gelu_fast(*v);
     }
@@ -500,6 +528,8 @@ pub fn gelu_map_fast(x: &mut [f32]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: caller must ensure AVX2+FMA. In-place 8-lane loads/stores with
+// `o + 8 <= len` per chunk; tail handled by the scalar polynomial.
 unsafe fn gelu_map_fma(xs: &mut [f32]) {
     let n = xs.len();
     let chunks = n / 8;

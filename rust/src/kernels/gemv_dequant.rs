@@ -38,7 +38,7 @@ pub fn gemv_dequant_scalar(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
 fn gemv_dequant_t(layer: &IntLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
     assert_eq!(x.len(), layer.cols);
     assert_eq!(y.len(), layer.rows);
-    let sum_x: f32 = x.iter().sum();
+    let sum_x = super::sum_seq(x);
     let cols = layer.cols;
     for r in 0..layer.rows {
         let (s, qz) = layer.row_params[r];
@@ -55,12 +55,14 @@ fn gemv_dequant_t(layer: &IntLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
 pub fn gemv_dequant_fast(layer: &IntLayer, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), layer.cols);
     assert_eq!(y.len(), layer.rows);
-    let sum_x: f32 = x.iter().sum();
+    let sum_x = super::sum_seq(x);
     let cols = layer.cols;
     for r in 0..layer.rows {
         let (s, qz) = layer.row_params[r];
         let codes = &layer.codes[r * cols..(r + 1) * cols];
         let acc = fast_math::code_dot_fast(codes, x);
+        // lint:allow(exact-tier-purity) Fast-tier epilogue: fused
+        // multiply-add is this tier's contract, the file is just shared.
         y[r] = (s * qz).mul_add(sum_x, s * acc);
     }
 }
@@ -93,12 +95,16 @@ fn gemm_dequant_t(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdT
     for y in ys.iter() {
         assert_eq!(y.len(), layer.rows);
     }
-    let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
+    // lint:allow(hot-path-no-alloc) one O(batch) epilogue table per gemm
+    // call; steady-state flatness is pinned by tests/alloc_steady.rs.
+    let sum_x: Vec<f32> = xs.iter().map(|x| super::sum_seq(x)).collect();
     let cols = layer.cols;
     if super::par_rows(layer.rows, cols, xs.len()) {
         let writer = super::RowWriter::new(ys);
         crate::util::pool::global().scope_chunks(layer.rows, |range| {
             // per-worker scratch for the widened row tile
+            // lint:allow(hot-path-no-alloc) one O(cols) tile per worker per
+            // gemm call; steady-state pinned by tests/alloc_steady.rs.
             let mut wide = vec![0.0f32; cols];
             for r in range {
                 let (s, qz) = layer.row_params[r];
@@ -106,12 +112,13 @@ fn gemm_dequant_t(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdT
                 simd::widen_codes(codes, &mut wide, t);
                 for (bi, x) in xs.iter().enumerate() {
                     let acc = simd::dot_t(&wide, x, t);
-                    // Safety: each row lands in exactly one chunk.
+                    // SAFETY: each row lands in exactly one chunk.
                     unsafe { writer.set(bi, r, s * acc + s * qz * sum_x[bi]) };
                 }
             }
         });
     } else {
+        // lint:allow(hot-path-no-alloc) one O(cols) tile per gemm call.
         let mut wide = vec![0.0f32; cols];
         for r in 0..layer.rows {
             let (s, qz) = layer.row_params[r];
@@ -131,6 +138,9 @@ fn gemm_dequant_t(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdT
 /// tile and the fused epilogue of [`gemv_dequant_fast`]. Widening is
 /// exact and the FMA dot keeps the pinned shape, so
 /// `gemm_dequant_fast(B=1) == gemv_dequant_fast` per element.
+// lint:allow(scalar-twin) Fast gemm wrapper: its reference is the Exact
+// gemm (bitwise), and Fast-vs-Exact closeness is pinned per kernel by
+// tests/numerics_tolerance.rs through Gemv::gemm_mode.
 pub fn gemm_dequant_fast(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     assert_eq!(xs.len(), ys.len(), "gemm_dequant batch size mismatch");
     for x in xs {
@@ -140,11 +150,15 @@ pub fn gemm_dequant_fast(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
         assert_eq!(y.len(), layer.rows);
     }
     let t = simd::tier();
-    let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
+    // lint:allow(hot-path-no-alloc) one O(batch) epilogue table per gemm
+    // call; steady-state flatness is pinned by tests/alloc_steady.rs.
+    let sum_x: Vec<f32> = xs.iter().map(|x| super::sum_seq(x)).collect();
     let cols = layer.cols;
     if super::par_rows(layer.rows, cols, xs.len()) {
         let writer = super::RowWriter::new(ys);
         crate::util::pool::global().scope_chunks(layer.rows, |range| {
+            // lint:allow(hot-path-no-alloc) one O(cols) widened tile per
+            // worker per gemm call (tests/alloc_steady.rs pins flatness).
             let mut wide = vec![0.0f32; cols];
             for r in range {
                 let (s, qz) = layer.row_params[r];
@@ -152,12 +166,14 @@ pub fn gemm_dequant_fast(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
                 simd::widen_codes(codes, &mut wide, t);
                 for (bi, x) in xs.iter().enumerate() {
                     let acc = fast_math::dot_fast(&wide, x);
-                    // Safety: each row lands in exactly one chunk.
+                    // SAFETY: each row lands in exactly one chunk.
+                    // lint:allow(exact-tier-purity) Fast-tier epilogue FMA.
                     unsafe { writer.set(bi, r, (s * qz).mul_add(sum_x[bi], s * acc)) };
                 }
             }
         });
     } else {
+        // lint:allow(hot-path-no-alloc) one O(cols) tile per gemm call.
         let mut wide = vec![0.0f32; cols];
         for r in 0..layer.rows {
             let (s, qz) = layer.row_params[r];
@@ -165,6 +181,7 @@ pub fn gemm_dequant_fast(layer: &IntLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
             simd::widen_codes(codes, &mut wide, t);
             for (bi, x) in xs.iter().enumerate() {
                 let acc = fast_math::dot_fast(&wide, x);
+                // lint:allow(exact-tier-purity) Fast-tier epilogue FMA.
                 ys[bi][r] = (s * qz).mul_add(sum_x[bi], s * acc);
             }
         }

@@ -54,9 +54,11 @@ fn gemv_lut_t(layer: &PackedBcLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
     assert_eq!(y.len(), layer.rows);
     let rows = layer.rows;
     let planes = layer.planes;
-    let sum_x: f32 = x.iter().sum();
+    let sum_x = super::sum_seq(x);
 
     // signed-sum accumulators per (row, plane)
+    // lint:allow(hot-path-no-alloc) one plane-accumulator strip per gemv
+    // call; steady-state pinned by tests/alloc_steady.rs.
     let mut acc = vec![0.0f32; rows * planes];
     let mut luts = [[0.0f32; 1 << GROUP]; GBLOCK];
     let slots = rows * planes;
@@ -97,14 +99,19 @@ fn gemv_lut_t(layer: &PackedBcLayer, x: &[f32], y: &mut [f32], t: SimdTier) {
 /// already optimal — only the α-epilogue fuses its multiply-adds
 /// (`v = fma(α_p, acc_p, v)`). Deterministic across instruction tiers
 /// for the same reason the `Exact` kernel is.
+// lint:allow(scalar-twin) tier() only steers the add-only shared LUT
+// accumulate (bitwise across tiers); the Fast-vs-Exact budget is pinned
+// by tests/numerics_tolerance.rs through Gemv::gemv_mode.
 pub fn gemv_lut_fast(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
     let t = simd::tier();
     assert_eq!(x.len(), layer.cols);
     assert_eq!(y.len(), layer.rows);
     let rows = layer.rows;
     let planes = layer.planes;
-    let sum_x: f32 = x.iter().sum();
+    let sum_x = super::sum_seq(x);
 
+    // lint:allow(hot-path-no-alloc) one plane-accumulator strip per gemv
+    // call; steady-state pinned by tests/alloc_steady.rs.
     let mut acc = vec![0.0f32; rows * planes];
     let mut luts = [[0.0f32; 1 << GROUP]; GBLOCK];
     let slots = rows * planes;
@@ -132,6 +139,7 @@ pub fn gemv_lut_fast(layer: &PackedBcLayer, x: &[f32], y: &mut [f32]) {
         let arow = &layer.alphas[r * planes..(r + 1) * planes];
         let crow = &acc[r * planes..(r + 1) * planes];
         for (a, s) in arow.iter().zip(crow) {
+            // lint:allow(exact-tier-purity) Fast-tier α-epilogue FMA.
             v = a.mul_add(*s, v);
         }
         y[r] = v;
@@ -171,6 +179,9 @@ pub fn gemm_lut_scalar(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]
 /// accumulation to [`gemm_lut`] (see [`gemv_lut_fast`] for why the
 /// gather-adds are shared), fused α-epilogue per output element, so
 /// `gemm_lut_fast(B=1) == gemv_lut_fast` per element.
+// lint:allow(scalar-twin) Fast gemm wrapper: its reference is the Exact
+// gemm (bitwise), and Fast-vs-Exact closeness is pinned per kernel by
+// tests/numerics_tolerance.rs through Gemv::gemm_mode.
 pub fn gemm_lut_fast(layer: &PackedBcLayer, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
     gemm_lut_m(layer, xs, ys, simd::tier(), NumericsMode::Fast);
 }
@@ -193,7 +204,9 @@ fn gemm_lut_m(
     if nb == 0 {
         return;
     }
-    let sum_x: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
+    // lint:allow(hot-path-no-alloc) one O(batch) epilogue table per gemm
+    // call; steady-state flatness is pinned by tests/alloc_steady.rs.
+    let sum_x: Vec<f32> = xs.iter().map(|x| super::sum_seq(x)).collect();
     let writer = super::RowWriter::new(ys);
     if super::par_rows(layer.rows, layer.cols, nb) {
         crate::util::pool::global().scope_chunks_aligned(layer.rows, simd::BLOCK, |range| {
@@ -224,8 +237,11 @@ fn gemm_lut_rows(
     let nrows = rows_hi - rows_lo;
     // per-item (row, plane) accumulators for this row range, batch-major
     let lslots = nrows * planes;
+    // lint:allow(hot-path-no-alloc) per-worker accumulator + LUT scratch,
+    // one allocation per gemm call (tests/alloc_steady.rs pins flatness).
     let mut acc = vec![0.0f32; nb * lslots];
     // per-item LUTs for the current group block, index `bi·GBLOCK + g`
+    // lint:allow(hot-path-no-alloc) see `acc` above.
     let mut luts = vec![[0.0f32; 1 << GROUP]; nb * GBLOCK];
 
     for gb in (0..layer.groups).step_by(GBLOCK) {
@@ -266,11 +282,12 @@ fn gemm_lut_rows(
                 }
                 NumericsMode::Fast => {
                     for (a, s) in arow.iter().zip(crow) {
+                        // lint:allow(exact-tier-purity) Fast-tier FMA arm.
                         v = a.mul_add(*s, v);
                     }
                 }
             }
-            // Safety: each row lands in exactly one worker's range.
+            // SAFETY: each row lands in exactly one worker's range.
             unsafe { writer.set(bi, r, v) };
         }
     }

@@ -14,6 +14,14 @@
 //! pool per (row, head) work item above [`PAR_MIN_WORK`]
 //! (see [`attn`] and `model::decode`).
 //!
+//! The table's contracts are *statically enforced* by `gptqt-lint`
+//! (CONTRIBUTING.md has the full rule list): the bitwise column is rule
+//! `exact-tier-purity` (no FMA/reassociation outside `fast_math`), the
+//! `*_scalar` twins and their test coverage are rule `scalar-twin`, the
+//! allocation-free hot path is rule `hot-path-no-alloc`, and every
+//! `unsafe` SIMD site carries a `// SAFETY:` comment (rule
+//! `safety-comment`).
+//!
 //! All three implement [`Gemv`], so the decode loop and the speed
 //! benchmarks swap formats without touching the model code. In the
 //! bandwidth-bound single-token decode regime the ranking is decided by
@@ -105,6 +113,20 @@ use crate::quant::pack::PackedBcLayer;
 use crate::tensor::Tensor;
 use crate::util::pool;
 
+/// Sequential left-to-right `Σ xs[i]` — the pinned-order input sum of the
+/// dequant epilogues, spelled as an explicit loop so Exact-tier kernels
+/// carry no `.sum()`/`.fold(` reassociation hazard (rule
+/// `exact-tier-purity`). Bitwise identical to the iterator sum it
+/// replaces: both are an in-order binary fold from 0.0.
+#[inline]
+pub(crate) fn sum_seq(xs: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for &v in xs {
+        s += v;
+    }
+    s
+}
+
 /// Minimum total work (`rows × cols × batch` weight-element applications)
 /// before a batched kernel fans its output rows across the pool.
 pub const PAR_MIN_WORK: usize = 1 << 21;
@@ -119,11 +141,17 @@ pub(crate) fn par_rows(rows: usize, cols: usize, batch: usize) -> bool {
 /// Pointer bundle giving pool workers disjoint-row write access to the
 /// per-batch-item output vectors of a `gemm` call.
 pub(crate) struct RowWriter(Vec<*mut f32>);
+// SAFETY: workers only dereference through `set`, whose contract (below)
+// makes every (bi, r) write target disjoint; the pool joins before the
+// borrowed output vectors can move.
 unsafe impl Sync for RowWriter {}
+// SAFETY: the raw pointers stay valid for the whole gemm call — see `Sync`.
 unsafe impl Send for RowWriter {}
 
 impl RowWriter {
     pub(crate) fn new(ys: &mut [Vec<f32>]) -> RowWriter {
+        // lint:allow(hot-path-no-alloc) O(batch) pointer bundle per gemm
+        // call; steady-state pinned by tests/alloc_steady.rs.
         RowWriter(ys.iter_mut().map(|y| y.as_mut_ptr()).collect())
     }
 
@@ -286,7 +314,7 @@ fn gemm_f32_t(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>], t: SimdTier) {
             for r in range {
                 let row = w.row(r);
                 for (bi, x) in xs.iter().enumerate() {
-                    // Safety: each row lands in exactly one chunk.
+                    // SAFETY: each row lands in exactly one chunk.
                     unsafe { writer.set(bi, r, simd::dot_t(row, x, t)) };
                 }
             }
@@ -331,7 +359,7 @@ pub fn gemm_f32_fast(w: &Tensor, xs: &[&[f32]], ys: &mut [Vec<f32>]) {
             for r in range {
                 let row = w.row(r);
                 for (bi, x) in xs.iter().enumerate() {
-                    // Safety: each row lands in exactly one chunk.
+                    // SAFETY: each row lands in exactly one chunk.
                     unsafe { writer.set(bi, r, fast_math::dot_fast(row, x)) };
                 }
             }

@@ -102,7 +102,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 pub(crate) fn dot_t(a: &[f32], b: &[f32], t: SimdTier) -> f32 {
     match t {
         #[cfg(target_arch = "x86_64")]
-        // Safety: callers only pass Avx2 when tier() reported it.
+        // SAFETY: callers only pass Avx2 when tier() reported it.
         SimdTier::Avx2 => unsafe { dot_avx2(a, b) },
         _ => dot_scalar(a, b),
     }
@@ -140,6 +140,8 @@ pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
 /// the same tree the scalar tier spells out.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: `unsafe` only for #[target_feature]; pure register math, no
+// memory access beyond the 8-lane stack spill. Caller ensures AVX2.
 unsafe fn hsum_pinned(v: __m256) -> f32 {
     let mut l = [0.0f32; 8];
     _mm256_storeu_ps(l.as_mut_ptr(), v);
@@ -148,6 +150,8 @@ unsafe fn hsum_pinned(v: __m256) -> f32 {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2 (dispatchers check `tier()`). All loads
+// go through `as_ptr().add(o)` with `o + 8 <= len` by the chunk bound.
 pub(crate) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
@@ -192,7 +196,7 @@ pub fn add_assign_scalar(x: &mut [f32], a: &[f32]) {
 pub(crate) fn add_assign_t(x: &mut [f32], a: &[f32], t: SimdTier) {
     match t {
         #[cfg(target_arch = "x86_64")]
-        // Safety: callers only pass Avx2 when tier() reported it.
+        // SAFETY: callers only pass Avx2 when tier() reported it.
         SimdTier::Avx2 => unsafe { add_assign_avx2(x, a) },
         _ => add_assign_scalar(x, a),
     }
@@ -200,6 +204,8 @@ pub(crate) fn add_assign_t(x: &mut [f32], a: &[f32], t: SimdTier) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2. Loads/stores stay inside `x`/`a`:
+// `o + 8 <= len` per chunk, tail handled element-wise.
 unsafe fn add_assign_avx2(x: &mut [f32], a: &[f32]) {
     debug_assert_eq!(x.len(), a.len());
     let n = x.len();
@@ -239,7 +245,7 @@ pub fn axpy_scalar(acc: &mut [f32], s: f32, v: &[f32]) {
 pub(crate) fn axpy_t(acc: &mut [f32], s: f32, v: &[f32], t: SimdTier) {
     match t {
         #[cfg(target_arch = "x86_64")]
-        // Safety: callers only pass Avx2 when tier() reported it.
+        // SAFETY: callers only pass Avx2 when tier() reported it.
         SimdTier::Avx2 => unsafe { axpy_avx2(acc, s, v) },
         _ => axpy_scalar(acc, s, v),
     }
@@ -247,6 +253,8 @@ pub(crate) fn axpy_t(acc: &mut [f32], s: f32, v: &[f32], t: SimdTier) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2. Loads/stores stay inside `acc`/`v`:
+// `o + 8 <= len` per chunk, tail handled element-wise.
 unsafe fn axpy_avx2(acc: &mut [f32], s: f32, v: &[f32]) {
     debug_assert_eq!(acc.len(), v.len());
     let n = acc.len();
@@ -338,7 +346,7 @@ pub(crate) fn gelu_map_t(x: &mut [f32], _t: SimdTier) {
 pub(crate) fn code_dot_t(codes: &[u8], x: &[f32], t: SimdTier) -> f32 {
     match t {
         #[cfg(target_arch = "x86_64")]
-        // Safety: callers only pass Avx2 when tier() reported it.
+        // SAFETY: callers only pass Avx2 when tier() reported it.
         SimdTier::Avx2 => unsafe { code_dot_avx2(codes, x) },
         _ => code_dot_scalar(codes, x),
     }
@@ -372,12 +380,16 @@ fn code_dot_scalar(codes: &[u8], x: &[f32]) -> f32 {
 /// Load 8 code bytes and widen them to 8 exact f32 lanes.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2 and that `p..p+8` is readable (every
+// call site passes `base.add(o)` with `o + 8 <= len`).
 unsafe fn load8_u8_as_f32(p: *const u8) -> __m256 {
     _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i)))
 }
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2. 8-byte code loads and 8-lane f32
+// loads both satisfy `o + 8 <= len` by the chunk bound.
 unsafe fn code_dot_avx2(codes: &[u8], x: &[f32]) -> f32 {
     debug_assert_eq!(codes.len(), x.len());
     let n = x.len();
@@ -406,7 +418,7 @@ pub(crate) fn widen_codes(codes: &[u8], out: &mut [f32], t: SimdTier) {
     debug_assert_eq!(codes.len(), out.len());
     match t {
         #[cfg(target_arch = "x86_64")]
-        // Safety: callers only pass Avx2 when tier() reported it.
+        // SAFETY: callers only pass Avx2 when tier() reported it.
         SimdTier::Avx2 => unsafe { widen_codes_avx2(codes, out) },
         _ => {
             for (o, &c) in out.iter_mut().zip(codes) {
@@ -418,6 +430,8 @@ pub(crate) fn widen_codes(codes: &[u8], out: &mut [f32], t: SimdTier) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2 and `codes.len() == out.len()` (the
+// dispatcher asserts it); `o + 8 <= len` bounds every load/store.
 unsafe fn widen_codes_avx2(codes: &[u8], out: &mut [f32]) {
     let n = out.len();
     let chunks = n / 8;
@@ -453,7 +467,7 @@ pub(crate) fn lut_accumulate(
     }
     match t {
         #[cfg(target_arch = "x86_64")]
-        // Safety: callers only pass Avx2 when tier() reported it; every
+        // SAFETY: callers only pass Avx2 when tier() reported it; every
         // gather index is a u8, in bounds of the 256-entry tables.
         SimdTier::Avx2 => unsafe { lut_accumulate_avx2(acc, codes, luts) },
         _ => lut_accumulate_scalar(acc, codes, luts),
@@ -472,7 +486,17 @@ fn lut_accumulate_scalar(acc: &mut [f32], codes: &[&[u8]], luts: &[[f32; 1 << GR
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must ensure AVX2, every `codes[g].len() == acc.len()`
+// (the dispatcher asserts it), and code values < 2^GROUP index the
+// 256-entry tables — u8 codes can't exceed that by construction.
 unsafe fn lut_accumulate_avx2(acc: &mut [f32], codes: &[&[u8]], luts: &[[f32; 1 << GROUP]]) {
+    // re-assert the dispatcher's bounds at the deref site: every raw
+    // load below (`cs.as_ptr().add(o)`, `ap.add(i)`) is justified by
+    // exactly these two shape facts
+    debug_assert_eq!(codes.len(), luts.len());
+    for cs in codes.iter() {
+        debug_assert_eq!(cs.len(), acc.len());
+    }
     let n = acc.len();
     let chunks = n / 8;
     let ap = acc.as_mut_ptr();

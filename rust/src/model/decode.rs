@@ -761,6 +761,7 @@ impl BackendModel {
         let nb = chunks.len();
         assert_eq!(caches.len(), nb, "forward_core chunk/cache count mismatch");
         if nb == 0 {
+            // lint:allow(hot-path-no-alloc) empty Vec — allocation-free.
             return Vec::new();
         }
         let d = cfg.d_model;
@@ -772,6 +773,7 @@ impl BackendModel {
         let slopes = if cfg.family == Family::Bloom {
             alibi_slopes(heads)
         } else {
+            // lint:allow(hot-path-no-alloc) O(heads), once per forward.
             vec![0.0; heads]
         };
 
@@ -792,6 +794,7 @@ impl BackendModel {
         } = scratch;
 
         // flat row layout: chunk 0's tokens, then chunk 1's, …
+        // lint:allow(hot-path-no-alloc) O(batch) table, once per forward.
         let starts: Vec<usize> = caches.iter().map(|c| c.len).collect();
         row_seq.clear();
         row_pos.clear();
@@ -842,6 +845,8 @@ impl BackendModel {
             for (h, x) in hs.iter_mut().zip(xs.iter()) {
                 self.norm_into(&layer.ln1, x, h);
             }
+            // lint:allow(hot-path-no-alloc) O(batch) slice-ref table per gemm
+            // call; steady-state flatness is pinned by tests/alloc_steady.rs.
             let hrefs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
             let qs = self.gemm_slot(layer.q, &hrefs, qs_buf);
             let ks = self.gemm_slot(layer.k, &hrefs, ks_buf);
@@ -871,6 +876,8 @@ impl BackendModel {
                 pool::global().scope_chunks(nrows * heads, |range| {
                     // the Fast kernel never materializes scores
                     let score_len = if fast { 0 } else { max_ctx };
+                    // lint:allow(hot-path-no-alloc) per-worker score strip,
+                    // sized once per fan-out (zero-length on the Fast tier).
                     let mut local_scores = vec![0.0f32; score_len];
                     for it in range {
                         let r = it / heads;
@@ -879,7 +886,7 @@ impl BackendModel {
                         let cache: &KvCache = &*caches_ro[bi];
                         let base = head * dh;
                         let qh = &qs_ro[r][base..base + dh];
-                        // Safety: each (row, head) slice is written by
+                        // SAFETY: each (row, head) slice is written by
                         // exactly one worker (disjoint item ranges), and
                         // scope_chunks joins before `ctx` is used again.
                         let out = unsafe {
@@ -949,6 +956,8 @@ impl BackendModel {
                 }
             }
 
+            // lint:allow(hot-path-no-alloc) O(batch) slice-ref table per gemm
+            // call; steady-state flatness is pinned by tests/alloc_steady.rs.
             let crefs: Vec<&[f32]> = ctx.chunks_exact(d).collect();
             let attns = self.gemm_slot(layer.o, &crefs, proj_buf);
             for (x, a) in xs.iter_mut().zip(attns.iter()) {
@@ -960,6 +969,8 @@ impl BackendModel {
             for (h, x) in hs.iter_mut().zip(xs.iter()) {
                 self.norm_into(&layer.ln2, x, h);
             }
+            // lint:allow(hot-path-no-alloc) O(batch) slice-ref table per gemm
+            // call; steady-state flatness is pinned by tests/alloc_steady.rs.
             let h2refs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
             let ffs = if let Some(gate_slot) = layer.gate {
                 let gates = self.gemm_slot(gate_slot, &h2refs, ffa_buf);
@@ -971,6 +982,8 @@ impl BackendModel {
                         simd::silu_mul_t(g, u, tier);
                     }
                 }
+                // lint:allow(hot-path-no-alloc) O(batch) slice-ref table per gemm
+                // call; steady-state flatness is pinned by tests/alloc_steady.rs.
                 let arefs: Vec<&[f32]> = gates.iter().map(|v| v.as_slice()).collect();
                 self.gemm_slot(layer.down, &arefs, proj_buf)
             } else {
@@ -982,6 +995,8 @@ impl BackendModel {
                         simd::gelu_map_t(u, tier);
                     }
                 }
+                // lint:allow(hot-path-no-alloc) O(batch) slice-ref table per gemm
+                // call; steady-state flatness is pinned by tests/alloc_steady.rs.
                 let arefs: Vec<&[f32]> = ups.iter().map(|v| v.as_slice()).collect();
                 self.gemm_slot(layer.down, &arefs, proj_buf)
             };
@@ -1000,13 +1015,18 @@ impl BackendModel {
             for (h, x) in hs.iter_mut().zip(xs.iter()) {
                 self.norm_into(&self.final_norm, x, h);
             }
+            // lint:allow(hot-path-no-alloc) O(batch) slice-ref table per gemm
+            // call; steady-state flatness is pinned by tests/alloc_steady.rs.
             let xrefs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
             let ys = logits_buf.prepare(nrows, cfg.vocab);
             crate::kernels::gemm_f32(tok, &xrefs, ys);
+            // lint:allow(hot-path-no-alloc) all-logits materialization —
+            // the perplexity/eval path, not the serving tick.
             let mut out = Vec::with_capacity(nb);
             let mut row = 0usize;
             for chunk in chunks {
                 let t = chunk.len();
+                // lint:allow(hot-path-no-alloc) eval-path logits tensor.
                 let mut data = Vec::with_capacity(t * cfg.vocab);
                 for y in &ys[row..row + t] {
                     data.extend_from_slice(y);
@@ -1019,14 +1039,19 @@ impl BackendModel {
         // serving only samples after a chunk's last token — and only for
         // chunks the mask wants; everything else skips the final norm
         // and the vocab-sized projection altogether
+        // lint:allow(hot-path-no-alloc) O(batch) mask + row table, once
+        // per forward; steady-state pinned by tests/alloc_steady.rs.
         let keep: Vec<bool> = match wanted {
             LogitsWanted::All => unreachable!("handled above"),
+            // lint:allow(hot-path-no-alloc) O(batch) mask.
             LogitsWanted::Last => vec![true; nb],
             LogitsWanted::LastIf(mask) => {
                 assert_eq!(mask.len(), nb, "forward_core logits-mask length");
+                // lint:allow(hot-path-no-alloc) O(batch) mask copy.
                 mask.to_vec()
             }
         };
+        // lint:allow(hot-path-no-alloc) O(batch) row table.
         let mut last_rows = Vec::new();
         let mut row = 0usize;
         for (chunk, &k) in chunks.iter().zip(&keep) {
@@ -1039,6 +1064,8 @@ impl BackendModel {
         for (h, &r) in hs.iter_mut().zip(&last_rows) {
             self.norm_into(&self.final_norm, &xs[r], h);
         }
+        // lint:allow(hot-path-no-alloc) O(batch) slice-ref table per gemm
+        // call; steady-state flatness is pinned by tests/alloc_steady.rs.
         let xrefs: Vec<&[f32]> = hs.iter().map(|v| v.as_slice()).collect();
         let ys = logits_buf.prepare(last_rows.len(), cfg.vocab);
         crate::kernels::gemm_f32(tok, &xrefs, ys);
@@ -1052,6 +1079,8 @@ impl BackendModel {
                     Tensor::zeros(0, 0)
                 }
             })
+            // lint:allow(hot-path-no-alloc) one logits tensor per kept
+            // chunk — the call's return value.
             .collect()
     }
 }
@@ -1059,7 +1088,11 @@ impl BackendModel {
 /// Raw write handle for the threaded attention fan-out: workers own
 /// disjoint `(row, head)` slices of the flat context buffer.
 struct CtxWriter(*mut f32);
+// SAFETY: each attention worker writes only its own disjoint (row, head)
+// slice of the context buffer, and the fan-out joins before the buffer is
+// read — no aliased writes can ever be observed.
 unsafe impl Send for CtxWriter {}
+// SAFETY: shared only for disjoint-slice writes — see `Send`.
 unsafe impl Sync for CtxWriter {}
 
 /// Which logits a `BackendModel::forward_core` call materializes.

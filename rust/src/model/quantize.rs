@@ -41,7 +41,7 @@ fn accumulate_into(h: &mut MatF64, acts: &Tensor) {
     pool::global().scope_chunks(d, |range| {
         let h_ptr = &h_ptr;
         for i in range {
-            // Safety: disjoint H rows per chunk.
+            // SAFETY: disjoint H rows per chunk.
             let hrow = unsafe { std::slice::from_raw_parts_mut(h_ptr.0.add(i * d), d) };
             for t in 0..acts.rows() {
                 let x = acts.row(t);
@@ -58,7 +58,10 @@ fn accumulate_into(h: &mut MatF64, acts: &Tensor) {
 }
 
 struct HPtr(*mut f64);
+// SAFETY: pool chunks write disjoint H rows and are joined before the
+// Hessian buffer is read back.
 unsafe impl Sync for HPtr {}
+// SAFETY: the pointer outlives the scope — the pool joins before return.
 unsafe impl Send for HPtr {}
 
 /// Result of quantizing a whole model.

@@ -100,9 +100,8 @@ pub fn gptq_quantize(
             let w_cell = &w_cell;
             let mut local_err = 0.0f64;
             for r in range {
-                // Safety: rows are disjoint across chunks.
-                let row: &mut [f32] =
-                    unsafe { std::slice::from_raw_parts_mut(w_cell.0.add(r * d), d) };
+                // SAFETY: rows are disjoint across chunks.
+                let row = unsafe { std::slice::from_raw_parts_mut(w_cell.0.add(r * d), d) };
                 let cb = &codebooks[r];
                 for q in 0..d {
                     let wq = row[q];
@@ -141,7 +140,10 @@ pub fn gptq_quantize(
 }
 
 struct WPtr(*mut f32);
+// SAFETY: pool chunks write disjoint weight rows and are joined before
+// the matrix is read back.
 unsafe impl Sync for WPtr {}
+// SAFETY: the pointer outlives the scope — the pool joins before return.
 unsafe impl Send for WPtr {}
 
 /// True second-order output error `Σ_rows eᵀ(H/2)e = Σ_rows ‖e·X‖²` —

@@ -57,9 +57,8 @@ impl Tensor {
                 let out_ptr = &out_ptr;
                 for i in range {
                     let xrow = self.row(i);
-                    // Safety: disjoint rows per chunk, joined before return.
-                    let orow =
-                        unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+                    // SAFETY: disjoint rows per chunk, joined before return.
+                    let orow = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
                     for (j, o) in orow.iter_mut().enumerate() {
                         *o = dot(xrow, other.row(j));
                     }
@@ -125,7 +124,10 @@ impl Tensor {
 }
 
 struct SendPtrF(*mut f32);
+// SAFETY: pool chunks write disjoint output rows and are joined before
+// the buffer is read back.
 unsafe impl Sync for SendPtrF {}
+// SAFETY: the pointer outlives the scope — the pool joins before return.
 unsafe impl Send for SendPtrF {}
 
 /// Dot product, dispatched to the best SIMD tier of the running CPU

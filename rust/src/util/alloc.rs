@@ -28,24 +28,31 @@ static BYTES: AtomicU64 = AtomicU64::new(0);
 /// two relaxed `fetch_add`s per event.
 pub struct CountingAllocator;
 
+// SAFETY: pure pass-through to `System` — every layout/pointer contract is
+// forwarded unchanged; the counters are relaxed atomics with no effect on
+// allocation behavior.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: defers to `System.alloc` under the same contract.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: defers to `System.dealloc` under the same contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         FREES.fetch_add(1, Ordering::Relaxed);
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: defers to `System.alloc_zeroed` under the same contract.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: defers to `System.realloc` under the same contract.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         // a growth counts as one allocation event — exactly what a
         // steady-state check wants to catch

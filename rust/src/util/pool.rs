@@ -128,11 +128,13 @@ impl ThreadPool {
     {
         debug_assert!(chunk > 0);
         let parts = n.div_ceil(chunk);
-        // Safety: every job is joined before `scope_chunks_with` returns,
+        // SAFETY: every job is joined before `scope_chunks_with` returns,
         // so the borrowed closure outlives all uses. We enforce the join
         // with an explicit counter rather than relying on pool drop order.
         let f_ref: &(dyn Fn(std::ops::Range<usize>) + Sync) = &f;
         let f_static: &'static (dyn Fn(std::ops::Range<usize>) + Sync) =
+            // SAFETY: lifetime erasure only — the counter below blocks this
+            // frame until every job ran, so the borrow outlives all uses.
             unsafe { std::mem::transmute(f_ref) };
         let pending = Arc::new((Mutex::new(parts), Condvar::new()));
         for p in 0..parts {
@@ -168,7 +170,7 @@ impl ThreadPool {
             self.scope_chunks(n, |range| {
                 let out_ptr = &out_ptr;
                 for i in range {
-                    // Safety: disjoint indices per chunk; joined before return.
+                    // SAFETY: disjoint indices per chunk; joined before return.
                     unsafe { *out_ptr.0.add(i) = Some(f(i)) };
                 }
             });
@@ -178,7 +180,10 @@ impl ThreadPool {
 }
 
 struct SendPtr<T>(*mut T);
+// SAFETY: `map` hands each worker a disjoint output slot and joins before
+// reading — the pointer is never aliased for writes.
 unsafe impl<T> Sync for SendPtr<T> {}
+// SAFETY: the pointer outlives the scope — `map` joins before return.
 unsafe impl<T> Send for SendPtr<T> {}
 
 fn worker_loop(sh: Arc<Shared>) {

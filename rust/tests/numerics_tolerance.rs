@@ -24,7 +24,10 @@
 //! (`simd_parity.rs`, `kernel_parity.rs`, `attn_parity.rs`) stay green
 //! untouched because Exact is untouched.
 
-use gptqt::kernels::fast_math::{attn_row_fast, gelu_map_fast, silu_mul_fast, softmax_fast};
+use gptqt::kernels::fast_math::{
+    attn_row_fast, axpy_fast, axpy_fast_scalar, dot_fast, dot_fast_scalar, exp_map_fast,
+    exp_map_fast_scalar, gelu_map_fast, silu_mul_fast, softmax_fast,
+};
 use gptqt::kernels::{attn, simd, DenseGemv, Gemv, NumericsMode};
 use gptqt::model::forward::softmax;
 use gptqt::quant::linear::{rtn_quantize, IntLayer};
@@ -214,6 +217,35 @@ fn exact_mode_dispatch_is_bitwise_the_legacy_path() {
                 layer.gemm_mode(&refs, &mut ys_mode, NumericsMode::Exact);
                 assert_eq!(ys_legacy, ys_mode, "{label} {rows}x{cols} B={batch}");
             }
+        }
+    }
+}
+
+#[test]
+fn fast_scalar_twins_match_dispatched_fast_kernels_bitwise() {
+    // Fast's determinism contract: the mul_add scalar twins are the
+    // bitwise reference for the AVX2+FMA dispatch, so `to_bits`
+    // equality — not a tolerance — is the right check here.
+    let mut rng = Rng::new(9301);
+    for n in [1usize, 7, 8, 9, 64, 129, 1031] {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        assert_eq!(
+            dot_fast(&a, &b).to_bits(),
+            dot_fast_scalar(&a, &b).to_bits(),
+            "dot_fast n={n}"
+        );
+        let mut acc_s = a.clone();
+        let mut acc_d = a.clone();
+        axpy_fast_scalar(&mut acc_s, -0.375, &b);
+        axpy_fast(&mut acc_d, -0.375, &b);
+        assert_eq!(acc_s, acc_d, "axpy_fast n={n}");
+        let mut e_s = b.clone();
+        let mut e_d = b.clone();
+        exp_map_fast_scalar(&mut e_s);
+        exp_map_fast(&mut e_d);
+        for (i, (u, v)) in e_s.iter().zip(&e_d).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "exp_map_fast n={n} i={i}");
         }
     }
 }

@@ -170,3 +170,31 @@ fn detected_tier_is_exercised_not_assumed() {
     println!("simd tier under test: {}", t.label());
     assert!(matches!(t, simd::SimdTier::Scalar | simd::SimdTier::Avx2));
 }
+
+#[test]
+fn elementwise_dot_add_assign_axpy_tiers_are_bitwise_identical() {
+    // The row primitives behind every kernel above: `dot`, `add_assign`
+    // and `axpy` carry the same bitwise scalar↔AVX2 contract directly,
+    // so the lint scalar-twin rule counts this as their coverage.
+    let mut rng = Rng::new(7005);
+    for &(_, n) in &RAGGED {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        assert_eq!(
+            simd::dot(&a, &b).to_bits(),
+            simd::dot_scalar(&a, &b).to_bits(),
+            "dot n={n} tier {}",
+            simd::tier().label()
+        );
+        let mut x_s = a.clone();
+        let mut x_d = a.clone();
+        simd::add_assign_scalar(&mut x_s, &b);
+        simd::add_assign(&mut x_d, &b);
+        assert_eq!(x_s, x_d, "add_assign n={n}");
+        let mut y_s = a.clone();
+        let mut y_d = a.clone();
+        simd::axpy_scalar(&mut y_s, 0.75, &b);
+        simd::axpy(&mut y_d, 0.75, &b);
+        assert_eq!(y_s, y_d, "axpy n={n}");
+    }
+}
