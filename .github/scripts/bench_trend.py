@@ -57,6 +57,18 @@ METRICS = [
     ("acceptance_rate", -1),
 ]
 
+# Fault-containment counters serving records carry (all optional, all
+# zero on a healthy run). They are not trended — a non-zero value in the
+# *current* run means the bench served degraded and its perf numbers
+# are suspect, which is worth a warning on its own.
+ROBUSTNESS_KEYS = [
+    "requests_failed",
+    "shed_total",
+    "degraded_ticks",
+    "faults_injected",
+    "events_dropped",
+]
+
 
 def main(argv):
     if len(argv) < 3:
@@ -87,7 +99,15 @@ def main(argv):
         "|---|---|---:|---:|---:|",
     ]
     regressions = []
+    degraded = []
     for name, c in cur.items():
+        bad = {
+            k: c[k]
+            for k in ROBUSTNESS_KEYS
+            if isinstance(c.get(k), (int, float)) and c[k] > 0
+        }
+        if bad:
+            degraded.append((name, bad))
         p = prev.get(name)
         for key, sign in METRICS:
             cv = metric(c, key)
@@ -120,6 +140,13 @@ def main(argv):
         )
     else:
         summary_lines.append(f"No regression beyond {threshold:.0f}%.")
+    if degraded:
+        summary_lines.append("")
+        for name, bad in degraded:
+            counters = ", ".join(f"{k}={int(v)}" for k, v in sorted(bad.items()))
+            summary_lines.append(
+                f"⚠️ `{name}` served degraded ({counters}) — its numbers are suspect"
+            )
 
     summary = "\n".join(summary_lines) + "\n"
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
@@ -132,6 +159,9 @@ def main(argv):
             f"::warning::bench-trend: `{name}` {key} "
             f"regressed {delta:+.1f}% vs previous run"
         )
+    for name, bad in degraded:
+        counters = ", ".join(f"{k}={int(v)}" for k, v in sorted(bad.items()))
+        print(f"::warning::bench-trend: `{name}` ran degraded ({counters})")
     return 0
 
 

@@ -257,7 +257,8 @@ fn main() {
                     r.tokens_per_sec,
                     r.ttft_ms * 1e6,
                 )
-                .with_numerics(numerics),
+                .with_numerics(numerics)
+                .with_robustness(r.robustness),
             );
             println!(
                 "{:<10} {:<6} {:>10.0} tok/s   ttft {:>8.2} ms   inter-token {:>7.3} ms   \
@@ -313,7 +314,8 @@ fn main() {
                 1e9 / r.tokens_per_sec.max(1e-12),
             )
             .with_numerics(NumericsMode::Exact)
-            .with_acceptance(r.acceptance_rate),
+            .with_acceptance(r.acceptance_rate)
+            .with_robustness(r.robustness),
         );
         println!(
             "{:<14} {:>10.0} tok/s   accept {:>5.3}   tok/round {:>5.2}   \
@@ -342,16 +344,22 @@ fn main() {
     for variant in [SpeedVariant::Full, SpeedVariant::GptqtLut { bits: 3 }] {
         let bm = build_variant(&model, variant, 0);
         let r = measure_prefix_ttft(&model.cfg, bm, variant, pc_prompt, pc_gen, 7);
-        records.push(BenchRecord::new(
-            format!("serve prefix cold {pc_model} {}", variant.label()),
-            pc_prompt as f64 * 1e3 / r.cold_ttft_ms.max(1e-9),
-            r.cold_ttft_ms * 1e6,
-        ));
-        records.push(BenchRecord::new(
-            format!("serve prefix_hit {pc_model} {}", variant.label()),
-            pc_prompt as f64 * 1e3 / r.hit_ttft_ms.max(1e-9),
-            r.hit_ttft_ms * 1e6,
-        ));
+        records.push(
+            BenchRecord::new(
+                format!("serve prefix cold {pc_model} {}", variant.label()),
+                pc_prompt as f64 * 1e3 / r.cold_ttft_ms.max(1e-9),
+                r.cold_ttft_ms * 1e6,
+            )
+            .with_robustness(r.robustness),
+        );
+        records.push(
+            BenchRecord::new(
+                format!("serve prefix_hit {pc_model} {}", variant.label()),
+                pc_prompt as f64 * 1e3 / r.hit_ttft_ms.max(1e-9),
+                r.hit_ttft_ms * 1e6,
+            )
+            .with_robustness(r.robustness),
+        );
         println!(
             "{:<18} cold ttft {:>8.2} ms ({:>4} prefill toks)   hit ttft {:>8.2} ms \
              ({:>2} prefill toks, hits {})",

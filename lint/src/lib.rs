@@ -24,6 +24,11 @@
 //! |                     | `f_scalar` twin and is named under `rust/tests/`  |
 //! | `metrics-report`    | every `pub` counter field of `Metrics` appears in |
 //! |                     | `report()`                                        |
+//! | `no-panic-serve`    | no `unwrap()`/`expect(`/`panic!` on the serving   |
+//! |                     | path (`coordinator/{engine,server,kv_pool,queue,  |
+//! |                     | speculative}.rs`) outside `#[cfg(test)]` — a      |
+//! |                     | panic there kills the engine thread, not one      |
+//! |                     | request                                           |
 //!
 //! The scanner works on a "code view" of each file: comments and
 //! string/char-literal contents are blanked to spaces (newlines kept), so
@@ -41,13 +46,15 @@ pub const RULE_PURITY: &str = "exact-tier-purity";
 pub const RULE_ALLOC: &str = "hot-path-no-alloc";
 pub const RULE_TWIN: &str = "scalar-twin";
 pub const RULE_METRICS: &str = "metrics-report";
+pub const RULE_PANIC: &str = "no-panic-serve";
 
-pub const ALL_RULES: [&str; 5] = [
+pub const ALL_RULES: [&str; 6] = [
     RULE_SAFETY,
     RULE_PURITY,
     RULE_ALLOC,
     RULE_TWIN,
     RULE_METRICS,
+    RULE_PANIC,
 ];
 
 /// Tokens that reassociate or fuse floating-point arithmetic and therefore
@@ -65,6 +72,22 @@ const ALLOC_TOKENS: [&str; 7] = [
     "Box::new",
     ".collect",
     "with_capacity",
+];
+
+/// Panic-capable tokens banned on the serving path: any of these outside
+/// `#[cfg(test)]` must carry a `lint:allow(no-panic-serve) <reason>`
+/// naming the load-bearing invariant (recoverable conditions belong in
+/// `Result`s / `FinishReason::Failed`, not panics).
+const PANIC_TOKENS: [&str; 3] = ["unwrap()", "expect(", "panic!"];
+
+/// The serving-path files where a panic terminates the engine worker
+/// thread (and with it every in-flight request) instead of one request.
+const SERVE_FILES: [&str; 5] = [
+    "coordinator/engine.rs",
+    "coordinator/server.rs",
+    "coordinator/kv_pool.rs",
+    "coordinator/queue.rs",
+    "coordinator/speculative.rs",
 ];
 
 /// Hot functions outside `kernels/` whose bodies are allocation-free zones.
@@ -474,6 +497,10 @@ fn is_metrics_path(path: &str) -> bool {
     path.ends_with("coordinator/metrics.rs")
 }
 
+fn is_serve_path(path: &str) -> bool {
+    SERVE_FILES.iter().any(|s| path.ends_with(s))
+}
+
 // ---------------------------------------------------------------------------
 // Rules
 // ---------------------------------------------------------------------------
@@ -658,6 +685,33 @@ fn rule_twin(
     }
 }
 
+fn rule_panic(file: &FileInput, a: &Analysis<'_>, diags: &mut Vec<Diagnostic>) {
+    let allow = allow_needle(RULE_PANIC);
+    for (idx, code) in a.code_lines.iter().enumerate() {
+        if a.in_test[idx] {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            if !code.contains(tok) {
+                continue;
+            }
+            if annotated(&a.raw_lines, idx, &[&allow]) {
+                continue;
+            }
+            diags.push(Diagnostic {
+                file: file.path.clone(),
+                line: idx + 1,
+                rule: RULE_PANIC,
+                msg: format!(
+                    "`{tok}` on the serving path — a panic here kills the engine \
+                     thread, not one request; return a Result (terminating only \
+                     the offending request) or annotate the load-bearing invariant"
+                ),
+            });
+        }
+    }
+}
+
 fn rule_metrics(file: &FileInput, a: &Analysis<'_>, diags: &mut Vec<Diagnostic>) {
     let allow = allow_needle(RULE_METRICS);
     // Locate `pub struct Metrics` and collect its pub fields.
@@ -742,6 +796,9 @@ pub fn lint_files(files: &[FileInput], tests_text: &str) -> Vec<Diagnostic> {
         }
         if is_metrics_path(&file.path) {
             rule_metrics(file, a, &mut diags);
+        }
+        if is_serve_path(&file.path) {
+            rule_panic(file, a, &mut diags);
         }
     }
     diags.sort_by(|x, y| {

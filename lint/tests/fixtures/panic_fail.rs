@@ -1,0 +1,3 @@
+pub fn next_block(free: &mut Vec<u32>) -> u32 {
+    free.pop().unwrap()
+}

@@ -1,0 +1,17 @@
+pub fn next_block(free: &mut Vec<u32>) -> u32 {
+    // lint:allow(no-panic-serve) accounting invariant: the pending
+    // budget guarantees a free block; an empty list is pool corruption
+    free.pop().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pops_the_newest_block() {
+        // test code may panic freely — the rule only guards shipping code
+        let mut free = vec![3, 7];
+        assert_eq!(super::next_block(&mut free), 7);
+        let n: u32 = "7".parse().unwrap();
+        assert_eq!(n, 7);
+    }
+}

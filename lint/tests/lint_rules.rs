@@ -11,8 +11,8 @@
 //! violations on the repository it ships in.
 
 use gptqt_lint::{
-    lint_files, lint_tree, Diagnostic, FileInput, RULE_ALLOC, RULE_METRICS, RULE_PURITY,
-    RULE_SAFETY, RULE_TWIN,
+    lint_files, lint_tree, Diagnostic, FileInput, RULE_ALLOC, RULE_METRICS, RULE_PANIC,
+    RULE_PURITY, RULE_SAFETY, RULE_TWIN,
 };
 
 /// Lint one in-memory fixture under a synthetic path.
@@ -162,6 +162,39 @@ fn metrics_report_rule_accepts_full_report() {
     let diags = lint_one(
         "rust/src/coordinator/metrics.rs",
         include_str!("fixtures/metrics_pass.rs"),
+        "",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn no_panic_serve_rule_flags_unwrap_on_serving_path() {
+    let diags = lint_one(
+        "rust/src/coordinator/server.rs",
+        include_str!("fixtures/panic_fail.rs"),
+        "",
+    );
+    expect_diags(&diags, &[(2, RULE_PANIC)]);
+    assert!(diags[0].msg.contains("engine thread"), "{}", diags[0]);
+}
+
+#[test]
+fn no_panic_serve_rule_honors_allow_and_test_mod() {
+    // The annotated invariant and the test-module unwrap are both legal.
+    let diags = lint_one(
+        "rust/src/coordinator/server.rs",
+        include_str!("fixtures/panic_pass.rs"),
+        "",
+    );
+    expect_diags(&diags, &[]);
+}
+
+#[test]
+fn no_panic_serve_rule_ignores_non_serving_modules() {
+    // The identical unwrap is fine off the serving path.
+    let diags = lint_one(
+        "rust/src/util/fixture.rs",
+        include_str!("fixtures/panic_fail.rs"),
         "",
     );
     expect_diags(&diags, &[]);

@@ -104,6 +104,38 @@ pub struct BenchRecord {
     /// the JSON writer omits the key entirely so existing records are
     /// byte-identical.
     pub acceptance_rate: Option<f64>,
+    /// Fault-containment counters for serving records
+    /// ([`BenchRecord::with_robustness`]). `None` for every other
+    /// bench — omitted from the JSON like `acceptance_rate`, so a
+    /// non-zero `requests_failed` or `shed_total` in a perf record is
+    /// visible in the trajectory instead of silently inflating (a shed
+    /// or failed request produces no tokens but still took wall time).
+    pub robustness: Option<RobustnessTags>,
+}
+
+/// The serving-robustness counters a bench record carries alongside its
+/// throughput (mirrors the `faults`/`server` sections of
+/// [`crate::coordinator::Metrics::report`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RobustnessTags {
+    pub requests_failed: u64,
+    pub shed_total: u64,
+    pub degraded_ticks: u64,
+    pub faults_injected: u64,
+    pub events_dropped: u64,
+}
+
+impl RobustnessTags {
+    /// Snapshot the containment counters of a finished serving run.
+    pub fn from_metrics(m: &crate::coordinator::Metrics) -> RobustnessTags {
+        RobustnessTags {
+            requests_failed: m.requests_failed,
+            shed_total: m.shed_total,
+            degraded_ticks: m.degraded_ticks,
+            faults_injected: m.faults_injected,
+            events_dropped: m.events_dropped,
+        }
+    }
 }
 
 impl BenchRecord {
@@ -117,6 +149,7 @@ impl BenchRecord {
             simd_tier: simd::tier().label(),
             numerics: NumericsMode::Exact.label(),
             acceptance_rate: None,
+            robustness: None,
         }
     }
 
@@ -130,6 +163,14 @@ impl BenchRecord {
     /// (clamped to `[0, 1]`; non-finite values sanitize to 0).
     pub fn with_acceptance(mut self, rate: f64) -> BenchRecord {
         self.acceptance_rate = Some(if rate.is_finite() { rate.clamp(0.0, 1.0) } else { 0.0 });
+        self
+    }
+
+    /// Tag a serving record with the fault-containment counters of the
+    /// engine run that produced it
+    /// ([`RobustnessTags::from_metrics`]).
+    pub fn with_robustness(mut self, tags: RobustnessTags) -> BenchRecord {
+        self.robustness = Some(tags);
         self
     }
 }
@@ -165,15 +206,28 @@ pub fn bench_records_json(records: &[BenchRecord]) -> String {
             Some(rate) => format!(", \"acceptance_rate\": {}", json_num(rate)),
             None => String::new(),
         };
+        let robustness = match r.robustness {
+            Some(t) => format!(
+                ", \"requests_failed\": {}, \"shed_total\": {}, \"degraded_ticks\": {}, \
+                 \"faults_injected\": {}, \"events_dropped\": {}",
+                t.requests_failed,
+                t.shed_total,
+                t.degraded_ticks,
+                t.faults_injected,
+                t.events_dropped
+            ),
+            None => String::new(),
+        };
         s.push_str(&format!(
             "  {{\"name\": \"{}\", \"tokens_per_sec\": {}, \"ns_per_call\": {}, \
-             \"simd_tier\": \"{}\", \"numerics\": \"{}\"{}}}{}\n",
+             \"simd_tier\": \"{}\", \"numerics\": \"{}\"{}{}}}{}\n",
             json_escape(&r.name),
             json_num(r.tokens_per_sec),
             json_num(r.ns_per_call),
             json_escape(r.simd_tier),
             json_escape(r.numerics),
             acceptance,
+            robustness,
             if i + 1 < records.len() { "," } else { "" },
         ));
     }
@@ -256,9 +310,41 @@ mod tests {
         assert_eq!(json.matches("\"simd_tier\": ").count(), 2, "{json}");
         assert!(json.contains("\"numerics\": \"exact\""), "{json}");
         assert!(json.contains("\"numerics\": \"fast\""), "{json}");
-        // acceptance_rate is opt-in: absent unless with_acceptance tagged it
+        // acceptance_rate / robustness are opt-in: absent unless tagged
         assert!(!json.contains("acceptance_rate"), "{json}");
+        assert!(!json.contains("requests_failed"), "{json}");
         assert!(bench_records_json(&[]).contains("[\n]"), "empty array stays valid");
+    }
+
+    #[test]
+    fn robustness_tags_serialize_only_when_tagged() {
+        let mut m = crate::coordinator::Metrics::new();
+        m.requests_failed = 2;
+        m.shed_total = 3;
+        m.degraded_ticks = 4;
+        m.faults_injected = 5;
+        m.events_dropped = 6;
+        let tags = RobustnessTags::from_metrics(&m);
+        assert_eq!(tags.requests_failed, 2);
+        assert_eq!(tags.events_dropped, 6);
+        let records = vec![
+            BenchRecord::new("serve stream", 100.0, 1e7).with_robustness(tags),
+            BenchRecord::new("serve spec", 80.0, 1e7).with_acceptance(0.5).with_robustness(tags),
+            BenchRecord::new("gemm_lut3", 50.0, 2e7),
+        ];
+        let json = bench_records_json(&records);
+        assert_eq!(json.matches("\"requests_failed\": ").count(), 2, "{json}");
+        assert!(
+            json.contains(
+                "\"requests_failed\": 2, \"shed_total\": 3, \"degraded_ticks\": 4, \
+                 \"faults_injected\": 5, \"events_dropped\": 6"
+            ),
+            "{json}"
+        );
+        // both opt-in tags compose on one record, acceptance first
+        assert!(json.contains("\"acceptance_rate\": 0.500, \"requests_failed\": 2"), "{json}");
+        // the untagged record's object still closes right after numerics
+        assert!(json.contains("\"numerics\": \"exact\"}"), "{json}");
     }
 
     #[test]

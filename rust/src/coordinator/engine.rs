@@ -9,6 +9,7 @@
 //! can still drive it directly ([`Engine::run_to_completion`]).
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::error::{EngineError, FailReason};
 use super::kv_pool::PagedKvManager;
 use super::metrics::Metrics;
 use super::policy::{SchedulePolicy, TickState};
@@ -22,7 +23,9 @@ use super::EngineConfig;
 use crate::kernels::NumericsMode;
 use crate::model::{BackendModel, ForwardScratch, KvCache};
 use crate::runtime::{CompiledModel, DeviceKv};
+use crate::util::fault;
 use anyhow::Result;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -293,6 +296,14 @@ pub struct Engine<B: Backend> {
     /// Speculative-round inputs, persisted like the chunk buffers.
     tick_last: Vec<u32>,
     tick_budgets: Vec<usize>,
+    /// Requests marked for per-request failure during the current tick
+    /// (id, reason), retired after the forward/spec loops release their
+    /// borrows. Persistent so the steady-state tick allocates nothing.
+    tick_failed: Vec<(u64, FailReason)>,
+    /// Latched when a panic unwound out of the backend and was
+    /// contained: the engine keeps serving, but degraded (no
+    /// speculation, no prefix insertion).
+    panicked: bool,
 }
 
 impl<B: Backend> Engine<B> {
@@ -339,6 +350,8 @@ impl<B: Backend> Engine<B> {
             tick_normal_idx: Vec::new(),
             tick_last: Vec::new(),
             tick_budgets: Vec::new(),
+            tick_failed: Vec::new(),
+            panicked: false,
         }
     }
 
@@ -358,10 +371,85 @@ impl<B: Backend> Engine<B> {
             return Err(SubmitError::DuplicateId);
         }
         let r = self.queue.push(req);
-        if r.is_err() {
+        if let Err(e) = &r {
             self.metrics.rejected += 1;
+            if matches!(e, SubmitError::Full) {
+                // queue-depth admission control shed this submission
+                self.metrics.shed_total += 1;
+            }
         }
         r
+    }
+
+    /// Suggested client back-off after a queue-full rejection, in
+    /// seconds: the time to drain the current backlog one admission
+    /// wave (`max_batch` requests, one mean end-to-end latency each) at
+    /// a time. Falls back to a small constant before any request has
+    /// completed.
+    pub fn retry_after_hint(&self) -> f64 {
+        let waves = (self.queue.len() / self.cfg.max_batch.max(1)) as f64 + 1.0;
+        let wave_secs = if self.metrics.e2e.count() > 0 {
+            self.metrics.e2e.mean().as_secs_f64()
+        } else {
+            0.05
+        };
+        waves * wave_secs
+    }
+
+    /// Whether the engine is currently serving degraded: a contained
+    /// backend panic latched it, or pool pressure crossed
+    /// [`EngineConfig::pressure_threshold`]. Degraded ticks disable
+    /// speculation and prefix-cache insertion — neither changes any
+    /// request's tokens — and count into [`Metrics::degraded_ticks`].
+    pub fn is_degraded(&self) -> bool {
+        self.panicked || self.under_pressure()
+    }
+
+    fn under_pressure(&self) -> bool {
+        let thr = self.cfg.pressure_threshold;
+        if thr <= 0.0 {
+            return false;
+        }
+        let free = self.kv.free_blocks();
+        let total = free + self.kv.used_blocks();
+        (free as f64) < thr * total as f64
+    }
+
+    /// Terminate one request with a contained failure: release its KV
+    /// blocks, emit the terminal `Failed(reason)` response, count it.
+    /// No-op for ids the engine no longer runs (already retired).
+    fn fail_by_id(&mut self, id: u64, reason: FailReason, events: &mut Vec<Event>) {
+        if let Some(idx) = self.running.iter().position(|r| r.req.id == id) {
+            self.metrics.requests_failed += 1;
+            let resp = self.retire(idx, FinishReason::Failed(reason));
+            events.push(Event::Finished(resp));
+        }
+    }
+
+    /// Fail every request the engine currently knows (queued and
+    /// running) with `Failed(reason)`, returning their terminal events
+    /// plus anything already pending. The server's drain-deadline path
+    /// uses this with [`FailReason::Shutdown`] so no handle ever hangs.
+    pub fn abort_all(&mut self, reason: FailReason) -> Vec<Event> {
+        let mut events = std::mem::take(&mut self.pending);
+        while let Some(req) = self.queue.try_pop() {
+            self.metrics.requests_failed += 1;
+            let waited = req.arrived.elapsed().as_secs_f64();
+            events.push(Event::Finished(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                finish: FinishReason::Failed(reason),
+                queue_secs: waited,
+                ttft_secs: 0.0,
+                e2e_secs: waited,
+            }));
+        }
+        while !self.running.is_empty() {
+            self.metrics.requests_failed += 1;
+            let resp = self.retire(0, FinishReason::Failed(reason));
+            events.push(Event::Finished(resp));
+        }
+        events
     }
 
     pub fn has_work(&self) -> bool {
@@ -431,8 +519,18 @@ impl<B: Backend> Engine<B> {
     /// chunking-independent and the forward core is per-token
     /// bit-identical to the sequential loop, so generations are
     /// token-identical to per-sequence serving under any policy.
-    pub fn step(&mut self) -> Result<Vec<Event>> {
+    ///
+    /// Failure containment: recoverable faults (backend errors,
+    /// contained panics, pool exhaustion beyond admission, cache-import
+    /// mismatch, spec-rollback violations) terminate only the affected
+    /// request(s) with `Failed(reason)` — see [`super::error`]. `Err`
+    /// here means [`EngineError::PoolCorrupted`]: containment left the
+    /// pool inconsistent and serving must stop.
+    pub fn step(&mut self) -> Result<Vec<Event>, EngineError> {
         let mut events = std::mem::take(&mut self.pending);
+        debug_assert!(self.tick_failed.is_empty());
+        let mut failed = std::mem::take(&mut self.tick_failed);
+        let mut contained_fault = false;
 
         // ---- deadline expiry (queued + running) ------------------------
         let t_tick = now();
@@ -493,20 +591,68 @@ impl<B: Backend> Engine<B> {
             }
             self.metrics.record_queue(waited);
             events.push(Event::Started { id: req.id, queue_secs: waited.as_secs_f64() });
-            let mut cache = self.backend.new_cache()?;
+            let mut cache = match self.backend.new_cache() {
+                Ok(c) => c,
+                Err(_) => {
+                    // backend cannot build a cache for this request:
+                    // hand its admission commitment straight back and
+                    // fail only this request — the engine keeps serving
+                    self.kv.release(req.id);
+                    self.metrics.requests_failed += 1;
+                    contained_fault = true;
+                    events.push(Event::Finished(Response {
+                        id: req.id,
+                        // lint:allow(hot-path-no-alloc) empty Vec — rare
+                        // containment control path, no allocation.
+                        tokens: Vec::new(),
+                        finish: FinishReason::Failed(FailReason::Backend),
+                        queue_secs: waited.as_secs_f64(),
+                        ttft_secs: 0.0,
+                        e2e_secs: req.arrived.elapsed().as_secs_f64(),
+                    }));
+                    continue;
+                }
+            };
             let mut prompt_idx = 0;
             let mut prefix_hit = false;
+            let mut import_fault = false;
             if let Some(pos) = plans.iter().position(|(id, _, _)| *id == req.id) {
                 let (_, matched, snap) = plans.swap_remove(pos);
                 if self.backend.import_kv_prefix(&mut cache, &snap, matched) {
-                    // the matched prefix's KV is already in place:
-                    // prefill resumes at `matched`
-                    prompt_idx = matched;
-                    prefix_hit = true;
+                    if fault::point("prefix_cache.import") {
+                        // injected import mismatch: the snapshot landed
+                        // in the cache but post-import validation
+                        // (simulated) rejected it — serving on would
+                        // risk non-identical streams, so the request
+                        // terminates instead
+                        self.metrics.faults_injected += 1;
+                        import_fault = true;
+                    } else {
+                        // the matched prefix's KV is already in place:
+                        // prefill resumes at `matched`
+                        prompt_idx = matched;
+                        prefix_hit = true;
+                    }
                 }
                 // else: backend cannot import — prefill everything; the
                 // shared block accounting still holds (physical KV is
                 // per-sequence, blocks are capacity bookkeeping)
+            }
+            if import_fault {
+                self.kv.release(req.id);
+                self.metrics.requests_failed += 1;
+                contained_fault = true;
+                events.push(Event::Finished(Response {
+                    id: req.id,
+                    // lint:allow(hot-path-no-alloc) empty Vec — chaos-only
+                    // containment path, no allocation.
+                    tokens: Vec::new(),
+                    finish: FinishReason::Failed(FailReason::CacheImport),
+                    queue_secs: waited.as_secs_f64(),
+                    ttft_secs: 0.0,
+                    e2e_secs: req.arrived.elapsed().as_secs_f64(),
+                }));
+                continue;
             }
             self.running.push(Running {
                 sampler: Sampler::new(req.sampling),
@@ -522,6 +668,19 @@ impl<B: Backend> Engine<B> {
             });
         }
 
+        // ---- graceful degradation under pressure -----------------------
+        // Pool pressure past the configured threshold (or the contained-
+        // panic latch) turns off speculation and prefix insertion for
+        // the tick: both are throughput optimizations whose absence
+        // never changes a request's tokens, and both consume extra pool
+        // headroom (draft overshoot, pinned prefixes) exactly when the
+        // pool has none. Re-evaluated every tick, so recovery is
+        // automatic once pressure recedes.
+        let degraded = self.is_degraded();
+        if degraded && !self.running.is_empty() {
+            self.metrics.degraded_ticks += 1;
+        }
+
         // ---- partition the running set ---------------------------------
         // Greedy decoding sequences take the speculative draft/verify
         // path when the backend offers one; prefilling and non-greedy
@@ -531,7 +690,7 @@ impl<B: Backend> Engine<B> {
         // them.
         self.tick_spec_idx.clear();
         self.tick_normal_idx.clear();
-        let speculates = self.backend.speculates();
+        let speculates = self.backend.speculates() && !degraded;
         for (i, run) in self.running.iter().enumerate() {
             if speculates
                 && !run.prefilling()
@@ -579,6 +738,10 @@ impl<B: Backend> Engine<B> {
                     let end = (run.prompt_idx + chunk_len).min(run.req.prompt.len());
                     chunk.extend_from_slice(&run.req.prompt[run.prompt_idx..end]);
                 } else {
+                    // lint:allow(no-panic-serve) load-bearing: a decoding
+                    // sequence always holds ≥1 generated token (it left
+                    // prefill by sampling one); empty here is an engine
+                    // bug, not a workload condition.
                     chunk.push(*run.generated.last().expect("decoding sequence has a token"));
                 }
                 // logits are needed only where something will sample:
@@ -609,15 +772,63 @@ impl<B: Backend> Engine<B> {
                     }
                 }
             }
-            let result = self.backend.forward_tick(
-                &chunk_refs,
-                &mut caches,
-                &self.tick_need,
-                &mut self.scratch,
-            );
+            let mut panicked_now = false;
+            let result = if fault::point("engine.forward_tick") {
+                self.metrics.faults_injected += 1;
+                // lint:allow(hot-path-no-alloc) chaos-only containment path
+                Err(anyhow::anyhow!("injected: backend forward fault"))
+            } else {
+                let backend = &self.backend;
+                let need = &self.tick_need;
+                let scratch = &mut self.scratch;
+                // Unwind safety: the closure borrows disjoint engine
+                // fields; on a panic every participating request retires
+                // (its cache is discarded with it) and Scratch carries no
+                // cross-tick state by contract, so nothing broken
+                // survives the unwind.
+                match catch_unwind(AssertUnwindSafe(|| {
+                    if fault::point("engine.forward_panic") {
+                        self.metrics.faults_injected += 1;
+                        // lint:allow(no-panic-serve) chaos-only injected
+                        // panic exercising the catch_unwind backstop.
+                        panic!("injected: forward panic");
+                    }
+                    backend.forward_tick(&chunk_refs, &mut caches, need, scratch)
+                })) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        panicked_now = true;
+                        // lint:allow(hot-path-no-alloc) containment path
+                        Err(anyhow::anyhow!("contained panic in forward_tick"))
+                    }
+                }
+            };
             stash_mut_buf(&mut self.tick_caches, caches);
             stash_slice_buf(&mut self.tick_chunk_refs, chunk_refs);
-            let all_logits = result?;
+            let all_logits = match result {
+                Ok(l) => l,
+                Err(_) => {
+                    // The fused forward failed: the failure domain is the
+                    // whole tick's normal batch — once a shared forward
+                    // dies there is no per-sequence attribution. Queued
+                    // and speculative-path sequences are untouched. The
+                    // empty logits vector makes the sampling loop below a
+                    // no-op (zip against empty).
+                    if panicked_now {
+                        self.panicked = true;
+                    }
+                    contained_fault = true;
+                    let reason =
+                        if panicked_now { FailReason::Panic } else { FailReason::Backend };
+                    // deferred into `failed`: retiring here would shift
+                    // `running` and invalidate `tick_spec_idx` before the
+                    // speculative section below consumes it
+                    for &i in &self.tick_normal_idx {
+                        failed.push((self.running[i].req.id, reason));
+                    }
+                    Vec::new()
+                }
+            };
 
             // sample: sequences that just completed their prompt emit
             // their first token, decoding ones their next — mid-prompt
@@ -635,8 +846,10 @@ impl<B: Backend> Engine<B> {
                     } else {
                         // the prompt's KV is fully written and the first
                         // decode token's is not yet — the exact state the
-                        // prefix cache snapshots
-                        if self.prefix.wants(&run.req.prompt) {
+                        // prefix cache snapshots. Skipped while degraded:
+                        // pinning prefixes costs pool headroom exactly
+                        // when there is none (hits still serve).
+                        if !degraded && self.prefix.wants(&run.req.prompt) {
                             if let Some(snap) =
                                 self.backend.snapshot_kv_prefix(&run.cache, run.req.prompt.len())
                             {
@@ -649,15 +862,31 @@ impl<B: Backend> Engine<B> {
                                 );
                             }
                         }
+                        // lint:allow(no-panic-serve) load-bearing: need[b]
+                        // was true for this chunk, so the backend contract
+                        // guarantees logits — absence is an engine bug.
                         Some(logits.as_ref().expect("completing chunk has logits"))
                     }
                 } else {
+                    // lint:allow(no-panic-serve) load-bearing, as above.
                     Some(logits.as_ref().expect("decoding chunk has logits"))
                 };
                 if let Some(logits) = sample_from {
                     let tok = run.sampler.sample(logits);
+                    let appended = if fault::point("kv_pool.append") {
+                        self.metrics.faults_injected += 1;
+                        false
+                    } else {
+                        self.kv.append_token(run.req.id)
+                    };
+                    if !appended {
+                        // beyond the admission-time commitment: the pool
+                        // refused the position, so this request (alone)
+                        // terminates once the loop releases its borrows
+                        failed.push((run.req.id, FailReason::PoolExhausted));
+                        continue;
+                    }
                     run.generated.push(tok);
-                    self.kv.append_token(run.req.id);
                     let t_emit = now();
                     if run.first_token_at.is_none() {
                         run.first_token_at = Some(t_emit);
@@ -688,6 +917,8 @@ impl<B: Backend> Engine<B> {
             self.tick_budgets.clear();
             for &i in &self.tick_spec_idx {
                 let run = &self.running[i];
+                // lint:allow(no-panic-serve) load-bearing: spec routing
+                // only picks decoding sequences, which hold ≥1 token.
                 self.tick_last.push(*run.generated.last().expect("decoding sequence has a token"));
                 // remaining budget is ≥ 1: exhausted sequences retired
                 // at the end of the tick that exhausted them
@@ -703,15 +934,74 @@ impl<B: Backend> Engine<B> {
                     }
                 }
             }
-            let result = self
-                .backend
-                .spec_tick(&self.tick_last, &mut caches, &self.tick_budgets, &mut self.scratch);
+            let mut panicked_now = false;
+            let result = if fault::point("engine.spec_tick") {
+                self.metrics.faults_injected += 1;
+                // lint:allow(hot-path-no-alloc) chaos-only containment path
+                Some(Err(anyhow::anyhow!("injected: spec_tick fault")))
+            } else {
+                let backend = &self.backend;
+                let last = &self.tick_last;
+                let budgets = &self.tick_budgets;
+                let scratch = &mut self.scratch;
+                // Unwind safety: same argument as the normal forward —
+                // every spec participant retires on a panic and Scratch
+                // is stateless across ticks by contract.
+                match catch_unwind(AssertUnwindSafe(|| {
+                    backend.spec_tick(last, &mut caches, budgets, scratch)
+                })) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        panicked_now = true;
+                        // lint:allow(hot-path-no-alloc) containment path
+                        Some(Err(anyhow::anyhow!("contained panic in spec_tick")))
+                    }
+                }
+            };
             stash_mut_buf(&mut self.tick_caches, caches);
-            let outcomes = result.expect("speculating backend must implement spec_tick")?;
+            let outcomes = match result {
+                Some(Ok(o)) => o,
+                // A failed or panicked round — or a speculating backend
+                // without spec_tick, a trait-contract violation contained
+                // the same way — fails the whole spec batch: the fused
+                // draft/verify forward offers no per-sequence attribution.
+                Some(Err(_)) | None => {
+                    if panicked_now {
+                        self.panicked = true;
+                    }
+                    contained_fault = true;
+                    let reason =
+                        if panicked_now { FailReason::Panic } else { FailReason::Backend };
+                    // deferred like the normal-batch failure above: all
+                    // contained failures retire together once the tick's
+                    // index buffers are dead
+                    for &i in &self.tick_spec_idx {
+                        failed.push((self.running[i].req.id, reason));
+                    }
+                    Vec::new()
+                }
+            };
 
             let mut emitted = 0usize;
             for (&i, outcome) in self.tick_spec_idx.iter().zip(&outcomes) {
                 let run = &mut self.running[i];
+                // Rollback-protocol validation: a round must emit between
+                // 1 and budget tokens with consistent accept accounting.
+                // A violating outcome would corrupt the KV ledger below,
+                // so it is contained as a per-request failure instead.
+                let budget = run.req.max_new_tokens - run.generated.len();
+                let valid = !outcome.tokens.is_empty()
+                    && outcome.tokens.len() <= budget
+                    && outcome.accepted <= outcome.drafted
+                    && outcome.tokens.len() <= outcome.accepted + 1;
+                let injected = fault::point("engine.spec_rollback");
+                if injected {
+                    self.metrics.faults_injected += 1;
+                }
+                if !valid || injected {
+                    failed.push((run.req.id, FailReason::SpecRollback));
+                    continue;
+                }
                 // Pool bookkeeping mirrors the physical overshoot: the
                 // round transiently occupied `drafted + 1` positions
                 // past the pre-round length, then the backend rolled the
@@ -720,11 +1010,26 @@ impl<B: Backend> Engine<B> {
                 // rollback path on the paged pool, re-crediting the
                 // blocks the rejected tail had claimed.
                 let written = outcome.drafted + 1;
+                let mut append_ok = true;
                 for _ in 0..written {
-                    // within the admission-time commitment: the draft
-                    // allotment is clamped to budget − 1
-                    let ok = self.kv.append_token(run.req.id);
-                    assert!(ok, "speculative round exceeded its KV commitment");
+                    // within the admission-time commitment (the draft
+                    // allotment is clamped to budget − 1) unless the pool
+                    // refuses — then this request alone terminates and
+                    // retiring releases the partially appended positions
+                    let ok = if fault::point("kv_pool.append.spec") {
+                        self.metrics.faults_injected += 1;
+                        false
+                    } else {
+                        self.kv.append_token(run.req.id)
+                    };
+                    if !ok {
+                        append_ok = false;
+                        break;
+                    }
+                }
+                if !append_ok {
+                    failed.push((run.req.id, FailReason::PoolExhausted));
+                    continue;
                 }
                 // emission stops at EOS — tokens past it were verified
                 // but must never surface (the sequence retires below)
@@ -745,6 +1050,18 @@ impl<B: Backend> Engine<B> {
             self.metrics.record_batch_step(t0.elapsed(), self.tick_spec_idx.len(), emitted);
         }
 
+        // ---- contained per-request failures ----------------------------
+        // Marked during the forward/spec loops (which hold borrows into
+        // `running`); retiring here returns every KV block in the same
+        // tick the fault happened.
+        if !failed.is_empty() {
+            contained_fault = true;
+            for (id, reason) in failed.drain(..) {
+                self.fail_by_id(id, reason, &mut events);
+            }
+        }
+        self.tick_failed = failed;
+
         // ---- finish checks + retire ------------------------------------
         let mut idx = 0;
         while idx < self.running.len() {
@@ -758,6 +1075,16 @@ impl<B: Backend> Engine<B> {
                 events.push(Event::Finished(resp));
             } else {
                 idx += 1;
+            }
+        }
+
+        // ---- post-containment pool audit -------------------------------
+        // The only fatal outcome: a contained fault left the pool's
+        // accounting inconsistent. Everything else already terminated
+        // per-request above and serving continues.
+        if contained_fault {
+            if let Err(detail) = self.kv.check_invariants() {
+                return Err(EngineError::PoolCorrupted(detail));
             }
         }
         Ok(events)
@@ -1220,5 +1547,188 @@ mod tests {
             out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
         };
         assert_eq!(run(SchedulePolicyKind::Fixed), run(SchedulePolicyKind::Adaptive));
+    }
+
+    // ---- fault containment ---------------------------------------------
+
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    enum Sabotage {
+        Error,
+        Panic,
+    }
+
+    /// CpuBackend wrapper whose next `forward_tick` can be armed to
+    /// fail or panic exactly once — the containment paths' test double.
+    struct SabotageBackend {
+        inner: CpuBackend,
+        mode: std::cell::Cell<Option<Sabotage>>,
+    }
+
+    impl Backend for SabotageBackend {
+        type Kv = KvCache;
+        type Scratch = ForwardScratch;
+
+        fn capacity(&self) -> usize {
+            self.inner.capacity()
+        }
+
+        fn new_cache(&self) -> Result<KvCache> {
+            self.inner.new_cache()
+        }
+
+        fn forward_tick(
+            &self,
+            chunks: &[&[u32]],
+            caches: &mut [&mut KvCache],
+            need: &[bool],
+            scratch: &mut ForwardScratch,
+        ) -> Result<Vec<Option<Vec<f32>>>> {
+            match self.mode.take() {
+                Some(Sabotage::Error) => anyhow::bail!("sabotage: injected forward error"),
+                Some(Sabotage::Panic) => panic!("sabotage: injected forward panic"),
+                None => self.inner.forward_tick(chunks, caches, need, scratch),
+            }
+        }
+
+        fn label(&self) -> &'static str {
+            "sabotage"
+        }
+    }
+
+    fn sabotage_engine(cfg: EngineConfig) -> Engine<SabotageBackend> {
+        let mut mcfg = presets::by_name("opt-nano").unwrap();
+        mcfg.vocab = 64;
+        mcfg.max_seq = 48;
+        let model = Model::new(mcfg.clone(), random_weights(&mcfg, 42));
+        let backend = SabotageBackend {
+            inner: CpuBackend(BackendModel::dense(&model)),
+            mode: std::cell::Cell::new(None),
+        };
+        Engine::new(backend, cfg)
+    }
+
+    #[test]
+    fn forward_error_fails_tick_batch_but_engine_survives() {
+        let mut e = sabotage_engine(no_eos(4));
+        e.submit(req(0, 4, 10)).unwrap();
+        e.submit(req(1, 4, 10)).unwrap();
+        e.step().unwrap(); // both admitted, prefilled, first token out
+        e.backend().mode.set(Some(Sabotage::Error));
+        let evs = e.step().unwrap();
+        let failed: Vec<u64> = evs
+            .iter()
+            .filter_map(|ev| match ev {
+                Event::Finished(r) if r.finish == FinishReason::Failed(FailReason::Backend) => {
+                    Some(r.id)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(failed.len(), 2, "a batched forward shares one failure domain");
+        assert_eq!(e.metrics.requests_failed, 2);
+        assert_eq!(e.kv().used_blocks(), 0, "failed requests must return their blocks");
+        e.check_invariants().unwrap();
+        assert!(!e.is_degraded(), "a plain backend error must not latch degradation");
+        // the engine keeps serving
+        e.submit(req(2, 4, 4)).unwrap();
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert_eq!(e.metrics.completed, 1);
+    }
+
+    #[test]
+    fn contained_panic_latches_degraded_but_keeps_serving() {
+        let mut e = sabotage_engine(no_eos(2));
+        e.submit(req(0, 4, 10)).unwrap();
+        e.step().unwrap();
+        e.backend().mode.set(Some(Sabotage::Panic));
+        let evs = e.step().unwrap(); // panic contained at the tick boundary
+        let finishes: Vec<FinishReason> = evs
+            .iter()
+            .filter_map(|ev| match ev {
+                Event::Finished(r) => Some(r.finish),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(finishes, vec![FinishReason::Failed(FailReason::Panic)]);
+        assert!(e.is_degraded(), "a contained panic must latch degraded mode");
+        assert_eq!(e.kv().used_blocks(), 0);
+        e.check_invariants().unwrap();
+        // degraded, not dead: new work still completes (spec and
+        // prefix-insert are off, neither changes tokens)
+        e.submit(req(1, 4, 6)).unwrap();
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::Length);
+        assert!(e.metrics.degraded_ticks > 0, "degraded serving must be counted");
+    }
+
+    #[test]
+    fn abort_all_terminates_queued_and_running_and_frees_blocks() {
+        let mut e = cpu_engine_cfg(no_eos(1));
+        e.submit(req(0, 4, 30)).unwrap();
+        e.step().unwrap(); // admits 0 into the only slot
+        e.submit(req(1, 4, 4)).unwrap(); // stays queued
+        let evs = e.abort_all(FailReason::Shutdown);
+        let mut finished: Vec<(u64, FinishReason)> = evs
+            .iter()
+            .filter_map(|ev| match ev {
+                Event::Finished(r) => Some((r.id, r.finish)),
+                _ => None,
+            })
+            .collect();
+        finished.sort_by_key(|(id, _)| *id);
+        assert_eq!(
+            finished,
+            vec![
+                (0, FinishReason::Failed(FailReason::Shutdown)),
+                (1, FinishReason::Failed(FailReason::Shutdown)),
+            ]
+        );
+        assert!(!e.has_work(), "abort_all must leave no queued or running work");
+        assert_eq!(e.metrics.requests_failed, 2);
+        assert_eq!(e.kv().used_blocks(), 0);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_degradation_counts_and_recovers() {
+        let mut cfg = no_eos(4);
+        // 64-block pool: any real occupancy pushes free/total under 0.9
+        cfg.pressure_threshold = 0.9;
+        let mut e = cpu_engine_cfg(cfg);
+        for id in 0..4 {
+            e.submit(req(id, 8, 8)).unwrap();
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|r| r.finish == FinishReason::Length));
+        assert!(
+            e.metrics.degraded_ticks > 0,
+            "a 0.9 free-fraction threshold must trip under load"
+        );
+        assert!(!e.is_degraded(), "pressure degradation must clear once the pool drains");
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shed_accounting_distinguishes_queue_full_from_unservable() {
+        let mut cfg = no_eos(1);
+        cfg.max_queue = 1;
+        let mut e = cpu_engine_cfg(cfg);
+        // unservable (empty prompt): rejected but not shed — retrying is useless
+        assert_eq!(e.submit(Request::new(0, vec![], 4)), Err(SubmitError::Full));
+        assert_eq!(e.metrics.shed_total, 0);
+        // fill the queue, then overflow it: that is load shedding
+        e.submit(req(1, 4, 4)).unwrap();
+        assert_eq!(e.submit(req(2, 4, 4)), Err(SubmitError::Full));
+        assert_eq!(e.metrics.rejected, 2);
+        assert_eq!(e.metrics.shed_total, 1);
+        let hint = e.retry_after_hint();
+        assert!(hint > 0.0, "shed rejections must carry a positive back-off hint");
+        // a deeper backlog means a longer hint
+        let empty_hint = cpu_engine_cfg(no_eos(1)).retry_after_hint();
+        assert!(hint >= empty_hint);
     }
 }

@@ -1,0 +1,135 @@
+//! Error taxonomy for the serving path.
+//!
+//! The coordinator distinguishes three failure tiers:
+//!
+//! 1. **Recoverable, per-request** — [`FailReason`]. The offending
+//!    request terminates with `FinishReason::Failed(reason)`, every one
+//!    of its paged-KV blocks returns to the free list, and the engine
+//!    keeps serving the rest of the batch. Backend forward errors,
+//!    pool exhaustion beyond the admission commitment, prefix-cache
+//!    import mismatches, and speculative-rollback protocol violations
+//!    all land here.
+//! 2. **Contained engine faults** — a panic that unwinds out of
+//!    `Backend::forward_tick` / `spec_tick` is caught at the tick
+//!    boundary, the participating requests fail with
+//!    [`FailReason::Panic`], and the engine is marked *degraded*
+//!    (speculation and prefix-cache insertion stay off) but alive.
+//! 3. **Fatal** — [`EngineError`]. Returned from `Engine::step` only
+//!    when the paged-KV pool's own invariants no longer hold after a
+//!    containment attempt; serving cannot continue safely.
+//!
+//! Load-bearing `assert!`s (pool accounting, block-table consistency)
+//! stay as asserts on purpose: they fire only on coordinator bugs, not
+//! on workload- or backend-induced conditions, and masking them would
+//! serve corrupt state. See CONTRIBUTING.md "Failure containment
+//! invariants" for the full table.
+
+use std::fmt;
+
+/// Why a single request was terminated with
+/// `FinishReason::Failed(reason)`. `Copy` so `FinishReason` (and every
+/// type embedding it: `Response`, `Event`) stays `Copy`-friendly and
+/// pattern-matchable by value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FailReason {
+    /// `Backend::forward_tick` / `new_cache` / `spec_tick` returned an
+    /// error; the whole tick's batch shares this failure domain
+    /// (per-sequence attribution is impossible once a fused forward
+    /// fails).
+    Backend,
+    /// `PagedKvManager::append_token` refused a token beyond the
+    /// sequence's admission commitment — the request asked for more KV
+    /// than it reserved.
+    PoolExhausted,
+    /// An imported prefix-cache snapshot failed post-import validation
+    /// against the backend cache.
+    CacheImport,
+    /// A speculative round broke the rollback protocol (emitted zero
+    /// tokens, overran its budget, or accept/draft accounting went
+    /// inconsistent).
+    SpecRollback,
+    /// A panic unwound out of the backend and was contained at the
+    /// tick boundary; the engine continues degraded.
+    Panic,
+    /// The server's drain deadline expired during shutdown before the
+    /// request finished.
+    Shutdown,
+}
+
+impl FailReason {
+    /// Stable lowercase label for logs, metrics, and bench records.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FailReason::Backend => "backend",
+            FailReason::PoolExhausted => "pool_exhausted",
+            FailReason::CacheImport => "cache_import",
+            FailReason::SpecRollback => "spec_rollback",
+            FailReason::Panic => "panic",
+            FailReason::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl fmt::Display for FailReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Fatal engine failure: `Engine::step` returns this only when serving
+/// cannot continue safely. Everything recoverable is a [`FailReason`]
+/// on the individual request instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The paged-KV pool failed `check_invariants` after a fault was
+    /// contained: block accounting is no longer trustworthy, so every
+    /// subsequent admission or append could corrupt live sequences.
+    PoolCorrupted(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::PoolCorrupted(detail) => {
+                write!(f, "paged-KV pool invariants violated after fault containment: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fail_reason_labels_are_stable() {
+        let all = [
+            FailReason::Backend,
+            FailReason::PoolExhausted,
+            FailReason::CacheImport,
+            FailReason::SpecRollback,
+            FailReason::Panic,
+            FailReason::Shutdown,
+        ];
+        let labels: Vec<&str> = all.iter().map(|r| r.label()).collect();
+        assert_eq!(
+            labels,
+            ["backend", "pool_exhausted", "cache_import", "spec_rollback", "panic", "shutdown"]
+        );
+        // labels are unique (they key failure counters downstream)
+        let set: std::collections::HashSet<&str> = labels.iter().copied().collect();
+        assert_eq!(set.len(), all.len());
+    }
+
+    #[test]
+    fn engine_error_displays_detail() {
+        let e = EngineError::PoolCorrupted("seq 3 holds freed block".into());
+        let msg = format!("{e}");
+        assert!(msg.contains("invariants"), "{msg}");
+        assert!(msg.contains("seq 3"), "{msg}");
+        // it satisfies std::error::Error so `?` into anyhow works
+        let _: &dyn std::error::Error = &e;
+    }
+}

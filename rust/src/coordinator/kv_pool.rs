@@ -136,10 +136,14 @@ impl PagedKvManager {
     /// pending-allocation budget. The `Σ pending ≤ free` invariant
     /// guarantees the pop succeeds whenever the budget is positive.
     fn take_free_for(&mut self, seq: SeqId) -> u32 {
+        // lint:allow(no-panic-serve) accounting invariant: allocating for
+        // a seq with no budget entry is pool corruption, not a load fault
         let p = self.pending.get_mut(&seq).expect("seq has no allocation budget");
         assert!(*p > 0, "seq {seq} exceeded its pending-allocation budget");
         *p -= 1;
         self.pending_total -= 1;
+        // lint:allow(no-panic-serve) accounting invariant: Σ pending ≤ free
+        // makes an empty free list here impossible without corruption
         let b = self.free.pop().expect("pending accounting guarantees a free block");
         debug_assert_eq!(self.refs[b as usize], 0);
         self.refs[b as usize] = 1;
@@ -213,8 +217,11 @@ impl PagedKvManager {
         self.pending_total += worst - shared_full;
         self.lens.insert(seq, prompt_tokens);
         if prompt_tokens > shared_tokens && shared_tokens % self.block_size != 0 {
+            // lint:allow(no-panic-serve) shared_tokens > 0 is asserted
+            // above, so the adopted table is non-empty by construction
             let old = *table.last().unwrap();
             let nb = self.take_free_for(seq);
+            // lint:allow(no-panic-serve) same non-empty table as two lines up
             *table.last_mut().unwrap() = nb;
             self.deref_block(old);
             self.cow_copies += 1;
@@ -235,6 +242,8 @@ impl PagedKvManager {
     /// exhaustion, which the pending-allocation accounting makes
     /// impossible.
     pub fn append_token(&mut self, seq: SeqId) -> bool {
+        // lint:allow(no-panic-serve) accounting invariant: appending to a
+        // seq the pool never admitted is an engine bug, not a load fault
         let len = *self.lens.get(&seq).expect("unknown seq");
         let need = (len + 1).div_ceil(self.block_size);
         if need > self.commits[&seq] {
@@ -242,16 +251,19 @@ impl PagedKvManager {
         }
         if self.tables[&seq].len() < need {
             let b = self.take_free_for(seq);
+            // lint:allow(no-panic-serve) `lens` and `tables` share admission
             self.tables.get_mut(&seq).unwrap().push(b);
         }
         let write_idx = len / self.block_size;
         let cur = self.tables[&seq][write_idx];
         if self.refs[cur as usize] > 1 {
             let nb = self.take_free_for(seq);
+            // lint:allow(no-panic-serve) `lens` and `tables` share admission
             self.tables.get_mut(&seq).unwrap()[write_idx] = nb;
             self.deref_block(cur);
             self.cow_copies += 1;
         }
+        // lint:allow(no-panic-serve) `lens` entry was read at function entry
         *self.lens.get_mut(&seq).unwrap() = len + 1;
         true
     }
@@ -271,6 +283,8 @@ impl PagedKvManager {
     /// block that is still shared or pinned would corrupt another
     /// sequence's table, so that is asserted, not handled.
     pub fn truncate_to(&mut self, seq: SeqId, tokens: usize) {
+        // lint:allow(no-panic-serve) accounting invariant: rolling back a
+        // seq the pool never admitted is an engine bug, not a load fault
         let len = *self.lens.get(&seq).expect("unknown seq");
         assert!(tokens <= len, "truncate_to({tokens}) beyond stored {len}");
         if tokens == len {
@@ -278,9 +292,12 @@ impl PagedKvManager {
         }
         // same floor as admit(): even an empty sequence keeps one block
         let need = self.blocks_for(tokens.max(1));
+        // lint:allow(no-panic-serve) `lens` and `tables` share admission
         let table = self.tables.get_mut(&seq).expect("unknown seq");
         let mut freed = 0usize;
         while table.len() > need {
+            // lint:allow(no-panic-serve) accounting invariant: the loop
+            // bound keeps pops within the table's own recorded length
             let b = table.pop().expect("table shorter than its own accounting");
             assert_eq!(
                 self.pins[b as usize], 0,
@@ -295,9 +312,12 @@ impl PagedKvManager {
             freed += 1;
         }
         if freed > 0 {
+            // lint:allow(no-panic-serve) `pending` entries live as long as
+            // the seq's table, checked admitted at function entry
             *self.pending.get_mut(&seq).expect("unknown seq") += freed;
             self.pending_total += freed;
         }
+        // lint:allow(no-panic-serve) `lens` entry was read at function entry
         *self.lens.get_mut(&seq).unwrap() = tokens;
     }
 
@@ -319,6 +339,8 @@ impl PagedKvManager {
             self.refs[b as usize] += 1;
         }
         if let Some(donor) = grant {
+            // lint:allow(no-panic-serve) `grant` was filtered on the
+            // donor's `pending` entry existing a few lines above
             *self.pending.get_mut(&donor).unwrap() += 1;
             self.pending_total += 1;
         }

@@ -80,6 +80,29 @@ pub struct Metrics {
     /// the target's correction/bonus token each round; `emitted / ticks`
     /// is the effective tokens-per-verify-pass multiplier.
     pub spec_emitted_total: u64,
+    /// Requests terminated by a contained serving fault
+    /// (`FinishReason::Failed(_)`): backend errors, pool exhaustion
+    /// beyond admission, cache-import mismatch, spec-rollback
+    /// violations, contained panics, and drain-deadline shutdowns.
+    pub requests_failed: u64,
+    /// Submissions shed by queue-depth admission control
+    /// (`SubmitError::Full` → `Event::Rejected { retry_after }`).
+    pub shed_total: u64,
+    /// Ticks served in degraded mode — pool pressure past
+    /// `EngineConfig::pressure_threshold` or the post-panic latch —
+    /// with speculation and prefix insertion disabled.
+    pub degraded_ticks: u64,
+    /// Faults fired by `util::fault` injection points (`chaos` builds;
+    /// always 0 in production builds).
+    pub faults_injected: u64,
+    /// Non-terminal events dropped by the `DropOldest` backpressure
+    /// policy on slow consumers (terminal events are never dropped).
+    pub events_dropped: u64,
+    /// Gauge: free paged-KV blocks when the server drained — equal to
+    /// `kv_blocks_total` unless blocks leaked (tests pin equality).
+    pub kv_blocks_free_final: u64,
+    /// Gauge: total paged-KV blocks in the pool.
+    pub kv_blocks_total: u64,
     wall: Option<Stopwatch>,
 }
 
@@ -230,7 +253,9 @@ impl Metrics {
              max_tick_chunk={}\n\
              prefix  : hits={} misses={} inserts={} evicts={} reused_toks={} \
              prefill_toks={} pinned_blocks={}\n\
-             server  : sinks_peak={} sinks_open_final={}\n\
+             server  : sinks_peak={} sinks_open_final={} events_dropped={}\n\
+             faults  : failed={} shed={} degraded_ticks={} injected={} \
+             kv_free_final={} kv_total={}\n\
              queue   : {}\n\
              ttft    : {}\n\
              ttft-hit: {}\n\
@@ -267,6 +292,13 @@ impl Metrics {
             self.prefix_blocks_pinned,
             self.sinks_peak,
             self.sinks_open_final,
+            self.events_dropped,
+            self.requests_failed,
+            self.shed_total,
+            self.degraded_ticks,
+            self.faults_injected,
+            self.kv_blocks_free_final,
+            self.kv_blocks_total,
             self.queue_time.summary(),
             self.ttft.summary(),
             self.ttft_hit.summary(),
@@ -384,6 +416,25 @@ mod tests {
         let r = m.report();
         assert!(r.contains("spec    : ticks=2 drafted=8 accepted=6"), "{r}");
         assert!(r.contains("accept_rate=0.750"), "{r}");
+    }
+
+    #[test]
+    fn fault_counters_surface_in_report() {
+        let mut m = Metrics::new();
+        m.requests_failed = 3;
+        m.shed_total = 7;
+        m.degraded_ticks = 11;
+        m.faults_injected = 5;
+        m.events_dropped = 2;
+        m.kv_blocks_free_final = 64;
+        m.kv_blocks_total = 64;
+        let r = m.report();
+        assert!(r.contains("failed=3"), "{r}");
+        assert!(r.contains("shed=7"), "{r}");
+        assert!(r.contains("degraded_ticks=11"), "{r}");
+        assert!(r.contains("injected=5"), "{r}");
+        assert!(r.contains("events_dropped=2"), "{r}");
+        assert!(r.contains("kv_free_final=64 kv_total=64"), "{r}");
     }
 
     #[test]

@@ -103,6 +103,52 @@
 //! [`EngineConfig::spec`] / `gptqt serve --speculative`; acceptance
 //! counters surface in [`Metrics`] and the `serve spec` bench records.
 //!
+//! # Failure taxonomy and fault containment
+//!
+//! The serving path never lets one bad request (or one bad tick) take
+//! the engine down. Failures are classed in three tiers (see
+//! [`error`]):
+//!
+//! 1. **Per-request, recoverable** — [`FailReason`]. Backend forward
+//!    errors, `append_token` beyond the admission commitment, prefix
+//!    cache import mismatches, and speculative-rollback protocol
+//!    violations terminate *only the offending request* with
+//!    [`Event::Finished`]`(`[`FinishReason::Failed`]`)`. Its paged-KV
+//!    blocks return to the free list in the same tick
+//!    ([`PagedKvManager::release`]), so `Σ pending ≤ free` and every
+//!    other pool invariant hold *through* the failure. A batched
+//!    forward failure fails the whole tick's participants (the fused
+//!    forward offers no per-sequence attribution) but never queued or
+//!    co-resident speculative sequences.
+//! 2. **Contained panics** — a panic unwinding out of
+//!    [`Backend::forward_tick`] / [`Backend::spec_tick`] is caught at
+//!    the tick boundary (`catch_unwind`), the participants fail with
+//!    `FailReason::Panic`, and the engine latches *degraded*:
+//!    speculation and prefix-cache insertion stay disabled
+//!    ([`Metrics::degraded_ticks`] counts every affected tick), but
+//!    serving continues.
+//! 3. **Fatal** — [`EngineError::PoolCorrupted`]: after containment
+//!    the pool's `check_invariants` failed, so [`Engine::step`] returns
+//!    `Err` and the server closes all streams. This is the only way a
+//!    step errors.
+//!
+//! Backpressure is bounded end to end: the server's control channel
+//! and every per-handle event channel have fixed capacities
+//! ([`EngineConfig::event_buffer`]), with the slow-consumer policy
+//! chosen by [`BackpressurePolicy`] — block the engine (lossless,
+//! default), drop the oldest undelivered token events (lossy, counted
+//! in [`Metrics::events_dropped`]; terminal events always delivered),
+//! or cancel the lagging request. A full admission queue sheds load
+//! with [`Event::Rejected`]`{ retry_after }` instead of growing, and
+//! pool pressure beyond [`EngineConfig::pressure_threshold`]
+//! temporarily disables speculation + prefix insertion (both re-enable
+//! when pressure recedes; the stream contract means neither switch ever
+//! changes a request's tokens).
+//!
+//! Deterministic fault injection ([`crate::util::fault`], `chaos`
+//! feature) drives the `rust/tests/chaos.rs` property suite that holds
+//! all of the above under a seeded mixed-workload churn.
+//!
 //! Shape: a miniature vLLM-style router/engine. The paper measures
 //! per-token generation latency under low-concurrency serving (§III-E);
 //! this module is the system that measurement runs in, plus the
@@ -110,6 +156,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod error;
 pub mod kv_pool;
 pub mod metrics;
 pub mod policy;
@@ -121,13 +168,14 @@ pub mod server;
 pub mod speculative;
 
 pub use engine::{Backend, CpuBackend, Engine, PjrtBackend};
+pub use error::{EngineError, FailReason};
 pub use kv_pool::PagedKvManager;
 pub use metrics::Metrics;
 pub use policy::{AdaptiveChunk, FixedChunk, SchedulePolicy, SchedulePolicyKind, TickState};
 pub use prefix_cache::{PrefixCache, PrefixCacheConfig};
 pub use queue::{RequestQueue, SubmitError};
 pub use request::{FinishReason, Request, Response, SamplingParams};
-pub use server::{Event, RequestHandle, Server};
+pub use server::{BackpressurePolicy, Event, RequestHandle, Server};
 pub use speculative::{DraftFormat, SpecCapable, SpecConfig, SpecOutcome, SpeculativeBackend};
 
 /// Engine configuration knobs.
@@ -167,6 +215,25 @@ pub struct EngineConfig {
     /// Only meaningful for speculating backends
     /// ([`SpeculativeBackend`]) — others ignore it.
     pub spec: SpecConfig,
+    /// What the engine does when a per-handle event channel is full
+    /// (the consumer is slower than generation). See
+    /// [`BackpressurePolicy`]; `Block` (lossless) by default.
+    pub backpressure: BackpressurePolicy,
+    /// Capacity of each per-handle event channel, in events. Bounded so
+    /// a slow consumer costs at most `event_buffer * size_of::<Event>`
+    /// instead of growing without limit.
+    pub event_buffer: usize,
+    /// Pool-pressure degradation threshold as a free-block fraction in
+    /// `[0, 1]`: when `free / total` drops below it the engine
+    /// temporarily disables speculation and prefix-cache insertion
+    /// (re-enabled as soon as pressure recedes; neither switch changes
+    /// any request's tokens). `0.0` disables degradation.
+    pub pressure_threshold: f64,
+    /// Default graceful-drain budget for [`Server::shutdown`]: past it,
+    /// still-unfinished requests terminate with
+    /// `FinishReason::Failed(FailReason::Shutdown)` instead of hanging
+    /// their handles. [`Server::shutdown_within`] overrides per call.
+    pub drain_deadline: std::time::Duration,
 }
 
 impl Default for EngineConfig {
@@ -182,6 +249,10 @@ impl Default for EngineConfig {
             prefix: PrefixCacheConfig::default(),
             numerics: crate::kernels::NumericsMode::Exact,
             spec: SpecConfig::default(),
+            backpressure: BackpressurePolicy::Block,
+            event_buffer: 256,
+            pressure_threshold: 0.0,
+            drain_deadline: std::time::Duration::from_secs(30),
         }
     }
 }

@@ -67,8 +67,19 @@ impl RequestQueue {
         }
     }
 
+    /// Lock the queue state, recovering from poisoning: the state is a
+    /// plain heap + id set — structurally valid even if a peer thread
+    /// panicked while holding the lock — and the serving path must
+    /// contain panics, not cascade them.
+    fn locked(&self) -> std::sync::MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().heap.len()
+        self.locked().heap.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -76,7 +87,7 @@ impl RequestQueue {
     }
 
     pub fn push(&self, req: Request) -> Result<(), SubmitError> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if g.closed {
             return Err(SubmitError::Closed);
         }
@@ -96,7 +107,7 @@ impl RequestQueue {
 
     /// Non-blocking pop of the highest-priority, oldest request.
     pub fn try_pop(&self) -> Option<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         let e = g.heap.pop()?;
         g.ids.remove(&e.req.id);
         Some(e.req)
@@ -104,7 +115,7 @@ impl RequestQueue {
 
     /// Blocking pop; `None` once closed and drained.
     pub fn pop_wait(&self) -> Option<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         loop {
             if let Some(e) = g.heap.pop() {
                 g.ids.remove(&e.req.id);
@@ -113,7 +124,10 @@ impl RequestQueue {
             if g.closed {
                 return None;
             }
-            g = self.available.wait(g).unwrap();
+            g = match self.available.wait(g) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
     }
 
@@ -121,7 +135,7 @@ impl RequestQueue {
     /// heap rebuild — cancellations are rare next to pops. Returns
     /// `None` when the id is not queued (already admitted or unknown).
     pub fn remove(&self, id: u64) -> Option<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if !g.ids.remove(&id) {
             return None;
         }
@@ -149,7 +163,7 @@ impl RequestQueue {
         let is_expired = |req: &Request| {
             req.deadline.is_some_and(|d| now.duration_since(req.arrived) >= d)
         };
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if !g.heap.iter().any(|e| is_expired(&e.req)) {
             return Vec::new();
         }
@@ -167,12 +181,12 @@ impl RequestQueue {
 
     /// Close the queue: pending items still drain, new pushes fail.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.locked().closed = true;
         self.available.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.locked().closed
     }
 }
 

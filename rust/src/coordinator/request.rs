@@ -2,6 +2,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::error::FailReason;
 use crate::util::time::now;
 
 /// How to pick the next token from the logits.
@@ -81,6 +82,10 @@ pub enum FinishReason {
     Cancelled,
     /// The request's deadline passed before it finished.
     DeadlineExpired,
+    /// A contained serving fault terminated this request; the reason
+    /// says which containment path fired. Its KV blocks were returned
+    /// and the engine kept serving the rest of the batch.
+    Failed(FailReason),
 }
 
 /// Completed generation.

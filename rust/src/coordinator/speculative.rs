@@ -253,6 +253,8 @@ impl<D: SpecCapable, T: SpecCapable> SpeculativeBackend<D, T> {
             let logits =
                 self.draft.forward_tick(&chunks, &mut dcaches, &need, &mut scratch.draft)?;
             for (si, &b) in sel.iter().enumerate() {
+                // lint:allow(no-panic-serve) `need` was all-true for this
+                // forward: a missing row is a backend contract violation
                 let l = logits[si].as_ref().expect("draft round requested logits");
                 let t = super::sampler::argmax(l);
                 drafts[b].push(t);
@@ -321,6 +323,8 @@ impl<D: SpecCapable, T: SpecCapable> SpeculativeBackend<D, T> {
         for b in 0..nb {
             if full_accept[b] {
                 sel.push(b);
+                // lint:allow(no-panic-serve) vstore[b] always holds `last`
+                // plus the drafts — built non-empty a screen above
                 toks.push(*vstore[b].last().expect("verify chunk is never empty"));
             }
         }

@@ -328,6 +328,10 @@ pub struct StreamSpeedResult {
     /// Cancellations recorded by the engine (should be 0 here; surfaced
     /// from the metrics summary as a sanity check).
     pub cancelled: u64,
+    /// Fault-containment counters of the run — all zero in a healthy
+    /// bench; tagged into the `serve stream` records so a perf number
+    /// produced by a degraded run is visible in the trajectory.
+    pub robustness: crate::bench::RobustnessTags,
 }
 
 /// Measure end-to-end streaming latency: spawn a [`Server`] over `bm`,
@@ -409,6 +413,7 @@ pub fn measure_streaming(
         ttft_ms: ttft_sum / requests as f64 * 1e3,
         inter_token_ms: if gaps == 0 { 0.0 } else { gap_sum / gaps as f64 * 1e3 },
         cancelled: metrics.cancelled_total,
+        robustness: crate::bench::RobustnessTags::from_metrics(&metrics),
     }
 }
 
@@ -434,6 +439,9 @@ pub struct SpecStreamResult {
     /// Mean emitted tokens per draft/verify round (≥ 1; the weight-
     /// stream amortization factor speculation achieved).
     pub tokens_per_round: f64,
+    /// Fault-containment counters of the run (see
+    /// [`StreamSpeedResult::robustness`]).
+    pub robustness: crate::bench::RobustnessTags,
 }
 
 /// Measure end-to-end speculative streaming: spawn a [`Server`] over a
@@ -504,6 +512,7 @@ pub fn measure_spec_streaming(
         } else {
             m.spec_emitted_total as f64 / m.spec_ticks as f64
         },
+        robustness: crate::bench::RobustnessTags::from_metrics(&m),
     }
 }
 
@@ -527,6 +536,9 @@ pub struct PrefixSpeedResult {
     pub prefill_tokens_hit: u64,
     /// Prefix-cache hits recorded (1 when the cache worked).
     pub hits: u64,
+    /// Fault-containment counters of the run (see
+    /// [`StreamSpeedResult::robustness`]).
+    pub robustness: crate::bench::RobustnessTags,
 }
 
 /// Measure cold-vs-hit TTFT: drive an [`Engine`] directly (prefix cache
@@ -570,6 +582,7 @@ pub fn measure_prefix_ttft(
         prefill_tokens_cold: prefill_cold,
         prefill_tokens_hit: m.prefill_tokens_computed - prefill_cold,
         hits: m.prefix_hits,
+        robustness: crate::bench::RobustnessTags::from_metrics(&m),
     }
 }
 
@@ -651,6 +664,8 @@ mod tests {
                 assert!(r.tokens_per_sec > 0.0 && r.ttft_ms > 0.0);
                 assert!(r.inter_token_ms >= 0.0);
                 assert_eq!(r.cancelled, 0);
+                // a healthy bench run carries all-zero containment tags
+                assert_eq!(r.robustness, crate::bench::RobustnessTags::default());
             }
         }
     }

@@ -1,0 +1,220 @@
+//! Deterministic fault injection for the chaos harness.
+//!
+//! Serving code marks recoverable failure sites with
+//! `fault::point("kv_pool.append")`. In a normal build the call is a
+//! `const`-foldable no-op returning `false`; with the `chaos` feature
+//! it consults a seeded schedule installed by the test harness and
+//! returns `true` when the site should fail this time.
+//!
+//! Determinism: whether a point fires depends only on the installed
+//! seed, the point's name, and that point's own call counter — never on
+//! wall-clock time or cross-point interleaving. Replaying the same
+//! workload with the same seed fires the same faults at the same calls,
+//! which is what lets `rust/tests/chaos.rs` compare a chaos run against
+//! a fault-free run bitwise.
+//!
+//! Adding a new injection point (see CONTRIBUTING.md):
+//!   1. call `crate::util::fault::point("area.site")` at the decision,
+//!   2. contain the `true` branch like any real failure (terminate only
+//!      the offending request, return its blocks, bump
+//!      `metrics.faults_injected`),
+//!   3. add the name to `EXPECTED_POINTS` in `rust/tests/chaos.rs` so
+//!      the churn test proves the site both fires and is survived.
+
+#[cfg(feature = "chaos")]
+mod imp {
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, MutexGuard};
+
+    #[derive(Default)]
+    struct State {
+        /// `None` = disarmed: every point reports no-fault.
+        plan: Option<Plan>,
+        /// Per-point call counters (advance even while disarmed so a
+        /// late `install` still sees deterministic indices relative to
+        /// installation).
+        calls: BTreeMap<&'static str, u64>,
+        /// Per-point fired counters.
+        fired: BTreeMap<&'static str, u64>,
+        /// Point names forced to fire exactly once on their next call.
+        armed: Vec<&'static str>,
+    }
+
+    struct Plan {
+        seed: u64,
+        /// Fire when `hash % den < num`.
+        num: u64,
+        den: u64,
+    }
+
+    static STATE: Mutex<State> = Mutex::new(State {
+        plan: None,
+        calls: BTreeMap::new(),
+        fired: BTreeMap::new(),
+        armed: Vec::new(),
+    });
+
+    fn lock() -> MutexGuard<'static, State> {
+        // A poisoned injector mutex means a test thread panicked while
+        // holding it; chaos state is test-only, so recover the guard.
+        match STATE.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// splitmix64 finisher — cheap, well-mixed, and stable across
+    /// platforms (the schedule is part of the chaos tests' contract).
+    fn mix(mut x: u64) -> u64 {
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94d049bb133111eb);
+        x ^ (x >> 31)
+    }
+
+    fn name_hash(name: &str) -> u64 {
+        // FNV-1a; dependency-free and stable.
+        let mut h = 0xcbf29ce484222325u64;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Install a seeded schedule: each point call fires independently
+    /// with probability `num / den`. Resets all counters.
+    pub fn install(seed: u64, num: u64, den: u64) {
+        assert!(den > 0, "fault rate denominator must be positive");
+        let mut s = lock();
+        s.plan = Some(Plan { seed, num, den });
+        s.calls.clear();
+        s.fired.clear();
+        s.armed.clear();
+    }
+
+    /// Disarm the schedule (counters keep their values for inspection).
+    pub fn uninstall() {
+        lock().plan = None;
+    }
+
+    /// Force `name` to fire on its next call, exactly once, regardless
+    /// of any installed schedule. Used by targeted containment tests.
+    pub fn arm(name: &'static str) {
+        lock().armed.push(name);
+    }
+
+    /// Total faults fired since the last `install`.
+    pub fn fired_total() -> u64 {
+        lock().fired.values().sum()
+    }
+
+    /// Faults fired at one point since the last `install`.
+    pub fn fired_at(name: &str) -> u64 {
+        lock().fired.get(name).copied().unwrap_or(0)
+    }
+
+    /// Every point name that has been *called* (fired or not) since the
+    /// last `install` — the registry the chaos suite checks for
+    /// coverage.
+    pub fn points_seen() -> Vec<&'static str> {
+        lock().calls.keys().copied().collect()
+    }
+
+    /// Should this site fail right now?
+    pub fn point(name: &'static str) -> bool {
+        let mut s = lock();
+        let count = {
+            let c = s.calls.entry(name).or_insert(0);
+            *c += 1;
+            *c
+        };
+        if let Some(pos) = s.armed.iter().position(|&n| n == name) {
+            s.armed.remove(pos);
+            *s.fired.entry(name).or_insert(0) += 1;
+            return true;
+        }
+        let fire = match &s.plan {
+            Some(plan) => mix(plan.seed ^ name_hash(name).wrapping_add(count)) % plan.den < plan.num,
+            None => false,
+        };
+        if fire {
+            *s.fired.entry(name).or_insert(0) += 1;
+        }
+        fire
+    }
+}
+
+#[cfg(feature = "chaos")]
+pub use imp::{arm, fired_at, fired_total, install, point, points_seen, uninstall};
+
+/// No-op stub: without the `chaos` feature every injection point
+/// compiles to a constant `false` and the optimizer deletes the branch.
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub fn point(_name: &'static str) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The injector state is process-global; serialize the tests that
+    /// touch it so they cannot see each other's plans.
+    #[cfg(feature = "chaos")]
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[cfg(feature = "chaos")]
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        match LOCK.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    #[test]
+    fn disarmed_points_never_fire() {
+        // Holds in every build: with `chaos` off this is the stub; with
+        // `chaos` on the guard below disarms any schedule first.
+        #[cfg(feature = "chaos")]
+        let _g = {
+            let g = locked();
+            uninstall();
+            g
+        };
+        assert!(!point("unit.never-armed"));
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn schedule_is_deterministic_and_rate_bounded() {
+        let _g = locked();
+        install(0xC0FFEE, 1, 8);
+        let a: Vec<bool> = (0..256).map(|_| point("unit.det")).collect();
+        install(0xC0FFEE, 1, 8);
+        let b: Vec<bool> = (0..256).map(|_| point("unit.det")).collect();
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        let fires = a.iter().filter(|&&f| f).count();
+        assert!(fires > 0, "a 1/8 rate over 256 calls should fire");
+        assert!(fires < 128, "rate wildly above 1/8: {fires}/256");
+        install(0xBEEF, 1, 8);
+        let c: Vec<bool> = (0..256).map(|_| point("unit.det")).collect();
+        assert_ne!(a, c, "different seed should differ somewhere");
+        uninstall();
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn arm_fires_exactly_once() {
+        let _g = locked();
+        install(1, 0, 1); // rate 0: only armed faults fire
+        arm("unit.armed");
+        assert!(point("unit.armed"));
+        assert!(!point("unit.armed"));
+        assert_eq!(fired_at("unit.armed"), 1);
+        assert!(points_seen().contains(&"unit.armed"));
+        uninstall();
+    }
+}

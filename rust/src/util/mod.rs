@@ -6,6 +6,7 @@
 //! serving paths need.
 
 pub mod alloc;
+pub mod fault;
 pub mod hist;
 pub mod pool;
 pub mod rng;

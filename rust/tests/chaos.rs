@@ -1,0 +1,456 @@
+//! Deterministic chaos harness: inject faults at every serving-path
+//! site and prove the containment contract of the fault taxonomy
+//! (`coordinator/error.rs`):
+//!
+//!   1. the engine stays live — `step()` never returns `Err` for a
+//!      recoverable fault, only the offending request terminates with
+//!      `FinishReason::Failed(reason)`;
+//!   2. `check_invariants()` holds after **every** tick, faults or not;
+//!   3. every KV block drains back to free once the workload completes
+//!      and the prefix cache is cleared — contained failures leak
+//!      nothing;
+//!   4. requests the faults did not touch stream **bitwise-identical**
+//!      tokens to a fault-free run of the same scripted workload (the
+//!      two-tier numerics contract makes tokens independent of batch
+//!      composition, so killing a co-batched request must not perturb
+//!      survivors).
+//!
+//! Determinism: the injector (`util::fault`) keys only on (seed, point
+//! name, per-point call count); the workload script keys only on the
+//! tick counter; deadlines are only `ZERO` (always expired) or an hour
+//! (never expires). Replays are exact.
+//!
+//! The `chaos-engine-alive:` / `chaos-blocks-leaked:` lines are what
+//! the CI chaos lane greps into its step summary.
+//!
+//! The injector state is process-global, so every test serializes on
+//! `LOCK` and starts with a fresh `fault::install` (which resets the
+//! counters and the armed list).
+#![cfg(feature = "chaos")]
+
+use gptqt::coordinator::{
+    Backend, CpuBackend, Engine, EngineConfig, Event, FailReason, FinishReason, PrefixCacheConfig,
+    Request, SpeculativeBackend,
+};
+use gptqt::eval::speed::{build_variant, SpeedVariant};
+use gptqt::model::init::random_weights;
+use gptqt::model::{presets, Model};
+use gptqt::util::fault;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// The complete registry of injection points. A new `fault::point` in
+/// the serving path shows up in `points_seen()` and fails the registry
+/// test below until it is added here *and* covered by a containment
+/// assertion (see CONTRIBUTING.md).
+const EXPECTED_POINTS: [&str; 7] = [
+    "engine.forward_tick",
+    "engine.forward_panic",
+    "engine.spec_tick",
+    "engine.spec_rollback",
+    "kv_pool.append",
+    "kv_pool.append.spec",
+    "prefix_cache.import",
+];
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> MutexGuard<'static, ()> {
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn test_model(seed: u64) -> Model {
+    let mut cfg = presets::by_name("opt-nano").unwrap();
+    cfg.vocab = 64;
+    cfg.max_seq = 48;
+    Model::new(cfg.clone(), random_weights(&cfg, seed))
+}
+
+fn plain_backend() -> CpuBackend {
+    CpuBackend(build_variant(&test_model(42), SpeedVariant::Full, 9))
+}
+
+/// GPTQT's free draft/target pair: the 2-bit binary-coding draft
+/// against the dense target (mirrors `tests/speculative.rs`).
+fn spec_backend() -> SpeculativeBackend<CpuBackend, CpuBackend> {
+    let model = test_model(42);
+    let draft = build_variant(&model, SpeedVariant::GptqtLut { bits: 2 }, 11);
+    let target = build_variant(&model, SpeedVariant::Full, 11);
+    SpeculativeBackend::new(CpuBackend(draft), CpuBackend(target), 3)
+}
+
+fn churn_cfg() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        block_size: 8,
+        total_blocks: 64,
+        max_queue: 256,
+        eos_token: u32::MAX, // never sampled: deterministic lengths
+        prefill_chunk: 4,
+        // only the 16-token shared prompt qualifies for caching, so the
+        // pin budget stays bounded under churn
+        prefix: PrefixCacheConfig { enabled: true, min_tokens: 14, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn spec_cfg() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        block_size: 8,
+        total_blocks: 128,
+        max_queue: 256,
+        eos_token: u32::MAX,
+        prefill_chunk: 4,
+        ..Default::default()
+    }
+}
+
+/// All prompts share the small test vocabulary (64 entries).
+fn shared_prompt() -> Vec<u32> {
+    (0..16).map(|i| 2 + (13 * i) % 59).collect()
+}
+
+fn unique_prompt(id: u64, len: usize) -> Vec<u32> {
+    (0..len as u32).map(|i| 3 + (5 * id as u32 + 7 * i) % 60).collect()
+}
+
+/// One scripted step of the workload, keyed on the tick counter so the
+/// fault-free and chaos runs replay the identical schedule.
+enum Action {
+    Submit(Request),
+    Cancel(u64),
+    /// Disarm the injector mid-run: requests submitted after this tick
+    /// are provably untouched, which keeps the bitwise survivor
+    /// comparison non-vacuous under any seed. A no-op in runs that
+    /// never installed a schedule.
+    Disarm,
+}
+
+type Script = BTreeMap<u64, Vec<Action>>;
+
+fn push(script: &mut Script, tick: u64, action: Action) {
+    script.entry(tick).or_default().push(action);
+}
+
+struct RunResult {
+    tokens: BTreeMap<u64, Vec<u32>>,
+    finish: BTreeMap<u64, FinishReason>,
+    ticks: u64,
+}
+
+/// Drive `engine` through `script` for exactly `ticks` ticks, checking
+/// liveness and pool invariants after every single step.
+fn run_script<B: Backend>(engine: &mut Engine<B>, script: &Script, ticks: u64) -> RunResult {
+    let mut streamed: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    let mut tokens = BTreeMap::new();
+    let mut finish = BTreeMap::new();
+    for tick in 0..ticks {
+        if let Some(actions) = script.get(&tick) {
+            for action in actions {
+                match action {
+                    Action::Submit(req) => {
+                        // max_queue is sized so depth-shedding never
+                        // fires; semantic rejects would be a script bug
+                        engine.submit(req.clone()).unwrap_or_else(|e| {
+                            panic!("tick {tick}: scripted submit rejected: {e:?}")
+                        });
+                    }
+                    Action::Cancel(id) => {
+                        // may be false if a fault already killed it
+                        engine.cancel(*id);
+                    }
+                    Action::Disarm => fault::uninstall(),
+                }
+            }
+        }
+        let events = engine
+            .step()
+            .unwrap_or_else(|e| panic!("tick {tick}: containment failed, engine died: {e}"));
+        engine
+            .check_invariants()
+            .unwrap_or_else(|e| panic!("tick {tick}: pool invariant broken: {e}"));
+        for ev in events {
+            match ev {
+                Event::Token { id, token, .. } => streamed.entry(id).or_default().push(token),
+                Event::Finished(r) => {
+                    // the engine itself is lossless: the terminal
+                    // response must carry exactly the streamed tokens
+                    let s = streamed.remove(&r.id).unwrap_or_default();
+                    assert_eq!(s, r.tokens, "request {}: stream/response mismatch", r.id);
+                    finish.insert(r.id, r.finish);
+                    tokens.insert(r.id, r.tokens);
+                }
+                _ => {}
+            }
+        }
+    }
+    assert!(!engine.has_work(), "workload did not drain within {ticks} ticks");
+    RunResult { tokens, finish, ticks }
+}
+
+/// After a drained run, every block must be back in the free list once
+/// the prefix cache releases its pins.
+fn assert_drained<B: Backend>(engine: &mut Engine<B>, what: &str) -> usize {
+    engine.clear_prefix_cache();
+    let leaked = engine.kv().used_blocks();
+    assert_eq!(leaked, 0, "{what}: {leaked} KV blocks leaked");
+    leaked
+}
+
+/// Mixed plain-backend workload: staggered admissions, chunked
+/// prefills, a shared prompt exercising prefix-cache insert/hit/import,
+/// scripted cancels, instant and never-firing deadlines, and a golden
+/// wave submitted after the scripted disarm.
+fn churn_script() -> Script {
+    let mut script = Script::new();
+    for i in 0..48u64 {
+        let t = 2 * i;
+        let shared = i % 6 == 0;
+        let prompt = if shared { shared_prompt() } else { unique_prompt(i, 9 + (i % 5) as usize) };
+        let mut req = Request::new(i, prompt, 4 + (i % 5) as usize);
+        if !shared && i % 9 == 4 {
+            req = req.with_deadline(Duration::ZERO); // expires before admission
+        } else if i % 9 == 7 {
+            req = req.with_deadline(Duration::from_secs(3600)); // never fires
+        }
+        push(&mut script, t, Action::Submit(req));
+        if !shared && i % 7 == 5 {
+            push(&mut script, t + 3, Action::Cancel(i));
+        }
+    }
+    // second wave: keeps the pool churning after the first drains
+    for j in 0..16u64 {
+        let id = 200 + j;
+        let req = Request::new(id, unique_prompt(id, 8 + (j % 4) as usize), 5 + (j % 3) as usize);
+        push(&mut script, 320 + 4 * j, Action::Submit(req));
+    }
+    push(&mut script, 600, Action::Disarm);
+    // golden wave: submitted after the disarm, so no fault can touch it
+    for j in 0..8u64 {
+        let id = 900 + j;
+        let req = Request::new(id, unique_prompt(id, 8), 5);
+        push(&mut script, 620 + 2 * j, Action::Submit(req));
+    }
+    script
+}
+
+/// Speculative workload: staggered greedy decodes through the
+/// draft/verify backend with cancels and a post-disarm golden wave.
+fn spec_script() -> Script {
+    let mut script = Script::new();
+    for i in 0..24u64 {
+        let t = 3 * i;
+        let req = Request::new(i, unique_prompt(i, 6 + (i % 6) as usize), 5 + (i % 4) as usize);
+        push(&mut script, t, Action::Submit(req));
+        if i % 7 == 3 {
+            push(&mut script, t + 2, Action::Cancel(i));
+        }
+    }
+    push(&mut script, 150, Action::Disarm);
+    for j in 0..6u64 {
+        let id = 900 + j;
+        let req = Request::new(id, unique_prompt(id, 7), 5);
+        push(&mut script, 160 + 2 * j, Action::Submit(req));
+    }
+    script
+}
+
+fn normally_finished(f: Option<&FinishReason>) -> bool {
+    matches!(f, Some(FinishReason::Eos) | Some(FinishReason::Length))
+}
+
+/// Compare every request that finished normally in BOTH runs; returns
+/// how many were compared so callers can prove non-vacuity.
+fn assert_survivors_bitwise(base: &RunResult, chaos: &RunResult, what: &str) -> usize {
+    let mut compared = 0;
+    for (id, fin) in &chaos.finish {
+        if normally_finished(Some(fin)) && normally_finished(base.finish.get(id)) {
+            assert_eq!(
+                chaos.tokens[id], base.tokens[id],
+                "{what}: surviving request {id} diverged from the fault-free run"
+            );
+            compared += 1;
+        }
+    }
+    compared
+}
+
+/// Tentpole churn: a 2k-tick seeded schedule over the mixed workload.
+/// Three armed faults on always-reached points guarantee injections
+/// under any seed; the scripted disarm guarantees golden survivors.
+#[test]
+fn seeded_churn_stays_live_and_survivors_stream_bitwise_identical() {
+    let _g = locked();
+    let script = churn_script();
+    const TICKS: u64 = 1000;
+
+    // fault-free twin: rate-0 schedule (resets counters + armed list)
+    fault::install(0, 0, 1);
+    let mut base_engine = Engine::new(plain_backend(), churn_cfg());
+    let base = run_script(&mut base_engine, &script, TICKS);
+    assert_drained(&mut base_engine, "baseline churn");
+    assert_eq!(base_engine.metrics.faults_injected, 0, "rate-0 schedule must not fire");
+
+    // chaos twin: seeded 1/149 schedule over every point, plus three
+    // armed faults consumed within the first few ticks
+    fault::install(0x5EED_CAFE, 1, 149);
+    fault::arm("engine.forward_tick");
+    fault::arm("kv_pool.append");
+    fault::arm("kv_pool.append");
+    let mut engine = Engine::new(plain_backend(), churn_cfg());
+    let chaos = run_script(&mut engine, &script, TICKS);
+    let leaked = assert_drained(&mut engine, "chaos churn");
+
+    assert!(
+        engine.metrics.faults_injected >= 3,
+        "the three armed faults alone guarantee injections: {}",
+        engine.metrics.faults_injected
+    );
+    assert!(
+        engine.metrics.requests_failed >= 3,
+        "each armed fault terminates one distinct request: {}",
+        engine.metrics.requests_failed
+    );
+
+    let compared = assert_survivors_bitwise(&base, &chaos, "churn");
+    assert!(compared >= 8, "the 8 golden requests outlive any schedule: compared {compared}");
+
+    let total_ticks = base.ticks + chaos.ticks;
+    assert!(total_ticks >= 2000, "churn must cover 2k+ ticks: {total_ticks}");
+    println!("chaos-ticks: {total_ticks}");
+    println!("chaos-faults-injected: {}", engine.metrics.faults_injected);
+    println!("chaos-survivors-compared: {compared}");
+    println!("chaos-engine-alive: ok");
+    println!("chaos-blocks-leaked: {leaked}");
+    fault::uninstall();
+}
+
+/// The same containment contract through the speculative backend:
+/// draft/verify rounds, accept-with-rollback on the paged pool, and
+/// spec-specific fault sites under a seeded schedule.
+#[test]
+fn seeded_spec_churn_survives_and_matches_fault_free_tokens() {
+    let _g = locked();
+    let script = spec_script();
+    const TICKS: u64 = 400;
+
+    fault::install(0, 0, 1);
+    let mut base_engine = Engine::new(spec_backend(), spec_cfg());
+    let base = run_script(&mut base_engine, &script, TICKS);
+    assert_drained(&mut base_engine, "baseline spec churn");
+
+    fault::install(0xB0BA_F00D, 1, 149);
+    fault::arm("engine.spec_tick");
+    let mut engine = Engine::new(spec_backend(), spec_cfg());
+    let chaos = run_script(&mut engine, &script, TICKS);
+    assert_drained(&mut engine, "chaos spec churn");
+
+    assert!(engine.metrics.faults_injected >= 1, "the armed spec fault must fire");
+    let compared = assert_survivors_bitwise(&base, &chaos, "spec churn");
+    assert!(compared >= 6, "the 6 golden requests outlive any schedule: compared {compared}");
+    fault::uninstall();
+}
+
+/// Arm every injection point in turn (rate-0 schedules: only armed
+/// faults fire), pin the exact `FailReason` each containment path
+/// produces, and prove `EXPECTED_POINTS` is the complete registry —
+/// a new `fault::point` in serving code fails the set equality until
+/// it is added here with its own containment coverage.
+#[test]
+fn every_fault_point_fires_is_contained_and_registry_is_complete() {
+    let _g = locked();
+    let mut seen: BTreeSet<&'static str> = BTreeSet::new();
+
+    // --- run 1: plain backend — forward error, pool refusal, and a
+    // prefix-cache import fault on a real cache hit -------------------
+    {
+        fault::install(7, 0, 1);
+        fault::arm("engine.forward_tick");
+        fault::arm("kv_pool.append");
+        fault::arm("prefix_cache.import");
+        let mut script = Script::new();
+        // dies on its first forward (the armed tick fault)
+        push(&mut script, 0, Action::Submit(Request::new(0, unique_prompt(0, 6), 4)));
+        // completes its 4-token prompt in one chunk, then the armed
+        // append fault refuses its first sampled token
+        push(&mut script, 2, Action::Submit(Request::new(1, unique_prompt(1, 4), 4)));
+        // donor: fills the prefix cache at prompt completion
+        push(&mut script, 4, Action::Submit(Request::new(2, shared_prompt(), 3)));
+        // hits the donor's entry; the armed import fault corrupts the
+        // snapshot import and only this request dies
+        push(&mut script, 12, Action::Submit(Request::new(3, shared_prompt(), 3)));
+        // untouched control
+        push(&mut script, 14, Action::Submit(Request::new(4, unique_prompt(4, 5), 4)));
+        let mut engine = Engine::new(plain_backend(), churn_cfg());
+        let run = run_script(&mut engine, &script, 40);
+        assert_eq!(run.finish[&0], FinishReason::Failed(FailReason::Backend));
+        assert_eq!(run.finish[&1], FinishReason::Failed(FailReason::PoolExhausted));
+        assert_eq!(run.finish[&2], FinishReason::Length);
+        assert_eq!(run.finish[&3], FinishReason::Failed(FailReason::CacheImport));
+        assert_eq!(run.finish[&4], FinishReason::Length);
+        assert_eq!(fault::fired_at("engine.forward_tick"), 1);
+        assert_eq!(fault::fired_at("kv_pool.append"), 1);
+        assert_eq!(fault::fired_at("prefix_cache.import"), 1);
+        assert_eq!(engine.metrics.requests_failed, 3);
+        assert_eq!(engine.metrics.faults_injected, 3);
+        assert_drained(&mut engine, "registry run 1");
+        seen.extend(fault::points_seen());
+    }
+
+    // --- run 2: a contained panic latches degraded mode but the
+    // engine keeps serving (its own run: the latch would suppress the
+    // prefix-cache insertion run 1 depends on) ------------------------
+    {
+        fault::install(11, 0, 1);
+        fault::arm("engine.forward_panic");
+        let mut script = Script::new();
+        push(&mut script, 0, Action::Submit(Request::new(0, unique_prompt(0, 5), 3)));
+        push(&mut script, 2, Action::Submit(Request::new(1, unique_prompt(1, 5), 3)));
+        let mut engine = Engine::new(plain_backend(), churn_cfg());
+        let run = run_script(&mut engine, &script, 30);
+        assert_eq!(run.finish[&0], FinishReason::Failed(FailReason::Panic));
+        assert_eq!(run.finish[&1], FinishReason::Length, "degraded engine must keep serving");
+        assert!(engine.is_degraded(), "a contained panic latches degraded mode");
+        assert!(engine.metrics.degraded_ticks > 0);
+        assert_eq!(fault::fired_at("engine.forward_panic"), 1);
+        assert_drained(&mut engine, "registry run 2");
+        seen.extend(fault::points_seen());
+    }
+
+    // --- run 3: speculative backend — round failure, rollback
+    // protocol violation, and pool refusal inside accept-with-rollback.
+    // Staggered so exactly one sequence occupies each spec round.
+    {
+        fault::install(13, 0, 1);
+        fault::arm("engine.spec_tick");
+        fault::arm("engine.spec_rollback");
+        fault::arm("kv_pool.append.spec");
+        let mut script = Script::new();
+        for (i, tick) in [(0u64, 0u64), (1, 3), (2, 6), (3, 9)] {
+            push(&mut script, tick, Action::Submit(Request::new(i, unique_prompt(i, 4), 6)));
+        }
+        let mut engine = Engine::new(spec_backend(), spec_cfg());
+        let run = run_script(&mut engine, &script, 40);
+        assert_eq!(run.finish[&0], FinishReason::Failed(FailReason::Backend));
+        assert_eq!(run.finish[&1], FinishReason::Failed(FailReason::SpecRollback));
+        assert_eq!(run.finish[&2], FinishReason::Failed(FailReason::PoolExhausted));
+        assert_eq!(run.finish[&3], FinishReason::Length);
+        assert_eq!(fault::fired_at("engine.spec_tick"), 1);
+        assert_eq!(fault::fired_at("engine.spec_rollback"), 1);
+        assert_eq!(fault::fired_at("kv_pool.append.spec"), 1);
+        assert_drained(&mut engine, "registry run 3");
+        seen.extend(fault::points_seen());
+    }
+
+    let expected: BTreeSet<&'static str> = EXPECTED_POINTS.iter().copied().collect();
+    assert_eq!(
+        seen, expected,
+        "injection-point registry drifted: update EXPECTED_POINTS and cover the new site"
+    );
+    fault::uninstall();
+}
